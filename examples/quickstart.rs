@@ -1,0 +1,49 @@
+//! Quickstart: boot the platform, run a distributed job, call an
+//! accelerator kernel, inspect metrics.
+//!
+//!     cargo run --release --example quickstart
+
+use adcloud::platform::Platform;
+use adcloud::runtime::Tensor;
+use adcloud::services::sql;
+use adcloud::Result;
+
+fn main() -> Result<()> {
+    // 1. Boot the unified infrastructure (Figure 2 of the paper):
+    //    resource manager + tiered storage + compute engine + PJRT
+    //    accelerator runtime.
+    let platform = Platform::boot(adcloud::config::PlatformConfig::default())?;
+    println!("{}", platform.describe());
+
+    // 2. Distributed computing: a telemetry aggregation over the
+    //    Spark-analog engine.
+    let telemetry = sql::generate_telemetry(50_000, 100, 42);
+    let rdd = platform.ctx.parallelize(telemetry, 8).cache();
+    let per_vehicle = sql::q1_dce(&rdd, 8)?;
+    println!("q1: mean speed for {} vehicles (zone < 8)", per_vehicle.len());
+
+    // 3. Distributed storage: put a block through the tiered store and
+    //    read it back at memory speed.
+    platform.ctx.store().put("quickstart/block", vec![1u8; 1 << 20])?;
+    let blk = platform.ctx.store().get("quickstart/block")?;
+    println!(
+        "tiered store round-trip: {} bytes, tier {:?}",
+        blk.len(),
+        platform.ctx.store().tier_of("quickstart/block")
+    );
+
+    // 4. Heterogeneous computing: run the feature kernel on the best
+    //    available device class (GPU-class PJRT artifact if built).
+    if platform.has_accelerators() {
+        let image = Tensor::from_f32(vec![0.5; 64 * 64], &[1, 64, 64])?;
+        let (device, out) = platform.dispatcher.run_best("feature_b1", &[image], &[])?;
+        println!("feature kernel on {device}: {:?} descriptors", out[0].shape);
+    } else {
+        println!("(artifacts not built — run `make artifacts` for accelerator kernels)");
+    }
+
+    // 5. Metrics.
+    println!("\n{}", platform.ctx.metrics().report());
+    println!("quickstart done");
+    Ok(())
+}

@@ -1,0 +1,162 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest.json.
+
+This is the only place Python touches the build. Each entry point in
+model.py is jitted, lowered to StableHLO, converted to an XlaComputation
+and dumped as HLO text into artifacts/. The Rust runtime
+(rust/src/runtime) loads the text with HloModuleProto::from_text_file,
+compiles it on the PJRT CPU client and executes it on the request path.
+
+HLO TEXT, never .serialize(): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 rejects (proto.id() <= INT_MAX);
+the text parser reassigns ids and round-trips cleanly. Lowering uses
+return_tuple=True, so every artifact returns one tuple that the Rust side
+unpacks with Literal::to_tuple().
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_tag(dtype) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "s32"}[jnp.dtype(dtype)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_specs():
+    return [_spec(shape) for _, shape in model.PARAM_SPECS]
+
+
+def _named_params():
+    return [(name, list(shape), "f32") for name, shape in model.PARAM_SPECS]
+
+
+def artifact_table():
+    """name -> (callable, input ShapeDtypeStructs, named input descriptors,
+    named output descriptors). Shapes here are the frozen AOT variants the
+    Rust services execute; one compiled executable per variant."""
+    table = {}
+
+    def add(name, fn, specs, in_desc, out_desc):
+        table[name] = (fn, specs, in_desc, out_desc)
+
+    # --- training service -------------------------------------------------
+    b = 16
+    add(
+        "cnn_train_b16",
+        model.cnn_train_step,
+        _param_specs() + [_spec((b, model.IMG, model.IMG, 3)), _spec((b,), I32)],
+        _named_params()
+        + [("x", [b, model.IMG, model.IMG, 3], "f32"), ("y", [b], "s32")],
+        [("loss", [], "f32")]
+        + [(f"g_{n}", list(s), "f32") for n, s in model.PARAM_SPECS],
+    )
+    for b in (1, 8, 32):
+        add(
+            f"cnn_infer_b{b}",
+            model.cnn_infer,
+            _param_specs() + [_spec((b, model.IMG, model.IMG, 3))],
+            _named_params() + [("x", [b, model.IMG, model.IMG, 3], "f32")],
+            [("logits", [b, model.NUM_CLASSES], "f32")],
+        )
+
+    # --- HD map generation service ----------------------------------------
+    for n in (1024, 4096):
+        add(
+            f"icp_step_{n}",
+            model.icp_step,
+            [_spec((n, 3)), _spec((n, 3))],
+            [("src", [n, 3], "f32"), ("dst", [n, 3], "f32")],
+            [
+                ("cross_cov", [3, 3], "f32"),
+                ("src_centroid", [3], "f32"),
+                ("nn_centroid", [3], "f32"),
+                ("mean_sq_err", [], "f32"),
+            ],
+        )
+
+    # --- simulation service (Fig 6 workload) -------------------------------
+    for b in (1, 8):
+        add(
+            f"feature_b{b}",
+            model.feature_batch,
+            [_spec((b, 64, 64))],
+            [("x", [b, 64, 64], "f32")],
+            [("features", [b, 8, 8, 4], "f32")],
+        )
+
+    return table
+
+
+def build(out_dir: str, only: list[str] | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text/v1", "artifacts": []}
+    for name, (fn, specs, in_desc, out_desc) in artifact_table().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"name": n, "shape": s, "dtype": d} for n, s, d in in_desc
+                ],
+                "outputs": [
+                    {"name": n, "shape": s, "dtype": d} for n, s, d in out_desc
+                ],
+            }
+        )
+        print(f"  lowered {name:>16} -> {fname} ({len(text)} chars)")
+    manifest["param_order"] = [n for n, _ in model.PARAM_SPECS]
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of artifact names to build")
+    # kept for Makefile compatibility: --out some/file.hlo.txt builds
+    # everything into that file's directory.
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    build(out_dir or ".", args.only)
+
+
+if __name__ == "__main__":
+    main()

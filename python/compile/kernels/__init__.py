@@ -1,0 +1,24 @@
+"""Layer-1 Pallas kernels for the adcloud platform.
+
+These are the numeric hot spots the paper offloads to OpenCL devices
+(GPU/FPGA); here they are authored as Pallas kernels, lowered with
+``interpret=True`` (the CPU PJRT backend cannot execute Mosaic
+custom-calls), and AOT-compiled into the HLO artifacts the Rust
+coordinator executes through PJRT.
+
+Kernels:
+  conv2d   -- blocked im2col-style convolution (MXU-shaped matmuls)
+  icp      -- nearest-correspondence search for ICP point-cloud alignment
+  feature  -- image gradient feature extraction (Fig 6 workload)
+"""
+
+from .conv2d import conv2d_pallas, conv2d
+from .icp import icp_correspondences_pallas
+from .feature import feature_extract_pallas
+
+__all__ = [
+    "conv2d_pallas",
+    "conv2d",
+    "icp_correspondences_pallas",
+    "feature_extract_pallas",
+]

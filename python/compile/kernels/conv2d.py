@@ -1,0 +1,136 @@
+"""Pallas SAME-padding 2-D convolution (NHWC), the paper's CNN hot spot.
+
+The paper (sections 2.3 and 4.3) offloads CNN convolutions to GPU via
+OpenCL and reports 10-20x over CPU. On TPU-shaped hardware the right
+formulation is not a thread-per-output-pixel work-group but a blocked
+matmul: for each (kh, kw) tap, a (H*W, Cin) x (Cin, Cout) matmul feeding
+the MXU systolic array, accumulated in VMEM. The grid walks the batch;
+each grid step holds one padded image plus the full filter bank in VMEM.
+
+VMEM budget (estimate recorded for DESIGN.md section Perf): for the
+32x32x16 training layer the padded block is 34*34*16*4 B = 74 KiB, the
+filters 3*3*16*16*4 B = 9 KiB and the accumulator 32*32*16*4 B = 64 KiB
+-- comfortably inside a 16 MiB VMEM, leaving room for double buffering.
+
+``interpret=True`` always: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime executes unmodified.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv2d_kernel(x_ref, w_ref, o_ref, *, batch: int, height: int,
+                   width: int, kh: int, kw: int, cin: int, cout: int):
+    """One grid step: full SAME conv for a batch block.
+
+    x_ref: (B, H+kh-1, W+kw-1, Cin) padded input block (VMEM)
+    w_ref: (kh, kw, Cin, Cout) filter bank (VMEM, replicated per step)
+    o_ref: (B, H, W, Cout) output block
+
+    Whole-batch blocks maximise the per-tap matmul's M dimension
+    (B*H*W rows feeding the MXU) and avoid per-image grid iterations —
+    on the CPU interpret path that removes the while-loop +
+    dynamic-slice overhead entirely. A real-TPU build would re-block
+    the batch to the VMEM budget (see DESIGN.md §Perf: the training
+    layer block is ~2.5 MiB at B=32, far under a 16 MiB VMEM).
+    """
+    acc = jnp.zeros((batch * height * width, cout), dtype=jnp.float32)
+    # Static unroll over filter taps: each tap is one MXU matmul.
+    for i in range(kh):
+        for j in range(kw):
+            xs = x_ref[:, i:i + height, j:j + width, :]
+            xs = xs.reshape(batch * height * width, cin).astype(jnp.float32)
+            wt = w_ref[i, j].astype(jnp.float32)
+            acc = acc + jnp.dot(xs, wt, preferred_element_type=jnp.float32)
+    o_ref[...] = acc.reshape(batch, height, width, cout).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def conv2d_pallas(x: jax.Array, w: jax.Array) -> jax.Array:
+    """SAME conv2d, NHWC x HWIO -> NHWC, via the Pallas kernel.
+
+    x: (B, H, W, Cin) float32
+    w: (KH, KW, Cin, Cout) float32
+    """
+    b, h, wd, cin = x.shape
+    kh, kw, cin_w, cout = w.shape
+    assert cin == cin_w, f"channel mismatch {cin} vs {cin_w}"
+    # XLA SAME-padding split: low = (k-1)//2, high = k-1-low.
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    kern = functools.partial(
+        _conv2d_kernel, batch=b, height=h, width=wd, kh=kh, kw=kw, cin=cin,
+        cout=cout,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(
+                (b, h + kh - 1, wd + kw - 1, cin), lambda i: (0, 0, 0, 0)
+            ),
+            pl.BlockSpec((kh, kw, cin, cout), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, h, wd, cout), lambda i: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, wd, cout), x.dtype),
+        interpret=True,
+    )(xp, w)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward, conv-expressed backward.
+#
+# d/dx of a SAME correlation is a SAME correlation of the cotangent with the
+# spatially-flipped, channel-transposed filters -- so the data gradient
+# reuses the very same Pallas kernel (it appears in the backward HLO too).
+# The filter gradient is a patch-contraction einsum left to XLA, which fuses
+# it into one loop nest.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def conv2d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable SAME conv2d whose forward is the Pallas kernel."""
+    return conv2d_pallas(x, w)
+
+
+def _conv2d_fwd(x, w):
+    return conv2d_pallas(x, w), (x, w)
+
+
+def _extract_patches(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """(B,H,W,Cin) -> (B,H,W,kh,kw,Cin) SAME-padded sliding patches."""
+    b, h, wd, cin = x.shape
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    rows = [
+        jnp.stack([xp[:, i:i + h, j:j + wd, :] for j in range(kw)], axis=3)
+        for i in range(kh)
+    ]
+    return jnp.stack(rows, axis=3)  # (B,H,W,kh,kw,Cin)
+
+
+def _conv2d_bwd(res, g):
+    x, w = res
+    kh, kw = w.shape[0], w.shape[1]
+    # Odd taps only: even-kernel SAME needs a swapped pad split in the
+    # transpose. The model's filters are all 3x3; inference-only paths may
+    # still use even kernels through conv2d_pallas directly.
+    assert kh % 2 == 1 and kw % 2 == 1, "conv2d vjp requires odd kernels"
+    # dx: correlate cotangent with flipped filters, Cin/Cout swapped.
+    w_flip = jnp.transpose(w[::-1, ::-1, :, :], (0, 1, 3, 2))
+    dx = conv2d_pallas(g, w_flip)
+    # dw: contract sliding patches of x against the cotangent.
+    patches = _extract_patches(x, kh, kw)  # (B,H,W,kh,kw,Cin)
+    dw = jnp.einsum("bhwijc,bhwo->ijco", patches, g)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)

@@ -1,0 +1,153 @@
+"""Layer-2 JAX compute graphs for the adcloud platform (build-time only).
+
+Three graph families, each composed from the Layer-1 Pallas kernels and
+AOT-lowered by aot.py into HLO-text artifacts the Rust coordinator
+executes through PJRT:
+
+  * cnn_*       -- the perception CNN of the training service (section 4):
+                   forward inference and the full fwd+bwd train step.
+  * icp_step    -- one ICP alignment iteration for HD map generation
+                   (section 5.2): Pallas correspondence search + centroid /
+                   cross-covariance reduction. The tiny 3x3 polar solve is
+                   done on the Rust side (the xla_extension 0.5.1 CPU
+                   runtime lacks the LAPACK custom-calls SVD would emit).
+  * feature_*   -- the image-feature-extraction workload of the simulation
+                   service (section 3.3, Fig 6).
+
+Every public function also has a ``use_pallas=False`` escape hatch that
+swaps in the pure-jnp oracle, which the pytest suite uses to cross-check
+gradients end to end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    conv2d,
+    icp_correspondences_pallas,
+    feature_extract_pallas,
+)
+from .kernels.ref import (
+    conv2d_ref,
+    icp_correspondences_ref,
+    feature_extract_ref,
+)
+
+# ---------------------------------------------------------------------------
+# Perception CNN (training service, section 4)
+# ---------------------------------------------------------------------------
+
+IMG = 32          # input images are IMG x IMG x 3
+NUM_CLASSES = 10
+
+# (name, shape) in the exact order the Rust side feeds parameter literals.
+PARAM_SPECS: list[tuple[str, tuple[int, ...]]] = [
+    ("c1w", (3, 3, 3, 8)),
+    ("c1b", (8,)),
+    ("c2w", (3, 3, 8, 16)),
+    ("c2b", (16,)),
+    ("dw", (16 * (IMG // 4) * (IMG // 4), NUM_CLASSES)),
+    ("db", (NUM_CLASSES,)),
+]
+
+
+def init_params(key: jax.Array) -> list[jax.Array]:
+    """He-scaled initialisation matching PARAM_SPECS order."""
+    params = []
+    for name, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if name.endswith("b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            scale = jnp.sqrt(2.0 / fan_in)
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 max pooling, NHWC."""
+    b, h, w, c = x.shape
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def cnn_forward(params: list[jax.Array], x: jax.Array,
+                use_pallas: bool = True) -> jax.Array:
+    """Logits for a batch of (B, 32, 32, 3) images."""
+    conv = conv2d if use_pallas else conv2d_ref
+    c1w, c1b, c2w, c2b, dw, db = params
+    h = jax.nn.relu(conv(x, c1w) + c1b)
+    h = _maxpool2(h)                      # (B, 16, 16, 8)
+    h = jax.nn.relu(conv(h, c2w) + c2b)
+    h = _maxpool2(h)                      # (B, 8, 8, 16)
+    h = h.reshape(h.shape[0], -1)         # (B, 1024)
+    return h @ dw + db
+
+
+def cnn_loss(params: list[jax.Array], x: jax.Array, y: jax.Array,
+             use_pallas: bool = True) -> jax.Array:
+    """Mean softmax cross-entropy; y is int32 class labels (B,)."""
+    logits = cnn_forward(params, x, use_pallas=use_pallas)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32),
+                                 axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def cnn_train_step(*args, use_pallas: bool = True):
+    """(c1w, c1b, c2w, c2b, dw, db, x, y) -> (loss, *grads).
+
+    Flat-argument signature so the AOT artifact takes each parameter as a
+    separate PJRT input literal and returns a flat tuple.
+    """
+    params = list(args[:6])
+    x, y = args[6], args[7]
+    loss, grads = jax.value_and_grad(
+        lambda p: cnn_loss(p, x, y, use_pallas=use_pallas)
+    )(params)
+    return (loss, *grads)
+
+
+def cnn_infer(*args, use_pallas: bool = True) -> tuple[jax.Array]:
+    """(c1w, c1b, c2w, c2b, dw, db, x) -> (logits,)."""
+    return (cnn_forward(list(args[:6]), args[6], use_pallas=use_pallas),)
+
+
+# ---------------------------------------------------------------------------
+# ICP alignment step (HD map generation, section 5.2)
+# ---------------------------------------------------------------------------
+
+
+def icp_step(src: jax.Array, dst: jax.Array, use_pallas: bool = True):
+    """One ICP data pass: correspondences + alignment statistics.
+
+    src, dst: (N, 3) / (M, 3) float32 clouds.
+    Returns (cross_cov (3,3), src_centroid (3,), nn_centroid (3,),
+             mean_sq_err ()). Rust recovers R, t from cross_cov via a
+    3x3 Jacobi polar decomposition and applies/iterates.
+    """
+    corr = (icp_correspondences_pallas if use_pallas
+            else icp_correspondences_ref)
+    nearest, d2 = corr(src, dst)
+    cs = jnp.mean(src, axis=0)
+    cd = jnp.mean(nearest, axis=0)
+    sc = src - cs
+    dc = nearest - cd
+    # Cross-covariance H = sum_i sc_i dc_i^T ; R = polar(H) on the Rust side.
+    h = sc.T @ dc
+    return h, cs, cd, jnp.mean(d2)
+
+
+# ---------------------------------------------------------------------------
+# Feature extraction (simulation service, section 3.3 / Fig 6)
+# ---------------------------------------------------------------------------
+
+
+def feature_batch(x: jax.Array, use_pallas: bool = True) -> tuple[jax.Array]:
+    """(B, H, W) grayscale -> (B, H/8, W/8, 4) descriptors."""
+    fn = feature_extract_pallas if use_pallas else feature_extract_ref
+    return (fn(x),)

@@ -1,0 +1,62 @@
+"""AOT pipeline tests: lowering, manifest integrity, HLO-text format."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+def test_artifact_table_complete():
+    table = aot.artifact_table()
+    # Every service the Rust coordinator expects must have its artifact.
+    for name in [
+        "cnn_train_b16",
+        "cnn_infer_b1",
+        "cnn_infer_b8",
+        "cnn_infer_b32",
+        "icp_step_1024",
+        "icp_step_4096",
+        "feature_b1",
+        "feature_b8",
+    ]:
+        assert name in table, f"missing artifact {name}"
+
+
+def test_train_artifact_io_descriptors():
+    _, specs, in_desc, out_desc = aot.artifact_table()["cnn_train_b16"]
+    assert len(specs) == len(in_desc) == len(model.PARAM_SPECS) + 2
+    # params first, in PARAM_SPECS order, then x, then y
+    for (n, s, d), (pn, ps) in zip(in_desc, model.PARAM_SPECS):
+        assert n == pn and tuple(s) == ps and d == "f32"
+    assert in_desc[-1] == ("y", [16], "s32")
+    assert out_desc[0] == ("loss", [], "f32")
+    assert len(out_desc) == 1 + len(model.PARAM_SPECS)
+
+
+@pytest.mark.parametrize("name", ["feature_b1", "icp_step_1024"])
+def test_lower_to_hlo_text(tmp_path, name):
+    manifest = aot.build(str(tmp_path), only=[name])
+    (entry,) = manifest["artifacts"]
+    assert entry["name"] == name
+    text = (tmp_path / entry["file"]).read_text()
+    assert text.startswith("HloModule"), text[:60]
+    # return_tuple=True means the root is a tuple.
+    assert "ROOT" in text
+    data = json.loads((tmp_path / "manifest.json").read_text())
+    assert data["format"] == "hlo-text/v1"
+    assert data["param_order"] == [n for n, _ in model.PARAM_SPECS]
+
+
+def test_built_artifacts_exist_if_make_ran():
+    """When artifacts/ exists (make artifacts), it must be complete."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art):
+        pytest.skip("artifacts not built yet")
+    data = json.load(open(os.path.join(art, "manifest.json")))
+    for entry in data["artifacts"]:
+        path = os.path.join(art, entry["file"])
+        assert os.path.isfile(path), f"missing {entry['file']}"
+        with open(path) as f:
+            assert f.read(9) == "HloModule"

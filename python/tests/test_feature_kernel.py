@@ -1,0 +1,62 @@
+"""Pallas feature-extraction kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import feature_extract_pallas
+from compile.kernels.ref import feature_extract_ref
+
+
+def _img(key, b, h, w):
+    return jax.random.uniform(jax.random.PRNGKey(key), (b, h, w))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    hc=st.integers(1, 6),
+    wc=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_feature_matches_ref_swept(b, hc, wc, seed):
+    x = _img(seed, b, hc * 8, wc * 8)
+    np.testing.assert_allclose(
+        feature_extract_pallas(x),
+        feature_extract_ref(x),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_feature_service_shape():
+    """The AOT artifact's frozen 64x64 shape."""
+    x = _img(1, 8, 64, 64)
+    got = feature_extract_pallas(x)
+    assert got.shape == (8, 8, 8, 4)
+    np.testing.assert_allclose(
+        got, feature_extract_ref(x), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_feature_constant_image_zero_gradients():
+    x = jnp.full((1, 16, 16), 0.7)
+    got = feature_extract_pallas(x)
+    np.testing.assert_allclose(got, jnp.zeros_like(got), atol=1e-6)
+
+
+def test_feature_vertical_edge_detected():
+    """A vertical step edge shows up in |gx| but not |gy|."""
+    x = jnp.concatenate(
+        [jnp.zeros((1, 16, 8)), jnp.ones((1, 16, 8))], axis=2
+    )
+    f = feature_extract_pallas(x)
+    assert float(f[..., 0].max()) > 0.0     # mean |gx| sees the edge
+    np.testing.assert_allclose(f[..., 1], jnp.zeros_like(f[..., 1]), atol=1e-6)
+
+
+def test_feature_rejects_bad_cell_multiple():
+    with pytest.raises(AssertionError):
+        feature_extract_pallas(_img(2, 1, 12, 16))

@@ -1,0 +1,109 @@
+"""L2 graph tests: shapes, gradient cross-checks, training sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    kx, ky = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(kx, (16, model.IMG, model.IMG, 3))
+    y = jax.random.randint(ky, (16,), 0, model.NUM_CLASSES)
+    return x, y
+
+
+def test_param_specs_match_init(params):
+    assert len(params) == len(model.PARAM_SPECS)
+    for p, (_, shape) in zip(params, model.PARAM_SPECS):
+        assert p.shape == shape
+        assert p.dtype == jnp.float32
+
+
+def test_forward_shapes(params, batch):
+    x, _ = batch
+    logits = model.cnn_forward(params, x)
+    assert logits.shape == (16, model.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_train_step_grads_match_reference(params, batch):
+    """Full fwd+bwd through the Pallas conv == autodiff of oracle model."""
+    x, y = batch
+    out_p = model.cnn_train_step(*params, x, y, use_pallas=True)
+    out_r = model.cnn_train_step(*params, x, y, use_pallas=False)
+    assert len(out_p) == 1 + len(params)
+    for a, b in zip(out_p, out_r):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5)
+
+
+def test_initial_loss_near_uniform(params, batch):
+    """Fresh params should be near -log(1/C)."""
+    x, y = batch
+    loss = model.cnn_loss(params, x, y)
+    assert abs(float(loss) - np.log(model.NUM_CLASSES)) < 6.0
+
+
+def test_sgd_reduces_loss(params, batch):
+    """A few SGD steps on one batch must overfit it measurably."""
+    x, y = batch
+    p = [jnp.array(q) for q in params]
+    first = None
+    lr = 0.05
+    for _ in range(12):
+        out = model.cnn_train_step(*p, x, y, use_pallas=False)
+        loss, grads = out[0], out[1:]
+        if first is None:
+            first = float(loss)
+        p = [q - lr * g for q, g in zip(p, grads)]
+    final = float(model.cnn_loss(p, x, y, use_pallas=False))
+    assert final < first * 0.8, (first, final)
+
+
+def test_infer_matches_forward(params, batch):
+    x, _ = batch
+    (logits,) = model.cnn_infer(*params, x[:8])
+    np.testing.assert_allclose(
+        logits, model.cnn_forward(params, x[:8]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_icp_step_recovers_translation():
+    """For a pure small translation the step statistics solve it exactly."""
+    key = jax.random.PRNGKey(3)
+    src = jax.random.normal(key, (256, 3))
+    t = jnp.array([0.05, -0.02, 0.03])
+    dst = src + t
+    h, cs, cd, err = model.icp_step(src, dst, use_pallas=True)
+    # With a dense-enough cloud and a tiny offset, nearest(src_i) == dst_i,
+    # so the centroid difference IS the translation.
+    np.testing.assert_allclose(cd - cs, t, atol=5e-3)
+    assert float(err) < 0.02
+    # Cross-covariance of a pure translation is ~diagonal-dominant PSD-ish;
+    # at minimum it must be finite and symmetric-ish in magnitude.
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+
+def test_icp_step_pallas_matches_ref():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    src = jax.random.normal(k1, (512, 3))
+    dst = jax.random.normal(k2, (512, 3))
+    out_p = model.icp_step(src, dst, use_pallas=True)
+    out_r = model.icp_step(src, dst, use_pallas=False)
+    for a, b in zip(out_p, out_r):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_feature_batch_matches_ref():
+    x = jax.random.uniform(jax.random.PRNGKey(11), (4, 64, 64))
+    (got,) = model.feature_batch(x, use_pallas=True)
+    (want,) = model.feature_batch(x, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

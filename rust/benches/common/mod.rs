@@ -1,0 +1,31 @@
+//! Shared bench runner: every `cargo bench` target replays a subset of
+//! the paper-experiment harness (platform::experiments) and prints the
+//! paper-style tables. Set `ADCLOUD_BENCH_QUICK=1` for CI-sized runs.
+
+use adcloud::platform::experiments;
+
+pub fn run(ids: &[&str]) {
+    let quick = std::env::var("ADCLOUD_BENCH_QUICK").is_ok();
+    println!(
+        "adcloud bench — {} experiment(s), {} mode\n",
+        ids.len(),
+        if quick { "quick" } else { "full" }
+    );
+    let mut failures = 0;
+    for id in ids {
+        let start = std::time::Instant::now();
+        match experiments::run_experiment(id, quick) {
+            Ok(table) => {
+                println!("{}", table.render());
+                println!("  (bench wall time: {:?})\n", start.elapsed());
+            }
+            Err(e) => {
+                eprintln!("{id} FAILED: {e:#}\n");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}

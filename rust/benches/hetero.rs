@@ -1,0 +1,6 @@
+//! Heterogeneous-computing bench: E3 (CNN inference GPU/FPGA/CPU with
+//! energy, §2.3 — measured host rows + paper-hardware roofline rows).
+mod common;
+fn main() {
+    common::run(&["e3"]);
+}

@@ -1,0 +1,7 @@
+//! Infrastructure benches: E1 (SQL DCE vs MapReduce, §2.1), E2 (tiered
+//! store vs DFS, §2.2), E4 (container overhead, §2.3), E12 (reliability
+//! soak, §2.1).
+mod common;
+fn main() {
+    common::run(&["e1", "e2", "e4", "e12"]);
+}

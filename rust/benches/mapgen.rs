@@ -1,0 +1,6 @@
+//! Map-generation benches: E10 (fused vs staged pipeline, §5.2) and
+//! E11 (ICP device comparison, §5.2).
+mod common;
+fn main() {
+    common::run(&["e10", "e11"]);
+}

@@ -1,0 +1,6 @@
+//! Simulation-service benches: E5 (Fig 6 core scaling, calibrated
+//! virtual time) and E6 (replay 1->8 node scaling, §3.3).
+mod common;
+fn main() {
+    common::run(&["e5", "e6"]);
+}

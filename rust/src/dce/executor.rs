@@ -1,0 +1,265 @@
+//! Executor pool: the worker side of the compute engine.
+//!
+//! Real-execution mode runs tasks on a fixed thread pool sized
+//! `nodes x cores_per_node` (each thread is one executor slot of the
+//! simulated cluster). Tasks are retryable closures; failures are
+//! retried up to the configured limit, which is what the fault-injection
+//! soak (experiment E12) exercises.
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::metrics::MetricsRegistry;
+
+/// Context visible to a running task.
+#[derive(Clone)]
+pub struct TaskContext {
+    pub stage: String,
+    pub partition: usize,
+    pub attempt: usize,
+    pub metrics: MetricsRegistry,
+    /// Fault injection hook: return Err to simulate an executor failure.
+    pub fail_injector: Option<Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync>>,
+}
+
+impl TaskContext {
+    pub fn check_failure(&self) -> Result<()> {
+        match &self.fail_injector {
+            Some(f) => f(self),
+            None => Ok(()),
+        }
+    }
+}
+
+type PoolJob = Box<dyn FnOnce() + Send>;
+
+/// Fixed-size worker pool.
+pub struct ExecutorPool {
+    tx: Mutex<Option<mpsc::Sender<PoolJob>>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ExecutorPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<PoolJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("dce-executor-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn executor")
+            })
+            .collect();
+        Self { tx: Mutex::new(Some(tx)), workers, size, in_flight }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
+        let guard = self.tx.lock().unwrap();
+        let tx = guard.as_ref().ok_or_else(|| anyhow!("pool shut down"))?;
+        let inflight = self.in_flight.clone();
+        inflight.fetch_add(1, Ordering::Relaxed);
+        tx.send(Box::new(move || {
+            job();
+            inflight.fetch_sub(1, Ordering::Relaxed);
+        }))
+        .map_err(|_| anyhow!("pool workers gone"))
+    }
+
+    /// Run a set of retryable tasks to completion, preserving order.
+    ///
+    /// Each task is `Arc<dyn Fn>` so a failed attempt can be re-submitted;
+    /// after `max_retries` additional attempts the whole job fails (all
+    /// other tasks still drain first).
+    pub fn run_tasks<T: Send + 'static>(
+        &self,
+        tasks: Vec<Arc<dyn Fn(usize) -> Result<T> + Send + Sync>>,
+        max_retries: usize,
+    ) -> Result<Vec<T>> {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let (rtx, rrx) = mpsc::channel::<(usize, usize, Result<T>)>();
+        let submit = |i: usize, attempt: usize| -> Result<()> {
+            let task = tasks[i].clone();
+            let rtx = rtx.clone();
+            self.spawn(move || {
+                let r = task(attempt);
+                let _ = rtx.send((i, attempt, r));
+            })
+        };
+        for i in 0..n {
+            submit(i, 0)?;
+        }
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut done = 0usize;
+        let mut first_err: Option<anyhow::Error> = None;
+        while done < n {
+            let (i, attempt, result) = rrx
+                .recv()
+                .map_err(|_| anyhow!("executor pool died mid-job"))?;
+            match result {
+                Ok(v) => {
+                    out[i] = Some(v);
+                    done += 1;
+                }
+                Err(_) if attempt < max_retries => {
+                    submit(i, attempt + 1)?;
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e.context(format!(
+                            "task {i} failed after {} attempts",
+                            attempt + 1
+                        )));
+                    }
+                    done += 1;
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => out
+                .into_iter()
+                .map(|o| o.ok_or_else(|| anyhow!("task produced no result")))
+                .collect(),
+        }
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        *self.tx.lock().unwrap() = None;
+        // The pool can be dropped FROM a worker thread (task closures
+        // hold context clones; the last one may die inside a worker).
+        // Joining yourself is EDEADLK — detach in that case, join the
+        // rest.
+        let me = std::thread::current().id();
+        for w in self.workers.drain(..) {
+            if w.thread().id() != me {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn run_tasks_preserves_order() {
+        let pool = ExecutorPool::new(4);
+        let tasks: Vec<Arc<dyn Fn(usize) -> Result<usize> + Send + Sync>> = (0..32)
+            .map(|i| {
+                let f: Arc<dyn Fn(usize) -> Result<usize> + Send + Sync> =
+                    Arc::new(move |_| Ok(i * 10));
+                f
+            })
+            .collect();
+        let out = pool.run_tasks(tasks, 0).unwrap();
+        assert_eq!(out, (0..32).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn failing_task_is_retried_then_succeeds() {
+        let pool = ExecutorPool::new(2);
+        let counter = Arc::new(AtomicU32::new(0));
+        let c2 = counter.clone();
+        let flaky: Arc<dyn Fn(usize) -> Result<u32> + Send + Sync> = Arc::new(move |attempt| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            if attempt < 2 {
+                anyhow::bail!("injected failure on attempt {attempt}")
+            }
+            Ok(99)
+        });
+        let out = pool.run_tasks(vec![flaky], 2).unwrap();
+        assert_eq!(out, vec![99]);
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn exhausted_retries_fail_the_job() {
+        let pool = ExecutorPool::new(2);
+        let bad: Arc<dyn Fn(usize) -> Result<u32> + Send + Sync> =
+            Arc::new(|_| anyhow::bail!("always broken"));
+        let ok: Arc<dyn Fn(usize) -> Result<u32> + Send + Sync> = Arc::new(|_| Ok(1));
+        let r = pool.run_tasks(vec![ok, bad], 1);
+        assert!(r.is_err());
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("always broken"), "{msg}");
+    }
+
+    #[test]
+    fn empty_task_set_is_ok() {
+        let pool = ExecutorPool::new(1);
+        let out: Vec<u32> = pool
+            .run_tasks(Vec::<Arc<dyn Fn(usize) -> Result<u32> + Send + Sync>>::new(), 0)
+            .unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_parallelism_uses_all_workers() {
+        let pool = ExecutorPool::new(4);
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let tasks: Vec<Arc<dyn Fn(usize) -> Result<()> + Send + Sync>> = (0..4)
+            .map(|_| {
+                let b = barrier.clone();
+                let f: Arc<dyn Fn(usize) -> Result<()> + Send + Sync> = Arc::new(move |_| {
+                    // Deadlocks unless all 4 run concurrently.
+                    b.wait();
+                    Ok(())
+                });
+                f
+            })
+            .collect();
+        pool.run_tasks(tasks, 0).unwrap();
+    }
+
+    #[test]
+    fn task_context_fault_injection() {
+        let tc = TaskContext {
+            stage: "s".into(),
+            partition: 3,
+            attempt: 0,
+            metrics: MetricsRegistry::new(),
+            fail_injector: Some(Arc::new(|tc: &TaskContext| {
+                if tc.partition == 3 {
+                    anyhow::bail!("injected")
+                }
+                Ok(())
+            })),
+        };
+        assert!(tc.check_failure().is_err());
+        let tc_ok = TaskContext { partition: 1, ..tc.clone() };
+        assert!(tc_ok.check_failure().is_ok());
+    }
+}

@@ -1,0 +1,32 @@
+//! The distributed compute engine (Spark analog, paper section 2.1).
+//!
+//! * [`rdd`] / [`pair`] — typed, lineage-tracked RDDs with pipelined
+//!   narrow stages and hash-shuffled wide stages.
+//! * [`context`] — driver context + DAG scheduler (stages cut at shuffle
+//!   boundaries, retryable tasks, fault injection).
+//! * [`executor`] — the worker pool.
+//! * [`shuffle`] — the shuffle data plane with transport-device
+//!   accounting (tiered store vs DFS).
+//! * [`binpipe`] — BinPipeRDD (paper section 3.1): framed binary records
+//!   and pipe-through-child-process execution.
+//! * [`simclock`] / [`costmodel`] — discrete-event virtual-time cluster
+//!   simulation driven by measured task costs, for the paper's
+//!   datacenter-scale scaling figures.
+
+pub mod binpipe;
+pub mod context;
+pub mod costmodel;
+pub mod executor;
+pub mod pair;
+pub mod rdd;
+pub mod shuffle;
+pub mod simclock;
+
+pub use binpipe::{decode_stream, encode_records, BinaryRddExt};
+pub use context::{CacheManager, DceContext};
+pub use costmodel::{measure_per_item_cost, CostModel};
+pub use executor::{ExecutorPool, TaskContext};
+pub use pair::partition_of;
+pub use rdd::{Data, Rdd};
+pub use shuffle::ShuffleManager;
+pub use simclock::{SimCluster, SimJob, SimReport, SimStage, SimTask};

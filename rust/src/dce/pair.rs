@@ -1,0 +1,412 @@
+//! Wide (shuffle) operations on key/value RDDs: combine/reduce/group by
+//! key, join. These cut stages: the map side hash-partitions and
+//! locally combines into the [`ShuffleManager`]; the reduce side merges
+//! buckets. Missing buckets (executor loss) are regenerated from lineage
+//! by re-running the owning map task.
+
+use anyhow::Result;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+use super::context::DceContext;
+use super::executor::TaskContext;
+use super::rdd::{Data, Rdd, RddNode, ShuffleDep};
+use super::shuffle::ShuffleManager;
+
+/// Stable hash partitioner.
+pub fn partition_of<K: Hash>(key: &K, parts: usize) -> usize {
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() % parts as u64) as usize
+}
+
+fn est_bytes<T>(n: usize) -> u64 {
+    (n * std::mem::size_of::<T>()) as u64 + 16
+}
+
+/// Typed shuffle dependency: map side of combine_by_key.
+struct ShuffleDepImpl<K: Data + Hash + Eq, V: Data, C: Data> {
+    shuffle_id: usize,
+    parent: Arc<dyn RddNode<(K, V)>>,
+    num_reduce: usize,
+    mgr: Arc<ShuffleManager>,
+    create: Arc<dyn Fn(V) -> C + Send + Sync>,
+    merge_v: Arc<dyn Fn(C, V) -> C + Send + Sync>,
+}
+
+impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDep for ShuffleDepImpl<K, V, C> {
+    fn shuffle_id(&self) -> usize {
+        self.shuffle_id
+    }
+
+    fn num_maps(&self) -> usize {
+        self.parent.num_partitions()
+    }
+
+    fn run_map_task(&self, map_part: usize, tc: &TaskContext) -> Result<()> {
+        let items = self.parent.compute(map_part, tc)?;
+        let mut buckets: Vec<HashMap<K, C>> =
+            (0..self.num_reduce).map(|_| HashMap::new()).collect();
+        for (k, v) in items {
+            let b = partition_of(&k, self.num_reduce);
+            match buckets[b].remove(&k) {
+                Some(c) => {
+                    buckets[b].insert(k, (self.merge_v)(c, v));
+                }
+                None => {
+                    let c = (self.create)(v);
+                    buckets[b].insert(k, c);
+                }
+            }
+        }
+        for (r, bucket) in buckets.into_iter().enumerate() {
+            let data: Vec<(K, C)> = bucket.into_iter().collect();
+            let bytes = est_bytes::<(K, C)>(data.len());
+            self.mgr.put_bucket(self.shuffle_id, map_part, r, data, bytes);
+        }
+        Ok(())
+    }
+
+    fn parents(&self) -> Vec<Arc<dyn ShuffleDep>> {
+        self.parent.shuffle_deps()
+    }
+}
+
+/// Reduce side: merges per-map combined buckets.
+struct ShuffledNode<K: Data + Hash + Eq, V: Data, C: Data> {
+    dep: Arc<ShuffleDepImpl<K, V, C>>,
+    merge_c: Arc<dyn Fn(C, C) -> C + Send + Sync>,
+}
+
+impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffledNode<K, V, C> {
+    /// Regenerate any missing map buckets for this reduce partition
+    /// (lineage-based shuffle recovery after a lost executor / retry).
+    fn ensure_buckets(&self, reduce_part: usize, tc: &TaskContext) -> Result<()> {
+        for m in 0..self.dep.num_maps() {
+            if !self.dep.mgr.has_bucket(self.dep.shuffle_id, m, reduce_part) {
+                tc.metrics.counter("dce.shuffle.regenerated_maps").inc();
+                self.dep.run_map_task(m, tc)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<K: Data + Hash + Eq, V: Data, C: Data> RddNode<(K, C)> for ShuffledNode<K, V, C> {
+    fn num_partitions(&self) -> usize {
+        self.dep.num_reduce
+    }
+
+    fn compute(&self, part: usize, tc: &TaskContext) -> Result<Vec<(K, C)>> {
+        self.ensure_buckets(part, tc)?;
+        let buckets: Vec<Vec<(K, C)>> =
+            self.dep.mgr.take_buckets(self.dep.shuffle_id, self.dep.num_maps(), part)?;
+        let mut merged: HashMap<K, C> = HashMap::new();
+        for bucket in buckets {
+            for (k, c) in bucket {
+                match merged.remove(&k) {
+                    Some(prev) => {
+                        merged.insert(k, (self.merge_c)(prev, c));
+                    }
+                    None => {
+                        merged.insert(k, c);
+                    }
+                }
+            }
+        }
+        Ok(merged.into_iter().collect())
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
+        vec![self.dep.clone()]
+    }
+}
+
+/// Two-sided shuffle for joins (cogroup).
+struct CoGroupNode<K: Data + Hash + Eq, V: Data, W: Data> {
+    left: Arc<ShuffleDepImpl<K, V, Vec<V>>>,
+    right: Arc<ShuffleDepImpl<K, W, Vec<W>>>,
+}
+
+impl<K: Data + Hash + Eq, V: Data, W: Data> RddNode<(K, (Vec<V>, Vec<W>))>
+    for CoGroupNode<K, V, W>
+{
+    fn num_partitions(&self) -> usize {
+        self.left.num_reduce
+    }
+
+    fn compute(&self, part: usize, tc: &TaskContext) -> Result<Vec<(K, (Vec<V>, Vec<W>))>> {
+        for m in 0..self.left.num_maps() {
+            if !self.left.mgr.has_bucket(self.left.shuffle_id, m, part) {
+                self.left.run_map_task(m, tc)?;
+            }
+        }
+        for m in 0..self.right.num_maps() {
+            if !self.right.mgr.has_bucket(self.right.shuffle_id, m, part) {
+                self.right.run_map_task(m, tc)?;
+            }
+        }
+        let mut merged: HashMap<K, (Vec<V>, Vec<W>)> = HashMap::new();
+        let lbuckets: Vec<Vec<(K, Vec<V>)>> =
+            self.left.mgr.take_buckets(self.left.shuffle_id, self.left.num_maps(), part)?;
+        for bucket in lbuckets {
+            for (k, mut vs) in bucket {
+                merged.entry(k).or_default().0.append(&mut vs);
+            }
+        }
+        let rbuckets: Vec<Vec<(K, Vec<W>)>> =
+            self.right.mgr.take_buckets(self.right.shuffle_id, self.right.num_maps(), part)?;
+        for bucket in rbuckets {
+            for (k, mut ws) in bucket {
+                merged.entry(k).or_default().1.append(&mut ws);
+            }
+        }
+        Ok(merged.into_iter().collect())
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
+        vec![self.left.clone(), self.right.clone()]
+    }
+}
+
+fn make_dep<K: Data + Hash + Eq, V: Data, C: Data>(
+    ctx: &DceContext,
+    parent: Arc<dyn RddNode<(K, V)>>,
+    num_reduce: usize,
+    create: Arc<dyn Fn(V) -> C + Send + Sync>,
+    merge_v: Arc<dyn Fn(C, V) -> C + Send + Sync>,
+) -> Arc<ShuffleDepImpl<K, V, C>> {
+    Arc::new(ShuffleDepImpl {
+        shuffle_id: ctx.next_id(),
+        parent,
+        num_reduce,
+        mgr: ctx.inner.shuffle.clone(),
+        create,
+        merge_v,
+    })
+}
+
+impl<K: Data + Hash + Eq, V: Data> Rdd<(K, V)> {
+    /// The general combiner (Spark's combineByKey): map-side combine,
+    /// hash shuffle, reduce-side merge.
+    pub fn combine_by_key<C: Data>(
+        &self,
+        create: impl Fn(V) -> C + Send + Sync + 'static,
+        merge_v: impl Fn(C, V) -> C + Send + Sync + 'static,
+        merge_c: impl Fn(C, C) -> C + Send + Sync + 'static,
+        num_parts: usize,
+    ) -> Rdd<(K, C)> {
+        let dep = make_dep(
+            &self.ctx,
+            self.node.clone(),
+            num_parts.max(1),
+            Arc::new(create),
+            Arc::new(merge_v),
+        );
+        Rdd::from_node(
+            self.ctx.clone(),
+            Arc::new(ShuffledNode { dep, merge_c: Arc::new(merge_c) }),
+        )
+    }
+
+    pub fn reduce_by_key(
+        &self,
+        f: impl Fn(V, V) -> V + Send + Sync + 'static,
+        num_parts: usize,
+    ) -> Rdd<(K, V)> {
+        let f = Arc::new(f);
+        let f2 = f.clone();
+        self.combine_by_key(
+            |v| v,
+            move |c, v| f(c, v),
+            move |a, b| f2(a, b),
+            num_parts,
+        )
+    }
+
+    pub fn group_by_key(&self, num_parts: usize) -> Rdd<(K, Vec<V>)> {
+        self.combine_by_key(
+            |v| vec![v],
+            |mut c, v| {
+                c.push(v);
+                c
+            },
+            |mut a, mut b| {
+                a.append(&mut b);
+                a
+            },
+            num_parts,
+        )
+    }
+
+    pub fn count_by_key(&self) -> Result<HashMap<K, u64>> {
+        let pairs = self
+            .map(|(k, _)| (k, 1u64))
+            .reduce_by_key(|a, b| a + b, self.ctx.default_parallelism())
+            .collect()?;
+        Ok(pairs.into_iter().collect())
+    }
+
+    /// Inner hash join.
+    pub fn join<W: Data>(&self, other: &Rdd<(K, W)>, num_parts: usize) -> Rdd<(K, (V, W))> {
+        let left = make_dep(
+            &self.ctx,
+            self.node.clone(),
+            num_parts.max(1),
+            Arc::new(|v: V| vec![v]),
+            Arc::new(|mut c: Vec<V>, v| {
+                c.push(v);
+                c
+            }),
+        );
+        let right = make_dep(
+            &self.ctx,
+            other.node.clone(),
+            num_parts.max(1),
+            Arc::new(|w: W| vec![w]),
+            Arc::new(|mut c: Vec<W>, w| {
+                c.push(w);
+                c
+            }),
+        );
+        let cogrouped: Rdd<(K, (Vec<V>, Vec<W>))> =
+            Rdd::from_node(self.ctx.clone(), Arc::new(CoGroupNode { left, right }));
+        cogrouped.flat_map(|(k, (vs, ws))| {
+            let mut out = Vec::with_capacity(vs.len() * ws.len());
+            for v in &vs {
+                for w in &ws {
+                    out.push((k.clone(), (v.clone(), w.clone())));
+                }
+            }
+            out
+        })
+    }
+}
+
+impl<K: Data + Hash + Eq + Ord, V: Data> Rdd<(K, V)> {
+    /// Collect sorted by key (driver-side sort; range-partitioned
+    /// distributed sorts are out of scope for the workloads here).
+    pub fn collect_sorted_by_key(&self) -> Result<Vec<(K, V)>> {
+        let mut out = self.collect()?;
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> DceContext {
+        DceContext::local().unwrap()
+    }
+
+    #[test]
+    fn reduce_by_key_sums() {
+        let c = ctx();
+        let pairs: Vec<(u32, u64)> = (0..100).map(|i| (i % 5, i as u64)).collect();
+        let mut got = c
+            .parallelize(pairs, 6)
+            .reduce_by_key(|a, b| a + b, 3)
+            .collect_sorted_by_key()
+            .unwrap();
+        got.sort();
+        let mut want: HashMap<u32, u64> = HashMap::new();
+        for i in 0..100u64 {
+            *want.entry((i % 5) as u32).or_default() += i;
+        }
+        let mut want: Vec<(u32, u64)> = want.into_iter().collect();
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn group_by_key_collects_all_values() {
+        let c = ctx();
+        let pairs = vec![("a", 1), ("b", 2), ("a", 3), ("b", 4), ("a", 5)];
+        let groups = c.parallelize(pairs, 3).group_by_key(2).collect().unwrap();
+        let m: HashMap<&str, Vec<i32>> = groups
+            .into_iter()
+            .map(|(k, mut v)| {
+                v.sort();
+                (k, v)
+            })
+            .collect();
+        assert_eq!(m["a"], vec![1, 3, 5]);
+        assert_eq!(m["b"], vec![2, 4]);
+    }
+
+    #[test]
+    fn count_by_key_matches() {
+        let c = ctx();
+        let pairs: Vec<(u8, ())> = (0..30).map(|i| ((i % 3) as u8, ())).collect();
+        let counts = c.parallelize(pairs, 4).count_by_key().unwrap();
+        assert_eq!(counts[&0], 10);
+        assert_eq!(counts[&1], 10);
+        assert_eq!(counts[&2], 10);
+    }
+
+    #[test]
+    fn join_inner_semantics() {
+        let c = ctx();
+        let users = c.parallelize(vec![(1u32, "ann"), (2, "bob"), (3, "cat")], 2);
+        let carts = c.parallelize(vec![(1u32, 10.0f64), (1, 20.0), (3, 30.0), (9, 99.0)], 3);
+        let mut joined = users.join(&carts, 2).collect().unwrap();
+        joined.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(
+            joined,
+            vec![(1, ("ann", 10.0)), (1, ("ann", 20.0)), (3, ("cat", 30.0))]
+        );
+    }
+
+    #[test]
+    fn multi_stage_shuffle_chain() {
+        // shuffle -> map -> shuffle again (tests transitive stage order).
+        let c = ctx();
+        let pairs: Vec<(u32, u64)> = (0..200).map(|i| (i % 10, 1u64)).collect();
+        let out = c
+            .parallelize(pairs, 5)
+            .reduce_by_key(|a, b| a + b, 4) // (k, 20) x10
+            .map(|(k, n)| (k % 2, n))
+            .reduce_by_key(|a, b| a + b, 2) // (0, 100), (1, 100)
+            .collect_sorted_by_key()
+            .unwrap();
+        assert_eq!(out, vec![(0, 100), (1, 100)]);
+    }
+
+    #[test]
+    fn shuffle_survives_injected_reduce_failure() {
+        let c = ctx();
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let hits = Arc::new(AtomicU32::new(0));
+        let h2 = hits.clone();
+        c.set_fail_injector(Some(Arc::new(move |tc| {
+            if tc.stage == "result" && tc.attempt == 0 && tc.partition == 0 {
+                h2.fetch_add(1, Ordering::SeqCst);
+                anyhow::bail!("reducer crash")
+            }
+            Ok(())
+        })));
+        let pairs: Vec<(u32, u64)> = (0..50).map(|i| (i % 4, 1)).collect();
+        let out = c
+            .parallelize(pairs, 4)
+            .reduce_by_key(|a, b| a + b, 2)
+            .collect()
+            .unwrap();
+        c.set_fail_injector(None);
+        assert_eq!(out.iter().map(|(_, n)| n).sum::<u64>(), 50);
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "injector fired exactly once");
+    }
+
+    #[test]
+    fn partitioner_is_stable() {
+        for parts in [1usize, 2, 7] {
+            for k in 0..100u64 {
+                assert_eq!(partition_of(&k, parts), partition_of(&k, parts));
+                assert!(partition_of(&k, parts) < parts);
+            }
+        }
+    }
+}

@@ -1,0 +1,471 @@
+//! RDDs: typed, lazily-evaluated, lineage-tracked distributed datasets.
+//!
+//! Narrow transformations (map/filter/flatMap/mapPartitions/union) are
+//! pipelined: a task computes its whole parent chain in one pass, exactly
+//! like Spark's narrow-dependency stages. Wide transformations live in
+//! [`super::pair`] and cut stages at shuffle boundaries.
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use super::context::DceContext;
+use super::executor::TaskContext;
+
+/// Marker bound for record types.
+pub trait Data: Clone + Send + Sync + 'static {}
+impl<T: Clone + Send + Sync + 'static> Data for T {}
+
+/// One node of the lineage graph.
+pub trait RddNode<T: Data>: Send + Sync {
+    fn num_partitions(&self) -> usize;
+    fn compute(&self, part: usize, tc: &TaskContext) -> Result<Vec<T>>;
+    /// Direct shuffle dependencies (narrow nodes forward their parent's).
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>>;
+}
+
+/// Type-erased wide dependency (a shuffle's map side).
+pub trait ShuffleDep: Send + Sync {
+    fn shuffle_id(&self) -> usize;
+    fn num_maps(&self) -> usize;
+    fn run_map_task(&self, map_part: usize, tc: &TaskContext) -> Result<()>;
+    /// Shuffles this shuffle's map side itself depends on.
+    fn parents(&self) -> Vec<Arc<dyn ShuffleDep>>;
+}
+
+/// A typed distributed dataset.
+pub struct Rdd<T: Data> {
+    pub(crate) ctx: DceContext,
+    pub(crate) node: Arc<dyn RddNode<T>>,
+    pub(crate) id: usize,
+}
+
+impl<T: Data> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Self { ctx: self.ctx.clone(), node: self.node.clone(), id: self.id }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Concrete lineage nodes
+// ---------------------------------------------------------------------------
+
+struct ParallelizeNode<T: Data> {
+    parts: Vec<Arc<Vec<T>>>,
+}
+
+impl<T: Data> RddNode<T> for ParallelizeNode<T> {
+    fn num_partitions(&self) -> usize {
+        self.parts.len()
+    }
+    fn compute(&self, part: usize, _tc: &TaskContext) -> Result<Vec<T>> {
+        Ok(self.parts[part].as_ref().clone())
+    }
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
+        Vec::new()
+    }
+}
+
+struct MapPartitionsNode<T: Data, U: Data> {
+    parent: Arc<dyn RddNode<T>>,
+    #[allow(clippy::type_complexity)]
+    f: Arc<dyn Fn(usize, Vec<T>) -> Result<Vec<U>> + Send + Sync>,
+}
+
+impl<T: Data, U: Data> RddNode<U> for MapPartitionsNode<T, U> {
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+    fn compute(&self, part: usize, tc: &TaskContext) -> Result<Vec<U>> {
+        let input = self.parent.compute(part, tc)?;
+        (self.f)(part, input)
+    }
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
+        self.parent.shuffle_deps()
+    }
+}
+
+struct UnionNode<T: Data> {
+    parents: Vec<Arc<dyn RddNode<T>>>,
+    /// (parent index, partition within parent) per output partition.
+    index: Vec<(usize, usize)>,
+}
+
+impl<T: Data> RddNode<T> for UnionNode<T> {
+    fn num_partitions(&self) -> usize {
+        self.index.len()
+    }
+    fn compute(&self, part: usize, tc: &TaskContext) -> Result<Vec<T>> {
+        let (pi, pp) = self.index[part];
+        self.parents[pi].compute(pp, tc)
+    }
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
+        self.parents.iter().flat_map(|p| p.shuffle_deps()).collect()
+    }
+}
+
+struct CoalesceNode<T: Data> {
+    parent: Arc<dyn RddNode<T>>,
+    /// Parent partitions grouped per output partition.
+    groups: Vec<Vec<usize>>,
+}
+
+impl<T: Data> RddNode<T> for CoalesceNode<T> {
+    fn num_partitions(&self) -> usize {
+        self.groups.len()
+    }
+    fn compute(&self, part: usize, tc: &TaskContext) -> Result<Vec<T>> {
+        let mut out = Vec::new();
+        for &pp in &self.groups[part] {
+            out.extend(self.parent.compute(pp, tc)?);
+        }
+        Ok(out)
+    }
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
+        self.parent.shuffle_deps()
+    }
+}
+
+struct CachedNode<T: Data> {
+    parent: Arc<dyn RddNode<T>>,
+    ctx: DceContext,
+    rdd_id: usize,
+}
+
+impl<T: Data> RddNode<T> for CachedNode<T> {
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+    fn compute(&self, part: usize, tc: &TaskContext) -> Result<Vec<T>> {
+        if let Some(hit) = self.ctx.inner.cache.get::<T>(self.rdd_id, part) {
+            tc.metrics.counter("dce.cache.hits").inc();
+            return Ok(hit.as_ref().clone());
+        }
+        tc.metrics.counter("dce.cache.misses").inc();
+        let data = Arc::new(self.parent.compute(part, tc)?);
+        self.ctx.inner.cache.put(self.rdd_id, part, data.clone());
+        Ok(data.as_ref().clone())
+    }
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
+        self.parent.shuffle_deps()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public API
+// ---------------------------------------------------------------------------
+
+impl<T: Data> Rdd<T> {
+    pub(crate) fn from_node(ctx: DceContext, node: Arc<dyn RddNode<T>>) -> Self {
+        let id = ctx.next_id();
+        Self { ctx, node, id }
+    }
+
+    pub(crate) fn parallelize(ctx: DceContext, data: Vec<T>, parts: usize) -> Self {
+        let n = data.len();
+        let per = n.div_ceil(parts.max(1)).max(1);
+        let mut chunks: Vec<Arc<Vec<T>>> = Vec::new();
+        let mut it = data.into_iter();
+        for _ in 0..parts {
+            let chunk: Vec<T> = it.by_ref().take(per).collect();
+            chunks.push(Arc::new(chunk));
+        }
+        Self::from_node(ctx, Arc::new(ParallelizeNode { parts: chunks }))
+    }
+
+    pub fn context(&self) -> &DceContext {
+        &self.ctx
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.node.num_partitions()
+    }
+
+    /// Element-wise transform (narrow, pipelined).
+    pub fn map<U: Data>(&self, f: impl Fn(T) -> U + Send + Sync + 'static) -> Rdd<U> {
+        let f = Arc::new(f);
+        self.map_partitions(move |_, items| Ok(items.into_iter().map(|t| f(t)).collect()))
+    }
+
+    pub fn filter(&self, f: impl Fn(&T) -> bool + Send + Sync + 'static) -> Rdd<T> {
+        let f = Arc::new(f);
+        self.map_partitions(move |_, items| Ok(items.into_iter().filter(|t| f(t)).collect()))
+    }
+
+    pub fn flat_map<U: Data>(
+        &self,
+        f: impl Fn(T) -> Vec<U> + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        let f = Arc::new(f);
+        self.map_partitions(move |_, items| Ok(items.into_iter().flat_map(|t| f(t)).collect()))
+    }
+
+    /// Whole-partition transform (the workhorse for kernels and pipes).
+    pub fn map_partitions<U: Data>(
+        &self,
+        f: impl Fn(usize, Vec<T>) -> Result<Vec<U>> + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        Rdd::from_node(
+            self.ctx.clone(),
+            Arc::new(MapPartitionsNode { parent: self.node.clone(), f: Arc::new(f) }),
+        )
+    }
+
+    /// Key every element.
+    pub fn key_by<K: Data>(&self, f: impl Fn(&T) -> K + Send + Sync + 'static) -> Rdd<(K, T)> {
+        self.map(move |t| (f(&t), t))
+    }
+
+    pub fn union(&self, other: &Rdd<T>) -> Rdd<T> {
+        let parents = vec![self.node.clone(), other.node.clone()];
+        let mut index = Vec::new();
+        for (pi, p) in parents.iter().enumerate() {
+            for pp in 0..p.num_partitions() {
+                index.push((pi, pp));
+            }
+        }
+        Rdd::from_node(self.ctx.clone(), Arc::new(UnionNode { parents, index }))
+    }
+
+    /// Merge partitions down to `n` (narrow repartition).
+    pub fn coalesce(&self, n: usize) -> Rdd<T> {
+        let parts = self.node.num_partitions();
+        let n = n.clamp(1, parts.max(1));
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for p in 0..parts {
+            groups[p % n].push(p);
+        }
+        Rdd::from_node(
+            self.ctx.clone(),
+            Arc::new(CoalesceNode { parent: self.node.clone(), groups }),
+        )
+    }
+
+    /// Deterministic Bernoulli sample.
+    pub fn sample(&self, fraction: f64, seed: u64) -> Rdd<T> {
+        self.map_partitions(move |part, items| {
+            let mut rng = crate::util::Rng::new(seed ^ (part as u64).wrapping_mul(0x9E37));
+            Ok(items.into_iter().filter(|_| rng.next_f64() < fraction).collect())
+        })
+    }
+
+    /// Memoise computed partitions in the driver-side object cache.
+    pub fn cache(&self) -> Rdd<T> {
+        let node = Arc::new(CachedNode {
+            parent: self.node.clone(),
+            ctx: self.ctx.clone(),
+            rdd_id: self.id,
+        });
+        Rdd { ctx: self.ctx.clone(), node, id: self.id }
+    }
+
+    /// Drop this RDD's cached partitions.
+    pub fn uncache(&self) {
+        self.ctx.inner.cache.evict_rdd(self.id);
+    }
+
+    // ------------------------------------------------------------ actions
+
+    pub fn collect(&self) -> Result<Vec<T>> {
+        let parts = self
+            .ctx
+            .run_job(self.node.clone(), Arc::new(|_, items: Vec<T>| Ok(items)))?;
+        Ok(parts.into_iter().flatten().collect())
+    }
+
+    pub fn count(&self) -> Result<usize> {
+        let counts = self
+            .ctx
+            .run_job(self.node.clone(), Arc::new(|_, items: Vec<T>| Ok(items.len())))?;
+        Ok(counts.into_iter().sum())
+    }
+
+    /// Parallel fold-then-merge reduction. Returns None on empty data.
+    pub fn reduce(&self, f: impl Fn(T, T) -> T + Send + Sync + 'static) -> Result<Option<T>> {
+        let f = Arc::new(f);
+        let f2 = f.clone();
+        let partials = self.ctx.run_job(
+            self.node.clone(),
+            Arc::new(move |_, items: Vec<T>| Ok(items.into_iter().reduce(|a, b| f2(a, b)))),
+        )?;
+        Ok(partials.into_iter().flatten().reduce(|a, b| f(a, b)))
+    }
+
+    pub fn take(&self, n: usize) -> Result<Vec<T>> {
+        let mut out = self.collect()?;
+        out.truncate(n);
+        Ok(out)
+    }
+
+    pub fn first(&self) -> Result<Option<T>> {
+        Ok(self.take(1)?.into_iter().next())
+    }
+
+    /// Run a side-effecting closure per partition (e.g. writing output).
+    pub fn foreach_partition(
+        &self,
+        f: impl Fn(usize, Vec<T>) -> Result<()> + Send + Sync + 'static,
+    ) -> Result<()> {
+        let f = Arc::new(f);
+        self.ctx
+            .run_job(self.node.clone(), Arc::new(move |p, items: Vec<T>| f(p, items)))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> DceContext {
+        DceContext::local().unwrap()
+    }
+
+    #[test]
+    fn parallelize_collect_roundtrip() {
+        let c = ctx();
+        let data: Vec<u32> = (0..100).collect();
+        let rdd = c.parallelize(data.clone(), 7);
+        assert_eq!(rdd.num_partitions(), 7);
+        assert_eq!(rdd.collect().unwrap(), data);
+    }
+
+    #[test]
+    fn map_filter_flatmap_pipeline() {
+        let c = ctx();
+        let out = c
+            .range(20, 4)
+            .map(|x| x * 2)
+            .filter(|x| x % 3 == 0)
+            .flat_map(|x| vec![x, x + 1])
+            .collect()
+            .unwrap();
+        let expect: Vec<u64> = (0..20)
+            .map(|x| x * 2)
+            .filter(|x| x % 3 == 0)
+            .flat_map(|x| vec![x, x + 1])
+            .collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn count_and_reduce() {
+        let c = ctx();
+        let rdd = c.range(1000, 8);
+        assert_eq!(rdd.count().unwrap(), 1000);
+        assert_eq!(rdd.reduce(|a, b| a + b).unwrap(), Some(499_500));
+        let empty = c.parallelize(Vec::<u64>::new(), 3);
+        assert_eq!(empty.reduce(|a, b| a + b).unwrap(), None);
+    }
+
+    #[test]
+    fn union_concatenates() {
+        let c = ctx();
+        let a = c.parallelize(vec![1u8, 2], 2);
+        let b = c.parallelize(vec![3u8, 4], 2);
+        let mut got = a.union(&b).collect().unwrap();
+        got.sort();
+        assert_eq!(got, vec![1, 2, 3, 4]);
+        assert_eq!(a.union(&b).num_partitions(), 4);
+    }
+
+    #[test]
+    fn coalesce_reduces_partitions_keeps_data() {
+        let c = ctx();
+        let rdd = c.range(50, 10).coalesce(3);
+        assert_eq!(rdd.num_partitions(), 3);
+        let mut got = rdd.collect().unwrap();
+        got.sort();
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_plausible() {
+        let c = ctx();
+        let rdd = c.range(10_000, 4);
+        let s1 = rdd.sample(0.1, 7).count().unwrap();
+        let s2 = rdd.sample(0.1, 7).count().unwrap();
+        assert_eq!(s1, s2);
+        assert!(s1 > 700 && s1 < 1300, "sampled {s1}");
+    }
+
+    #[test]
+    fn cache_avoids_recomputation() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let c = ctx();
+        let computed = Arc::new(AtomicU32::new(0));
+        let c2 = computed.clone();
+        let rdd = c
+            .range(10, 2)
+            .map(move |x| {
+                c2.fetch_add(1, Ordering::SeqCst);
+                x
+            })
+            .cache();
+        rdd.collect().unwrap();
+        let after_first = computed.load(Ordering::SeqCst);
+        rdd.collect().unwrap();
+        assert_eq!(computed.load(Ordering::SeqCst), after_first, "second pass must hit cache");
+        rdd.uncache();
+        rdd.collect().unwrap();
+        assert!(computed.load(Ordering::SeqCst) > after_first);
+    }
+
+    #[test]
+    fn take_and_first() {
+        let c = ctx();
+        let rdd = c.range(100, 5);
+        assert_eq!(rdd.take(3).unwrap(), vec![0, 1, 2]);
+        assert_eq!(rdd.first().unwrap(), Some(0));
+        assert_eq!(c.parallelize(Vec::<u64>::new(), 1).first().unwrap(), None);
+    }
+
+    #[test]
+    fn foreach_partition_side_effects() {
+        let c = ctx();
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let s2 = seen.clone();
+        c.range(10, 3)
+            .foreach_partition(move |p, items| {
+                s2.lock().unwrap().push((p, items.len()));
+                Ok(())
+            })
+            .unwrap();
+        let mut v = seen.lock().unwrap().clone();
+        v.sort();
+        let total: usize = v.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, 10);
+        assert_eq!(v.len(), 3);
+    }
+
+    #[test]
+    fn fault_injection_retries_transparently() {
+        let c = ctx();
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let failures = Arc::new(AtomicU32::new(0));
+        let f2 = failures.clone();
+        c.set_fail_injector(Some(Arc::new(move |tc| {
+            // Fail the first attempt of partition 1 in the result stage.
+            if tc.partition == 1 && tc.attempt == 0 && tc.stage == "result" {
+                f2.fetch_add(1, Ordering::SeqCst);
+                anyhow::bail!("injected executor crash");
+            }
+            Ok(())
+        })));
+        let out = c.range(30, 3).map(|x| x + 1).collect().unwrap();
+        assert_eq!(out.len(), 30);
+        assert_eq!(failures.load(Ordering::SeqCst), 1);
+        c.set_fail_injector(None);
+    }
+
+    #[test]
+    fn permanent_failure_fails_job() {
+        let c = ctx();
+        let rdd = c.range(10, 2).map_partitions(|p, items: Vec<u64>| {
+            if p == 1 {
+                anyhow::bail!("partition 1 is cursed")
+            }
+            Ok(items)
+        });
+        assert!(rdd.collect().is_err());
+    }
+}

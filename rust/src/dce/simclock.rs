@@ -1,0 +1,246 @@
+//! Discrete-event virtual-time cluster simulation.
+//!
+//! Reproduces the paper's datacenter-scale scaling results (Fig 6's
+//! 2,000→10,000 cores; the 1→8-node replay scaling; Fig 9's GPU
+//! scaling) by running the *real* stage/task structure against measured
+//! per-task costs on a simulated cluster: a min-heap of core free-times,
+//! FIFO task placement, modelled network/disk transfer, per-task
+//! scheduler overhead, and lognormal straggler jitter. Every bench that
+//! uses this mode labels its rows `virtual-time` (see DESIGN.md §6).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// Simulated cluster shape + device models.
+#[derive(Debug, Clone)]
+pub struct SimCluster {
+    pub nodes: usize,
+    pub cores_per_node: usize,
+    /// Per-core effective remote-read bandwidth (bytes/s).
+    pub net_bps: f64,
+    /// Per-core effective local-disk bandwidth (bytes/s).
+    pub disk_bps: f64,
+    /// Fixed scheduler/dispatch overhead per task.
+    pub sched_overhead: Duration,
+    /// Coefficient of variation of task-duration jitter (stragglers).
+    pub straggler_cv: f64,
+    pub seed: u64,
+}
+
+impl SimCluster {
+    pub fn with_cores(total_cores: usize) -> Self {
+        Self {
+            nodes: total_cores.div_ceil(16).max(1),
+            cores_per_node: 16.min(total_cores.max(1)),
+            net_bps: 1.2e9,
+            disk_bps: 400e6,
+            sched_overhead: Duration::from_millis(5),
+            straggler_cv: 0.15,
+            seed: 42,
+        }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+}
+
+/// One simulated task.
+#[derive(Debug, Clone)]
+pub struct SimTask {
+    /// Pure compute time (from a calibrated [`super::costmodel::CostModel`]).
+    pub compute: Duration,
+    pub input_bytes: u64,
+    /// Remote (network) input vs node-local disk.
+    pub remote_read: bool,
+    pub output_bytes: u64,
+}
+
+impl SimTask {
+    pub fn compute_only(compute: Duration) -> Self {
+        Self { compute, input_bytes: 0, remote_read: false, output_bytes: 0 }
+    }
+}
+
+/// A barrier-separated stage (Spark stage semantics).
+#[derive(Debug, Clone)]
+pub struct SimStage {
+    pub name: String,
+    pub tasks: Vec<SimTask>,
+}
+
+/// A job: stages run in order with a full barrier between them.
+#[derive(Debug, Clone, Default)]
+pub struct SimJob {
+    pub stages: Vec<SimStage>,
+}
+
+impl SimJob {
+    pub fn single_stage(name: &str, tasks: Vec<SimTask>) -> Self {
+        Self { stages: vec![SimStage { name: name.to_string(), tasks }] }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub makespan: Duration,
+    pub stage_times: Vec<(String, Duration)>,
+    /// Sum of all task durations (core-busy time).
+    pub core_busy: Duration,
+    /// core_busy / (cores x makespan).
+    pub utilization: f64,
+}
+
+/// Run the discrete-event simulation.
+pub fn simulate(cluster: &SimCluster, job: &SimJob) -> SimReport {
+    let cores = cluster.total_cores();
+    let mut rng = Rng::new(cluster.seed);
+    // Lognormal jitter with unit mean.
+    let cv = cluster.straggler_cv.max(0.0);
+    let sigma = (1.0 + cv * cv).ln().sqrt();
+    let mut stage_times = Vec::with_capacity(job.stages.len());
+    let mut clock = Duration::ZERO;
+    let mut core_busy = Duration::ZERO;
+    for stage in &job.stages {
+        // Min-heap of core free times (u128 ns), all reset to the stage
+        // start (barrier semantics).
+        let mut heap: BinaryHeap<Reverse<u128>> = (0..cores)
+            .map(|_| Reverse(clock.as_nanos()))
+            .collect();
+        let mut stage_end = clock;
+        for task in &stage.tasks {
+            let Reverse(free_at) = heap.pop().expect("cores > 0");
+            let io_bps = if task.remote_read { cluster.net_bps } else { cluster.disk_bps };
+            let io = Duration::from_secs_f64(
+                task.input_bytes as f64 / io_bps + task.output_bytes as f64 / cluster.disk_bps,
+            );
+            let jitter = if sigma > 0.0 {
+                (sigma * rng.normal() - sigma * sigma / 2.0).exp()
+            } else {
+                1.0
+            };
+            let dur = cluster.sched_overhead + task.compute.mul_f64(jitter) + io;
+            core_busy += dur;
+            let end = free_at + dur.as_nanos();
+            if end > stage_end.as_nanos() {
+                stage_end = Duration::from_nanos(end as u64);
+            }
+            heap.push(Reverse(end));
+        }
+        stage_times.push((stage.name.clone(), stage_end - clock));
+        clock = stage_end; // barrier
+    }
+    let utilization = if clock.is_zero() {
+        0.0
+    } else {
+        core_busy.as_secs_f64() / (cores as f64 * clock.as_secs_f64())
+    };
+    SimReport { makespan: clock, stage_times, core_busy, utilization }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_job(tasks: usize, ms: u64) -> SimJob {
+        SimJob::single_stage(
+            "s",
+            (0..tasks)
+                .map(|_| SimTask::compute_only(Duration::from_millis(ms)))
+                .collect(),
+        )
+    }
+
+    fn cluster(cores: usize) -> SimCluster {
+        SimCluster {
+            nodes: 1,
+            cores_per_node: cores,
+            net_bps: 1e9,
+            disk_bps: 5e8,
+            sched_overhead: Duration::ZERO,
+            straggler_cv: 0.0,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn perfect_scaling_without_jitter() {
+        let job = uniform_job(1000, 10);
+        let t1 = simulate(&cluster(10), &job).makespan;
+        let t2 = simulate(&cluster(20), &job).makespan;
+        let ratio = t1.as_secs_f64() / t2.as_secs_f64();
+        assert!((ratio - 2.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn makespan_is_critical_path_for_few_tasks() {
+        // 3 tasks on 8 cores: makespan == longest task.
+        let mut job = uniform_job(3, 10);
+        job.stages[0].tasks[1].compute = Duration::from_millis(50);
+        let r = simulate(&cluster(8), &job);
+        assert_eq!(r.makespan, Duration::from_millis(50));
+        assert!(r.utilization < 0.2);
+    }
+
+    #[test]
+    fn barrier_between_stages() {
+        let job = SimJob {
+            stages: vec![
+                SimStage { name: "a".into(), tasks: uniform_job(4, 10).stages[0].tasks.clone() },
+                SimStage { name: "b".into(), tasks: uniform_job(4, 20).stages[0].tasks.clone() },
+            ],
+        };
+        let r = simulate(&cluster(4), &job);
+        assert_eq!(r.makespan, Duration::from_millis(30));
+        assert_eq!(r.stage_times[0].1, Duration::from_millis(10));
+        assert_eq!(r.stage_times[1].1, Duration::from_millis(20));
+    }
+
+    #[test]
+    fn io_adds_transfer_time() {
+        let task = SimTask {
+            compute: Duration::from_millis(10),
+            input_bytes: 500_000_000, // 0.5s at 1e9 net
+            remote_read: true,
+            output_bytes: 0,
+        };
+        let r = simulate(&cluster(1), &SimJob::single_stage("io", vec![task]));
+        assert!(r.makespan >= Duration::from_millis(510), "{:?}", r.makespan);
+        // Local disk is slower in this config: 1s.
+        let task_local = SimTask { remote_read: false, ..SimTask::compute_only(Duration::ZERO) };
+        let mut t = task_local;
+        t.input_bytes = 500_000_000;
+        let r2 = simulate(&cluster(1), &SimJob::single_stage("io", vec![t]));
+        assert!(r2.makespan >= Duration::from_millis(990));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut c = cluster(7);
+        c.straggler_cv = 0.3;
+        let job = uniform_job(200, 5);
+        let a = simulate(&c, &job).makespan;
+        let b = simulate(&c, &job).makespan;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stragglers_hurt_tail() {
+        let job = uniform_job(64, 10);
+        let mut c = cluster(64);
+        let clean = simulate(&c, &job).makespan;
+        c.straggler_cv = 0.5;
+        let jittered = simulate(&c, &job).makespan;
+        assert!(jittered > clean, "{jittered:?} <= {clean:?}");
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let r = simulate(&cluster(8), &uniform_job(1000, 1));
+        assert!(r.utilization > 0.9 && r.utilization <= 1.0 + 1e-9, "{}", r.utilization);
+    }
+}

@@ -1,0 +1,583 @@
+//! Naive scalar CPU kernels — the paper's "generic CPU" baseline side.
+//!
+//! Section 2.3 compares OpenCL GPU kernels against plain CPU execution
+//! (10–20X on CNN), section 4.3 reports 15X on training, section 5.2
+//! 30X on ICP. These functions are that CPU side: correct, idiomatic,
+//! deliberately *scalar* Rust (no blocking/vectorisation — that is what
+//! the XLA-compiled artifacts bring), mirroring the JVM-side compute the
+//! paper's accelerators displaced.
+//!
+//! They double as an independent second implementation of every L1/L2
+//! graph: unit tests cross-check them against the PJRT artifacts, which
+//! validates the whole Python→HLO→Rust chain numerically.
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------------------
+// CNN building blocks (NHWC, f32)
+// ---------------------------------------------------------------------------
+
+/// SAME conv2d: x (B,H,W,Cin) * w (KH,KW,Cin,Cout) -> (B,H,W,Cout).
+pub fn conv2d(x: &[f32], xs: [usize; 4], w: &[f32], ws: [usize; 4]) -> Vec<f32> {
+    let [b, h, wd, cin] = xs;
+    let [kh, kw, cin2, cout] = ws;
+    assert_eq!(cin, cin2, "channel mismatch");
+    let (ph, pw) = ((kh - 1) / 2, (kw - 1) / 2);
+    let mut out = vec![0f32; b * h * wd * cout];
+    for bi in 0..b {
+        for i in 0..h {
+            for j in 0..wd {
+                for u in 0..kh {
+                    let si = i as isize + u as isize - ph as isize;
+                    if si < 0 || si >= h as isize {
+                        continue;
+                    }
+                    for v in 0..kw {
+                        let sj = j as isize + v as isize - pw as isize;
+                        if sj < 0 || sj >= wd as isize {
+                            continue;
+                        }
+                        let xbase = ((bi * h + si as usize) * wd + sj as usize) * cin;
+                        let wbase = (u * kw + v) * cin * cout;
+                        let obase = ((bi * h + i) * wd + j) * cout;
+                        for c in 0..cin {
+                            let xv = x[xbase + c];
+                            let wrow = wbase + c * cout;
+                            for o in 0..cout {
+                                out[obase + o] += xv * w[wrow + o];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Gradients of SAME conv2d w.r.t. input and weights.
+pub fn conv2d_backward(
+    x: &[f32],
+    xs: [usize; 4],
+    w: &[f32],
+    ws: [usize; 4],
+    g: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let [b, h, wd, cin] = xs;
+    let [kh, kw, _, cout] = ws;
+    let (ph, pw) = ((kh - 1) / 2, (kw - 1) / 2);
+    let mut dx = vec![0f32; x.len()];
+    let mut dw = vec![0f32; w.len()];
+    for bi in 0..b {
+        for i in 0..h {
+            for j in 0..wd {
+                let gbase = ((bi * h + i) * wd + j) * cout;
+                for u in 0..kh {
+                    let si = i as isize + u as isize - ph as isize;
+                    if si < 0 || si >= h as isize {
+                        continue;
+                    }
+                    for v in 0..kw {
+                        let sj = j as isize + v as isize - pw as isize;
+                        if sj < 0 || sj >= wd as isize {
+                            continue;
+                        }
+                        let xbase = ((bi * h + si as usize) * wd + sj as usize) * cin;
+                        let wbase = (u * kw + v) * cin * cout;
+                        for c in 0..cin {
+                            let xv = x[xbase + c];
+                            let wrow = wbase + c * cout;
+                            let mut acc = 0f32;
+                            for o in 0..cout {
+                                let gv = g[gbase + o];
+                                dw[wrow + o] += xv * gv;
+                                acc += w[wrow + o] * gv;
+                            }
+                            dx[xbase + c] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (dx, dw)
+}
+
+/// 2x2 max pooling; returns (pooled, argmax index per output element).
+pub fn maxpool2(x: &[f32], xs: [usize; 4]) -> (Vec<f32>, Vec<usize>) {
+    let [b, h, w, c] = xs;
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; b * oh * ow * c];
+    let mut arg = vec![0usize; b * oh * ow * c];
+    for bi in 0..b {
+        for i in 0..oh {
+            for j in 0..ow {
+                for ci in 0..c {
+                    let oidx = ((bi * oh + i) * ow + j) * c + ci;
+                    for di in 0..2 {
+                        for dj in 0..2 {
+                            let xi = ((bi * h + 2 * i + di) * w + 2 * j + dj) * c + ci;
+                            if x[xi] > out[oidx] {
+                                out[oidx] = x[xi];
+                                arg[oidx] = xi;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+/// Scatter pooled gradients back through the recorded argmaxes.
+pub fn maxpool2_backward(g: &[f32], arg: &[usize], input_len: usize) -> Vec<f32> {
+    let mut dx = vec![0f32; input_len];
+    for (gi, &ai) in g.iter().zip(arg.iter()) {
+        dx[ai] += gi;
+    }
+    dx
+}
+
+/// In-place ReLU; returns the activation mask.
+pub fn relu(x: &mut [f32]) -> Vec<bool> {
+    x.iter_mut()
+        .map(|v| {
+            let on = *v > 0.0;
+            if !on {
+                *v = 0.0;
+            }
+            on
+        })
+        .collect()
+}
+
+/// Dense layer y = x @ w + b; x (B,I), w (I,O), b (O).
+pub fn dense(x: &[f32], bsz: usize, inp: usize, w: &[f32], out_dim: usize, b: &[f32]) -> Vec<f32> {
+    let mut y = vec![0f32; bsz * out_dim];
+    for bi in 0..bsz {
+        for i in 0..inp {
+            let xv = x[bi * inp + i];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = i * out_dim;
+            let yrow = bi * out_dim;
+            for o in 0..out_dim {
+                y[yrow + o] += xv * w[wrow + o];
+            }
+        }
+        for o in 0..out_dim {
+            y[bi * out_dim + o] += b[o];
+        }
+    }
+    y
+}
+
+// ---------------------------------------------------------------------------
+// The perception CNN (matches python/compile/model.py PARAM_SPECS exactly)
+// ---------------------------------------------------------------------------
+
+pub const IMG: usize = 32;
+pub const NUM_CLASSES: usize = 10;
+
+/// (name, shape) — must stay in lock-step with model.PARAM_SPECS.
+pub const PARAM_SHAPES: [(&str, &[usize]); 6] = [
+    ("c1w", &[3, 3, 3, 8]),
+    ("c1b", &[8]),
+    ("c2w", &[3, 3, 8, 16]),
+    ("c2b", &[16]),
+    ("dw", &[1024, NUM_CLASSES]),
+    ("db", &[NUM_CLASSES]),
+];
+
+/// He-style init matching the Python initialiser's structure (zero biases,
+/// scaled-normal weights) — exact values differ (different RNG), which is
+/// fine: training starts from *an* init, not *the* init.
+pub fn init_params(rng: &mut crate::util::Rng) -> Vec<Vec<f32>> {
+    PARAM_SHAPES
+        .iter()
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            if name.ends_with('b') {
+                vec![0f32; n]
+            } else {
+                let fan_in: usize = shape[..shape.len() - 1].iter().product();
+                let scale = (2.0 / fan_in as f64).sqrt() as f32;
+                (0..n).map(|_| rng.normal_f32(0.0, scale)).collect()
+            }
+        })
+        .collect()
+}
+
+struct ForwardCache {
+    a1: Vec<f32>,          // post-relu conv1 (B,32,32,8)
+    mask1: Vec<bool>,
+    p1: Vec<f32>,          // pooled (B,16,16,8)
+    arg1: Vec<usize>,
+    a2: Vec<f32>,          // post-relu conv2 (B,16,16,16)
+    mask2: Vec<bool>,
+    p2: Vec<f32>,          // pooled (B,8,8,16) == flat (B,1024)
+    arg2: Vec<usize>,
+    logits: Vec<f32>,
+}
+
+fn forward(params: &[Vec<f32>], x: &[f32], bsz: usize) -> ForwardCache {
+    let (c1w, c1b, c2w, c2b, dw, db) =
+        (&params[0], &params[1], &params[2], &params[3], &params[4], &params[5]);
+    let mut a1 = conv2d(x, [bsz, IMG, IMG, 3], c1w, [3, 3, 3, 8]);
+    for (i, v) in a1.iter_mut().enumerate() {
+        *v += c1b[i % 8];
+    }
+    let mask1 = relu(&mut a1);
+    let (p1, arg1) = maxpool2(&a1, [bsz, IMG, IMG, 8]);
+
+    let mut a2 = conv2d(&p1, [bsz, 16, 16, 8], c2w, [3, 3, 8, 16]);
+    for (i, v) in a2.iter_mut().enumerate() {
+        *v += c2b[i % 16];
+    }
+    let mask2 = relu(&mut a2);
+    let (p2, arg2) = maxpool2(&a2, [bsz, 16, 16, 16]);
+
+    let logits = dense(&p2, bsz, 1024, dw, NUM_CLASSES, db);
+    ForwardCache { a1, mask1, p1, arg1, a2, mask2, p2, arg2, logits }
+}
+
+/// Inference: logits for a batch of (B,32,32,3) images.
+pub fn cnn_infer(params: &[Vec<f32>], x: &[f32], bsz: usize) -> Result<Vec<f32>> {
+    if x.len() != bsz * IMG * IMG * 3 {
+        bail!("bad input len {} for batch {bsz}", x.len());
+    }
+    Ok(forward(params, x, bsz).logits)
+}
+
+/// Full train step: mean softmax cross-entropy loss + gradients for all
+/// six parameter tensors (same outputs as the `cnn_train_b16` artifact).
+pub fn cnn_train_step(
+    params: &[Vec<f32>],
+    x: &[f32],
+    y: &[i32],
+    bsz: usize,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    if y.len() != bsz {
+        bail!("bad label len {}", y.len());
+    }
+    let cache = forward(params, x, bsz);
+    let (c1w, _c1b, c2w, _c2b, dw, _db) =
+        (&params[0], &params[1], &params[2], &params[3], &params[4], &params[5]);
+
+    // Softmax CE loss + dlogits.
+    let mut loss = 0f64;
+    let mut dlogits = vec![0f32; bsz * NUM_CLASSES];
+    for bi in 0..bsz {
+        let row = &cache.logits[bi * NUM_CLASSES..(bi + 1) * NUM_CLASSES];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = row.iter().map(|v| (v - m).exp()).sum();
+        let logz = m + sum.ln();
+        let yi = y[bi] as usize;
+        loss += (logz - row[yi]) as f64;
+        for o in 0..NUM_CLASSES {
+            let p = (row[o] - logz).exp();
+            dlogits[bi * NUM_CLASSES + o] =
+                (p - if o == yi { 1.0 } else { 0.0 }) / bsz as f32;
+        }
+    }
+    let loss = (loss / bsz as f64) as f32;
+
+    // Dense backward.
+    let mut g_dw = vec![0f32; dw.len()];
+    let mut g_db = vec![0f32; NUM_CLASSES];
+    let mut dp2 = vec![0f32; bsz * 1024];
+    for bi in 0..bsz {
+        for o in 0..NUM_CLASSES {
+            let gv = dlogits[bi * NUM_CLASSES + o];
+            g_db[o] += gv;
+            if gv == 0.0 {
+                continue;
+            }
+            for i in 0..1024 {
+                g_dw[i * NUM_CLASSES + o] += cache.p2[bi * 1024 + i] * gv;
+                dp2[bi * 1024 + i] += dw[i * NUM_CLASSES + o] * gv;
+            }
+        }
+    }
+
+    // Pool2 + relu2 backward.
+    let mut da2 = maxpool2_backward(&dp2, &cache.arg2, cache.a2.len());
+    for (v, &on) in da2.iter_mut().zip(cache.mask2.iter()) {
+        if !on {
+            *v = 0.0;
+        }
+    }
+    // Bias2 grad = sum over spatial+batch of da2 per channel.
+    let mut g_c2b = vec![0f32; 16];
+    for (i, v) in da2.iter().enumerate() {
+        g_c2b[i % 16] += v;
+    }
+    // Conv2 backward.
+    let (dp1, g_c2w) = conv2d_backward(&cache.p1, [bsz, 16, 16, 8], c2w, [3, 3, 8, 16], &da2);
+
+    // Pool1 + relu1 backward.
+    let mut da1 = maxpool2_backward(&dp1, &cache.arg1, cache.a1.len());
+    for (v, &on) in da1.iter_mut().zip(cache.mask1.iter()) {
+        if !on {
+            *v = 0.0;
+        }
+    }
+    let mut g_c1b = vec![0f32; 8];
+    for (i, v) in da1.iter().enumerate() {
+        g_c1b[i % 8] += v;
+    }
+    let (_dx, g_c1w) = conv2d_backward(x, [bsz, IMG, IMG, 3], c1w, [3, 3, 3, 8], &da1);
+
+    Ok((loss, vec![g_c1w, g_c1b, g_c2w, g_c2b, g_dw, g_db]))
+}
+
+// ---------------------------------------------------------------------------
+// ICP correspondence + step statistics (brute force scalar)
+// ---------------------------------------------------------------------------
+
+/// For each src point, its nearest dst point and squared distance.
+pub fn icp_correspondences(src: &[f32], dst: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = src.len() / 3;
+    let m = dst.len() / 3;
+    let mut nearest = vec![0f32; n * 3];
+    let mut d2 = vec![0f32; n];
+    for i in 0..n {
+        let (sx, sy, sz) = (src[3 * i], src[3 * i + 1], src[3 * i + 2]);
+        let mut best = f32::INFINITY;
+        let mut bj = 0;
+        for j in 0..m {
+            let dx = sx - dst[3 * j];
+            let dy = sy - dst[3 * j + 1];
+            let dz = sz - dst[3 * j + 2];
+            let d = dx * dx + dy * dy + dz * dz;
+            if d < best {
+                best = d;
+                bj = j;
+            }
+        }
+        nearest[3 * i..3 * i + 3].copy_from_slice(&dst[3 * bj..3 * bj + 3]);
+        d2[i] = best;
+    }
+    (nearest, d2)
+}
+
+/// One ICP data pass: (cross_cov 3x3 row-major, src centroid, nn centroid,
+/// mean squared error) — identical contract to the `icp_step_*` artifacts.
+pub fn icp_step(src: &[f32], dst: &[f32]) -> ([f32; 9], [f32; 3], [f32; 3], f32) {
+    let n = src.len() / 3;
+    let (nearest, d2) = icp_correspondences(src, dst);
+    let mut cs = [0f32; 3];
+    let mut cd = [0f32; 3];
+    for i in 0..n {
+        for k in 0..3 {
+            cs[k] += src[3 * i + k];
+            cd[k] += nearest[3 * i + k];
+        }
+    }
+    for k in 0..3 {
+        cs[k] /= n as f32;
+        cd[k] /= n as f32;
+    }
+    let mut h = [0f32; 9];
+    for i in 0..n {
+        for r in 0..3 {
+            let sv = src[3 * i + r] - cs[r];
+            for c in 0..3 {
+                h[3 * r + c] += sv * (nearest[3 * i + c] - cd[c]);
+            }
+        }
+    }
+    let err = d2.iter().sum::<f32>() / n as f32;
+    (h, cs, cd, err)
+}
+
+// ---------------------------------------------------------------------------
+// Image feature extraction (the Fig 6 workload)
+// ---------------------------------------------------------------------------
+
+/// Gradient-energy descriptors for (B,H,W) grayscale; H, W % 8 == 0.
+/// Output (B, H/8, W/8, 4): mean|gx|, mean|gy|, mean mag, max mag.
+pub fn feature_extract(x: &[f32], b: usize, h: usize, w: usize) -> Vec<f32> {
+    let (ch, cw) = (h / 8, w / 8);
+    let mut out = vec![0f32; b * ch * cw * 4];
+    let at = |bi: usize, i: isize, j: isize| -> f32 {
+        // edge-padded access
+        let ii = i.clamp(0, h as isize - 1) as usize;
+        let jj = j.clamp(0, w as isize - 1) as usize;
+        x[(bi * h + ii) * w + jj]
+    };
+    for bi in 0..b {
+        for ci in 0..ch {
+            for cj in 0..cw {
+                let (mut sgx, mut sgy, mut smag, mut mmag) = (0f32, 0f32, 0f32, 0f32);
+                for di in 0..8 {
+                    for dj in 0..8 {
+                        let i = (ci * 8 + di) as isize;
+                        let j = (cj * 8 + dj) as isize;
+                        let gx = (at(bi, i, j + 1) - at(bi, i, j - 1)) * 0.5;
+                        let gy = (at(bi, i + 1, j) - at(bi, i - 1, j)) * 0.5;
+                        let mag = (gx * gx + gy * gy).sqrt();
+                        sgx += gx.abs();
+                        sgy += gy.abs();
+                        smag += mag;
+                        mmag = mmag.max(mag);
+                    }
+                }
+                let o = ((bi * ch + ci) * cw + cj) * 4;
+                out[o] = sgx / 64.0;
+                out[o + 1] = sgy / 64.0;
+                out[o + 2] = smag / 64.0;
+                out[o + 3] = mmag;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn conv2d_identity_1x1() {
+        let mut rng = Rng::new(1);
+        let x = randv(&mut rng, 2 * 4 * 4 * 3);
+        let mut eye = vec![0f32; 3 * 3];
+        for i in 0..3 {
+            eye[i * 3 + i] = 1.0;
+        }
+        let y = conv2d(&x, [2, 4, 4, 3], &eye, [1, 1, 3, 3]);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn conv2d_counts_border_correctly() {
+        // All-ones 3x3 kernel over all-ones image counts the in-bounds
+        // neighbourhood: 4 in corners, 6 on edges, 9 inside.
+        let x = vec![1f32; 4 * 4];
+        let w = vec![1f32; 9];
+        let y = conv2d(&x, [1, 4, 4, 1], &w, [3, 3, 1, 1]);
+        assert_eq!(y[0], 4.0);
+        assert_eq!(y[1], 6.0);
+        assert_eq!(y[5], 9.0);
+    }
+
+    #[test]
+    fn maxpool_roundtrip_gradient() {
+        let x = vec![1., 5., 2., 0., 3., 1., 7., 2., 4., 4., 4., 4., 0., 1., 2., 9.];
+        let (p, arg) = maxpool2(&x, [1, 4, 4, 1]);
+        assert_eq!(p, vec![5., 7., 4., 9.]);
+        let dx = maxpool2_backward(&[1., 1., 1., 1.], &arg, 16);
+        assert_eq!(dx.iter().sum::<f32>(), 4.0);
+        assert_eq!(dx[1], 1.0); // the 5
+    }
+
+    #[test]
+    fn train_step_gradcheck_dense_bias() {
+        // Finite-difference check of a few coordinates.
+        let mut rng = Rng::new(2);
+        let mut params = init_params(&mut rng);
+        let bsz = 2;
+        let x = randv(&mut rng, bsz * IMG * IMG * 3);
+        let y = vec![3i32, 7];
+        let (_, grads) = cnn_train_step(&params, &x, &y, bsz).unwrap();
+        let eps = 1e-2f32;
+        for (pi, ci) in [(5usize, 3usize), (5, 7), (1, 0), (3, 5)] {
+            let orig = params[pi][ci];
+            params[pi][ci] = orig + eps;
+            let (lp, _) = cnn_train_step(&params, &x, &y, bsz).unwrap();
+            params[pi][ci] = orig - eps;
+            let (lm, _) = cnn_train_step(&params, &x, &y, bsz).unwrap();
+            params[pi][ci] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = grads[pi][ci];
+            assert!(
+                (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                "param {pi}[{ci}]: fd={fd} analytic={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_on_cpu_reduces_loss() {
+        let mut rng = Rng::new(3);
+        let mut params = init_params(&mut rng);
+        let bsz = 4;
+        let x = randv(&mut rng, bsz * IMG * IMG * 3);
+        let y = vec![0i32, 1, 2, 3];
+        let (first, _) = cnn_train_step(&params, &x, &y, bsz).unwrap();
+        for _ in 0..8 {
+            let (_, grads) = cnn_train_step(&params, &x, &y, bsz).unwrap();
+            for (p, g) in params.iter_mut().zip(grads.iter()) {
+                for (pv, gv) in p.iter_mut().zip(gv_iter(g)) {
+                    *pv -= 0.1 * gv;
+                }
+            }
+        }
+        let (last, _) = cnn_train_step(&params, &x, &y, bsz).unwrap();
+        assert!(last < first, "loss {first} -> {last}");
+    }
+
+    fn gv_iter(g: &[f32]) -> impl Iterator<Item = f32> + '_ {
+        g.iter().copied()
+    }
+
+    #[test]
+    fn icp_identical_clouds() {
+        let mut rng = Rng::new(4);
+        let pts = randv(&mut rng, 64 * 3);
+        let (h, cs, cd, err) = icp_step(&pts, &pts);
+        assert!(err < 1e-10);
+        assert_eq!(cs, cd);
+        // H is the covariance of the cloud with itself: symmetric PSD.
+        for r in 0..3 {
+            for c in 0..3 {
+                assert!((h[3 * r + c] - h[3 * c + r]).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn icp_translation_shows_in_centroids() {
+        let mut rng = Rng::new(5);
+        let src = randv(&mut rng, 256 * 3);
+        let t = [0.02f32, -0.01, 0.015];
+        let dst: Vec<f32> = src
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v + t[i % 3])
+            .collect();
+        let (_, cs, cd, _) = icp_step(&src, &dst);
+        for k in 0..3 {
+            assert!((cd[k] - cs[k] - t[k]).abs() < 5e-3);
+        }
+    }
+
+    #[test]
+    fn feature_constant_image_is_zero() {
+        let x = vec![0.3f32; 2 * 16 * 16];
+        let f = feature_extract(&x, 2, 16, 16);
+        assert!(f.iter().all(|v| v.abs() < 1e-7));
+    }
+
+    #[test]
+    fn feature_detects_vertical_edge() {
+        let mut x = vec![0f32; 16 * 16];
+        for i in 0..16 {
+            for j in 8..16 {
+                x[i * 16 + j] = 1.0;
+            }
+        }
+        let f = feature_extract(&x, 1, 16, 16);
+        // mean|gx| over some cell must be positive, all |gy| zero.
+        assert!(f.iter().step_by(4).any(|v| *v > 0.0));
+        assert!(f.iter().skip(1).step_by(4).all(|v| v.abs() < 1e-7));
+    }
+}

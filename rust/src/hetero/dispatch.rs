@@ -1,0 +1,128 @@
+//! Heterogeneous dispatch: route a kernel invocation to a device class,
+//! time it, meter its energy — the seam the paper built with
+//! RDD→JNI→OpenCL (section 2.3: "how to seamlessly dispatch a workload
+//! to a computing substrate").
+
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::energy::EnergyMeter;
+use super::registry::KernelRegistry;
+use crate::metrics::MetricsRegistry;
+use crate::resource::DeviceKind;
+use crate::runtime::Tensor;
+
+/// Shared dispatcher handle.
+#[derive(Clone)]
+pub struct Dispatcher {
+    registry: KernelRegistry,
+    energy: Arc<EnergyMeter>,
+    metrics: MetricsRegistry,
+}
+
+impl Dispatcher {
+    pub fn new(registry: KernelRegistry, metrics: MetricsRegistry) -> Self {
+        Self { registry, energy: Arc::new(EnergyMeter::new()), metrics }
+    }
+
+    pub fn registry(&self) -> &KernelRegistry {
+        &self.registry
+    }
+
+    pub fn energy(&self) -> &EnergyMeter {
+        &self.energy
+    }
+
+    /// Run `name` on a specific device class.
+    pub fn run_on(&self, kind: DeviceKind, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let imp = self.registry.get(name, kind)?;
+        let start = Instant::now();
+        let out = imp.run(inputs)?;
+        let elapsed = start.elapsed();
+        self.energy.record(kind, elapsed);
+        self.metrics
+            .histogram(&format!("hetero.{}.{}", kind.name(), name))
+            .record(elapsed);
+        Ok(out)
+    }
+
+    /// Run on the best available device class, restricted to `allowed`
+    /// (empty = anything). Falls through the preference order on missing
+    /// implementations and returns which class actually ran.
+    pub fn run_best(
+        &self,
+        name: &str,
+        inputs: &[Tensor],
+        allowed: &[DeviceKind],
+    ) -> Result<(DeviceKind, Vec<Tensor>)> {
+        let mut last_err = None;
+        for kind in self.registry.devices_for(name) {
+            if !allowed.is_empty() && !allowed.contains(&kind) {
+                continue;
+            }
+            match self.run_on(kind, name, inputs) {
+                Ok(out) => return Ok((kind, out)),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no implementation for kernel '{name}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::registry::FnKernel;
+
+    fn dispatcher() -> Dispatcher {
+        let reg = KernelRegistry::new();
+        reg.register(
+            "double",
+            DeviceKind::Cpu,
+            Arc::new(FnKernel(|ins: &[Tensor]| {
+                let v = ins[0].as_f32()?;
+                Tensor::from_f32(v.iter().map(|x| x * 2.0).collect(), &ins[0].shape)
+                    .map(|t| vec![t])
+            })),
+        );
+        Dispatcher::new(reg, MetricsRegistry::new())
+    }
+
+    #[test]
+    fn run_on_times_and_meters() {
+        let d = dispatcher();
+        let out = d
+            .run_on(DeviceKind::Cpu, "double", &[Tensor::from_f32(vec![1.0, 2.0], &[2]).unwrap()])
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[2.0, 4.0]);
+        assert_eq!(d.energy().ops(DeviceKind::Cpu), 1);
+    }
+
+    #[test]
+    fn run_best_falls_back_to_cpu() {
+        let d = dispatcher();
+        let (kind, _) = d
+            .run_best("double", &[Tensor::from_f32(vec![1.0], &[1]).unwrap()], &[])
+            .unwrap();
+        assert_eq!(kind, DeviceKind::Cpu);
+    }
+
+    #[test]
+    fn run_best_respects_allowed() {
+        let d = dispatcher();
+        let r = d.run_best(
+            "double",
+            &[Tensor::from_f32(vec![1.0], &[1]).unwrap()],
+            &[DeviceKind::Gpu],
+        );
+        assert!(r.is_err(), "only CPU impl exists but GPU demanded");
+    }
+
+    #[test]
+    fn unknown_kernel_errors() {
+        let d = dispatcher();
+        assert!(d.run_on(DeviceKind::Cpu, "ghost", &[]).is_err());
+        assert!(d.run_best("ghost", &[], &[]).is_err());
+    }
+}

@@ -1,0 +1,96 @@
+//! Energy accounting for heterogeneous dispatch.
+//!
+//! The paper's FPGA story is *efficiency*: "FPGA is a low-power solution
+//! for vector computation". We account energy = board power × busy time
+//! per device class, which lets benches report joules/inference alongside
+//! latency — the axis on which the modelled FPGA wins even while slower
+//! than the GPU-class device.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::resource::DeviceKind;
+
+/// Accumulated busy-time and energy per device class.
+#[derive(Debug, Default)]
+pub struct EnergyMeter {
+    busy_us: [AtomicU64; 3],
+    ops: [AtomicU64; 3],
+}
+
+fn slot(kind: DeviceKind) -> usize {
+    match kind {
+        DeviceKind::Cpu => 0,
+        DeviceKind::Gpu => 1,
+        DeviceKind::Fpga => 2,
+    }
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, kind: DeviceKind, busy: Duration) {
+        self.busy_us[slot(kind)].fetch_add(busy.as_micros() as u64, Ordering::Relaxed);
+        self.ops[slot(kind)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn busy(&self, kind: DeviceKind) -> Duration {
+        Duration::from_micros(self.busy_us[slot(kind)].load(Ordering::Relaxed))
+    }
+
+    pub fn ops(&self, kind: DeviceKind) -> u64 {
+        self.ops[slot(kind)].load(Ordering::Relaxed)
+    }
+
+    /// Joules consumed by a device class so far.
+    pub fn joules(&self, kind: DeviceKind) -> f64 {
+        self.busy(kind).as_secs_f64() * kind.power_watts()
+    }
+
+    /// Joules per op (NaN if no ops recorded).
+    pub fn joules_per_op(&self, kind: DeviceKind) -> f64 {
+        self.joules(kind) / self.ops(kind) as f64
+    }
+
+    pub fn reset(&self) {
+        for i in 0..3 {
+            self.busy_us[i].store(0, Ordering::Relaxed);
+            self.ops[i].store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_per_class() {
+        let m = EnergyMeter::new();
+        m.record(DeviceKind::Gpu, Duration::from_millis(100));
+        m.record(DeviceKind::Fpga, Duration::from_millis(300));
+        assert_eq!(m.ops(DeviceKind::Gpu), 1);
+        assert_eq!(m.busy(DeviceKind::Fpga), Duration::from_millis(300));
+        assert_eq!(m.ops(DeviceKind::Cpu), 0);
+    }
+
+    #[test]
+    fn fpga_wins_on_energy_despite_longer_time() {
+        let m = EnergyMeter::new();
+        // FPGA 3x slower but 10x lower power -> ~3.3x less energy.
+        m.record(DeviceKind::Gpu, Duration::from_millis(100));
+        m.record(DeviceKind::Fpga, Duration::from_millis(300));
+        assert!(m.joules(DeviceKind::Fpga) < m.joules(DeviceKind::Gpu));
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let m = EnergyMeter::new();
+        m.record(DeviceKind::Cpu, Duration::from_secs(1));
+        m.reset();
+        assert_eq!(m.ops(DeviceKind::Cpu), 0);
+        assert_eq!(m.joules(DeviceKind::Cpu), 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Heterogeneous computing layer (paper section 2.3).
+//!
+//! Named kernels with per-device-class implementations: naive scalar
+//! CPU (the baseline the paper's speedups are measured against),
+//! GPU-class via AOT-compiled XLA artifacts on PJRT, and FPGA-class via
+//! the same artifacts under a throughput/power model. The [`Dispatcher`]
+//! is the RDD→JNI→OpenCL seam of Figure 3.
+
+pub mod accel;
+pub mod cpu_impls;
+pub mod dispatch;
+pub mod energy;
+pub mod registry;
+pub mod roofline;
+
+pub use accel::{register_default_kernels, FpgaKernel, PjrtKernel};
+pub use dispatch::Dispatcher;
+pub use energy::EnergyMeter;
+pub use registry::{FnKernel, KernelImpl, KernelRegistry};
+pub use roofline::{KernelCost, RooflineDevice};

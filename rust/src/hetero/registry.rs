@@ -1,0 +1,112 @@
+//! Kernel registry: named kernels with one implementation per device
+//! class — the platform's analog of the paper's OpenCL kernel catalog
+//! ("functions executed on an OpenCL device are called kernels").
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::resource::DeviceKind;
+use crate::runtime::Tensor;
+
+/// A device-specific kernel implementation.
+pub trait KernelImpl: Send + Sync {
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// Closure adapter (used for the naive CPU implementations).
+pub struct FnKernel<F>(pub F);
+
+impl<F> KernelImpl for FnKernel<F>
+where
+    F: Fn(&[Tensor]) -> Result<Vec<Tensor>> + Send + Sync,
+{
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        (self.0)(inputs)
+    }
+}
+
+/// name -> device class -> implementation.
+#[derive(Default, Clone)]
+pub struct KernelRegistry {
+    inner: Arc<RwLock<HashMap<String, HashMap<DeviceKind, Arc<dyn KernelImpl>>>>>,
+}
+
+impl KernelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&self, name: &str, kind: DeviceKind, imp: Arc<dyn KernelImpl>) {
+        self.inner
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .insert(kind, imp);
+    }
+
+    pub fn get(&self, name: &str, kind: DeviceKind) -> Result<Arc<dyn KernelImpl>> {
+        self.inner
+            .read()
+            .unwrap()
+            .get(name)
+            .and_then(|m| m.get(&kind))
+            .cloned()
+            .ok_or_else(|| anyhow!("no {kind} implementation for kernel '{name}'"))
+    }
+
+    /// Device classes implementing `name`, in preference order GPU>FPGA>CPU.
+    pub fn devices_for(&self, name: &str) -> Vec<DeviceKind> {
+        let map = self.inner.read().unwrap();
+        let mut v: Vec<DeviceKind> = map
+            .get(name)
+            .map(|m| m.keys().copied().collect())
+            .unwrap_or_default();
+        v.sort_by_key(|k| match k {
+            DeviceKind::Gpu => 0,
+            DeviceKind::Fpga => 1,
+            DeviceKind::Cpu => 2,
+        });
+        v
+    }
+
+    pub fn kernel_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.inner.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo() -> Arc<dyn KernelImpl> {
+        Arc::new(FnKernel(|ins: &[Tensor]| Ok(ins.to_vec())))
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let reg = KernelRegistry::new();
+        reg.register("k", DeviceKind::Cpu, echo());
+        let imp = reg.get("k", DeviceKind::Cpu).unwrap();
+        let out = imp.run(&[Tensor::scalar_f32(1.0)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(reg.get("k", DeviceKind::Gpu).is_err());
+        assert!(reg.get("nope", DeviceKind::Cpu).is_err());
+    }
+
+    #[test]
+    fn devices_for_prefers_gpu() {
+        let reg = KernelRegistry::new();
+        reg.register("k", DeviceKind::Cpu, echo());
+        reg.register("k", DeviceKind::Gpu, echo());
+        reg.register("k", DeviceKind::Fpga, echo());
+        assert_eq!(
+            reg.devices_for("k"),
+            vec![DeviceKind::Gpu, DeviceKind::Fpga, DeviceKind::Cpu]
+        );
+        assert!(reg.devices_for("missing").is_empty());
+    }
+}

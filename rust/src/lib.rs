@@ -1,0 +1,62 @@
+//! # adcloud — a unified cloud platform for autonomous driving
+//!
+//! A from-scratch reproduction of *"Implementing a Cloud Platform for
+//! Autonomous Driving"* (Liu, Tang, Wang, Wang, Gaudiot — 2017): the
+//! unified infrastructure (distributed compute engine, memory-centric
+//! tiered storage, YARN/LXC-style resource management, heterogeneous
+//! kernel dispatch) plus the three services the paper builds on top of
+//! it — distributed simulation replay, offline model training with a
+//! storage-backed parameter server, and HD-map generation.
+//!
+//! The numeric hot spots (CNN convolution, ICP correspondence search,
+//! image feature extraction) are authored as JAX/Pallas kernels, AOT
+//! lowered to HLO text at build time (`make artifacts`), and executed
+//! from Rust through PJRT ([`runtime`]). Python never runs on the
+//! request path.
+//!
+//! Layer map:
+//! * [`dce`] — the Spark-analog distributed compute engine (RDDs, DAG
+//!   scheduler, shuffle, BinPipeRDD, virtual-time cluster simulation).
+//! * [`mapreduce`] — the disk-staged MapReduce baseline engine.
+//! * [`storage`] — the Alluxio-analog tiered block store and the
+//!   HDFS-analog baseline.
+//! * [`resource`] — YARN-analog resource manager and LXC-analog
+//!   containers over a heterogeneous device inventory.
+//! * [`hetero`] — kernel registry + dispatch across CPU / GPU-class /
+//!   FPGA-class devices.
+//! * [`runtime`] — the PJRT artifact runtime (device-server threads).
+//! * [`services`] — simulation, training, HD-map generation, SQL.
+//! * [`pointcloud`] — SE(3) math, KD-trees, the 3x3 polar solve.
+
+pub mod config;
+pub mod dce;
+pub mod hetero;
+pub mod mapreduce;
+pub mod metrics;
+pub mod platform;
+pub mod pointcloud;
+pub mod resource;
+pub mod runtime;
+pub mod services;
+pub mod storage;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context as AnyhowContext, Error, Result};
+
+/// Default location of the AOT artifacts, overridable via `ADCLOUD_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("ADCLOUD_ARTIFACTS") {
+        return dir.into();
+    }
+    // Walk up from the current dir so examples/tests work from any cwd.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").is_file() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

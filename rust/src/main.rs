@@ -1,0 +1,248 @@
+//! `adcloud` — the platform launcher.
+//!
+//! Subcommands:
+//!   info                         platform + artifact summary
+//!   quickstart                   tiny end-to-end demo job
+//!   simulate  [--bags N] [--frames M] [--piped]
+//!   train     [--examples N] [--rounds R] [--workers W]
+//!   mapgen    [--steps N]
+//!   sql       [--rows N]
+//!   repro-tables [e1..e12|all] [--quick]
+//!   pipe-worker <logic>          BinPipe child process (detect)
+//!   metrics                      dump the metrics registry after a demo job
+//!
+//! Arg parsing is hand-rolled (offline build: no clap in the vendored
+//! crate set).
+
+use adcloud::platform::{experiments, Platform};
+use adcloud::resource::DeviceKind;
+use adcloud::services::{mapgen, simulation, sql, training};
+use adcloud::Result;
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, name: &str, default: T) -> T {
+    flags
+        .get(name)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("adcloud error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let (pos, flags) = parse_flags(&args);
+    let cmd = pos.first().map(String::as_str).unwrap_or("info");
+    match cmd {
+        "info" => {
+            let p = Platform::boot(config_from(&flags))?;
+            println!("{}", p.describe());
+            if let Some(rt) = &p.runtime {
+                println!("artifacts dir: {:?}", adcloud::artifacts_dir());
+                for name in rt.manifest().names() {
+                    println!("  artifact: {name}");
+                }
+            }
+            Ok(())
+        }
+        "quickstart" => quickstart(&flags),
+        "simulate" => simulate(&flags),
+        "train" => train(&flags),
+        "mapgen" => run_mapgen(&flags),
+        "sql" => run_sql(&flags),
+        "repro-tables" => repro_tables(&pos[1..], &flags),
+        "pipe-worker" => pipe_worker(pos.get(1).map(String::as_str)),
+        "metrics" => {
+            let p = Platform::boot(config_from(&flags))?;
+            let _ = p.ctx.range(10_000, 8).map(|x| x * 2).count()?;
+            println!("{}", p.metrics.report());
+            println!("{}", p.ctx.metrics().report());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            eprintln!(
+                "commands: info quickstart simulate train mapgen sql repro-tables pipe-worker metrics"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn config_from(flags: &HashMap<String, String>) -> adcloud::config::PlatformConfig {
+    if let Some(path) = flags.get("config") {
+        match adcloud::config::PlatformConfig::load(path) {
+            Ok(c) => return c,
+            Err(e) => {
+                eprintln!("config load failed ({e:#}); using defaults");
+            }
+        }
+    }
+    if flags.contains_key("bench") {
+        adcloud::config::PlatformConfig::bench()
+    } else {
+        adcloud::config::PlatformConfig::default()
+    }
+}
+
+fn quickstart(flags: &HashMap<String, String>) -> Result<()> {
+    let p = Platform::boot(config_from(flags))?;
+    println!("{}", p.describe());
+    // A tiny unified job: telemetry stats on the compute engine.
+    let data = sql::generate_telemetry(10_000, 50, 1);
+    let rdd = p.ctx.parallelize(data, 8);
+    let rows = sql::q1_dce(&rdd, 4)?;
+    println!("q1: {} vehicles aggregated; first row: {:?}", rows.len(), rows.first());
+    // One accelerator call if artifacts exist.
+    if p.has_accelerators() {
+        let x = adcloud::runtime::Tensor::from_f32(vec![0.5; 64 * 64], &[1, 64, 64])?;
+        let (kind, out) = p.dispatcher.run_best("feature_b1", &[x], &[])?;
+        println!("feature kernel ran on {kind}: output shape {:?}", out[0].shape);
+    }
+    println!("quickstart OK");
+    Ok(())
+}
+
+fn simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let p = Platform::boot(config_from(flags))?;
+    let bags_n = flag(flags, "bags", 8usize);
+    let frames = flag(flags, "frames", 32usize);
+    let dir = std::env::temp_dir().join(format!("adcloud-sim-{}", std::process::id()));
+    println!("recording {bags_n} bags x {frames} frames to {dir:?}");
+    let bags = simulation::record_drive(&dir, bags_n, frames, p.config.seed)?;
+    let report = if flags.contains_key("piped") {
+        let exe = std::env::current_exe()?;
+        println!("replaying through pipe workers ({exe:?} pipe-worker detect)");
+        simulation::replay_piped(
+            &p.ctx,
+            &bags,
+            vec![exe.to_string_lossy().into_owned(), "pipe-worker".into(), "detect".into()],
+        )?
+    } else {
+        simulation::replay(&p.ctx, &p.dispatcher, &bags, DeviceKind::Gpu)?
+    };
+    println!(
+        "replayed {} frames on {}: accuracy {:.1}% in {}",
+        report.frames,
+        report.device,
+        report.accuracy * 100.0,
+        adcloud::util::fmt_duration(report.elapsed)
+    );
+    let _ = std::fs::remove_dir_all(dir);
+    Ok(())
+}
+
+fn train(flags: &HashMap<String, String>) -> Result<()> {
+    let p = Platform::boot(config_from(flags))?;
+    anyhow::ensure!(p.has_accelerators(), "train requires artifacts (make artifacts)");
+    let examples = flag(flags, "examples", 1024usize);
+    let rounds = flag(flags, "rounds", 50usize);
+    let workers = flag(flags, "workers", 4usize);
+    let data = training::gen_dataset(examples, p.config.seed);
+    let shards = training::shard(data, workers);
+    let trainer = training::DistTrainer::new(p.dispatcher.clone(), DeviceKind::Gpu, shards);
+    let ps = training::ParamServer::tiered(p.ctx.store().clone(), "cli-train");
+    let mut rng = adcloud::util::Rng::new(p.config.seed);
+    let init = adcloud::hetero::cpu_impls::init_params(&mut rng);
+    println!("training {examples} examples, {rounds} rounds on {workers} workers...");
+    let report = trainer.train(&ps, init, rounds, 0.05)?;
+    for r in report.rounds.iter().step_by((rounds / 10).max(1)) {
+        println!("  round {:>4}  loss {:.4}", r.round, r.mean_loss);
+    }
+    println!(
+        "loss {:.4} -> {:.4}; {:.0} examples/s",
+        report.first_loss(),
+        report.last_loss(),
+        report.throughput
+    );
+    Ok(())
+}
+
+fn run_mapgen(flags: &HashMap<String, String>) -> Result<()> {
+    let p = Platform::boot(config_from(flags))?;
+    anyhow::ensure!(p.has_accelerators(), "mapgen requires artifacts (make artifacts)");
+    let steps = flag(flags, "steps", 200usize);
+    let world = mapgen::gen_world(p.config.seed);
+    let log = mapgen::gen_drive(&world, steps, p.config.seed);
+    let cfg = mapgen::SlamConfig::default();
+    let report = mapgen::run_fused(&p.dispatcher, &log, &cfg, 0.1)?;
+    println!(
+        "map built from {steps} steps in {}: {} occupied cells, {} signs, slam err {:.2} m",
+        adcloud::util::fmt_duration(report.elapsed),
+        report.occupied_cells,
+        report.signs,
+        report.slam_err_m
+    );
+    Ok(())
+}
+
+fn run_sql(flags: &HashMap<String, String>) -> Result<()> {
+    let p = Platform::boot(config_from(flags))?;
+    let rows = flag(flags, "rows", 50_000usize);
+    let data = sql::generate_telemetry(rows, 100, p.config.seed);
+    let rdd = p.ctx.parallelize(data, 8).cache();
+    let t = std::time::Instant::now();
+    let q1 = sql::q1_dce(&rdd, 8)?;
+    let q3 = sql::q3_dce(&rdd, 8)?;
+    println!(
+        "q1 -> {} rows, q3 -> {} rows in {}",
+        q1.len(),
+        q3.len(),
+        adcloud::util::fmt_duration(t.elapsed())
+    );
+    Ok(())
+}
+
+fn repro_tables(ids: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let quick = flags.contains_key("quick");
+    let ids: Vec<String> = if ids.is_empty() || ids.iter().any(|i| i == "all") {
+        experiments::ALL_IDS.iter().map(|s| s.to_string()).collect()
+    } else {
+        ids.to_vec()
+    };
+    for id in ids {
+        match experiments::run_experiment(&id, quick) {
+            Ok(table) => println!("{}", table.render()),
+            Err(e) => eprintln!("{id} failed: {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+fn pipe_worker(logic: Option<&str>) -> Result<()> {
+    match logic {
+        Some("detect") => simulation::pipe_worker_detect(),
+        other => anyhow::bail!("unknown pipe-worker logic {other:?} (have: detect)"),
+    }
+}

@@ -1,0 +1,254 @@
+//! Lightweight metrics: counters, gauges, histograms and scoped timers.
+//!
+//! Every subsystem (storage tiers, shuffle, executors, device dispatch)
+//! reports through a shared [`MetricsRegistry`]; benches and the CLI
+//! render [`MetricsRegistry::report`] tables, which is how the paper-style
+//! experiment rows in EXPERIMENTS.md are produced.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-boundary latency histogram (microseconds), lock-free on record.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Bucket upper bounds in microseconds.
+    bounds: Vec<u64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        // 1us .. ~1000s, roughly x4 per bucket.
+        let bounds: Vec<u64> =
+            (0..16).map(|i| 1u64 << (2 * i)).collect();
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Self { bounds, buckets, count: AtomicU64::new(0), sum_us: AtomicU64::new(0), max_us: AtomicU64::new(0) }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    pub fn total(&self) -> Duration {
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                let us = if i < self.bounds.len() { self.bounds[i] } else { self.max_us.load(Ordering::Relaxed) };
+                return Duration::from_micros(us);
+            }
+        }
+        self.max()
+    }
+}
+
+/// Shared registry of named metrics.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsRegistry {
+    inner: Arc<MetricsInner>,
+}
+
+#[derive(Debug, Default)]
+struct MetricsInner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Time a closure into the named histogram.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let h = self.histogram(name);
+        let start = Instant::now();
+        let out = f();
+        h.record(start.elapsed());
+        out
+    }
+
+    /// Render all metrics as an aligned text table.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let counters = self.inner.counters.lock().unwrap();
+        if !counters.is_empty() {
+            out.push_str("counters:\n");
+            for (k, v) in counters.iter() {
+                out.push_str(&format!("  {:<44} {}\n", k, v.get()));
+            }
+        }
+        let hists = self.inner.histograms.lock().unwrap();
+        if !hists.is_empty() {
+            out.push_str("timings:\n");
+            for (k, h) in hists.iter() {
+                if h.count() == 0 {
+                    continue;
+                }
+                out.push_str(&format!(
+                    "  {:<44} n={:<8} mean={:<10} p99={:<10} max={}\n",
+                    k,
+                    h.count(),
+                    crate::util::fmt_duration(h.mean()),
+                    crate::util::fmt_duration(h.quantile(0.99)),
+                    crate::util::fmt_duration(h.max()),
+                ));
+            }
+        }
+        out
+    }
+
+    /// Reset everything (used between bench iterations).
+    pub fn clear(&self) {
+        self.inner.counters.lock().unwrap().clear();
+        self.inner.histograms.lock().unwrap().clear();
+    }
+}
+
+/// RAII timer recording into a histogram on drop.
+pub struct ScopedTimer {
+    hist: Arc<Histogram>,
+    start: Instant,
+}
+
+impl ScopedTimer {
+    pub fn new(hist: Arc<Histogram>) -> Self {
+        Self { hist, start: Instant::now() }
+    }
+}
+
+impl Drop for ScopedTimer {
+    fn drop(&mut self) {
+        self.hist.record(self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let m = MetricsRegistry::new();
+        m.counter("x").inc();
+        m.counter("x").add(4);
+        assert_eq!(m.counter("x").get(), 5);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::default();
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_millis(10));
+        assert!(h.max() >= Duration::from_millis(100));
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn time_records() {
+        let m = MetricsRegistry::new();
+        let v = m.time("op", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.histogram("op").count(), 1);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = MetricsRegistry::new();
+        m.counter("a.b").add(3);
+        m.time("c.d", || ());
+        let r = m.report();
+        assert!(r.contains("a.b"));
+        assert!(r.contains("c.d"));
+    }
+
+    #[test]
+    fn scoped_timer_records_on_drop() {
+        let m = MetricsRegistry::new();
+        {
+            let _t = ScopedTimer::new(m.histogram("scope"));
+        }
+        assert_eq!(m.histogram("scope").count(), 1);
+    }
+}

@@ -1,0 +1,185 @@
+//! KD-tree over 3-D points: the CPU-side nearest-neighbour structure
+//! for ICP refinement and map queries (an O(log n) alternative the
+//! mapgen service uses where the brute-force kernel would be wasteful,
+//! e.g. querying a large accumulated map cloud).
+
+use super::Vec3;
+
+#[derive(Debug, Clone)]
+struct Node {
+    point: Vec3,
+    index: usize,
+    axis: usize,
+    left: Option<Box<Node>>,
+    right: Option<Box<Node>>,
+}
+
+/// Static KD-tree built once over a cloud.
+#[derive(Debug, Clone, Default)]
+pub struct KdTree {
+    root: Option<Box<Node>>,
+    len: usize,
+}
+
+impl KdTree {
+    /// Build from a packed (N,3) cloud.
+    pub fn build(points: &[f32]) -> Self {
+        let mut items: Vec<(Vec3, usize)> = points
+            .chunks_exact(3)
+            .enumerate()
+            .map(|(i, p)| ([p[0], p[1], p[2]], i))
+            .collect();
+        let len = items.len();
+        let root = Self::build_rec(&mut items, 0);
+        Self { root, len }
+    }
+
+    fn build_rec(items: &mut [(Vec3, usize)], depth: usize) -> Option<Box<Node>> {
+        if items.is_empty() {
+            return None;
+        }
+        let axis = depth % 3;
+        items.sort_by(|a, b| a.0[axis].partial_cmp(&b.0[axis]).unwrap());
+        let mid = items.len() / 2;
+        let (point, index) = items[mid];
+        let (left_items, rest) = items.split_at_mut(mid);
+        let right_items = &mut rest[1..];
+        Some(Box::new(Node {
+            point,
+            index,
+            axis,
+            left: Self::build_rec(left_items, depth + 1),
+            right: Self::build_rec(right_items, depth + 1),
+        }))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Nearest neighbour: (index, squared distance).
+    pub fn nearest(&self, q: Vec3) -> Option<(usize, f32)> {
+        let mut best: Option<(usize, f32)> = None;
+        Self::nearest_rec(&self.root, q, &mut best);
+        best
+    }
+
+    fn nearest_rec(node: &Option<Box<Node>>, q: Vec3, best: &mut Option<(usize, f32)>) {
+        let Some(n) = node else { return };
+        let d2 = {
+            let dx = q[0] - n.point[0];
+            let dy = q[1] - n.point[1];
+            let dz = q[2] - n.point[2];
+            dx * dx + dy * dy + dz * dz
+        };
+        if best.map(|(_, b)| d2 < b).unwrap_or(true) {
+            *best = Some((n.index, d2));
+        }
+        let delta = q[n.axis] - n.point[n.axis];
+        let (near, far) = if delta < 0.0 { (&n.left, &n.right) } else { (&n.right, &n.left) };
+        Self::nearest_rec(near, q, best);
+        if best.map(|(_, b)| delta * delta < b).unwrap_or(true) {
+            Self::nearest_rec(far, q, best);
+        }
+    }
+
+    /// All indices within `radius` of `q`.
+    pub fn within_radius(&self, q: Vec3, radius: f32) -> Vec<usize> {
+        let mut out = Vec::new();
+        Self::radius_rec(&self.root, q, radius * radius, &mut out);
+        out
+    }
+
+    fn radius_rec(node: &Option<Box<Node>>, q: Vec3, r2: f32, out: &mut Vec<usize>) {
+        let Some(n) = node else { return };
+        let dx = q[0] - n.point[0];
+        let dy = q[1] - n.point[1];
+        let dz = q[2] - n.point[2];
+        if dx * dx + dy * dy + dz * dz <= r2 {
+            out.push(n.index);
+        }
+        let delta = q[n.axis] - n.point[n.axis];
+        let (near, far) = if delta < 0.0 { (&n.left, &n.right) } else { (&n.right, &n.left) };
+        Self::radius_rec(near, q, r2, out);
+        if delta * delta <= r2 {
+            Self::radius_rec(far, q, r2, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cloud(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n * 3).map(|_| rng.normal_f32(0.0, 5.0)).collect()
+    }
+
+    fn brute_nearest(points: &[f32], q: Vec3) -> (usize, f32) {
+        let mut best = (0usize, f32::INFINITY);
+        for (i, p) in points.chunks_exact(3).enumerate() {
+            let d2 = (q[0] - p[0]).powi(2) + (q[1] - p[1]).powi(2) + (q[2] - p[2]).powi(2);
+            if d2 < best.1 {
+                best = (i, d2);
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn nearest_matches_brute_force() {
+        let mut rng = Rng::new(11);
+        let pts = cloud(&mut rng, 500);
+        let tree = KdTree::build(&pts);
+        assert_eq!(tree.len(), 500);
+        for _ in 0..100 {
+            let q = [rng.normal_f32(0.0, 5.0), rng.normal_f32(0.0, 5.0), rng.normal_f32(0.0, 5.0)];
+            let (ti, td) = tree.nearest(q).unwrap();
+            let (bi, bd) = brute_nearest(&pts, q);
+            assert!((td - bd).abs() < 1e-4, "dist {td} vs {bd}");
+            // Indices may differ on exact ties; distances must match.
+            let _ = (ti, bi);
+        }
+    }
+
+    #[test]
+    fn empty_tree() {
+        let tree = KdTree::build(&[]);
+        assert!(tree.is_empty());
+        assert!(tree.nearest([0.0; 3]).is_none());
+        assert!(tree.within_radius([0.0; 3], 1.0).is_empty());
+    }
+
+    #[test]
+    fn member_point_is_its_own_nearest() {
+        let pts = vec![0.0f32, 0.0, 0.0, 1.0, 1.0, 1.0, -2.0, 0.5, 3.0];
+        let tree = KdTree::build(&pts);
+        let (idx, d2) = tree.nearest([-2.0, 0.5, 3.0]).unwrap();
+        assert_eq!(idx, 2);
+        assert!(d2 < 1e-9);
+    }
+
+    #[test]
+    fn within_radius_matches_brute() {
+        let mut rng = Rng::new(12);
+        let pts = cloud(&mut rng, 300);
+        let tree = KdTree::build(&pts);
+        let q = [0.0f32, 0.0, 0.0];
+        let r = 4.0f32;
+        let mut got = tree.within_radius(q, r);
+        got.sort();
+        let mut want: Vec<usize> = pts
+            .chunks_exact(3)
+            .enumerate()
+            .filter(|(_, p)| p[0] * p[0] + p[1] * p[1] + p[2] * p[2] <= r * r)
+            .map(|(i, _)| i)
+            .collect();
+        want.sort();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,191 @@
+//! Point-cloud math substrate for HD map generation: SE(3) poses, a
+//! KD-tree for nearest-neighbour queries, and the small symmetric-3x3
+//! eigensolver / SVD used to close each ICP iteration (the artifact
+//! returns the cross-covariance; the 3x3 Kabsch solve happens here
+//! because the old XLA CPU runtime lacks LAPACK custom-calls).
+
+pub mod kdtree;
+pub mod solve;
+
+pub use kdtree::KdTree;
+pub use solve::{kabsch_rotation, svd3};
+
+/// 3-vector helpers over `[f32; 3]`.
+pub type Vec3 = [f32; 3];
+
+pub fn v_add(a: Vec3, b: Vec3) -> Vec3 {
+    [a[0] + b[0], a[1] + b[1], a[2] + b[2]]
+}
+
+pub fn v_sub(a: Vec3, b: Vec3) -> Vec3 {
+    [a[0] - b[0], a[1] - b[1], a[2] - b[2]]
+}
+
+pub fn v_dot(a: Vec3, b: Vec3) -> f32 {
+    a[0] * b[0] + a[1] * b[1] + a[2] * b[2]
+}
+
+pub fn v_cross(a: Vec3, b: Vec3) -> Vec3 {
+    [
+        a[1] * b[2] - a[2] * b[1],
+        a[2] * b[0] - a[0] * b[2],
+        a[0] * b[1] - a[1] * b[0],
+    ]
+}
+
+pub fn v_norm(a: Vec3) -> f32 {
+    v_dot(a, a).sqrt()
+}
+
+pub fn v_scale(a: Vec3, s: f32) -> Vec3 {
+    [a[0] * s, a[1] * s, a[2] * s]
+}
+
+/// Row-major 3x3 matrix.
+pub type Mat3 = [[f32; 3]; 3];
+
+pub const MAT3_ID: Mat3 = [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]];
+
+pub fn m_mul(a: &Mat3, b: &Mat3) -> Mat3 {
+    let mut o = [[0f32; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            for k in 0..3 {
+                o[i][j] += a[i][k] * b[k][j];
+            }
+        }
+    }
+    o
+}
+
+pub fn m_transpose(a: &Mat3) -> Mat3 {
+    let mut o = [[0f32; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            o[i][j] = a[j][i];
+        }
+    }
+    o
+}
+
+pub fn m_apply(a: &Mat3, v: Vec3) -> Vec3 {
+    [
+        a[0][0] * v[0] + a[0][1] * v[1] + a[0][2] * v[2],
+        a[1][0] * v[0] + a[1][1] * v[1] + a[1][2] * v[2],
+        a[2][0] * v[0] + a[2][1] * v[1] + a[2][2] * v[2],
+    ]
+}
+
+pub fn m_det(a: &Mat3) -> f32 {
+    a[0][0] * (a[1][1] * a[2][2] - a[1][2] * a[2][1])
+        - a[0][1] * (a[1][0] * a[2][2] - a[1][2] * a[2][0])
+        + a[0][2] * (a[1][0] * a[2][1] - a[1][1] * a[2][0])
+}
+
+/// Rotation about Z (the dominant motion of a ground vehicle).
+pub fn rot_z(theta: f32) -> Mat3 {
+    let (s, c) = theta.sin_cos();
+    [[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]]
+}
+
+/// A rigid transform (pose): x ↦ R x + t.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Se3 {
+    pub r: Mat3,
+    pub t: Vec3,
+}
+
+impl Default for Se3 {
+    fn default() -> Self {
+        Self::identity()
+    }
+}
+
+impl Se3 {
+    pub fn identity() -> Self {
+        Self { r: MAT3_ID, t: [0.0; 3] }
+    }
+
+    pub fn new(r: Mat3, t: Vec3) -> Self {
+        Self { r, t }
+    }
+
+    pub fn apply(&self, p: Vec3) -> Vec3 {
+        v_add(m_apply(&self.r, p), self.t)
+    }
+
+    /// Composition: (self ∘ other)(x) = self(other(x)).
+    pub fn compose(&self, other: &Se3) -> Se3 {
+        Se3 { r: m_mul(&self.r, &other.r), t: v_add(m_apply(&self.r, other.t), self.t) }
+    }
+
+    pub fn inverse(&self) -> Se3 {
+        let rt = m_transpose(&self.r);
+        Se3 { r: rt, t: v_scale(m_apply(&rt, self.t), -1.0) }
+    }
+
+    /// Apply to a packed (N,3) cloud.
+    pub fn apply_cloud(&self, pts: &[f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(pts.len());
+        for p in pts.chunks_exact(3) {
+            let q = self.apply([p[0], p[1], p[2]]);
+            out.extend_from_slice(&q);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_algebra() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(v_add(a, b), [5.0, 7.0, 9.0]);
+        assert_eq!(v_dot(a, b), 32.0);
+        assert_eq!(v_cross([1.0, 0.0, 0.0], [0.0, 1.0, 0.0]), [0.0, 0.0, 1.0]);
+        assert!((v_norm([3.0, 4.0, 0.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rotation_is_orthonormal() {
+        let r = rot_z(0.7);
+        let rtr = m_mul(&m_transpose(&r), &r);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((rtr[i][j] - want).abs() < 1e-6);
+            }
+        }
+        assert!((m_det(&r) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn se3_compose_inverse() {
+        let a = Se3::new(rot_z(0.3), [1.0, -2.0, 0.5]);
+        let b = Se3::new(rot_z(-0.8), [0.0, 3.0, 1.0]);
+        let p = [0.4, 0.2, -1.0];
+        let via_compose = a.compose(&b).apply(p);
+        let sequential = a.apply(b.apply(p));
+        for k in 0..3 {
+            assert!((via_compose[k] - sequential[k]).abs() < 1e-5);
+        }
+        let round = a.inverse().apply(a.apply(p));
+        for k in 0..3 {
+            assert!((round[k] - p[k]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn apply_cloud_matches_pointwise() {
+        let t = Se3::new(rot_z(1.0), [5.0, 0.0, 0.0]);
+        let pts = vec![1.0f32, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let out = t.apply_cloud(&pts);
+        let p0 = t.apply([1.0, 0.0, 0.0]);
+        assert!((out[0] - p0[0]).abs() < 1e-6);
+        assert!((out[1] - p0[1]).abs() < 1e-6);
+        assert_eq!(out.len(), 6);
+    }
+}

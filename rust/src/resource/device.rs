@@ -1,0 +1,138 @@
+//! Heterogeneous device inventory (paper section 2.3).
+//!
+//! Each node exposes CPU cores plus GPU-class and FPGA-class
+//! accelerators. GPU-class devices are backed by real PJRT device-server
+//! threads executing the AOT-compiled XLA artifacts; FPGA-class devices
+//! execute the same artifacts under a calibrated throughput/power model
+//! (see `hetero::energy` and DESIGN.md's substitution ledger).
+
+use std::fmt;
+
+/// The three compute substrates of the paper's platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+    Fpga,
+}
+
+impl DeviceKind {
+    pub const ALL: [DeviceKind; 3] = [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::Fpga];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::Cpu => "cpu",
+            DeviceKind::Gpu => "gpu",
+            DeviceKind::Fpga => "fpga",
+        }
+    }
+
+    /// Modelled board power (W) for the energy accounting of E3/E11.
+    /// Values follow the class the paper targets (server CPU socket,
+    /// discrete training GPU, mid-size FPGA card).
+    pub fn power_watts(&self) -> f64 {
+        match self {
+            DeviceKind::Cpu => 95.0,
+            DeviceKind::Gpu => 250.0,
+            DeviceKind::Fpga => 25.0,
+        }
+    }
+}
+
+impl fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A concrete device slot on a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceId {
+    pub node: usize,
+    pub kind: DeviceKind,
+    /// Index within (node, kind).
+    pub index: usize,
+}
+
+impl fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "node{}/{}{}", self.node, self.kind, self.index)
+    }
+}
+
+/// Resources a container asks for (the YARN request vector).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceVec {
+    pub cores: usize,
+    pub mem_bytes: u64,
+    pub gpus: usize,
+    pub fpgas: usize,
+}
+
+impl ResourceVec {
+    pub fn cores(cores: usize, mem_bytes: u64) -> Self {
+        Self { cores, mem_bytes, gpus: 0, fpgas: 0 }
+    }
+
+    pub fn with_gpu(mut self, gpus: usize) -> Self {
+        self.gpus = gpus;
+        self
+    }
+
+    pub fn with_fpga(mut self, fpgas: usize) -> Self {
+        self.fpgas = fpgas;
+        self
+    }
+
+    pub fn fits_in(&self, avail: &ResourceVec) -> bool {
+        self.cores <= avail.cores
+            && self.mem_bytes <= avail.mem_bytes
+            && self.gpus <= avail.gpus
+            && self.fpgas <= avail.fpgas
+    }
+
+    pub fn add(&mut self, other: &ResourceVec) {
+        self.cores += other.cores;
+        self.mem_bytes += other.mem_bytes;
+        self.gpus += other.gpus;
+        self.fpgas += other.fpgas;
+    }
+
+    pub fn sub(&mut self, other: &ResourceVec) {
+        self.cores -= other.cores;
+        self.mem_bytes -= other.mem_bytes;
+        self.gpus -= other.gpus;
+        self.fpgas -= other.fpgas;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_respects_every_dimension() {
+        let avail = ResourceVec { cores: 4, mem_bytes: 100, gpus: 1, fpgas: 0 };
+        assert!(ResourceVec::cores(4, 100).fits_in(&avail));
+        assert!(!ResourceVec::cores(5, 1).fits_in(&avail));
+        assert!(!ResourceVec::cores(1, 101).fits_in(&avail));
+        assert!(!ResourceVec::cores(1, 1).with_gpu(2).fits_in(&avail));
+        assert!(!ResourceVec::cores(1, 1).with_fpga(1).fits_in(&avail));
+    }
+
+    #[test]
+    fn add_sub_inverse() {
+        let mut a = ResourceVec { cores: 4, mem_bytes: 100, gpus: 2, fpgas: 1 };
+        let b = ResourceVec { cores: 1, mem_bytes: 30, gpus: 1, fpgas: 1 };
+        a.add(&b);
+        a.sub(&b);
+        assert_eq!(a, ResourceVec { cores: 4, mem_bytes: 100, gpus: 2, fpgas: 1 });
+    }
+
+    #[test]
+    fn device_display() {
+        let d = DeviceId { node: 2, kind: DeviceKind::Gpu, index: 0 };
+        assert_eq!(d.to_string(), "node2/gpu0");
+        assert!(DeviceKind::Fpga.power_watts() < DeviceKind::Gpu.power_watts());
+    }
+}

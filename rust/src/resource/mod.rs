@@ -1,0 +1,11 @@
+//! Resource management: the YARN-analog scheduler handing out
+//! LXC-analog containers over a heterogeneous (CPU/GPU/FPGA) device
+//! inventory (paper section 2.3, Figure 3).
+
+pub mod container;
+pub mod device;
+pub mod yarn;
+
+pub use container::{Container, ContainerCtx, ContainerRef};
+pub use device::{DeviceId, DeviceKind, ResourceVec};
+pub use yarn::ResourceManager;

@@ -1,0 +1,348 @@
+//! YARN-analog resource manager (paper section 2.3).
+//!
+//! "When a Spark application is launched, it can request heterogeneous
+//! computing resources through YARN. YARN then allocates LXCs to satisfy
+//! the request." This module is that allocator: applications register
+//! against capacity-share queues, request containers carrying CPU cores,
+//! memory, and GPU/FPGA device slots, and either get a grant, an error,
+//! or (with [`ResourceManager::acquire_container`]) block until capacity
+//! frees up.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::container::{Container, ContainerRef};
+use super::device::{DeviceId, DeviceKind, ResourceVec};
+use crate::config::ClusterConfig;
+use crate::metrics::MetricsRegistry;
+
+struct NodeState {
+    avail: ResourceVec,
+    free_gpus: Vec<usize>,
+    free_fpgas: Vec<usize>,
+}
+
+struct AppState {
+    queue: String,
+    containers: usize,
+}
+
+struct QueueState {
+    /// Fraction of total cluster cores this queue may hold (capacity
+    /// scheduler semantics: hard cap, work-conserving below it).
+    share: f64,
+    cores_used: usize,
+}
+
+struct RmInner {
+    nodes: Vec<NodeState>,
+    apps: HashMap<String, AppState>,
+    queues: HashMap<String, QueueState>,
+    live: HashMap<u64, (String, usize, ResourceVec, Vec<DeviceId>)>,
+    next_id: u64,
+    total_cores: usize,
+}
+
+/// The cluster resource manager.
+pub struct ResourceManager {
+    inner: Mutex<RmInner>,
+    freed: Condvar,
+    metrics: MetricsRegistry,
+}
+
+impl ResourceManager {
+    /// Build from the cluster config with a single `default` queue.
+    pub fn new(cluster: &ClusterConfig, metrics: MetricsRegistry) -> Arc<Self> {
+        Self::with_queues(cluster, vec![("default".into(), 1.0)], metrics)
+    }
+
+    /// Build with named capacity queues; shares should sum to <= 1.
+    pub fn with_queues(
+        cluster: &ClusterConfig,
+        queues: Vec<(String, f64)>,
+        metrics: MetricsRegistry,
+    ) -> Arc<Self> {
+        let nodes = (0..cluster.nodes)
+            .map(|_| NodeState {
+                avail: ResourceVec {
+                    cores: cluster.cores_per_node,
+                    mem_bytes: cluster.mem_per_node,
+                    gpus: cluster.gpus_per_node,
+                    fpgas: cluster.fpgas_per_node,
+                },
+                free_gpus: (0..cluster.gpus_per_node).collect(),
+                free_fpgas: (0..cluster.fpgas_per_node).collect(),
+            })
+            .collect();
+        Arc::new(Self {
+            inner: Mutex::new(RmInner {
+                nodes,
+                apps: HashMap::new(),
+                queues: queues
+                    .into_iter()
+                    .map(|(n, share)| (n, QueueState { share, cores_used: 0 }))
+                    .collect(),
+                live: HashMap::new(),
+                next_id: 0,
+                total_cores: cluster.total_cores(),
+            }),
+            freed: Condvar::new(),
+            metrics,
+        })
+    }
+
+    /// Register an application against a queue.
+    pub fn submit_app(&self, app: &str, queue: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.queues.contains_key(queue) {
+            bail!("unknown queue '{queue}'");
+        }
+        if inner.apps.contains_key(app) {
+            bail!("app '{app}' already submitted");
+        }
+        inner
+            .apps
+            .insert(app.to_string(), AppState { queue: queue.to_string(), containers: 0 });
+        self.metrics.counter("resource.apps_submitted").inc();
+        Ok(())
+    }
+
+    /// Non-blocking container request. Errors if nothing fits right now
+    /// or the app's queue is at its capacity cap.
+    pub fn request_container(self: &Arc<Self>, app: &str, req: ResourceVec) -> Result<ContainerRef> {
+        let mut inner = self.inner.lock().unwrap();
+        self.try_grant(&mut inner, app, req)
+    }
+
+    /// Blocking request: waits until a grant is possible (with timeout).
+    pub fn acquire_container(
+        self: &Arc<Self>,
+        app: &str,
+        req: ResourceVec,
+        timeout: Duration,
+    ) -> Result<ContainerRef> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            match self.try_grant(&mut inner, app, req) {
+                Ok(c) => return Ok(c),
+                Err(_) => {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        bail!("timed out waiting for {req:?} for app '{app}'");
+                    }
+                    let (guard, _) = self
+                        .freed
+                        .wait_timeout(inner, deadline - now)
+                        .unwrap();
+                    inner = guard;
+                }
+            }
+        }
+    }
+
+    fn try_grant(
+        self: &Arc<Self>,
+        inner: &mut RmInner,
+        app: &str,
+        req: ResourceVec,
+    ) -> Result<ContainerRef> {
+        let queue_name = match inner.apps.get(app) {
+            Some(a) => a.queue.clone(),
+            None => bail!("app '{app}' not submitted"),
+        };
+        // Capacity check: hard cap at share * total_cores.
+        {
+            let total = inner.total_cores;
+            let q = inner.queues.get(&queue_name).unwrap();
+            let cap = (q.share * total as f64).ceil() as usize;
+            if q.cores_used + req.cores > cap {
+                self.metrics.counter("resource.queue_rejections").inc();
+                bail!(
+                    "queue '{queue_name}' at capacity ({}/{} cores)",
+                    q.cores_used,
+                    cap
+                );
+            }
+        }
+        // First-fit across nodes.
+        let node_idx = match inner.nodes.iter().position(|n| req.fits_in(&n.avail)) {
+            Some(i) => i,
+            None => {
+                self.metrics.counter("resource.unsatisfied_requests").inc();
+                bail!("no node can satisfy {req:?}");
+            }
+        };
+        let node = &mut inner.nodes[node_idx];
+        node.avail.sub(&req);
+        let mut devices = Vec::new();
+        for _ in 0..req.gpus {
+            let idx = node.free_gpus.pop().expect("gpu accounting");
+            devices.push(DeviceId { node: node_idx, kind: DeviceKind::Gpu, index: idx });
+        }
+        for _ in 0..req.fpgas {
+            let idx = node.free_fpgas.pop().expect("fpga accounting");
+            devices.push(DeviceId { node: node_idx, kind: DeviceKind::Fpga, index: idx });
+        }
+        inner.queues.get_mut(&queue_name).unwrap().cores_used += req.cores;
+        inner.apps.get_mut(app).unwrap().containers += 1;
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.live.insert(id, (app.to_string(), node_idx, req, devices.clone()));
+        self.metrics.counter("resource.containers_granted").inc();
+        Ok(Arc::new(Container::new(
+            id,
+            app.to_string(),
+            node_idx,
+            req,
+            devices,
+            self.metrics.clone(),
+        )))
+    }
+
+    /// Return a container's resources to the pool.
+    pub fn release(&self, container: &ContainerRef) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let (app, node_idx, req, devices) = match inner.live.remove(&container.id) {
+            Some(v) => v,
+            None => bail!("container {} not live", container.id),
+        };
+        container.mark_released();
+        let node = &mut inner.nodes[node_idx];
+        node.avail.add(&req);
+        for d in devices {
+            match d.kind {
+                DeviceKind::Gpu => node.free_gpus.push(d.index),
+                DeviceKind::Fpga => node.free_fpgas.push(d.index),
+                DeviceKind::Cpu => {}
+            }
+        }
+        let queue = inner.apps.get(&app).map(|a| a.queue.clone());
+        if let Some(q) = queue.and_then(|q| inner.queues.get_mut(&q)) {
+            q.cores_used -= req.cores;
+        }
+        if let Some(a) = inner.apps.get_mut(&app) {
+            a.containers -= 1;
+        }
+        self.metrics.counter("resource.containers_released").inc();
+        self.freed.notify_all();
+        Ok(())
+    }
+
+    /// Total available resources across nodes (diagnostics).
+    pub fn available(&self) -> ResourceVec {
+        let inner = self.inner.lock().unwrap();
+        let mut total = ResourceVec::default();
+        for n in &inner.nodes {
+            total.add(&n.avail);
+        }
+        total
+    }
+
+    pub fn live_containers(&self) -> usize {
+        self.inner.lock().unwrap().live.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> ClusterConfig {
+        ClusterConfig {
+            nodes: 2,
+            cores_per_node: 4,
+            gpus_per_node: 1,
+            fpgas_per_node: 1,
+            mem_per_node: 1000,
+        }
+    }
+
+    fn rm() -> Arc<ResourceManager> {
+        ResourceManager::new(&cluster(), MetricsRegistry::new())
+    }
+
+    #[test]
+    fn grant_and_release_roundtrip() {
+        let rm = rm();
+        rm.submit_app("a", "default").unwrap();
+        let c = rm.request_container("a", ResourceVec::cores(2, 100)).unwrap();
+        assert_eq!(rm.live_containers(), 1);
+        assert_eq!(rm.available().cores, 6);
+        rm.release(&c).unwrap();
+        assert_eq!(rm.available().cores, 8);
+        assert!(c.is_released());
+    }
+
+    #[test]
+    fn gpu_slots_are_exclusive() {
+        let rm = rm();
+        rm.submit_app("a", "default").unwrap();
+        let c1 = rm.request_container("a", ResourceVec::cores(1, 10).with_gpu(1)).unwrap();
+        let c2 = rm.request_container("a", ResourceVec::cores(1, 10).with_gpu(1)).unwrap();
+        // Both GPUs taken (one per node) — a third must fail.
+        assert!(rm.request_container("a", ResourceVec::cores(1, 10).with_gpu(1)).is_err());
+        assert_ne!(
+            (c1.devices[0].node, c1.devices[0].index),
+            (c2.devices[0].node, c2.devices[0].index)
+        );
+        rm.release(&c1).unwrap();
+        rm.request_container("a", ResourceVec::cores(1, 10).with_gpu(1)).unwrap();
+    }
+
+    #[test]
+    fn queue_capacity_cap_enforced() {
+        let rm = ResourceManager::with_queues(
+            &cluster(),
+            vec![("small".into(), 0.25), ("big".into(), 0.75)],
+            MetricsRegistry::new(),
+        );
+        rm.submit_app("a", "small").unwrap();
+        // 25% of 8 cores = 2.
+        rm.request_container("a", ResourceVec::cores(2, 10)).unwrap();
+        assert!(rm.request_container("a", ResourceVec::cores(1, 10)).is_err());
+    }
+
+    #[test]
+    fn unknown_app_or_queue_errors() {
+        let rm = rm();
+        assert!(rm.submit_app("a", "nope").is_err());
+        assert!(rm.request_container("ghost", ResourceVec::cores(1, 1)).is_err());
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let rm = rm();
+        rm.submit_app("a", "default").unwrap();
+        assert!(rm.request_container("a", ResourceVec::cores(5, 10)).is_err());
+    }
+
+    #[test]
+    fn blocking_acquire_wakes_on_release() {
+        let rm = rm();
+        rm.submit_app("a", "default").unwrap();
+        let big = rm.request_container("a", ResourceVec::cores(4, 100)).unwrap();
+        let big2 = rm.request_container("a", ResourceVec::cores(4, 100)).unwrap();
+        let rm2 = rm.clone();
+        let waiter = std::thread::spawn(move || {
+            rm2.acquire_container("a", ResourceVec::cores(4, 100), Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        rm.release(&big).unwrap();
+        let got = waiter.join().unwrap();
+        assert!(got.is_ok());
+        rm.release(&big2).unwrap();
+    }
+
+    #[test]
+    fn acquire_times_out() {
+        let rm = rm();
+        rm.submit_app("a", "default").unwrap();
+        let _c1 = rm.request_container("a", ResourceVec::cores(4, 100)).unwrap();
+        let _c2 = rm.request_container("a", ResourceVec::cores(4, 100)).unwrap();
+        let r = rm.acquire_container("a", ResourceVec::cores(1, 1), Duration::from_millis(50));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! Artifact manifest: what `python -m compile.aot` produced.
+//!
+//! `artifacts/manifest.json` is the contract between the build-time
+//! Python layer and the Rust request path: artifact names, HLO files,
+//! and the exact input/output tensor signatures each executable expects.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::tensor::Tensor;
+use crate::util::json::Json;
+
+/// One input or output slot of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.req("name")?.as_str()?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: j.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.req("name")?.as_str()?.to_string(),
+            file: j.req("file")?.as_str()?.to_string(),
+            inputs: j
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<_>>()?,
+            outputs: j
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+impl ArtifactSpec {
+    /// Validate a set of host tensors against the input signature.
+    pub fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&self.inputs) {
+            if t.shape != spec.shape {
+                bail!(
+                    "{}: input '{}' shape {:?} != expected {:?}",
+                    self.name,
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+            if t.dtype_tag() != spec.dtype {
+                bail!(
+                    "{}: input '{}' dtype {} != expected {}",
+                    self.name,
+                    spec.name,
+                    t.dtype_tag(),
+                    spec.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parsed manifest plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub param_order: Vec<String>,
+    by_name: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let format = j.req("format")?.as_str()?;
+        if format != "hlo-text/v1" {
+            bail!("unsupported artifact format {format:?}");
+        }
+        let by_name: HashMap<String, ArtifactSpec> = j
+            .req("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| ArtifactSpec::from_json(a).map(|s| (s.name.clone(), s)))
+            .collect::<Result<_>>()?;
+        let param_order = match j.get("param_order") {
+            Some(p) => p
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_str().map(str::to_string))
+                .collect::<Result<_>>()?,
+            None => Vec::new(),
+        };
+        Ok(Self { dir, param_order, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.by_name
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}' (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.by_name.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            inputs: vec![
+                IoSpec { name: "x".into(), shape: vec![2, 3], dtype: "f32".into() },
+                IoSpec { name: "y".into(), shape: vec![2], dtype: "s32".into() },
+            ],
+            outputs: vec![IoSpec { name: "o".into(), shape: vec![], dtype: "f32".into() }],
+        }
+    }
+
+    #[test]
+    fn check_inputs_accepts_matching() {
+        let s = spec();
+        let ins = vec![
+            Tensor::from_f32(vec![0.0; 6], &[2, 3]).unwrap(),
+            Tensor::from_i32(vec![1, 2], &[2]).unwrap(),
+        ];
+        assert!(s.check_inputs(&ins).is_ok());
+    }
+
+    #[test]
+    fn check_inputs_rejects_shape_dtype_arity() {
+        let s = spec();
+        // arity
+        assert!(s.check_inputs(&[Tensor::zeros(&[2, 3])]).is_err());
+        // shape
+        let bad = vec![Tensor::zeros(&[3, 2]), Tensor::from_i32(vec![1, 2], &[2]).unwrap()];
+        assert!(s.check_inputs(&bad).is_err());
+        // dtype
+        let bad = vec![Tensor::zeros(&[2, 3]), Tensor::zeros(&[2])];
+        assert!(s.check_inputs(&bad).is_err());
+    }
+
+    #[test]
+    fn manifest_loads_built_artifacts_if_present() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").is_file() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("cnn_train_b16").is_ok());
+        assert_eq!(m.get("cnn_train_b16").unwrap().inputs.len(), 8);
+        assert!(m.hlo_path("icp_step_1024").unwrap().is_file());
+        assert_eq!(m.param_order.len(), 6);
+    }
+}

@@ -1,0 +1,78 @@
+//! PJRT artifact runtime: loads the HLO-text artifacts that
+//! `python/compile/aot.py` produced and executes them from the request
+//! path, Python-free.
+//!
+//! Pattern (from /opt/xla-example/load_hlo):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. HLO *text* is the interchange
+//! format; serialized protos from jax ≥ 0.5 are rejected by
+//! xla_extension 0.5.1 (64-bit instruction ids).
+
+mod artifact;
+mod server;
+mod tensor;
+
+pub use artifact::{ArtifactSpec, IoSpec, Manifest};
+pub use server::{shared_runtime, XlaRuntime};
+pub use tensor::{Tensor, TensorData};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        crate::artifacts_dir().join("manifest.json").is_file()
+    }
+
+    #[test]
+    fn feature_artifact_executes() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = shared_runtime().unwrap();
+        let x = Tensor::from_f32(vec![0.5; 64 * 64], &[1, 64, 64]).unwrap();
+        let out = rt.execute("feature_b1", vec![x]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![1, 8, 8, 4]);
+        // Constant image -> zero gradients everywhere.
+        assert!(out[0].as_f32().unwrap().iter().all(|v| v.abs() < 1e-5));
+    }
+
+    #[test]
+    fn icp_artifact_identity_clouds() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = shared_runtime().unwrap();
+        let mut rng = crate::util::Rng::new(5);
+        let pts: Vec<f32> = (0..1024 * 3).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let src = Tensor::from_f32(pts.clone(), &[1024, 3]).unwrap();
+        let dst = Tensor::from_f32(pts, &[1024, 3]).unwrap();
+        let out = rt.execute("icp_step_1024", vec![src, dst]).unwrap();
+        assert_eq!(out.len(), 4);
+        let err = out[3].scalar_value().unwrap();
+        assert!(err.abs() < 1e-6, "identical clouds, err={err}");
+    }
+
+    #[test]
+    fn input_validation_rejects_bad_shape() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = shared_runtime().unwrap();
+        let bad = Tensor::zeros(&[2, 2]);
+        assert!(rt.execute("feature_b1", vec![bad]).is_err());
+    }
+
+    #[test]
+    fn round_robin_covers_devices() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = shared_runtime().unwrap();
+        assert!(rt.num_devices() >= 1);
+        // execute_on out of range errors cleanly
+        let x = Tensor::from_f32(vec![0.0; 64 * 64], &[1, 64, 64]).unwrap();
+        assert!(rt.execute_on(usize::MAX, "feature_b1", vec![x]).is_err());
+    }
+}

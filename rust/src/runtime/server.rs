@@ -1,0 +1,254 @@
+//! Device servers: dedicated threads owning a PJRT client + compiled
+//! executables, fed through channels.
+//!
+//! `xla::PjRtClient` is `Rc`-backed and must not cross threads, so each
+//! accelerator ("GPU-class device" in the paper's terms) is a thread
+//! that compiles HLO-text artifacts once and then serves execute
+//! requests from its queue — the same shape as a real accelerator's
+//! submission queue. [`XlaRuntime`] is the cheap, clonable, `Send+Sync`
+//! handle the rest of the platform uses.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::artifact::Manifest;
+use super::tensor::Tensor;
+use crate::metrics::MetricsRegistry;
+
+enum Request {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor>,
+        resp: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    Preload {
+        names: Vec<String>,
+        resp: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// One device-server thread.
+struct DeviceServer {
+    tx: mpsc::Sender<Request>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl DeviceServer {
+    fn spawn(device_id: usize, manifest: Arc<Manifest>, metrics: MetricsRegistry) -> Self {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let handle = std::thread::Builder::new()
+            .name(format!("xla-device-{device_id}"))
+            .spawn(move || device_loop(rx, manifest, metrics))
+            .expect("spawn device server");
+        Self { tx, handle: Some(handle) }
+    }
+}
+
+impl Drop for DeviceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn device_loop(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>, metrics: MetricsRegistry) {
+    // The PJRT client and every compiled executable live and die on this
+    // thread; only `Tensor`s cross the channel.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with a clear error.
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Execute { resp, .. } => {
+                        let _ = resp.send(Err(anyhow!("PJRT client init failed: {e:?}")));
+                    }
+                    Request::Preload { resp, .. } => {
+                        let _ = resp.send(Err(anyhow!("PJRT client init failed: {e:?}")));
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut exes: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    let compile = |name: &str, exes: &mut HashMap<String, xla::PjRtLoadedExecutable>| -> Result<()> {
+        if exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = manifest.hlo_path(name)?;
+        let start = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text for {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        metrics
+            .histogram(&format!("runtime.compile.{name}"))
+            .record(start.elapsed());
+        exes.insert(name.to_string(), exe);
+        Ok(())
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Preload { names, resp } => {
+                let mut out = Ok(());
+                for n in &names {
+                    if let Err(e) = compile(n, &mut exes) {
+                        out = Err(e);
+                        break;
+                    }
+                }
+                let _ = resp.send(out);
+            }
+            Request::Execute { name, inputs, resp } => {
+                let result = (|| -> Result<Vec<Tensor>> {
+                    let spec = manifest.get(&name)?;
+                    spec.check_inputs(&inputs)?;
+                    compile(&name, &mut exes)?;
+                    let exe = exes.get(&name).unwrap();
+                    let lits: Vec<xla::Literal> = inputs
+                        .iter()
+                        .map(|t| t.to_literal())
+                        .collect::<Result<_>>()?;
+                    let start = Instant::now();
+                    let bufs = exe
+                        .execute::<xla::Literal>(&lits)
+                        .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+                    let out_lit = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+                    metrics
+                        .histogram(&format!("runtime.exec.{name}"))
+                        .record(start.elapsed());
+                    metrics.counter(&format!("runtime.execs.{name}")).inc();
+                    // Artifacts are lowered with return_tuple=True.
+                    let parts = out_lit
+                        .to_tuple()
+                        .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
+                    if parts.len() != spec.outputs.len() {
+                        return Err(anyhow!(
+                            "{name}: {} outputs, manifest says {}",
+                            parts.len(),
+                            spec.outputs.len()
+                        ));
+                    }
+                    parts.iter().map(Tensor::from_literal).collect()
+                })();
+                let _ = resp.send(result);
+            }
+        }
+    }
+}
+
+/// Handle to a pool of device-server threads (round-robin dispatch).
+///
+/// Clone freely; all clones share the same devices. In the platform's
+/// terms each underlying server is one GPU-class accelerator; the
+/// resource manager hands out device indices and services pin their
+/// work with [`XlaRuntime::execute_on`].
+#[derive(Clone)]
+pub struct XlaRuntime {
+    inner: Arc<RuntimeInner>,
+}
+
+struct RuntimeInner {
+    manifest: Arc<Manifest>,
+    devices: Vec<DeviceServer>,
+    next: AtomicUsize,
+    metrics: MetricsRegistry,
+}
+
+impl XlaRuntime {
+    /// Load the manifest from `dir` and spin up `num_devices` servers.
+    pub fn new(dir: impl AsRef<std::path::Path>, num_devices: usize, metrics: MetricsRegistry) -> Result<Self> {
+        let manifest = Arc::new(Manifest::load(dir)?);
+        let devices = (0..num_devices.max(1))
+            .map(|i| DeviceServer::spawn(i, manifest.clone(), metrics.clone()))
+            .collect();
+        Ok(Self {
+            inner: Arc::new(RuntimeInner { manifest, devices, next: AtomicUsize::new(0), metrics }),
+        })
+    }
+
+    /// Convenience: default artifacts dir, one device, fresh metrics.
+    pub fn single() -> Result<Self> {
+        Self::new(crate::artifacts_dir(), 1, MetricsRegistry::new())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.inner.metrics
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.inner.devices.len()
+    }
+
+    /// Execute an artifact on the least-recently-used device.
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let d = self.inner.next.fetch_add(1, Ordering::Relaxed) % self.inner.devices.len();
+        self.execute_on(d, name, inputs)
+    }
+
+    /// Execute an artifact on a specific device queue.
+    pub fn execute_on(&self, device: usize, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let dev = self
+            .inner
+            .devices
+            .get(device)
+            .ok_or_else(|| anyhow!("device {device} out of range"))?;
+        let (tx, rx) = mpsc::channel();
+        dev.tx
+            .send(Request::Execute { name: name.to_string(), inputs, resp: tx })
+            .map_err(|_| anyhow!("device {device} is gone"))?;
+        rx.recv().map_err(|_| anyhow!("device {device} dropped the request"))?
+    }
+
+    /// Compile the named artifacts on every device up front.
+    pub fn preload(&self, names: &[&str]) -> Result<()> {
+        for dev in &self.inner.devices {
+            let (tx, rx) = mpsc::channel();
+            dev.tx
+                .send(Request::Preload {
+                    names: names.iter().map(|s| s.to_string()).collect(),
+                    resp: tx,
+                })
+                .map_err(|_| anyhow!("device gone during preload"))?;
+            rx.recv().map_err(|_| anyhow!("device dropped preload"))??;
+        }
+        Ok(())
+    }
+}
+
+/// Global shared runtime for tests/benches: PJRT clients are expensive, so
+/// everything in-process shares one pool.
+static SHARED: Mutex<Option<XlaRuntime>> = Mutex::new(None);
+
+/// Get (or lazily create) the process-wide runtime with 2 devices.
+pub fn shared_runtime() -> Result<XlaRuntime> {
+    let mut guard = SHARED.lock().unwrap();
+    if let Some(rt) = guard.as_ref() {
+        return Ok(rt.clone());
+    }
+    let rt = XlaRuntime::new(crate::artifacts_dir(), 2, MetricsRegistry::new())?;
+    *guard = Some(rt.clone());
+    Ok(rt)
+}

@@ -1,0 +1,164 @@
+//! Host tensors crossing the runtime channel boundary.
+//!
+//! The PJRT client types (`xla::PjRtClient`, `Literal`) are `Rc`-backed
+//! and must stay on their device-server thread; [`Tensor`] is the plain
+//! `Send` host-side value the rest of the platform traffics in.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Element storage for the two dtypes the artifacts use.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("f32 tensor: {} elements for shape {:?}", data.len(), shape);
+        }
+        Ok(Self { shape: shape.to_vec(), data: TensorData::F32(data) })
+    }
+
+    pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("i32 tensor: {} elements for shape {:?}", data.len(), shape);
+        }
+        Ok(Self { shape: shape.to_vec(), data: TensorData::I32(data) })
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.element_count() * 4
+    }
+
+    pub fn dtype_tag(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "s32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(anyhow!("tensor is f32, expected i32")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    /// Scalar extraction (shape [] or [1]).
+    pub fn scalar_value(&self) -> Result<f32> {
+        if self.element_count() != 1 {
+            bail!("not a scalar: shape {:?}", self.shape);
+        }
+        match &self.data {
+            TensorData::F32(v) => Ok(v[0]),
+            TensorData::I32(v) => Ok(v[0] as f32),
+        }
+    }
+
+    /// Convert to an `xla::Literal` (device-server thread only).
+    pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => {
+                if self.shape.is_empty() {
+                    return Ok(xla::Literal::scalar(v[0]));
+                }
+                xla::Literal::vec1(v)
+            }
+            TensorData::I32(v) => {
+                if self.shape.is_empty() {
+                    return Ok(xla::Literal::scalar(v[0]));
+                }
+                xla::Literal::vec1(v)
+            }
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Build from an `xla::Literal` (device-server thread only).
+    pub(crate) fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(Self { shape: dims, data: TensorData::F32(lit.to_vec::<f32>()?) })
+            }
+            xla::ElementType::S32 => {
+                Ok(Self { shape: dims, data: TensorData::I32(lit.to_vec::<i32>()?) })
+            }
+            other => bail!("unsupported artifact output dtype {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::from_f32(vec![1.0; 6], &[2, 3]).is_ok());
+        assert!(Tensor::from_f32(vec![1.0; 5], &[2, 3]).is_err());
+        assert!(Tensor::from_i32(vec![1; 4], &[4]).is_ok());
+    }
+
+    #[test]
+    fn scalar_access() {
+        let t = Tensor::scalar_f32(3.5);
+        assert_eq!(t.scalar_value().unwrap(), 3.5);
+        assert!(Tensor::zeros(&[2, 2]).scalar_value().is_err());
+    }
+
+    #[test]
+    fn dtype_guards() {
+        let t = Tensor::from_i32(vec![1, 2], &[2]).unwrap();
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[1, 2]);
+        assert_eq!(t.dtype_tag(), "s32");
+    }
+
+    #[test]
+    fn sizes() {
+        let t = Tensor::zeros(&[4, 8]);
+        assert_eq!(t.element_count(), 32);
+        assert_eq!(t.size_bytes(), 128);
+    }
+}

@@ -1,0 +1,201 @@
+//! ICP point-cloud alignment (paper section 5.2's 30X hot spot).
+//!
+//! Each iteration's data pass (correspondence search + cross-covariance)
+//! is the AOT Pallas kernel dispatched through the hetero layer on the
+//! chosen device class; the 3x3 Kabsch solve closing the iteration runs
+//! here. The same code path with `DeviceKind::Cpu` runs the naive scalar
+//! implementation — that pairing is experiment E11.
+
+use anyhow::{bail, Result};
+
+use crate::hetero::Dispatcher;
+use crate::pointcloud::{kabsch_rotation, m_apply, v_sub, Se3};
+use crate::resource::DeviceKind;
+use crate::runtime::Tensor;
+use crate::util::Rng;
+
+/// Fixed sizes the AOT artifacts were lowered for.
+pub const ICP_SIZES: [usize; 2] = [1024, 4096];
+
+/// Resample a packed cloud to exactly `n` points (stride subsample or
+/// repeat-pad), as the fixed-shape artifact requires.
+pub fn resample(cloud: &[f32], n: usize, seed: u64) -> Vec<f32> {
+    let m = cloud.len() / 3;
+    if m == 0 {
+        return vec![0.0; n * 3];
+    }
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n * 3);
+    if m >= n {
+        // Uniform stride with random phase.
+        let stride = m as f64 / n as f64;
+        let phase = rng.next_f64();
+        for i in 0..n {
+            let idx = (((i as f64 + phase) * stride) as usize).min(m - 1);
+            out.extend_from_slice(&cloud[idx * 3..idx * 3 + 3]);
+        }
+    } else {
+        for i in 0..n {
+            let idx = i % m;
+            out.extend_from_slice(&cloud[idx * 3..idx * 3 + 3]);
+        }
+    }
+    out
+}
+
+/// Result of an alignment.
+#[derive(Debug, Clone)]
+pub struct IcpResult {
+    pub transform: Se3,
+    pub final_err: f32,
+    pub iterations: usize,
+}
+
+/// Align `src` onto `dst` (both packed (N,3)) with up to `max_iters`
+/// iterations on `device`. `size` must be one of [`ICP_SIZES`].
+pub fn icp_align(
+    dispatcher: &Dispatcher,
+    device: DeviceKind,
+    src: &[f32],
+    dst: &[f32],
+    size: usize,
+    max_iters: usize,
+) -> Result<IcpResult> {
+    if !ICP_SIZES.contains(&size) {
+        bail!("no ICP artifact for size {size} (have {ICP_SIZES:?})");
+    }
+    let kernel = format!("icp_step_{size}");
+    let src_s = resample(src, size, 17);
+    let dst_s = resample(dst, size, 23);
+    let dst_t = Tensor::from_f32(dst_s, &[size, 3])?;
+    let mut total = Se3::identity();
+    let mut cur = src_s;
+    let mut final_err = f32::INFINITY;
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        let src_t = Tensor::from_f32(cur.clone(), &[size, 3])?;
+        let out = dispatcher.run_on(device, &kernel, &[src_t, dst_t.clone()])?;
+        let h_flat = out[0].as_f32()?;
+        let cs = out[1].as_f32()?;
+        let cd = out[2].as_f32()?;
+        let err = out[3].scalar_value()?;
+        let h = [
+            [h_flat[0], h_flat[1], h_flat[2]],
+            [h_flat[3], h_flat[4], h_flat[5]],
+            [h_flat[6], h_flat[7], h_flat[8]],
+        ];
+        let r = kabsch_rotation(&h);
+        let t = v_sub([cd[0], cd[1], cd[2]], m_apply(&r, [cs[0], cs[1], cs[2]]));
+        let step = Se3::new(r, t);
+        cur = step.apply_cloud(&cur);
+        total = step.compose(&total);
+        iterations = it + 1;
+        let improved = final_err - err;
+        final_err = err;
+        if err < 1e-4 || improved.abs() < 1e-6 {
+            break;
+        }
+    }
+    Ok(IcpResult { transform: total, final_err, iterations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::{register_default_kernels, KernelRegistry};
+    use crate::metrics::MetricsRegistry;
+    use crate::pointcloud::rot_z;
+    use crate::runtime::shared_runtime;
+
+    fn have_artifacts() -> bool {
+        crate::artifacts_dir().join("manifest.json").is_file()
+    }
+
+    fn dispatcher() -> Dispatcher {
+        let reg = KernelRegistry::new();
+        if have_artifacts() {
+            register_default_kernels(&reg, &shared_runtime().unwrap());
+        }
+        Dispatcher::new(reg, MetricsRegistry::new())
+    }
+
+    fn structured_cloud(n: usize, seed: u64) -> Vec<f32> {
+        // Ring + verticals: enough structure for unambiguous alignment.
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(n * 3);
+        for i in 0..n {
+            let theta = (i as f64 / n as f64) * std::f64::consts::TAU;
+            let r = 8.0 + 2.0 * (4.0 * theta).sin();
+            out.push((r * theta.cos()) as f32 + rng.normal_f32(0.0, 0.01));
+            out.push((r * theta.sin()) as f32 + rng.normal_f32(0.0, 0.01));
+            out.push(((i % 13) as f32) * 0.15);
+        }
+        out
+    }
+
+    #[test]
+    fn resample_sizes() {
+        let c = structured_cloud(100, 1);
+        assert_eq!(resample(&c, 64, 0).len(), 64 * 3);
+        assert_eq!(resample(&c, 256, 0).len(), 256 * 3);
+        assert_eq!(resample(&[], 16, 0), vec![0.0; 48]);
+    }
+
+    #[test]
+    fn icp_recovers_small_transform_cpu() {
+        // CPU path works without artifacts.
+        let d = dispatcher();
+        if !have_artifacts() {
+            return; // registry empty without the manifest
+        }
+        let src = structured_cloud(1024, 2);
+        let true_tf = Se3::new(rot_z(0.06), [0.3, -0.2, 0.05]);
+        let dst = true_tf.apply_cloud(&src);
+        let result =
+            icp_align(&d, DeviceKind::Cpu, &src, &dst, 1024, 12).unwrap();
+        assert!(result.final_err < 0.05, "err {}", result.final_err);
+        // Recovered transform maps src ≈ dst.
+        let mapped = result.transform.apply(
+            [src[0], src[1], src[2]],
+        );
+        let want = true_tf.apply([src[0], src[1], src[2]]);
+        for k in 0..3 {
+            assert!((mapped[k] - want[k]).abs() < 0.15, "{mapped:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn icp_gpu_matches_cpu() {
+        if !have_artifacts() {
+            return;
+        }
+        let d = dispatcher();
+        let src = structured_cloud(1024, 3);
+        let true_tf = Se3::new(rot_z(-0.04), [0.2, 0.1, 0.0]);
+        let dst = true_tf.apply_cloud(&src);
+        let gpu = icp_align(&d, DeviceKind::Gpu, &src, &dst, 1024, 10).unwrap();
+        let cpu = icp_align(&d, DeviceKind::Cpu, &src, &dst, 1024, 10).unwrap();
+        assert!((gpu.final_err - cpu.final_err).abs() < 1e-3);
+        for i in 0..3 {
+            assert!((gpu.transform.t[i] - cpu.transform.t[i]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn icp_identity_converges_immediately() {
+        if !have_artifacts() {
+            return;
+        }
+        let d = dispatcher();
+        let src = structured_cloud(1024, 4);
+        let r = icp_align(&d, DeviceKind::Gpu, &src, &src, 1024, 8).unwrap();
+        assert!(r.final_err < 1e-3);
+        assert!(r.iterations <= 2);
+    }
+
+    #[test]
+    fn icp_rejects_bad_size() {
+        let d = dispatcher();
+        assert!(icp_align(&d, DeviceKind::Cpu, &[], &[], 999, 1).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! HD map generation service (paper section 5): synthetic world/drive
+//! generation, SLAM pose recovery, accelerated ICP alignment, the 5 cm
+//! grid map, semantic layers, and the fused-vs-staged pipeline.
+
+pub mod gridmap;
+pub mod icp;
+pub mod pipeline;
+pub mod semantic;
+pub mod slam;
+pub mod trace;
+
+pub use gridmap::{Cell, GridMap};
+pub use icp::{icp_align, resample, IcpResult};
+pub use pipeline::{run_fused, run_staged, MapgenReport};
+pub use semantic::{derive_lanes, extract_signs, HdMap, LaneSample, SignLabel};
+pub use slam::{dead_reckon, propagate, slam_trajectory, SlamConfig, SlamResult};
+pub use trace::{gen_drive, gen_world, gen_world_with_density, DriveLog, World};

@@ -1,0 +1,180 @@
+//! The HD-map production pipeline (paper section 5.2, Figure 10):
+//! raw log reading → SLAM (pose recovery) → point-cloud assembly with
+//! ICP alignment → 2-D reflectance grid → semantic labelling.
+//!
+//! Two execution modes reproduce the paper's 5X claim: **fused** links
+//! all stages in one job with intermediates in memory; **staged** runs
+//! one job per stage with every intermediate materialised through the
+//! DFS device ("we do not have to store the intermediate data in hard
+//! disk" — the staged mode is exactly that counterfactual).
+
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::gridmap::GridMap;
+use super::semantic::{derive_lanes, extract_signs, HdMap};
+use super::slam::{slam_trajectory, SlamConfig};
+use super::trace::{DriveLog, LANE_HALF_WIDTH};
+use crate::hetero::Dispatcher;
+use crate::storage::DfsStore;
+
+/// Pipeline outcome + quality metrics.
+pub struct MapgenReport {
+    pub mode: &'static str,
+    pub elapsed: Duration,
+    pub slam_err_m: f32,
+    pub occupied_cells: usize,
+    pub signs: usize,
+    pub lanes: usize,
+    pub map: HdMap,
+}
+
+fn assemble_cloud(poses: &[crate::pointcloud::Se3], log: &DriveLog) -> Vec<f32> {
+    let mut cloud = Vec::new();
+    for (pose, scan) in poses.iter().zip(log.scans.iter()) {
+        cloud.extend(pose.apply_cloud(scan));
+    }
+    cloud
+}
+
+/// Fused pipeline: one pass, intermediates stay in memory.
+pub fn run_fused(
+    dispatcher: &Dispatcher,
+    log: &DriveLog,
+    config: &SlamConfig,
+    grid_res_m: f32,
+) -> Result<MapgenReport> {
+    let start = Instant::now();
+    // Stage 1+2: SLAM pose recovery (ICP-refined).
+    let slam = slam_trajectory(dispatcher, log, config)?;
+    // Stage 3: point-cloud assembly.
+    let cloud = assemble_cloud(&slam.poses, log);
+    // Stage 4: grid map.
+    let mut grid = GridMap::covering(&cloud, grid_res_m);
+    grid.add_points(&cloud);
+    // Stage 5: semantics.
+    let lanes = derive_lanes(&slam.poses, LANE_HALF_WIDTH);
+    let signs = extract_signs(&cloud);
+    let map = HdMap { grid, lanes, signs };
+    Ok(MapgenReport {
+        mode: "fused",
+        elapsed: start.elapsed(),
+        slam_err_m: slam.mean_err_m,
+        occupied_cells: map.grid.occupied_cells(),
+        signs: map.signs.len(),
+        lanes: map.lanes.len(),
+        map,
+    })
+}
+
+/// Staged pipeline: identical stages, but every boundary round-trips the
+/// DFS device (separate jobs, as pre-unification infrastructure would).
+pub fn run_staged(
+    dispatcher: &Dispatcher,
+    dfs: &Arc<DfsStore>,
+    log: &DriveLog,
+    config: &SlamConfig,
+    grid_res_m: f32,
+) -> Result<MapgenReport> {
+    let start = Instant::now();
+    let scan_bytes: u64 = log.scans.iter().map(|s| (s.len() * 4) as u64).sum();
+    // Stage 0: raw logs land on DFS; stage 1 reads them back.
+    dfs.write("mapgen/raw-log", &vec![0u8; (scan_bytes / 64).max(1) as usize])?;
+    dfs.device().charge(scan_bytes);
+    // Stage 1+2: SLAM; poses written out.
+    let slam = slam_trajectory(dispatcher, log, config)?;
+    let pose_bytes = (slam.poses.len() * 48) as u64;
+    dfs.device().charge(pose_bytes);
+    dfs.write("mapgen/poses", &vec![0u8; pose_bytes as usize])?;
+    // Stage 3: assembly job rereads logs + poses, writes the cloud.
+    dfs.device().charge(scan_bytes + pose_bytes);
+    let cloud = assemble_cloud(&slam.poses, log);
+    let cloud_bytes = (cloud.len() * 4) as u64;
+    dfs.device().charge(cloud_bytes);
+    dfs.write("mapgen/cloud-manifest", b"cloud")?;
+    // Stage 4: grid job rereads the cloud, writes the grid.
+    dfs.device().charge(cloud_bytes);
+    let mut grid = GridMap::covering(&cloud, grid_res_m);
+    grid.add_points(&cloud);
+    let grid_bytes = grid.size_bytes() as u64;
+    dfs.device().charge(grid_bytes);
+    dfs.write("mapgen/grid-manifest", b"grid")?;
+    // Stage 5: labelling job rereads grid + cloud + poses.
+    dfs.device().charge(cloud_bytes + grid_bytes + pose_bytes);
+    let lanes = derive_lanes(&slam.poses, LANE_HALF_WIDTH);
+    let signs = extract_signs(&cloud);
+    let map = HdMap { grid, lanes, signs };
+    Ok(MapgenReport {
+        mode: "staged",
+        elapsed: start.elapsed(),
+        slam_err_m: slam.mean_err_m,
+        occupied_cells: map.grid.occupied_cells(),
+        signs: map.signs.len(),
+        lanes: map.lanes.len(),
+        map,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TierConfig;
+    use crate::hetero::{register_default_kernels, KernelRegistry};
+    use crate::metrics::MetricsRegistry;
+    use crate::resource::DeviceKind;
+    use crate::runtime::shared_runtime;
+    use crate::services::mapgen::trace::{gen_drive, gen_world};
+
+    fn have_artifacts() -> bool {
+        crate::artifacts_dir().join("manifest.json").is_file()
+    }
+
+    #[test]
+    fn fused_pipeline_produces_usable_map() {
+        if !have_artifacts() {
+            return;
+        }
+        let reg = KernelRegistry::new();
+        register_default_kernels(&reg, &shared_runtime().unwrap());
+        let d = Dispatcher::new(reg, MetricsRegistry::new());
+        let world = gen_world(20);
+        let log = gen_drive(&world, 100, 20);
+        let cfg = SlamConfig { device: DeviceKind::Gpu, ..Default::default() };
+        let report = run_fused(&d, &log, &cfg, 0.1).unwrap();
+        // GPS sigma is 0.4 m with outage sectors; ~1-1.5 m mean error is
+        // the expected envelope (dead reckoning alone drifts to 10+ m).
+        assert!(report.slam_err_m < 2.0, "slam err {}", report.slam_err_m);
+        assert!(report.occupied_cells > 1000, "{} cells", report.occupied_cells);
+        assert!(report.signs >= 1, "no signs labelled");
+        assert_eq!(report.lanes, 100);
+        // The produced map localises the vehicle.
+        let p = log.poses_gt[50];
+        let (refined, score) = report.map.localize(&log.scans[50], &p);
+        assert!(score > 0.15, "match score {score}");
+        let _ = refined;
+    }
+
+    #[test]
+    fn staged_hits_dfs_fused_does_not() {
+        if !have_artifacts() {
+            return;
+        }
+        let reg = KernelRegistry::new();
+        register_default_kernels(&reg, &shared_runtime().unwrap());
+        let d = Dispatcher::new(reg, MetricsRegistry::new());
+        let world = gen_world(21);
+        let log = gen_drive(&world, 60, 21);
+        let cfg = SlamConfig { device: DeviceKind::Gpu, icp_every: 20, ..Default::default() };
+        let tier = TierConfig { capacity_bytes: u64::MAX, bandwidth_bps: 1e9, latency_us: 0 };
+        let dfs = DfsStore::new(tier, false, MetricsRegistry::new()).unwrap();
+        let fused = run_fused(&d, &log, &cfg, 0.1).unwrap();
+        let before = dfs.device().bytes_total();
+        let staged = run_staged(&d, &dfs, &log, &cfg, 0.1).unwrap();
+        assert!(dfs.device().bytes_total() > before + 1_000_000, "staged must move MBs through DFS");
+        // Same outputs either way.
+        assert_eq!(fused.occupied_cells, staged.occupied_cells);
+        assert_eq!(fused.signs, staged.signs);
+        assert!((fused.slam_err_m - staged.slam_err_m).abs() < 1e-5);
+    }
+}

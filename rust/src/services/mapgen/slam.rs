@@ -1,0 +1,241 @@
+//! SLAM stage of HD map generation (paper section 5.2, Figure 12).
+//!
+//! "First, the wheel odometry data and the IMU data can be used to
+//! perform propagation ... Then the GPS data and the LiDAR data can be
+//! used to correct the propagation results in order to minimize errors."
+//!
+//! Propagation: integrate odometry deltas in SE(2)-on-SE(3). GPS
+//! correction: covariance-weighted blend of the predicted position
+//! toward the fix. LiDAR correction: scan-to-map ICP through the
+//! accelerated kernel (see [`super::icp`]).
+
+use anyhow::Result;
+
+use super::icp::{icp_align, IcpResult};
+use super::trace::DriveLog;
+use crate::hetero::Dispatcher;
+use crate::pointcloud::{rot_z, Se3};
+use crate::resource::DeviceKind;
+use crate::services::simulation::sensors::{GpsFix, OdomDelta};
+
+/// Integrate one odometry delta: rotate, then move along heading.
+pub fn propagate(pose: &Se3, odom: &OdomDelta) -> Se3 {
+    let r_new = crate::pointcloud::m_mul(&rot_z(odom.d_theta_rad), &pose.r);
+    let fwd = crate::pointcloud::m_apply(&r_new, [odom.d_forward_m, 0.0, 0.0]);
+    Se3::new(r_new, crate::pointcloud::v_add(pose.t, fwd))
+}
+
+/// Blend position toward a GPS fix with gain proportional to trust.
+pub fn correct_gps(pose: &Se3, fix: &GpsFix, process_sigma_m: f32) -> Se3 {
+    // Scalar Kalman-style gain on x/y.
+    let k = process_sigma_m * process_sigma_m
+        / (process_sigma_m * process_sigma_m + fix.sigma_m * fix.sigma_m);
+    let mut t = pose.t;
+    t[0] += k * (fix.x_m - t[0]);
+    t[1] += k * (fix.y_m - t[1]);
+    Se3::new(pose.r, t)
+}
+
+/// Pure dead reckoning over the whole log.
+pub fn dead_reckon(start: Se3, odoms: &[OdomDelta]) -> Vec<Se3> {
+    let mut out = Vec::with_capacity(odoms.len());
+    let mut pose = start;
+    for o in odoms {
+        out.push(pose);
+        pose = propagate(&pose, o);
+    }
+    out
+}
+
+/// SLAM configuration.
+#[derive(Debug, Clone)]
+pub struct SlamConfig {
+    /// Growth of position uncertainty per step (drives the GPS gain).
+    pub process_sigma_m: f32,
+    /// Run scan-to-map ICP every `icp_every` steps (0 = never).
+    pub icp_every: usize,
+    /// Which device class runs the ICP kernel.
+    pub device: DeviceKind,
+    pub icp_size: usize,
+    pub icp_iters: usize,
+}
+
+impl Default for SlamConfig {
+    fn default() -> Self {
+        Self {
+            process_sigma_m: 0.3,
+            icp_every: 10,
+            device: DeviceKind::Gpu,
+            icp_size: 1024,
+            icp_iters: 5,
+        }
+    }
+}
+
+/// Output trajectory + quality metrics.
+#[derive(Debug, Clone)]
+pub struct SlamResult {
+    pub poses: Vec<Se3>,
+    /// Mean translation error vs ground truth (only computable on
+    /// synthetic logs).
+    pub mean_err_m: f32,
+    pub icp_runs: usize,
+}
+
+/// Full SLAM pass: propagate → GPS-correct → periodic scan-to-keyframe
+/// ICP refinement.
+pub fn slam_trajectory(
+    dispatcher: &Dispatcher,
+    log: &DriveLog,
+    config: &SlamConfig,
+) -> Result<SlamResult> {
+    let mut poses = Vec::with_capacity(log.odom.len());
+    let mut pose = log.poses_gt.first().copied().unwrap_or_else(Se3::identity);
+    let mut icp_runs = 0usize;
+    let mut last_key: Option<(Se3, &Vec<f32>)> = None;
+    for (i, odom) in log.odom.iter().enumerate() {
+        if i > 0 {
+            pose = propagate(&pose, odom);
+        }
+        if let Some(Some(fix)) = log.gps.get(i) {
+            pose = correct_gps(&pose, fix, config.process_sigma_m);
+        }
+        // Scan-to-keyframe ICP: align this scan against the previous
+        // keyframe scan placed in the world by its refined pose.
+        if config.icp_every > 0 && i % config.icp_every == 0 {
+            if let (Some((key_pose, key_scan)), Some(scan)) = (last_key.as_ref(), log.scans.get(i))
+            {
+                let world_key = key_pose.apply_cloud(key_scan);
+                let world_cur = pose.apply_cloud(scan);
+                let IcpResult { transform, .. } = icp_align(
+                    dispatcher,
+                    config.device,
+                    &world_cur,
+                    &world_key,
+                    config.icp_size,
+                    config.icp_iters,
+                )?;
+                // Gate: a sane scan-to-keyframe correction is small. Large
+                // transforms mean ICP slid along the (near-symmetric) wall
+                // geometry — discard those rather than inject them.
+                let t_norm = crate::pointcloud::v_norm(transform.t);
+                let yaw = transform.r[1][0].atan2(transform.r[0][0]).abs();
+                if t_norm < 1.0 && yaw < 0.05 {
+                    // Damped application: trust ICP for half the correction
+                    // (translation only; yaw is better constrained by odom).
+                    let half = Se3::new(
+                        crate::pointcloud::MAT3_ID,
+                        crate::pointcloud::v_scale(transform.t, 0.5),
+                    );
+                    pose = half.compose(&pose);
+                }
+                icp_runs += 1;
+            }
+            if let Some(scan) = log.scans.get(i) {
+                last_key = Some((pose, scan));
+            }
+        }
+        poses.push(pose);
+    }
+    let mean_err_m = mean_err(&poses, &log.poses_gt);
+    Ok(SlamResult { poses, mean_err_m, icp_runs })
+}
+
+/// Mean translation error between two trajectories.
+pub fn mean_err(got: &[Se3], want: &[Se3]) -> f32 {
+    if got.is_empty() || want.is_empty() {
+        return f32::NAN;
+    }
+    let n = got.len().min(want.len());
+    let mut sum = 0f32;
+    for i in 0..n {
+        let d = crate::pointcloud::v_sub(got[i].t, want[i].t);
+        sum += crate::pointcloud::v_norm(d);
+    }
+    sum / n as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::{register_default_kernels, KernelRegistry};
+    use crate::metrics::MetricsRegistry;
+    use crate::runtime::shared_runtime;
+    use crate::services::mapgen::trace::{gen_drive, gen_world};
+
+    fn have_artifacts() -> bool {
+        crate::artifacts_dir().join("manifest.json").is_file()
+    }
+
+    fn dispatcher() -> Dispatcher {
+        let reg = KernelRegistry::new();
+        if have_artifacts() {
+            register_default_kernels(&reg, &shared_runtime().unwrap());
+        }
+        Dispatcher::new(reg, MetricsRegistry::new())
+    }
+
+    #[test]
+    fn propagate_moves_forward() {
+        let p = Se3::identity();
+        let o = OdomDelta { ts_ns: 0, d_forward_m: 2.0, d_theta_rad: 0.0 };
+        let q = propagate(&p, &o);
+        assert!((q.t[0] - 2.0).abs() < 1e-6);
+        assert!((q.t[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gps_correction_pulls_toward_fix() {
+        let p = Se3::new(crate::pointcloud::MAT3_ID, [10.0, 0.0, 0.0]);
+        let fix = GpsFix { ts_ns: 0, x_m: 0.0, y_m: 0.0, sigma_m: 0.1 };
+        let q = correct_gps(&p, &fix, 1.0);
+        assert!(q.t[0] < 1.0, "barely corrected: {}", q.t[0]);
+        // Low-trust fix barely moves the pose.
+        let fix2 = GpsFix { ts_ns: 0, x_m: 0.0, y_m: 0.0, sigma_m: 100.0 };
+        let q2 = correct_gps(&p, &fix2, 1.0);
+        assert!(q2.t[0] > 9.9);
+    }
+
+    #[test]
+    fn dead_reckoning_drifts_and_gps_fixes_it() {
+        let world = gen_world(7);
+        let log = gen_drive(&world, 150, 7);
+        let dr = dead_reckon(log.poses_gt[0], &log.odom);
+        let dr_err = mean_err(&dr, &log.poses_gt);
+        assert!(dr_err > 0.3, "odometry should drift: {dr_err}");
+        // GPS-corrected (no ICP) must beat dead reckoning.
+        let d = dispatcher();
+        let cfg = SlamConfig { icp_every: 0, ..Default::default() };
+        let slam = slam_trajectory(&d, &log, &cfg).unwrap();
+        assert!(
+            slam.mean_err_m < dr_err * 0.7,
+            "gps {} vs dr {dr_err}",
+            slam.mean_err_m
+        );
+        assert_eq!(slam.icp_runs, 0);
+    }
+
+    #[test]
+    fn icp_refinement_does_not_hurt() {
+        if !have_artifacts() {
+            return;
+        }
+        let world = gen_world(8);
+        let log = gen_drive(&world, 120, 8);
+        let d = dispatcher();
+        let gps_only = slam_trajectory(
+            &d,
+            &log,
+            &SlamConfig { icp_every: 0, ..Default::default() },
+        )
+        .unwrap();
+        let with_icp = slam_trajectory(&d, &log, &SlamConfig::default()).unwrap();
+        assert!(with_icp.icp_runs > 5);
+        assert!(
+            with_icp.mean_err_m < gps_only.mean_err_m * 1.25,
+            "icp {} vs gps {}",
+            with_icp.mean_err_m,
+            gps_only.mean_err_m
+        );
+    }
+}

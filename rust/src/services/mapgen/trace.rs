@@ -1,0 +1,195 @@
+//! Synthetic world + drive-log generator (the proprietary-fleet-data
+//! substitution for HD map generation, paper section 5).
+//!
+//! A ring road through a world of wall segments and sign poles; the
+//! vehicle drives the ring while logging noisy odometry, sparse noisy
+//! GPS, and LiDAR scans of the nearby landmarks (expressed in the
+//! vehicle frame) — the exact input mix of Figure 12 (wheel odometry,
+//! IMU, GPS, LiDAR).
+
+use crate::pointcloud::{rot_z, Se3};
+use crate::services::simulation::sensors::{GpsFix, OdomDelta};
+use crate::util::Rng;
+
+/// Static world: packed (N,3) landmark points.
+#[derive(Debug, Clone)]
+pub struct World {
+    pub landmarks: Vec<f32>,
+    /// Sign-pole positions (subset of landmarks, one entry per pole).
+    pub poles: Vec<[f32; 3]>,
+}
+
+pub const ROAD_RADIUS: f32 = 30.0;
+pub const LANE_HALF_WIDTH: f32 = 1.75;
+
+/// Build the ring-road world: wall points on two concentric circles plus
+/// a handful of sign poles just off the outer edge.
+pub fn gen_world(seed: u64) -> World {
+    gen_world_with_density(seed, 1)
+}
+
+/// `density` multiplies the wall-point count: production LiDAR sweeps
+/// carry 10-100x more returns than the functional tests need, and the
+/// pipeline benches (E10) use that fidelity to reproduce the paper's
+/// data-volume-dominated stage boundaries.
+pub fn gen_world_with_density(seed: u64, density: usize) -> World {
+    let mut rng = Rng::new(seed);
+    let mut landmarks = Vec::new();
+    let mut poles = Vec::new();
+    // Walls: points along inner/outer circles with vertical spread.
+    for ring in [ROAD_RADIUS - 6.0, ROAD_RADIUS + 6.0] {
+        let n = 1400 * density.max(1);
+        for i in 0..n {
+            let theta = (i as f64 / n as f64) * std::f64::consts::TAU;
+            let r = ring + rng.normal_f32(0.0, 0.08);
+            let x = r * (theta.cos() as f32);
+            let y = r * (theta.sin() as f32);
+            let z = rng.next_f32() * 2.0;
+            landmarks.extend_from_slice(&[x, y, z]);
+        }
+    }
+    // Sign poles: tall thin clusters.
+    for k in 0..8 {
+        let theta = k as f64 * std::f64::consts::TAU / 8.0 + 0.2;
+        let r = ROAD_RADIUS + 4.5;
+        let base = [r * theta.cos() as f32, r * theta.sin() as f32, 0.0];
+        poles.push([base[0], base[1], 2.5]);
+        for j in 0..12 {
+            landmarks.extend_from_slice(&[
+                base[0] + rng.normal_f32(0.0, 0.02),
+                base[1] + rng.normal_f32(0.0, 0.02),
+                j as f32 * 0.25,
+            ]);
+        }
+    }
+    World { landmarks, poles }
+}
+
+/// Everything the vehicle logged during one drive.
+#[derive(Debug, Clone)]
+pub struct DriveLog {
+    /// Ground-truth poses (held out for evaluation only).
+    pub poses_gt: Vec<Se3>,
+    pub odom: Vec<OdomDelta>,
+    /// One entry per step; `None` during GPS outages.
+    pub gps: Vec<Option<GpsFix>>,
+    /// Vehicle-frame LiDAR scans, packed (N,3).
+    pub scans: Vec<Vec<f32>>,
+}
+
+/// Drive `steps` steps around the ring, logging sensors.
+pub fn gen_drive(world: &World, steps: usize, seed: u64) -> DriveLog {
+    let mut rng = Rng::new(seed ^ 0xD21E);
+    let speed = 2.0f32; // metres per step (arc length)
+    let dtheta_gt = speed / ROAD_RADIUS;
+    let mut poses_gt = Vec::with_capacity(steps);
+    let mut odom = Vec::with_capacity(steps);
+    let mut gps = Vec::with_capacity(steps);
+    let mut scans = Vec::with_capacity(steps);
+    // Exact parametric ground truth: angle k*dθ on the ring, heading
+    // tangential. (Integrating chords would spiral outward.)
+    let gt_pose = |k: usize| -> Se3 {
+        let th = k as f32 * dtheta_gt;
+        Se3::new(
+            rot_z(th + std::f32::consts::FRAC_PI_2),
+            [ROAD_RADIUS * th.cos(), ROAD_RADIUS * th.sin(), 0.0],
+        )
+    };
+    // Chord length between consecutive ground-truth poses (what wheel
+    // odometry actually measures).
+    let chord = 2.0 * ROAD_RADIUS * (dtheta_gt / 2.0).sin();
+    for step in 0..steps {
+        let pose = gt_pose(step);
+        poses_gt.push(pose);
+        // Odometry: forward + yaw with noise and a small bias (drift!).
+        odom.push(OdomDelta {
+            ts_ns: step as u64,
+            d_forward_m: chord * (1.0 + rng.normal_f32(0.0, 0.01)) + 0.005,
+            d_theta_rad: dtheta_gt * (1.0 + rng.normal_f32(0.0, 0.02)) + 0.0004,
+        });
+        // GPS: every 5th step, unless in the outage sector.
+        let in_outage = (step / 25) % 4 == 3;
+        gps.push(if step % 5 == 0 && !in_outage {
+            Some(GpsFix {
+                ts_ns: step as u64,
+                x_m: pose.t[0] + rng.normal_f32(0.0, 0.4),
+                y_m: pose.t[1] + rng.normal_f32(0.0, 0.4),
+                sigma_m: 0.4,
+            })
+        } else {
+            None
+        });
+        // LiDAR: world landmarks within range, in the vehicle frame.
+        let inv = pose.inverse();
+        let mut scan = Vec::new();
+        for p in world.landmarks.chunks_exact(3) {
+            let dx = p[0] - pose.t[0];
+            let dy = p[1] - pose.t[1];
+            if dx * dx + dy * dy < 20.0 * 20.0 {
+                let local = inv.apply([p[0], p[1], p[2]]);
+                scan.push(local[0] + rng.normal_f32(0.0, 0.02));
+                scan.push(local[1] + rng.normal_f32(0.0, 0.02));
+                scan.push(local[2] + rng.normal_f32(0.0, 0.02));
+            }
+        }
+        scans.push(scan);
+    }
+    let _ = speed;
+    DriveLog { poses_gt, odom, gps, scans }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_is_deterministic_and_sized() {
+        let w1 = gen_world(3);
+        let w2 = gen_world(3);
+        assert_eq!(w1.landmarks, w2.landmarks);
+        assert_eq!(w1.poles.len(), 8);
+        assert!(w1.landmarks.len() / 3 > 2500);
+    }
+
+    #[test]
+    fn drive_stays_on_ring() {
+        let w = gen_world(4);
+        let log = gen_drive(&w, 60, 4);
+        assert_eq!(log.poses_gt.len(), 60);
+        for pose in &log.poses_gt {
+            let r = (pose.t[0] * pose.t[0] + pose.t[1] * pose.t[1]).sqrt();
+            assert!((r - ROAD_RADIUS).abs() < 1.0, "r={r}");
+        }
+    }
+
+    #[test]
+    fn scans_are_nonempty_and_local() {
+        let w = gen_world(5);
+        let log = gen_drive(&w, 20, 5);
+        for scan in &log.scans {
+            assert!(scan.len() / 3 > 50, "sparse scan: {}", scan.len() / 3);
+            // Local frame: everything within sensor range.
+            for p in scan.chunks_exact(3) {
+                let r = (p[0] * p[0] + p[1] * p[1]).sqrt();
+                assert!(r < 21.0, "point at {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn gps_has_fixes_and_outages() {
+        let w = gen_world(6);
+        let log = gen_drive(&w, 200, 6);
+        let fixes = log.gps.iter().flatten().count();
+        assert!(fixes > 10, "{fixes} fixes");
+        assert!(fixes < 40, "{fixes} — outages missing");
+        // Fix accuracy plausible.
+        for (i, g) in log.gps.iter().enumerate() {
+            if let Some(fix) = g {
+                let gt = log.poses_gt[i].t;
+                let err = ((fix.x_m - gt[0]).powi(2) + (fix.y_m - gt[1]).powi(2)).sqrt();
+                assert!(err < 2.5, "gps err {err}");
+            }
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! The cloud services running on the unified infrastructure (paper
+//! sections 3-5): distributed simulation replay, offline model
+//! training, HD map generation — plus the SQL workload used for the
+//! engine comparison of section 2.1.
+
+pub mod mapgen;
+pub mod simulation;
+pub mod sql;
+pub mod training;

@@ -1,0 +1,15 @@
+//! Distributed simulation service (paper section 3): bag recording,
+//! synthetic sensors, and the distributed replay of an algorithm under
+//! test — in-process via the hetero dispatcher or over real Unix pipes
+//! via BinPipeRDD.
+
+pub mod replay;
+pub mod rosbag;
+pub mod sensors;
+
+pub use replay::{
+    count_obstacles_from_features, detect_batch, pipe_worker_detect, record_drive, replay,
+    replay_piped, ReplayReport, CAMERA_TOPIC, LIDAR_TOPIC,
+};
+pub use rosbag::{by_topic, decode_bag, encode_bag, read_bag, BagWriter, Message};
+pub use sensors::{gen_camera_frame, gen_lidar_scan, CameraFrame, GpsFix, LidarScan, OdomDelta};

@@ -1,0 +1,171 @@
+//! Bag files: timestamped, topic-tagged binary message logs (the ROS
+//! bag analog the replay service consumes).
+//!
+//! Format (little-endian):
+//! `"ADBG" | u32 msg_count | { u32 topic_len | topic | u64 ts_ns |
+//!  u32 payload_len | payload }*`
+//!
+//! Bags are real files; the replay service shards a directory of bag
+//! chunks across the compute engine.
+
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub const BAG_MAGIC: &[u8; 4] = b"ADBG";
+
+/// One recorded message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub topic: String,
+    pub ts_ns: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Serialise messages into one bag blob.
+pub fn encode_bag(messages: &[Message]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(BAG_MAGIC);
+    out.extend_from_slice(&(messages.len() as u32).to_le_bytes());
+    for m in messages {
+        out.extend_from_slice(&(m.topic.len() as u32).to_le_bytes());
+        out.extend_from_slice(m.topic.as_bytes());
+        out.extend_from_slice(&m.ts_ns.to_le_bytes());
+        out.extend_from_slice(&(m.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&m.payload);
+    }
+    out
+}
+
+/// Parse a bag blob.
+pub fn decode_bag(bytes: &[u8]) -> Result<Vec<Message>> {
+    if bytes.len() < 8 || &bytes[..4] != BAG_MAGIC {
+        bail!("not a bag: {} bytes", bytes.len());
+    }
+    let count = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let mut off = 8usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        if *off + n > bytes.len() {
+            bail!("bag truncated at byte {off}");
+        }
+        let s = &bytes[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let tl = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let topic = String::from_utf8(take(&mut off, tl)?.to_vec()).context("bad topic utf8")?;
+        let ts_ns = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+        let pl = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let payload = take(&mut off, pl)?.to_vec();
+        out.push(Message { topic, ts_ns, payload });
+    }
+    if off != bytes.len() {
+        bail!("bag has {} trailing bytes", bytes.len() - off);
+    }
+    Ok(out)
+}
+
+/// Incremental bag writer over a real file.
+pub struct BagWriter {
+    path: PathBuf,
+    messages: Vec<Message>,
+}
+
+impl BagWriter {
+    pub fn create(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into(), messages: Vec::new() }
+    }
+
+    pub fn write(&mut self, msg: Message) {
+        self.messages.push(msg);
+    }
+
+    /// Flush all messages to disk.
+    pub fn finish(self) -> Result<PathBuf> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(&self.path)
+            .with_context(|| format!("creating bag {:?}", self.path))?;
+        f.write_all(&encode_bag(&self.messages))?;
+        Ok(self.path)
+    }
+}
+
+/// Read a bag file.
+pub fn read_bag(path: impl AsRef<Path>) -> Result<Vec<Message>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading bag {:?}", path.as_ref()))?;
+    decode_bag(&bytes)
+}
+
+/// Filter a decoded bag by topic.
+pub fn by_topic<'a>(messages: &'a [Message], topic: &str) -> Vec<&'a Message> {
+    messages.iter().filter(|m| m.topic == topic).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Message> {
+        vec![
+            Message { topic: "/camera/front".into(), ts_ns: 1, payload: vec![1, 2, 3] },
+            Message { topic: "/lidar/top".into(), ts_ns: 2, payload: vec![0u8; 1000] },
+            Message { topic: "/camera/front".into(), ts_ns: 3, payload: vec![] },
+        ]
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let msgs = sample();
+        assert_eq!(decode_bag(&encode_bag(&msgs)).unwrap(), msgs);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("adbag-{}", std::process::id()));
+        let mut w = BagWriter::create(dir.join("t.bag"));
+        for m in sample() {
+            w.write(m);
+        }
+        let path = w.finish().unwrap();
+        let back = read_bag(&path).unwrap();
+        assert_eq!(back, sample());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn topic_filter() {
+        let msgs = sample();
+        assert_eq!(by_topic(&msgs, "/camera/front").len(), 2);
+        assert_eq!(by_topic(&msgs, "/lidar/top").len(), 1);
+        assert_eq!(by_topic(&msgs, "/nope").len(), 0);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let msgs = sample();
+        let mut bytes = encode_bag(&msgs);
+        bytes[0] = b'X';
+        assert!(decode_bag(&bytes).is_err());
+        let mut bytes2 = encode_bag(&msgs);
+        bytes2.truncate(bytes2.len() - 2);
+        assert!(decode_bag(&bytes2).is_err());
+        let mut bytes3 = encode_bag(&msgs);
+        bytes3.push(7);
+        assert!(decode_bag(&bytes3).is_err());
+    }
+
+    #[test]
+    fn binary_payloads_any_value() {
+        let msgs = vec![Message {
+            topic: "t".into(),
+            ts_ns: 0,
+            payload: (0..=255u8).collect(),
+        }];
+        assert_eq!(decode_bag(&encode_bag(&msgs)).unwrap(), msgs);
+    }
+}

@@ -1,0 +1,185 @@
+//! Synthetic sensor suite (the proprietary-road-data substitution).
+//!
+//! The paper's replay simulations consume "raw or filtered readings from
+//! various sensors" from real road tests; we generate deterministic
+//! synthetic equivalents that preserve the record structure and rates:
+//! camera frames (64x64 grayscale with planted obstacle edges + noise),
+//! LiDAR sweeps, IMU/odometry deltas and (sparse, noisy) GPS fixes.
+//! Camera frames carry their ground-truth obstacle count so replayed
+//! detection algorithms can be scored (the "qualification test").
+
+use crate::util::Rng;
+
+pub const FRAME_W: usize = 64;
+pub const FRAME_H: usize = 64;
+
+/// One camera frame with planted ground truth.
+#[derive(Debug, Clone)]
+pub struct CameraFrame {
+    pub ts_ns: u64,
+    /// Row-major grayscale in [0,1].
+    pub pixels: Vec<f32>,
+    /// Number of planted obstacles (ground truth for scoring).
+    pub truth_obstacles: u32,
+}
+
+/// Serialise: ts | truth | pixels (LE f32). The binary record the
+/// BinPipeRDD pipeline moves around.
+impl CameraFrame {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.pixels.len() * 4);
+        out.extend_from_slice(&self.ts_ns.to_le_bytes());
+        out.extend_from_slice(&self.truth_obstacles.to_le_bytes());
+        out.extend_from_slice(&crate::util::f32s_to_bytes(&self.pixels));
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        if bytes.len() < 12 {
+            anyhow::bail!("camera frame record too short: {}", bytes.len());
+        }
+        let ts_ns = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+        let truth_obstacles = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        let pixels = crate::util::bytes_to_f32s(&bytes[12..]);
+        if pixels.len() != FRAME_W * FRAME_H {
+            anyhow::bail!("camera frame has {} pixels", pixels.len());
+        }
+        Ok(Self { ts_ns, pixels, truth_obstacles })
+    }
+}
+
+/// Generate a frame: flat-ish road texture plus `truth` bright
+/// rectangular "obstacles" with crisp edges, plus sensor noise.
+pub fn gen_camera_frame(ts_ns: u64, rng: &mut Rng) -> CameraFrame {
+    let truth = rng.below(4) as u32; // 0..=3 obstacles
+    let mut pixels = vec![0f32; FRAME_W * FRAME_H];
+    // Base road texture: slow horizontal ramp + mild noise.
+    for y in 0..FRAME_H {
+        for x in 0..FRAME_W {
+            pixels[y * FRAME_W + x] =
+                0.35 + 0.1 * (x as f32 / FRAME_W as f32) + rng.normal_f32(0.0, 0.015);
+        }
+    }
+    // Planted obstacles: bright boxes, at least 8x8 so the 8x8 feature
+    // cells see a strong gradient. One box per (shuffled) quadrant with a
+    // 4px margin, so distinct obstacles never merge into one blob.
+    let mut quadrants = [(0usize, 0usize), (32, 0), (0, 32), (32, 32)];
+    rng.shuffle(&mut quadrants);
+    for &(qx, qy) in quadrants.iter().take(truth as usize) {
+        let w = 8 + rng.below(5) as usize; // 8..=12
+        let h = 8 + rng.below(5) as usize;
+        let x0 = qx + 4 + rng.below((32 - w - 8) as u64 + 1) as usize;
+        let y0 = qy + 4 + rng.below((32 - h - 8) as u64 + 1) as usize;
+        let level = 0.85 + rng.normal_f32(0.0, 0.05);
+        for y in y0..y0 + h {
+            for x in x0..x0 + w {
+                pixels[y * FRAME_W + x] = level;
+            }
+        }
+    }
+    for p in pixels.iter_mut() {
+        *p = p.clamp(0.0, 1.0);
+    }
+    CameraFrame { ts_ns, pixels, truth_obstacles: truth }
+}
+
+/// One LiDAR sweep: packed (N,3) points.
+#[derive(Debug, Clone)]
+pub struct LidarScan {
+    pub ts_ns: u64,
+    pub points: Vec<f32>,
+}
+
+pub fn gen_lidar_scan(ts_ns: u64, n_points: usize, rng: &mut Rng) -> LidarScan {
+    // A ring of returns (walls) + ground plane clutter.
+    let mut points = Vec::with_capacity(n_points * 3);
+    for i in 0..n_points {
+        let theta = (i as f64 / n_points as f64) * std::f64::consts::TAU;
+        let r = 8.0 + 4.0 * (3.0 * theta).sin() + rng.normal() * 0.05;
+        points.push((r * theta.cos()) as f32);
+        points.push((r * theta.sin()) as f32);
+        points.push(rng.normal_f32(0.2, 0.3).max(0.0));
+    }
+    LidarScan { ts_ns, points }
+}
+
+/// IMU/odometry delta between consecutive poses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OdomDelta {
+    pub ts_ns: u64,
+    pub d_forward_m: f32,
+    pub d_theta_rad: f32,
+}
+
+/// GPS fix (sparse; `None` models outages).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpsFix {
+    pub ts_ns: u64,
+    pub x_m: f32,
+    pub y_m: f32,
+    pub sigma_m: f32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn camera_frame_roundtrips() {
+        let mut rng = Rng::new(1);
+        let f = gen_camera_frame(12345, &mut rng);
+        let back = CameraFrame::from_bytes(&f.to_bytes()).unwrap();
+        assert_eq!(back.ts_ns, 12345);
+        assert_eq!(back.truth_obstacles, f.truth_obstacles);
+        assert_eq!(back.pixels, f.pixels);
+    }
+
+    #[test]
+    fn frame_pixels_in_range() {
+        let mut rng = Rng::new(2);
+        for ts in 0..20 {
+            let f = gen_camera_frame(ts, &mut rng);
+            assert!(f.pixels.iter().all(|p| (0.0..=1.0).contains(p)));
+            assert!(f.truth_obstacles <= 3);
+        }
+    }
+
+    #[test]
+    fn obstacles_create_contrast() {
+        let mut rng = Rng::new(3);
+        // Find a frame with obstacles; its max-min contrast must be big.
+        loop {
+            let f = gen_camera_frame(0, &mut rng);
+            if f.truth_obstacles > 0 {
+                let max = f.pixels.iter().cloned().fold(0f32, f32::max);
+                let min = f.pixels.iter().cloned().fold(1f32, f32::min);
+                assert!(max - min > 0.3, "contrast {}", max - min);
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn lidar_scan_shape_and_determinism() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let s1 = gen_lidar_scan(0, 360, &mut a);
+        let s2 = gen_lidar_scan(0, 360, &mut b);
+        assert_eq!(s1.points, s2.points);
+        assert_eq!(s1.points.len(), 360 * 3);
+        // Points are within plausible range.
+        for p in s1.points.chunks_exact(3) {
+            let r = (p[0] * p[0] + p[1] * p[1]).sqrt();
+            assert!(r > 2.0 && r < 15.0, "r={r}");
+        }
+    }
+
+    #[test]
+    fn corrupt_frame_rejected() {
+        assert!(CameraFrame::from_bytes(&[1, 2, 3]).is_err());
+        let mut rng = Rng::new(4);
+        let mut bytes = gen_camera_frame(0, &mut rng).to_bytes();
+        bytes.truncate(bytes.len() - 4);
+        assert!(CameraFrame::from_bytes(&bytes).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Offline model training service (paper section 4): synthetic labelled
+//! corpus, storage-backed parameter server, synchronous data-parallel
+//! trainer over the accelerator queues, and the unified-vs-staged
+//! pipeline comparison.
+
+pub mod data;
+pub mod param_server;
+pub mod pipeline;
+pub mod trainer;
+
+pub use data::{gen_dataset, pack_batch, shard, Example};
+pub use param_server::{average_grads, MomentumSgd, ParamServer, ParamStore};
+pub use pipeline::{run_staged, run_unified, PipelineReport};
+pub use trainer::{DistTrainer, TrainReport, BATCH};

@@ -1,0 +1,95 @@
+//! HDFS-analog baseline store.
+//!
+//! Every read and write goes to the remote-disk device (network hop +
+//! disk bandwidth), with real file I/O underneath — the "before" side of
+//! the paper's 30X (section 2.2) and 5X (section 4.2) comparisons, and
+//! the inter-stage materialisation layer of the MapReduce baseline.
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use super::device::DeviceModel;
+use super::understore::UnderStore;
+use crate::config::TierConfig;
+use crate::metrics::MetricsRegistry;
+
+/// Disk-and-network-speed block store.
+pub struct DfsStore {
+    files: Arc<UnderStore>,
+    metrics: MetricsRegistry,
+}
+
+impl DfsStore {
+    pub fn new(cfg: TierConfig, enforce_model: bool, metrics: MetricsRegistry) -> Result<Arc<Self>> {
+        Ok(Arc::new(Self {
+            files: UnderStore::temp("dfs", cfg, enforce_model)?,
+            metrics,
+        }))
+    }
+
+    pub fn write(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.metrics.counter("storage.dfs.writes").inc();
+        self.metrics.counter("storage.dfs.bytes_written").add(bytes.len() as u64);
+        self.files.write(key, bytes)
+    }
+
+    pub fn read(&self, key: &str) -> Result<Vec<u8>> {
+        self.metrics.counter("storage.dfs.reads").inc();
+        let bytes = self.files.read(key)?;
+        self.metrics.counter("storage.dfs.bytes_read").add(bytes.len() as u64);
+        Ok(bytes)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.files.contains(key)
+    }
+
+    pub fn delete(&self, key: &str) -> Result<()> {
+        self.files.delete(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    pub fn device(&self) -> &DeviceModel {
+        self.files.device()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> Arc<DfsStore> {
+        let cfg = TierConfig { capacity_bytes: u64::MAX, bandwidth_bps: 1e9, latency_us: 0 };
+        DfsStore::new(cfg, false, MetricsRegistry::new()).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_and_metrics() {
+        let s = store();
+        s.write("x/y", &[1, 2, 3]).unwrap();
+        assert_eq!(s.read("x/y").unwrap(), vec![1, 2, 3]);
+        assert_eq!(s.metrics.counter("storage.dfs.writes").get(), 1);
+        assert_eq!(s.metrics.counter("storage.dfs.reads").get(), 1);
+        assert_eq!(s.metrics.counter("storage.dfs.bytes_read").get(), 3);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        assert!(store().read("ghost").is_err());
+    }
+
+    #[test]
+    fn device_cost_charged_both_ways() {
+        let s = store();
+        s.write("k", &[0u8; 500]).unwrap();
+        let _ = s.read("k").unwrap();
+        assert_eq!(s.device().bytes_total(), 1000);
+    }
+}

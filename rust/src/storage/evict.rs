@@ -1,0 +1,115 @@
+//! Eviction policies for the tiered store.
+//!
+//! Alluxio ships LRU and LRFU evictors; both are reproduced here. The
+//! policy only *chooses the victim* — the cascade (MEM→SSD→HDD→under)
+//! lives in [`super::tiered_store`].
+
+/// Per-block bookkeeping the policies score on.
+#[derive(Debug, Clone)]
+pub struct BlockMeta {
+    pub size: u64,
+    pub tier: usize,
+    pub pinned: bool,
+    /// Monotonic sequence number of the last access.
+    pub last_seq: u64,
+    /// Total accesses.
+    pub hits: u64,
+    /// CRF accumulator for LRFU.
+    pub crf: f64,
+}
+
+/// Victim-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EvictionPolicy {
+    /// Least-recently-used (Alluxio's default evictor).
+    Lru,
+    /// Least-recently/frequently-used: score = CRF with decay `lambda`
+    /// in (0,1); lambda→1 behaves like LFU, lambda→0 like LRU.
+    Lrfu { lambda: f64 },
+}
+
+impl EvictionPolicy {
+    /// Pick the victim among `candidates` (already filtered to the tier
+    /// and unpinned). `now_seq` is the current access counter.
+    pub fn choose<'a>(
+        &self,
+        candidates: impl Iterator<Item = (&'a String, &'a BlockMeta)>,
+        now_seq: u64,
+    ) -> Option<String> {
+        match self {
+            EvictionPolicy::Lru => candidates
+                .min_by_key(|(_, m)| m.last_seq)
+                .map(|(k, _)| k.clone()),
+            EvictionPolicy::Lrfu { lambda } => candidates
+                .map(|(k, m)| {
+                    let age = now_seq.saturating_sub(m.last_seq) as f64;
+                    // Decayed combined recency/frequency value: smaller is
+                    // a better victim.
+                    let score = m.crf * (1.0 - lambda).powf(age);
+                    (k, score)
+                })
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(k, _)| k.clone()),
+        }
+    }
+
+    /// Update a block's CRF on access (LRFU bookkeeping; harmless for LRU).
+    pub fn on_access(&self, meta: &mut BlockMeta, now_seq: u64) {
+        if let EvictionPolicy::Lrfu { lambda } = self {
+            let age = now_seq.saturating_sub(meta.last_seq) as f64;
+            meta.crf = 1.0 + meta.crf * (1.0 - lambda).powf(age);
+        }
+        meta.last_seq = now_seq;
+        meta.hits += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn meta(last_seq: u64, hits: u64) -> BlockMeta {
+        BlockMeta { size: 1, tier: 0, pinned: false, last_seq, hits, crf: hits as f64 }
+    }
+
+    #[test]
+    fn lru_picks_oldest() {
+        let mut m = HashMap::new();
+        m.insert("a".to_string(), meta(5, 1));
+        m.insert("b".to_string(), meta(2, 10));
+        m.insert("c".to_string(), meta(9, 1));
+        let victim = EvictionPolicy::Lru.choose(m.iter(), 10).unwrap();
+        assert_eq!(victim, "b");
+    }
+
+    #[test]
+    fn lrfu_prefers_cold_and_rare() {
+        let mut m = HashMap::new();
+        // hot: recently + frequently used; cold: old and rarely used.
+        m.insert("hot".to_string(), meta(99, 50));
+        m.insert("cold".to_string(), meta(10, 1));
+        let victim = EvictionPolicy::Lrfu { lambda: 0.1 }.choose(m.iter(), 100).unwrap();
+        assert_eq!(victim, "cold");
+    }
+
+    #[test]
+    fn empty_candidates_none() {
+        let m: HashMap<String, BlockMeta> = HashMap::new();
+        assert!(EvictionPolicy::Lru.choose(m.iter(), 0).is_none());
+    }
+
+    #[test]
+    fn on_access_updates_recency_and_crf() {
+        let pol = EvictionPolicy::Lrfu { lambda: 0.5 };
+        let mut m = meta(0, 0);
+        m.crf = 0.0;
+        pol.on_access(&mut m, 4);
+        assert_eq!(m.last_seq, 4);
+        assert_eq!(m.hits, 1);
+        assert!(m.crf >= 1.0);
+        let crf1 = m.crf;
+        pol.on_access(&mut m, 5);
+        assert!(m.crf > crf1);
+    }
+}

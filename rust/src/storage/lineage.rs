@@ -1,0 +1,104 @@
+//! Lineage-based block recovery (Tachyon/Alluxio's signature feature).
+//!
+//! Instead of replicating every block, the store remembers *how a block
+//! was produced*; if it is lost from all tiers before its async persist
+//! lands, it is recomputed on demand. The compute engine registers a
+//! recompute closure whenever it caches an RDD partition through the
+//! tiered store, which is what makes executor-crash fault injection
+//! (experiment E12) recoverable.
+
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+type Recompute = Arc<dyn Fn() -> Result<Vec<u8>> + Send + Sync>;
+
+/// Registry of key -> recompute closure.
+#[derive(Clone, Default)]
+pub struct LineageRegistry {
+    inner: Arc<Mutex<HashMap<String, Recompute>>>,
+}
+
+impl LineageRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) the recompute rule for a block.
+    pub fn register(&self, key: &str, f: impl Fn() -> Result<Vec<u8>> + Send + Sync + 'static) {
+        self.inner.lock().unwrap().insert(key.to_string(), Arc::new(f));
+    }
+
+    /// Recompute a block if a rule exists. `Ok(None)` = no lineage known.
+    pub fn recompute(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        let f = {
+            let map = self.inner.lock().unwrap();
+            map.get(key).cloned()
+        };
+        match f {
+            Some(f) => Ok(Some(f()?)),
+            None => Ok(None),
+        }
+    }
+
+    pub fn forget(&self, key: &str) {
+        self.inner.lock().unwrap().remove(key);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn recompute_runs_closure() {
+        let l = LineageRegistry::new();
+        l.register("k", || Ok(vec![1, 2, 3]));
+        assert_eq!(l.recompute("k").unwrap(), Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn unknown_key_is_none() {
+        let l = LineageRegistry::new();
+        assert_eq!(l.recompute("nope").unwrap(), None);
+    }
+
+    #[test]
+    fn recompute_errors_propagate() {
+        let l = LineageRegistry::new();
+        l.register("bad", || anyhow::bail!("upstream data gone"));
+        assert!(l.recompute("bad").is_err());
+    }
+
+    #[test]
+    fn forget_removes_rule() {
+        let l = LineageRegistry::new();
+        l.register("k", || Ok(vec![]));
+        l.forget("k");
+        assert_eq!(l.recompute("k").unwrap(), None);
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn closures_can_capture_state() {
+        let calls = Arc::new(AtomicU32::new(0));
+        let c2 = calls.clone();
+        let l = LineageRegistry::new();
+        l.register("counted", move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+            Ok(vec![9])
+        });
+        l.recompute("counted").unwrap();
+        l.recompute("counted").unwrap();
+        assert_eq!(calls.load(Ordering::SeqCst), 2);
+    }
+}

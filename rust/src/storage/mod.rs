@@ -1,0 +1,18 @@
+//! Distributed storage: the Alluxio-analog tiered store (MEM/SSD/HDD +
+//! async-persisted under-store + lineage recovery) and the HDFS-analog
+//! DFS baseline it is benchmarked against (paper section 2.2).
+
+pub mod device;
+pub mod dfs;
+pub mod evict;
+pub mod lineage;
+pub mod persist;
+pub mod tiered_store;
+pub mod understore;
+
+pub use device::DeviceModel;
+pub use dfs::DfsStore;
+pub use evict::{BlockMeta, EvictionPolicy};
+pub use lineage::LineageRegistry;
+pub use tiered_store::TieredStore;
+pub use understore::UnderStore;

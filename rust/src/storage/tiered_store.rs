@@ -1,0 +1,422 @@
+//! The Alluxio-analog memory-centric tiered block store.
+//!
+//! Three tiers — MEM, SSD, HDD — sit above a durable [`UnderStore`].
+//! Blocks land in MEM, cascade downward under capacity pressure
+//! (victims chosen by the configured [`EvictionPolicy`]), are promoted
+//! back to MEM on read, and are *asynchronously* persisted to the
+//! under-store, so the write path runs at memory speed (the paper's
+//! section 2.2 mechanism; in its words, "the Memory layer ... serves as
+//! the top level cache, SSD ... second level, HDD ... third level,
+//! while persistent storage is the last level storage").
+//!
+//! Blocks evicted out of the tier stack entirely remain recoverable:
+//! from the under-store if the async persist landed, else through the
+//! lineage registry (Tachyon-style recomputation).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::device::DeviceModel;
+use super::evict::{BlockMeta, EvictionPolicy};
+use super::lineage::LineageRegistry;
+use super::persist::AsyncPersister;
+use super::understore::UnderStore;
+use crate::config::StorageConfig;
+use crate::metrics::MetricsRegistry;
+
+pub const TIER_NAMES: [&str; 3] = ["mem", "ssd", "hdd"];
+
+struct Entry {
+    meta: BlockMeta,
+    data: Arc<Vec<u8>>,
+}
+
+struct Inner {
+    entries: HashMap<String, Entry>,
+    used: [u64; 3],
+}
+
+/// The tiered store. Cheap to clone (Arc inside); thread-safe.
+pub struct TieredStore {
+    tiers: [Arc<DeviceModel>; 3],
+    caps: [u64; 3],
+    inner: Mutex<Inner>,
+    seq: AtomicU64,
+    policy: EvictionPolicy,
+    under: Arc<UnderStore>,
+    persister: AsyncPersister,
+    lineage: LineageRegistry,
+    metrics: MetricsRegistry,
+}
+
+impl TieredStore {
+    pub fn new(
+        cfg: &StorageConfig,
+        under: Arc<UnderStore>,
+        policy: EvictionPolicy,
+        metrics: MetricsRegistry,
+    ) -> Arc<Self> {
+        let enforce = cfg.model_devices;
+        Arc::new(Self {
+            tiers: [
+                Arc::new(DeviceModel::new(cfg.mem.clone(), enforce)),
+                Arc::new(DeviceModel::new(cfg.ssd.clone(), enforce)),
+                Arc::new(DeviceModel::new(cfg.hdd.clone(), enforce)),
+            ],
+            caps: [cfg.mem.capacity_bytes, cfg.ssd.capacity_bytes, cfg.hdd.capacity_bytes],
+            inner: Mutex::new(Inner { entries: HashMap::new(), used: [0; 3] }),
+            seq: AtomicU64::new(0),
+            policy,
+            persister: AsyncPersister::new(under.clone()),
+            under,
+            lineage: LineageRegistry::new(),
+            metrics,
+        })
+    }
+
+    /// Build a throwaway store for tests.
+    pub fn test_store(cfg: &StorageConfig) -> Arc<Self> {
+        let under = UnderStore::temp("tiered", cfg.dfs.clone(), cfg.model_devices).unwrap();
+        Self::new(cfg, under, EvictionPolicy::Lru, MetricsRegistry::new())
+    }
+
+    pub fn lineage(&self) -> &LineageRegistry {
+        &self.lineage
+    }
+
+    pub fn under(&self) -> &Arc<UnderStore> {
+        &self.under
+    }
+
+    pub fn tier_device(&self, tier: usize) -> &DeviceModel {
+        &self.tiers[tier]
+    }
+
+    fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Write a block (lands in MEM, async-persists to the under-store).
+    pub fn put(&self, key: &str, bytes: Vec<u8>) -> Result<()> {
+        self.put_opts(key, bytes, false, true)
+    }
+
+    /// Write with explicit pinning / persistence control.
+    pub fn put_opts(&self, key: &str, bytes: Vec<u8>, pin: bool, persist: bool) -> Result<()> {
+        let size = bytes.len() as u64;
+        if size > self.caps[0].max(self.caps[1]).max(self.caps[2]) {
+            bail!("block '{key}' ({size} B) exceeds every tier capacity");
+        }
+        let data = Arc::new(bytes);
+        // Memory-speed write path: charge the MEM device only.
+        self.tiers[0].charge(size);
+        self.metrics.counter("storage.tiered.puts").inc();
+
+        let mut spill: Vec<(String, Arc<Vec<u8>>, bool)> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(old) = inner.entries.remove(key) {
+                inner.used[old.meta.tier] -= old.meta.size;
+            }
+            let seq = self.next_seq();
+            inner.entries.insert(
+                key.to_string(),
+                Entry {
+                    meta: BlockMeta { size, tier: 0, pinned: pin, last_seq: seq, hits: 0, crf: 1.0 },
+                    data: data.clone(),
+                },
+            );
+            inner.used[0] += size;
+            self.make_room(&mut inner, &mut spill)?;
+        }
+        self.handle_spill(spill);
+        if persist {
+            self.persister.submit(key.to_string(), data)?;
+        }
+        Ok(())
+    }
+
+    /// Cascade over-capacity tiers downward; blocks leaving HDD are
+    /// collected into `spill` for under-store write-back outside the lock.
+    fn make_room(&self, inner: &mut Inner, spill: &mut Vec<(String, Arc<Vec<u8>>, bool)>) -> Result<()> {
+        for tier in 0..3 {
+            while inner.used[tier] > self.caps[tier] {
+                let now = self.seq.load(Ordering::Relaxed);
+                let victim = self
+                    .policy
+                    .choose(
+                        inner
+                            .entries
+                            .iter()
+                            .filter(|(_, e)| e.meta.tier == tier && !e.meta.pinned)
+                            .map(|(k, e)| (k, &e.meta)),
+                        now,
+                    )
+                    .ok_or_else(|| {
+                        anyhow!("tier {} over capacity with only pinned blocks", TIER_NAMES[tier])
+                    })?;
+                let entry = inner.entries.get_mut(&victim).unwrap();
+                let size = entry.meta.size;
+                inner.used[tier] -= size;
+                self.metrics
+                    .counter(&format!("storage.tiered.evict.{}", TIER_NAMES[tier]))
+                    .inc();
+                if tier + 1 < 3 {
+                    // Demote one level: charge the destination device.
+                    let entry = inner.entries.get_mut(&victim).unwrap();
+                    entry.meta.tier = tier + 1;
+                    inner.used[tier + 1] += size;
+                    self.tiers[tier + 1].charge(size);
+                } else {
+                    // Falls out of the stack: write back to under-store
+                    // (unless the async persist already has it queued).
+                    let entry = inner.entries.remove(&victim).unwrap();
+                    spill.push((victim, entry.data, true));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn handle_spill(&self, spill: Vec<(String, Arc<Vec<u8>>, bool)>) {
+        for (key, data, _) in spill {
+            self.metrics.counter("storage.tiered.writeback").inc();
+            let _ = self.persister.submit(key, data);
+        }
+    }
+
+    /// Read a block; promotes to MEM on hit in a lower tier; falls back
+    /// to the under-store, then to lineage recomputation.
+    pub fn get(&self, key: &str) -> Result<Arc<Vec<u8>>> {
+        let mut promote_spill = Vec::new();
+        let found = {
+            let mut inner = self.inner.lock().unwrap();
+            match inner.entries.get_mut(key) {
+                Some(entry) => {
+                    let seq = self.next_seq();
+                    self.policy.on_access(&mut entry.meta, seq);
+                    let tier = entry.meta.tier;
+                    let size = entry.meta.size;
+                    let data = entry.data.clone();
+                    self.metrics
+                        .counter(&format!("storage.tiered.hit.{}", TIER_NAMES[tier]))
+                        .inc();
+                    if tier != 0 {
+                        // Promote to MEM (Alluxio moves hot blocks up).
+                        entry.meta.tier = 0;
+                        inner.used[tier] -= size;
+                        inner.used[0] += size;
+                        self.make_room(&mut inner, &mut promote_spill)?;
+                    }
+                    Some((tier, size, data))
+                }
+                None => None,
+            }
+        };
+        self.handle_spill(promote_spill);
+        if let Some((tier, size, data)) = found {
+            // Device cost of reading from the tier it actually lived in.
+            self.tiers[tier].charge(size);
+            return Ok(data);
+        }
+        // Miss in the stack: durable under-store?
+        self.metrics.counter("storage.tiered.miss").inc();
+        if self.under.contains(key) {
+            let bytes = self.under.read(key)?;
+            let data = Arc::new(bytes);
+            self.reinsert(key, data.clone())?;
+            return Ok(data);
+        }
+        // Last resort: lineage recomputation (Tachyon-style).
+        if let Some(bytes) = self.lineage.recompute(key)? {
+            self.metrics.counter("storage.tiered.lineage_recovered").inc();
+            let data = Arc::new(bytes);
+            self.reinsert(key, data.clone())?;
+            return Ok(data);
+        }
+        bail!("block '{key}' not found in tiers, under-store, or lineage")
+    }
+
+    fn reinsert(&self, key: &str, data: Arc<Vec<u8>>) -> Result<()> {
+        let size = data.len() as u64;
+        self.tiers[0].charge(size);
+        let mut spill = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let seq = self.next_seq();
+            inner.entries.insert(
+                key.to_string(),
+                Entry {
+                    meta: BlockMeta { size, tier: 0, pinned: false, last_seq: seq, hits: 1, crf: 1.0 },
+                    data,
+                },
+            );
+            inner.used[0] += size;
+            self.make_room(&mut inner, &mut spill)?;
+        }
+        self.handle_spill(spill);
+        Ok(())
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(key) || self.under.contains(key)
+    }
+
+    /// Which tier a block currently occupies (None if only durable).
+    pub fn tier_of(&self, key: &str) -> Option<usize> {
+        self.inner.lock().unwrap().entries.get(key).map(|e| e.meta.tier)
+    }
+
+    pub fn pin(&self, key: &str, pinned: bool) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.get_mut(key) {
+            Some(e) => {
+                e.meta.pinned = pinned;
+                Ok(())
+            }
+            None => bail!("cannot pin absent block '{key}'"),
+        }
+    }
+
+    pub fn delete(&self, key: &str) -> Result<()> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(e) = inner.entries.remove(key) {
+                inner.used[e.meta.tier] -= e.meta.size;
+            }
+        }
+        self.under.delete(key)?;
+        Ok(())
+    }
+
+    /// Bytes resident per tier.
+    pub fn used(&self) -> [u64; 3] {
+        self.inner.lock().unwrap().used
+    }
+
+    /// Wait for all queued async persists to hit the under-store.
+    pub fn flush(&self) {
+        self.persister.drain();
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PlatformConfig, StorageConfig, TierConfig};
+
+    fn small_cfg(mem: u64, ssd: u64, hdd: u64) -> StorageConfig {
+        StorageConfig {
+            mem: TierConfig { capacity_bytes: mem, bandwidth_bps: 1e12, latency_us: 0 },
+            ssd: TierConfig { capacity_bytes: ssd, bandwidth_bps: 1e12, latency_us: 0 },
+            hdd: TierConfig { capacity_bytes: hdd, bandwidth_bps: 1e12, latency_us: 0 },
+            dfs: TierConfig { capacity_bytes: u64::MAX, bandwidth_bps: 1e12, latency_us: 0 },
+            model_devices: false,
+        }
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = TieredStore::test_store(&PlatformConfig::test().storage);
+        s.put("k", vec![1, 2, 3]).unwrap();
+        assert_eq!(*s.get("k").unwrap(), vec![1, 2, 3]);
+        assert_eq!(s.tier_of("k"), Some(0));
+    }
+
+    #[test]
+    fn eviction_cascades_down_tiers() {
+        let s = TieredStore::test_store(&small_cfg(100, 100, 1000));
+        s.put("a", vec![0u8; 80]).unwrap();
+        s.put("b", vec![1u8; 80]).unwrap(); // evicts a to ssd
+        assert_eq!(s.tier_of("b"), Some(0));
+        assert_eq!(s.tier_of("a"), Some(1));
+        s.put("c", vec![2u8; 80]).unwrap(); // b->ssd, a->hdd
+        assert_eq!(s.tier_of("a"), Some(2));
+        assert_eq!(s.tier_of("b"), Some(1));
+        assert_eq!(s.tier_of("c"), Some(0));
+    }
+
+    #[test]
+    fn read_promotes_to_mem() {
+        let s = TieredStore::test_store(&small_cfg(100, 1000, 1000));
+        s.put("a", vec![0u8; 80]).unwrap();
+        s.put("b", vec![1u8; 80]).unwrap();
+        assert_eq!(s.tier_of("a"), Some(1));
+        let _ = s.get("a").unwrap();
+        assert_eq!(s.tier_of("a"), Some(0));
+        assert_eq!(s.tier_of("b"), Some(1)); // displaced by promotion
+    }
+
+    #[test]
+    fn spill_past_hdd_recovers_from_under_store() {
+        let s = TieredStore::test_store(&small_cfg(64, 64, 64));
+        s.put("a", vec![7u8; 60]).unwrap();
+        s.put("b", vec![8u8; 60]).unwrap();
+        s.put("c", vec![9u8; 60]).unwrap();
+        s.put("d", vec![10u8; 60]).unwrap(); // a falls out of the stack
+        s.flush();
+        assert_eq!(s.tier_of("a"), None);
+        assert_eq!(*s.get("a").unwrap(), vec![7u8; 60]); // from under-store
+        assert_eq!(s.tier_of("a"), Some(0)); // reinserted hot
+    }
+
+    #[test]
+    fn pinned_blocks_never_evicted() {
+        let s = TieredStore::test_store(&small_cfg(100, 1000, 1000));
+        s.put_opts("keep", vec![0u8; 80], true, true).unwrap();
+        s.put("other", vec![1u8; 80]).unwrap();
+        assert_eq!(s.tier_of("keep"), Some(0));
+        assert_eq!(s.tier_of("other"), Some(1));
+    }
+
+    #[test]
+    fn oversized_block_rejected() {
+        let s = TieredStore::test_store(&small_cfg(10, 10, 10));
+        assert!(s.put("big", vec![0u8; 100]).is_err());
+    }
+
+    #[test]
+    fn lineage_recovers_lost_block() {
+        let s = TieredStore::test_store(&small_cfg(1000, 1000, 1000));
+        s.lineage().register("derived", || Ok(b"recomputed".to_vec()));
+        assert_eq!(*s.get("derived").unwrap(), b"recomputed".to_vec());
+        // Now resident; second read is a tier hit.
+        assert_eq!(s.tier_of("derived"), Some(0));
+    }
+
+    #[test]
+    fn delete_removes_everywhere() {
+        let s = TieredStore::test_store(&PlatformConfig::test().storage);
+        s.put("k", vec![1]).unwrap();
+        s.flush();
+        s.delete("k").unwrap();
+        assert!(!s.contains("k"));
+        assert!(s.get("k").is_err());
+    }
+
+    #[test]
+    fn used_accounting_consistent() {
+        let s = TieredStore::test_store(&small_cfg(100, 100, 100));
+        s.put("a", vec![0u8; 50]).unwrap();
+        s.put("b", vec![0u8; 40]).unwrap();
+        assert_eq!(s.used()[0], 90);
+        s.delete("a").unwrap();
+        assert_eq!(s.used()[0], 40);
+    }
+
+    #[test]
+    fn async_persist_reaches_under_store() {
+        let s = TieredStore::test_store(&PlatformConfig::test().storage);
+        for i in 0..10 {
+            s.put(&format!("k{i}"), vec![i as u8; 32]).unwrap();
+        }
+        s.flush();
+        assert_eq!(s.under().len(), 10);
+    }
+}

@@ -1,0 +1,174 @@
+//! Persistent under-store: the durable layer below the tier stack.
+//!
+//! Mirrors Alluxio's "under storage" — the system of record that the
+//! memory-centric tiers asynchronously persist into. Blocks are real
+//! files on disk (content-addressed by a sanitised key hash) so
+//! durability is genuine, plus the remote-device model is charged on
+//! every access.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::device::DeviceModel;
+use crate::config::TierConfig;
+
+/// Durable block store backed by real files.
+pub struct UnderStore {
+    root: PathBuf,
+    device: DeviceModel,
+    /// key -> file name (sequence-numbered; the map is the "namespace").
+    names: Mutex<HashMap<String, String>>,
+    seq: AtomicU64,
+}
+
+impl UnderStore {
+    /// Create under `root` (a fresh subdirectory is made per instance).
+    pub fn new(root: impl Into<PathBuf>, cfg: TierConfig, enforce_model: bool) -> Result<Arc<Self>> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating under-store dir {root:?}"))?;
+        Ok(Arc::new(Self {
+            root,
+            device: DeviceModel::new(cfg, enforce_model),
+            names: Mutex::new(HashMap::new()),
+            seq: AtomicU64::new(0),
+        }))
+    }
+
+    /// A throwaway store in the system temp dir (tests, examples).
+    pub fn temp(tag: &str, cfg: TierConfig, enforce_model: bool) -> Result<Arc<Self>> {
+        let unique = format!(
+            "adcloud-under-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        );
+        Self::new(std::env::temp_dir().join(unique), cfg, enforce_model)
+    }
+
+    pub fn write(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.device.charge(bytes.len() as u64);
+        let fname = {
+            let mut names = self.names.lock().unwrap();
+            names
+                .entry(key.to_string())
+                .or_insert_with(|| format!("blk-{:08}", self.seq.fetch_add(1, Ordering::Relaxed)))
+                .clone()
+        };
+        let path = self.root.join(fname);
+        std::fs::write(&path, bytes).with_context(|| format!("writing block {key} to {path:?}"))
+    }
+
+    pub fn read(&self, key: &str) -> Result<Vec<u8>> {
+        let fname = {
+            let names = self.names.lock().unwrap();
+            match names.get(key) {
+                Some(f) => f.clone(),
+                None => bail!("under-store: no block '{key}'"),
+            }
+        };
+        let path = self.root.join(fname);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading block {key} from {path:?}"))?;
+        self.device.charge(bytes.len() as u64);
+        Ok(bytes)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.names.lock().unwrap().contains_key(key)
+    }
+
+    pub fn delete(&self, key: &str) -> Result<()> {
+        if let Some(fname) = self.names.lock().unwrap().remove(key) {
+            let _ = std::fs::remove_file(self.root.join(fname));
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn device(&self) -> &DeviceModel {
+        &self.device
+    }
+}
+
+impl Drop for UnderStore {
+    fn drop(&mut self) {
+        // Best-effort cleanup of temp stores.
+        if self.root.starts_with(std::env::temp_dir()) {
+            let _ = std::fs::remove_dir_all(&self.root);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TierConfig {
+        TierConfig { capacity_bytes: u64::MAX, bandwidth_bps: 1e9, latency_us: 0 }
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let s = UnderStore::temp("rt", cfg(), false).unwrap();
+        s.write("a/b", b"hello").unwrap();
+        assert_eq!(s.read("a/b").unwrap(), b"hello");
+        assert!(s.contains("a/b"));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let s = UnderStore::temp("ow", cfg(), false).unwrap();
+        s.write("k", b"v1").unwrap();
+        s.write("k", b"v2").unwrap();
+        assert_eq!(s.read("k").unwrap(), b"v2");
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn missing_block_errors() {
+        let s = UnderStore::temp("miss", cfg(), false).unwrap();
+        assert!(s.read("nope").is_err());
+    }
+
+    #[test]
+    fn delete_removes() {
+        let s = UnderStore::temp("del", cfg(), false).unwrap();
+        s.write("k", b"v").unwrap();
+        s.delete("k").unwrap();
+        assert!(!s.contains("k"));
+        assert!(s.read("k").is_err());
+    }
+
+    #[test]
+    fn weird_keys_are_safe() {
+        let s = UnderStore::temp("keys", cfg(), false).unwrap();
+        for k in ["../../etc/passwd", "a b/c\nd", "", "🚗"] {
+            s.write(k, k.as_bytes()).unwrap();
+            assert_eq!(s.read(k).unwrap(), k.as_bytes());
+        }
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn device_charged_on_access() {
+        let s = UnderStore::temp("dev", cfg(), false).unwrap();
+        s.write("k", &[0u8; 1000]).unwrap();
+        let _ = s.read("k").unwrap();
+        assert_eq!(s.device().bytes_total(), 2000);
+        assert_eq!(s.device().ops_total(), 2);
+    }
+}

@@ -1,0 +1,356 @@
+//! Property-based tests (hand-rolled harness — proptest is not in the
+//! offline vendored crate set). Each property runs against many
+//! randomized cases from the deterministic in-tree RNG; failures print
+//! the case seed for reproduction.
+
+use adcloud::config::{PlatformConfig, StorageConfig, TierConfig};
+use adcloud::dce::{decode_stream, encode_records, DceContext};
+use adcloud::pointcloud::{kabsch_rotation, m_apply, m_det, m_mul, m_transpose, KdTree};
+use adcloud::storage::{EvictionPolicy, TieredStore};
+use adcloud::util::json::Json;
+use adcloud::util::Rng;
+use std::collections::HashMap;
+
+/// Run `f` over `cases` seeds, reporting the failing seed.
+fn forall(name: &str, cases: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xABCD_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_records(rng: &mut Rng) -> Vec<Vec<u8>> {
+    let n = rng.below(40) as usize;
+    (0..n)
+        .map(|_| {
+            let len = rng.below(4000) as usize;
+            (0..len).map(|_| rng.below(256) as u8).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_binpipe_roundtrip() {
+    forall("binpipe roundtrip", 50, |rng| {
+        let records = random_records(rng);
+        let decoded = decode_stream(&encode_records(&records)).unwrap();
+        assert_eq!(decoded, records);
+    });
+}
+
+#[test]
+fn prop_binpipe_rejects_truncation() {
+    forall("binpipe truncation", 30, |rng| {
+        let mut records = random_records(rng);
+        records.push(vec![1, 2, 3]); // ensure non-empty stream
+        let stream = encode_records(&records);
+        let cut = 1 + rng.below(stream.len() as u64 - 1) as usize;
+        assert!(
+            decode_stream(&stream[..cut]).is_err(),
+            "accepted a stream truncated to {cut}/{} bytes",
+            stream.len()
+        );
+    });
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f64() < 0.5),
+        2 => Json::Num((rng.next_f64() * 2e6).round() / 2.0 - 5e5),
+        3 => {
+            let len = rng.below(12) as usize;
+            Json::Str(
+                (0..len)
+                    .map(|_| {
+                        // printable ascii + some escapes + unicode
+                        match rng.below(20) {
+                            0 => '"',
+                            1 => '\\',
+                            2 => '\n',
+                            3 => 'é',
+                            4 => '😀',
+                            _ => (b' ' + rng.below(94) as u8) as char,
+                        }
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    forall("json roundtrip", 100, |rng| {
+        let v = random_json(rng, 3);
+        let compact = Json::parse(&v.to_string()).unwrap();
+        let pretty = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(compact, v);
+        assert_eq!(pretty, v);
+    });
+}
+
+#[test]
+fn prop_rdd_matches_vec_semantics() {
+    let ctx = DceContext::local().unwrap();
+    forall("rdd vs Vec", 20, |rng| {
+        let n = 1 + rng.below(500) as usize;
+        let parts = 1 + rng.below(9) as usize;
+        let data: Vec<u64> = (0..n).map(|_| rng.below(1000)).collect();
+        let rdd = ctx.parallelize(data.clone(), parts);
+        // map+filter+count
+        let got = rdd.map(|x| x * 3).filter(|x| x % 2 == 0).count().unwrap();
+        let want = data.iter().map(|x| x * 3).filter(|x| x % 2 == 0).count();
+        assert_eq!(got, want);
+        // reduce (associative op)
+        assert_eq!(
+            rdd.reduce(|a, b| a.wrapping_add(b)).unwrap(),
+            data.iter().copied().reduce(|a, b| a.wrapping_add(b))
+        );
+    });
+}
+
+#[test]
+fn prop_reduce_by_key_matches_hashmap() {
+    let ctx = DceContext::local().unwrap();
+    forall("reduce_by_key vs HashMap", 20, |rng| {
+        let n = rng.below(800) as usize;
+        let parts = 1 + rng.below(6) as usize;
+        let reducers = 1 + rng.below(6) as usize;
+        let pairs: Vec<(u32, u64)> =
+            (0..n).map(|_| (rng.below(20) as u32, rng.below(100))).collect();
+        let mut want: HashMap<u32, u64> = HashMap::new();
+        for (k, v) in &pairs {
+            *want.entry(*k).or_default() += v;
+        }
+        let got: HashMap<u32, u64> = ctx
+            .parallelize(pairs, parts)
+            .reduce_by_key(|a, b| a + b, reducers)
+            .collect()
+            .unwrap()
+            .into_iter()
+            .collect();
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn prop_tiered_store_never_loses_acked_blocks() {
+    forall("tiered store durability", 15, |rng| {
+        // Tiny tiers force constant eviction cascades.
+        let cfg = StorageConfig {
+            mem: TierConfig { capacity_bytes: 2000, bandwidth_bps: 1e12, latency_us: 0 },
+            ssd: TierConfig { capacity_bytes: 4000, bandwidth_bps: 1e12, latency_us: 0 },
+            hdd: TierConfig { capacity_bytes: 8000, bandwidth_bps: 1e12, latency_us: 0 },
+            dfs: TierConfig { capacity_bytes: u64::MAX, bandwidth_bps: 1e12, latency_us: 0 },
+            model_devices: false,
+        };
+        let store = TieredStore::test_store(&cfg);
+        let mut model: HashMap<String, Vec<u8>> = HashMap::new();
+        for op in 0..120 {
+            let key = format!("k{}", rng.below(30));
+            match rng.below(10) {
+                0..=5 => {
+                    let len = 1 + rng.below(900) as usize;
+                    let val = vec![(op % 251) as u8; len];
+                    store.put(&key, val.clone()).unwrap();
+                    model.insert(key, val);
+                }
+                6..=8 => {
+                    if let Some(want) = model.get(&key) {
+                        // Any previously acked block must come back intact,
+                        // possibly via under-store after a full cascade.
+                        store.flush();
+                        let got = store.get(&key).unwrap();
+                        assert_eq!(got.as_ref(), want, "block {key} corrupted");
+                    }
+                }
+                _ => {
+                    store.delete(&key).unwrap();
+                    model.remove(&key);
+                }
+            }
+        }
+        // Final audit of everything the model says should exist.
+        store.flush();
+        for (key, want) in &model {
+            let got = store.get(key).unwrap();
+            assert_eq!(got.as_ref(), want, "final audit lost {key}");
+        }
+    });
+}
+
+#[test]
+fn prop_eviction_policies_only_return_candidates() {
+    forall("eviction candidates", 30, |rng| {
+        use adcloud::storage::BlockMeta;
+        let n = 1 + rng.below(20) as usize;
+        let metas: Vec<(String, BlockMeta)> = (0..n)
+            .map(|i| {
+                (
+                    format!("b{i}"),
+                    BlockMeta {
+                        size: 1 + rng.below(100),
+                        tier: 0,
+                        pinned: false,
+                        last_seq: rng.below(1000),
+                        hits: rng.below(50),
+                        crf: rng.next_f64() * 10.0,
+                    },
+                )
+            })
+            .collect();
+        let map: HashMap<String, BlockMeta> = metas.into_iter().collect();
+        for policy in [EvictionPolicy::Lru, EvictionPolicy::Lrfu { lambda: 0.3 }] {
+            let victim = policy.choose(map.iter(), 1000).unwrap();
+            assert!(map.contains_key(&victim));
+        }
+    });
+}
+
+#[test]
+fn prop_simclock_more_cores_never_slower() {
+    use adcloud::dce::{simclock, SimCluster, SimJob, SimTask};
+    use std::time::Duration;
+    forall("simclock monotone in cores", 20, |rng| {
+        let tasks: Vec<SimTask> = (0..50 + rng.below(200) as usize)
+            .map(|_| SimTask::compute_only(Duration::from_micros(100 + rng.below(10_000))))
+            .collect();
+        let job = SimJob::single_stage("p", tasks);
+        let mk = |cores: usize| {
+            let c = SimCluster {
+                nodes: 1,
+                cores_per_node: cores,
+                net_bps: 1e9,
+                disk_bps: 1e9,
+                sched_overhead: Duration::ZERO,
+                straggler_cv: 0.0,
+                seed: 1,
+            };
+            simclock::simulate(&c, &job).makespan
+        };
+        let c1 = 1 + rng.below(8) as usize;
+        let c2 = c1 * 2;
+        assert!(mk(c2) <= mk(c1), "more cores made it slower");
+    });
+}
+
+#[test]
+fn prop_kabsch_always_proper_rotation() {
+    forall("kabsch proper rotation", 60, |rng| {
+        let mut h = [[0f32; 3]; 3];
+        for row in h.iter_mut() {
+            for x in row.iter_mut() {
+                *x = rng.normal_f32(0.0, 3.0);
+            }
+        }
+        let r = kabsch_rotation(&h);
+        let rtr = m_mul(&m_transpose(&r), &r);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((rtr[i][j] - want).abs() < 2e-3, "not orthonormal");
+            }
+        }
+        assert!((m_det(&r) - 1.0).abs() < 2e-3, "det {}", m_det(&r));
+    });
+}
+
+#[test]
+fn prop_kdtree_matches_bruteforce() {
+    forall("kdtree vs brute force", 25, |rng| {
+        let n = 1 + rng.below(300) as usize;
+        let pts: Vec<f32> = (0..n * 3).map(|_| rng.normal_f32(0.0, 10.0)).collect();
+        let tree = KdTree::build(&pts);
+        for _ in 0..20 {
+            let q = [
+                rng.normal_f32(0.0, 10.0),
+                rng.normal_f32(0.0, 10.0),
+                rng.normal_f32(0.0, 10.0),
+            ];
+            let (_, d_tree) = tree.nearest(q).unwrap();
+            let d_brute = pts
+                .chunks_exact(3)
+                .map(|p| {
+                    (q[0] - p[0]).powi(2) + (q[1] - p[1]).powi(2) + (q[2] - p[2]).powi(2)
+                })
+                .fold(f32::INFINITY, f32::min);
+            assert!((d_tree - d_brute).abs() < 1e-3, "{d_tree} vs {d_brute}");
+        }
+    });
+}
+
+#[test]
+fn prop_se3_apply_cloud_invertible() {
+    use adcloud::pointcloud::{rot_z, Se3};
+    forall("se3 invertible on clouds", 30, |rng| {
+        let n = 1 + rng.below(100) as usize;
+        let pts: Vec<f32> = (0..n * 3).map(|_| rng.normal_f32(0.0, 5.0)).collect();
+        let tf = Se3::new(
+            rot_z(rng.normal_f32(0.0, 1.0)),
+            [rng.normal_f32(0.0, 3.0), rng.normal_f32(0.0, 3.0), rng.normal_f32(0.0, 3.0)],
+        );
+        let round = tf.inverse().apply_cloud(&tf.apply_cloud(&pts));
+        for (a, b) in pts.iter().zip(round.iter()) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        // Rotations preserve pairwise distances.
+        if n >= 2 {
+            let d0 = ((pts[0] - pts[3]).powi(2)
+                + (pts[1] - pts[4]).powi(2)
+                + (pts[2] - pts[5]).powi(2))
+            .sqrt();
+            let moved = tf.apply_cloud(&pts[..6]);
+            let d1 = ((moved[0] - moved[3]).powi(2)
+                + (moved[1] - moved[4]).powi(2)
+                + (moved[2] - moved[5]).powi(2))
+            .sqrt();
+            assert!((d0 - d1).abs() < 1e-3);
+        }
+    });
+}
+
+#[test]
+fn prop_config_json_roundtrip() {
+    forall("config roundtrip", 20, |rng| {
+        let mut cfg = PlatformConfig::test();
+        cfg.cluster.nodes = 1 + rng.below(32) as usize;
+        cfg.cluster.cores_per_node = 1 + rng.below(64) as usize;
+        cfg.seed = rng.next_u64() >> 12; // keep within f64-exact ints
+        cfg.storage.mem.capacity_bytes = rng.below(1 << 40);
+        let json = cfg.to_json().to_string();
+        let back = PlatformConfig::from_json(&Json::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.cluster, cfg.cluster);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.storage.mem, cfg.storage.mem);
+    });
+}
+
+#[test]
+fn prop_resample_preserves_membership() {
+    use adcloud::services::mapgen::resample;
+    forall("icp resample membership", 30, |rng| {
+        let n = 1 + rng.below(500) as usize;
+        let pts: Vec<f32> = (0..n * 3).map(|_| rng.normal_f32(0.0, 5.0)).collect();
+        let target = [16usize, 128, 1024][rng.below(3) as usize];
+        let out = resample(&pts, target, rng.next_u64());
+        assert_eq!(out.len(), target * 3);
+        // Every output point must be one of the input points.
+        let set: std::collections::HashSet<[u32; 3]> = pts
+            .chunks_exact(3)
+            .map(|p| [p[0].to_bits(), p[1].to_bits(), p[2].to_bits()])
+            .collect();
+        for p in out.chunks_exact(3) {
+            assert!(set.contains(&[p[0].to_bits(), p[1].to_bits(), p[2].to_bits()]));
+        }
+    });
+}
