@@ -1,0 +1,49 @@
+//! Scenario-engine campaign: procedurally generate a family of test
+//! scenarios (parameter-grid sweep + seeded mutations), shard them
+//! across the compute engine inside YARN-analog containers, replay
+//! each through the obstacle detector, and print the qualification
+//! report — coverage and per-family failure rates.
+//!
+//!     cargo run --release --example scenario_campaign [seed] [scenarios] [nodes]
+
+use adcloud::platform::Platform;
+use adcloud::scenario;
+use adcloud::Result;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let seed: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(7);
+    let scenarios: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let nodes: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let platform = Platform::boot(adcloud::config::PlatformConfig::default())?;
+    println!("{}", platform.describe());
+
+    let specs = scenario::generate_campaign(seed, scenarios);
+    let digest = scenario::campaign_digest(&specs);
+    println!(
+        "generated {} scenarios from seed {seed} (spec digest {digest:016x} — rerun to verify reproducibility)",
+        specs.len()
+    );
+    for s in specs.iter().take(3) {
+        println!(
+            "  {} [{}]: {:?}, {} actors, noise {}, route {:.0} m",
+            s.id,
+            s.family,
+            s.weather,
+            s.actors.len(),
+            s.pixel_noise,
+            s.route.length_m()
+        );
+    }
+    println!("  ...");
+
+    let cfg = scenario::CampaignConfig::new(format!("campaign-ex-{seed}"), nodes);
+    let report = scenario::run_campaign(&platform.ctx, &platform.resources, &specs, &cfg)?;
+    println!("{}", report.render());
+
+    // The report also emits JSON for archival/release gating.
+    println!("report json: {}", report.to_json().to_string());
+    println!("scenario_campaign done");
+    Ok(())
+}

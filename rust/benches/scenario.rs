@@ -1,0 +1,6 @@
+//! Scenario-engine bench: E13 (campaign throughput, scenarios/sec at
+//! 1/2/4/8 simulated nodes, calibrated by a real campaign run).
+mod common;
+fn main() {
+    common::run(&["e13"]);
+}

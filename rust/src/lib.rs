@@ -25,6 +25,8 @@
 //! * [`hetero`] — kernel registry + dispatch across CPU / GPU-class /
 //!   FPGA-class devices.
 //! * [`runtime`] — the PJRT artifact runtime (device-server threads).
+//! * [`scenario`] — procedural scenario generation + distributed test
+//!   campaigns (spec → generate → campaign → qualification report).
 //! * [`services`] — simulation, training, HD-map generation, SQL.
 //! * [`pointcloud`] — SE(3) math, KD-trees, the 3x3 polar solve.
 
@@ -37,6 +39,7 @@ pub mod platform;
 pub mod pointcloud;
 pub mod resource;
 pub mod runtime;
+pub mod scenario;
 pub mod services;
 pub mod storage;
 pub mod util;

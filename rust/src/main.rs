@@ -4,6 +4,7 @@
 //!   info                         platform + artifact summary
 //!   quickstart                   tiny end-to-end demo job
 //!   simulate  [--bags N] [--frames M] [--piped]
+//!   campaign  [--seed S] [--scenarios N] [--nodes K] [--frames F]
 //!   train     [--examples N] [--rounds R] [--workers W]
 //!   mapgen    [--steps N]
 //!   sql       [--rows N]
@@ -16,6 +17,7 @@
 
 use adcloud::platform::{experiments, Platform};
 use adcloud::resource::DeviceKind;
+use adcloud::scenario;
 use adcloud::services::{mapgen, simulation, sql, training};
 use adcloud::Result;
 use std::collections::HashMap;
@@ -78,6 +80,7 @@ fn run(args: Vec<String>) -> Result<()> {
         }
         "quickstart" => quickstart(&flags),
         "simulate" => simulate(&flags),
+        "campaign" => campaign(&flags),
         "train" => train(&flags),
         "mapgen" => run_mapgen(&flags),
         "sql" => run_sql(&flags),
@@ -93,7 +96,7 @@ fn run(args: Vec<String>) -> Result<()> {
         other => {
             eprintln!("unknown command '{other}'");
             eprintln!(
-                "commands: info quickstart simulate train mapgen sql repro-tables pipe-worker metrics"
+                "commands: info quickstart simulate campaign train mapgen sql repro-tables pipe-worker metrics"
             );
             std::process::exit(2);
         }
@@ -160,6 +163,27 @@ fn simulate(flags: &HashMap<String, String>) -> Result<()> {
         adcloud::util::fmt_duration(report.elapsed)
     );
     let _ = std::fs::remove_dir_all(dir);
+    Ok(())
+}
+
+fn campaign(flags: &HashMap<String, String>) -> Result<()> {
+    let p = Platform::boot(config_from(flags))?;
+    let seed = flag(flags, "seed", 7u64);
+    let scenarios = flag(flags, "scenarios", 32usize);
+    let nodes = flag(flags, "nodes", 4usize);
+    let frames = flag(flags, "frames", 32u32);
+    let specs = scenario::generate_campaign_sized(seed, scenarios, frames);
+    let distinct: std::collections::HashSet<u64> =
+        specs.iter().map(|s| s.content_hash()).collect();
+    println!(
+        "campaign seed {seed}: {} scenarios generated ({} distinct spec hashes), spec digest {:016x}",
+        specs.len(),
+        distinct.len(),
+        scenario::campaign_digest(&specs)
+    );
+    let cfg = scenario::CampaignConfig::new(format!("campaign-{seed}"), nodes);
+    let report = scenario::run_campaign(&p.ctx, &p.resources, &specs, &cfg)?;
+    println!("{}", report.render());
     Ok(())
 }
 

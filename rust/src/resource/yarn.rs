@@ -202,6 +202,21 @@ impl ResourceManager {
         )))
     }
 
+    /// Unregister a finished application (it must hold no containers),
+    /// freeing its name for resubmission.
+    pub fn remove_app(&self, app: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let live = match inner.apps.get(app) {
+            None => bail!("app '{app}' not submitted"),
+            Some(a) => a.containers,
+        };
+        if live > 0 {
+            bail!("app '{app}' still holds {live} container(s)");
+        }
+        inner.apps.remove(app);
+        Ok(())
+    }
+
     /// Return a container's resources to the pool.
     pub fn release(&self, container: &ContainerRef) -> Result<()> {
         let mut inner = self.inner.lock().unwrap();
@@ -310,6 +325,19 @@ mod tests {
         let rm = rm();
         assert!(rm.submit_app("a", "nope").is_err());
         assert!(rm.request_container("ghost", ResourceVec::cores(1, 1)).is_err());
+    }
+
+    #[test]
+    fn remove_app_frees_name_for_resubmission() {
+        let rm = rm();
+        rm.submit_app("a", "default").unwrap();
+        assert!(rm.submit_app("a", "default").is_err(), "duplicate submit must fail");
+        let c = rm.request_container("a", ResourceVec::cores(1, 10)).unwrap();
+        assert!(rm.remove_app("a").is_err(), "live containers must block removal");
+        rm.release(&c).unwrap();
+        rm.remove_app("a").unwrap();
+        assert!(rm.remove_app("a").is_err(), "already removed");
+        rm.submit_app("a", "default").unwrap();
     }
 
     #[test]

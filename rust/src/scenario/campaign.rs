@@ -1,0 +1,358 @@
+//! Campaign execution: materialize scenarios into bag chunks, shard
+//! them across the compute engine, run the detector under test per
+//! partition, and aggregate verdicts.
+//!
+//! This is the paper's distributed-simulation service grown into a
+//! qualification pipeline: the YARN-analog resource manager grants one
+//! container per simulated node, each DCE partition renders its
+//! scenarios to real bag files (through the same rosbag codec the
+//! replay service uses), replays them through the obstacle detector,
+//! and the driver aggregates a [`CampaignReport`].
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::report::{self, CampaignReport, ScenarioVerdict};
+use super::spec::ScenarioSpec;
+use crate::dce::DceContext;
+use crate::resource::{ResourceManager, ResourceVec};
+use crate::services::simulation::{
+    count_obstacles_from_features, gen_lidar_scan, read_bag, BagWriter, CameraFrame, Message,
+    CAMERA_TOPIC, LIDAR_TOPIC,
+};
+use crate::services::simulation::sensors::{FRAME_H, FRAME_W};
+use crate::util::Rng;
+
+/// Knobs for one campaign run.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// Application name registered with the resource manager.
+    pub app: String,
+    /// Requested shard count (one container per shard; gracefully
+    /// degrades if the cluster is smaller).
+    pub nodes: usize,
+    /// A scenario qualifies when frame accuracy reaches this bar.
+    pub pass_accuracy: f64,
+    /// Scratch directory for materialized bag chunks.
+    pub work_dir: PathBuf,
+}
+
+impl CampaignConfig {
+    pub fn new(app: impl Into<String>, nodes: usize) -> Self {
+        let app = app.into();
+        Self {
+            work_dir: std::env::temp_dir()
+                .join(format!("adcloud-campaign-{}-{}", app, std::process::id())),
+            app,
+            nodes: nodes.max(1),
+            pass_accuracy: 0.6,
+        }
+    }
+}
+
+/// Render one camera frame from the spec: weather-scaled road texture,
+/// actor boxes with per-kind contrast, additive sensor noise. The frame
+/// carries its ground truth so replay can score the detector.
+pub fn render_frame(spec: &ScenarioSpec, frame: u32, rng: &mut Rng) -> CameraFrame {
+    let (brightness, fade, weather_noise) = spec.weather.params();
+    let sigma = spec.pixel_noise as f32 + weather_noise;
+    let mut pixels = vec![0f32; FRAME_W * FRAME_H];
+    for y in 0..FRAME_H {
+        for x in 0..FRAME_W {
+            let base = 0.35 + 0.1 * (x as f32 / FRAME_W as f32);
+            pixels[y * FRAME_W + x] = base * brightness + rng.normal_f32(0.0, sigma);
+        }
+    }
+    let mut truth = 0u32;
+    for a in &spec.actors {
+        if !a.visible_at(frame) {
+            continue;
+        }
+        truth += 1;
+        let (qx, qy) = match a.quadrant {
+            0 => (0usize, 0usize),
+            1 => (32, 0),
+            2 => (0, 32),
+            _ => (32, 32),
+        };
+        let x0 = qx + 4 + a.dx as usize;
+        let y0 = qy + 4 + a.dy as usize;
+        let level = (a.kind.level() - fade) * brightness + rng.normal_f32(0.0, 0.01);
+        for y in y0..(y0 + a.h as usize).min(FRAME_H) {
+            for x in x0..(x0 + a.w as usize).min(FRAME_W) {
+                pixels[y * FRAME_W + x] = level;
+            }
+        }
+    }
+    for p in pixels.iter_mut() {
+        *p = p.clamp(0.0, 1.0);
+    }
+    CameraFrame { ts_ns: frame as u64 * 100_000_000, pixels, truth_obstacles: truth }
+}
+
+/// Frames per bag chunk (scenarios shard into multiple DCE-sized files,
+/// mirroring `record_drive`'s chunked layout).
+const FRAMES_PER_CHUNK: u32 = 16;
+
+/// Record a scenario into bag chunks under `dir`, applying the spec's
+/// fault injection: dropped frames never reach the bag, corrupted
+/// frames are written with a mangled payload the replay side must
+/// survive.
+pub fn materialize_scenario(spec: &ScenarioSpec, dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut rng = Rng::new(spec.seed);
+    let chunks = spec.frames.div_ceil(FRAMES_PER_CHUNK).max(1);
+    let mut paths = Vec::with_capacity(chunks as usize);
+    let mut t = 0u32;
+    for c in 0..chunks {
+        let mut w = BagWriter::create(dir.join(format!("chunk-{c:04}.bag")));
+        while t < spec.frames && t < (c + 1) * FRAMES_PER_CHUNK {
+            let frame = render_frame(spec, t, &mut rng);
+            let dropped = rng.next_f64() < spec.faults.drop_rate;
+            let corrupted = rng.next_f64() < spec.faults.corrupt_rate;
+            if !dropped {
+                let mut payload = frame.to_bytes();
+                if corrupted {
+                    // Truncate mid-header: decodes as a bag message but
+                    // fails CameraFrame::from_bytes.
+                    payload.truncate(10);
+                }
+                w.write(Message { topic: CAMERA_TOPIC.into(), ts_ns: frame.ts_ns, payload });
+                if t % 4 == 0 {
+                    let scan = gen_lidar_scan(frame.ts_ns, 90, &mut rng);
+                    w.write(Message {
+                        topic: LIDAR_TOPIC.into(),
+                        ts_ns: frame.ts_ns,
+                        payload: crate::util::f32s_to_bytes(&scan.points),
+                    });
+                }
+            }
+            t += 1;
+        }
+        paths.push(w.finish()?);
+    }
+    Ok(paths)
+}
+
+/// Replay a scenario's bags through the CPU detector under test and
+/// score it against the planted truth. Corrupt frames count as faults
+/// *and* as misses — a detector pipeline that crashes on bad input
+/// fails qualification, it doesn't skip the frame.
+pub fn score_scenario(
+    spec: &ScenarioSpec,
+    bags: &[PathBuf],
+    pass_accuracy: f64,
+) -> Result<ScenarioVerdict> {
+    let mut frames = 0usize;
+    let mut exact = 0usize;
+    let mut faults = 0usize;
+    for path in bags {
+        let msgs = read_bag(path).with_context(|| format!("replaying scenario {}", spec.id))?;
+        for m in &msgs {
+            if m.topic != CAMERA_TOPIC {
+                continue;
+            }
+            frames += 1;
+            match CameraFrame::from_bytes(&m.payload) {
+                Ok(f) => {
+                    let feats =
+                        crate::hetero::cpu_impls::feature_extract(&f.pixels, 1, FRAME_H, FRAME_W);
+                    if count_obstacles_from_features(&feats, 8, 8) == f.truth_obstacles {
+                        exact += 1;
+                    }
+                }
+                Err(_) => faults += 1,
+            }
+        }
+    }
+    let accuracy = if frames == 0 { 0.0 } else { exact as f64 / frames as f64 };
+    Ok(ScenarioVerdict {
+        id: spec.id.clone(),
+        family: spec.family.clone(),
+        content_hash: spec.content_hash(),
+        weather: spec.weather,
+        actors: spec.actors.len(),
+        noise_bucket: spec.noise_bucket(),
+        frames,
+        exact,
+        faults,
+        accuracy,
+        passed: accuracy >= pass_accuracy,
+    })
+}
+
+/// Run a full campaign: acquire containers from the resource manager
+/// (one per requested node), shard the scenario list across the DCE,
+/// materialize + score each scenario inside its container's accounting,
+/// and aggregate the verdicts into a qualification report.
+pub fn run_campaign(
+    ctx: &DceContext,
+    rm: &Arc<ResourceManager>,
+    specs: &[ScenarioSpec],
+    cfg: &CampaignConfig,
+) -> Result<CampaignReport> {
+    anyhow::ensure!(!specs.is_empty(), "campaign has no scenarios");
+    let start = Instant::now();
+    rm.submit_app(&cfg.app, "default")?;
+    // Size the grant for the largest scenario's frame buffers (with
+    // headroom for the encoded bag), floored at 32 MiB.
+    let max_frames = specs.iter().map(|s| s.frames as u64).max().unwrap_or(0);
+    let mem = (2 * max_frames * (FRAME_W * FRAME_H * 4) as u64).max(32 << 20);
+    let mut containers = Vec::new();
+    for _ in 0..cfg.nodes {
+        match rm.request_container(&cfg.app, ResourceVec::cores(1, mem)) {
+            Ok(c) => containers.push(c),
+            // Cluster smaller than the requested fleet: run with what
+            // was granted rather than failing the campaign.
+            Err(_) => break,
+        }
+    }
+    if containers.is_empty() {
+        // Unregister so a retry with the same config can resubmit.
+        let _ = rm.remove_app(&cfg.app);
+        anyhow::bail!("no container capacity for campaign '{}'", cfg.app);
+    }
+    let shards = containers.len();
+    ctx.metrics().counter("scenario.campaigns").inc();
+
+    let rdd = ctx.parallelize(specs.to_vec(), shards);
+    let conts = containers.clone();
+    let work_dir = cfg.work_dir.clone();
+    let pass_accuracy = cfg.pass_accuracy;
+    let job = rdd
+        .map_partitions(move |part, specs: Vec<ScenarioSpec>| {
+            let container = &conts[part % conts.len()];
+            let mut out = Vec::with_capacity(specs.len());
+            for spec in specs {
+                let dir = work_dir.join(&spec.id);
+                let verdict = container.run(|cctx| -> Result<ScenarioVerdict> {
+                    // Charge the frame buffers against the container's
+                    // memory limit, cgroup-style.
+                    let est = spec.frames as u64 * (FRAME_W * FRAME_H * 4) as u64;
+                    cctx.alloc_mem(est)?;
+                    let result = (|| {
+                        let bags = materialize_scenario(&spec, &dir)?;
+                        score_scenario(&spec, &bags, pass_accuracy)
+                    })();
+                    cctx.free_mem(est);
+                    let _ = std::fs::remove_dir_all(&dir);
+                    result
+                })??;
+                out.push(verdict);
+            }
+            Ok(out)
+        })
+        .collect();
+
+    // Return the grant whether or not the job succeeded — a failed
+    // campaign must not permanently deduct cluster capacity.
+    for c in &containers {
+        let _ = rm.release(c);
+    }
+    let _ = rm.remove_app(&cfg.app);
+    let _ = std::fs::remove_dir_all(&cfg.work_dir);
+    let verdicts = job?;
+    ctx.metrics().counter("scenario.scenarios_run").add(verdicts.len() as u64);
+    Ok(report::aggregate(verdicts, shards, start.elapsed()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::metrics::MetricsRegistry;
+    use crate::scenario::generate::{generate_campaign_sized, generate_grid};
+    use crate::scenario::spec::{FaultSpec, Weather};
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("adscen-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn render_matches_spec_truth_and_range() {
+        let spec = generate_grid(3, 16).remove(5);
+        let mut rng = Rng::new(spec.seed);
+        for t in 0..spec.frames {
+            let f = render_frame(&spec, t, &mut rng);
+            assert_eq!(f.truth_obstacles, spec.truth_at(t));
+            assert!(f.pixels.iter().all(|p| (0.0..=1.0).contains(p)));
+        }
+    }
+
+    #[test]
+    fn materialize_is_seed_deterministic() {
+        let spec = generate_grid(9, 24).remove(0);
+        let (d1, d2) = (temp_dir("det1"), temp_dir("det2"));
+        let b1 = materialize_scenario(&spec, &d1).unwrap();
+        let b2 = materialize_scenario(&spec, &d2).unwrap();
+        assert_eq!(b1.len(), b2.len());
+        for (a, b) in b1.iter().zip(&b2) {
+            assert_eq!(std::fs::read(a).unwrap(), std::fs::read(b).unwrap());
+        }
+        let _ = std::fs::remove_dir_all(d1);
+        let _ = std::fs::remove_dir_all(d2);
+    }
+
+    #[test]
+    fn clear_scenario_qualifies() {
+        // Clear weather, low noise, no faults: the detector must pass.
+        let spec = generate_grid(7, 16)
+            .into_iter()
+            .find(|s| s.weather == Weather::Clear && s.pixel_noise < 0.03)
+            .unwrap();
+        let dir = temp_dir("clear");
+        let bags = materialize_scenario(&spec, &dir).unwrap();
+        let v = score_scenario(&spec, &bags, 0.6).unwrap();
+        assert_eq!(v.frames, 16);
+        assert_eq!(v.faults, 0);
+        assert!(v.passed, "clear-weather accuracy {}", v.accuracy);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fault_injection_drops_and_corrupts() {
+        let mut spec = generate_grid(13, 32).remove(0);
+        spec.faults = FaultSpec { drop_rate: 0.3, corrupt_rate: 0.3 };
+        let dir = temp_dir("faults");
+        let bags = materialize_scenario(&spec, &dir).unwrap();
+        let v = score_scenario(&spec, &bags, 0.6).unwrap();
+        assert!(v.frames < 32, "some frames must be dropped, got {}", v.frames);
+        assert!(v.faults > 0, "some frames must be corrupt");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn campaign_end_to_end_on_local_cluster() {
+        let cfg = PlatformConfig::test();
+        let ctx = DceContext::new(cfg.clone()).unwrap();
+        let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
+        let specs = generate_campaign_sized(7, 8, 8);
+        let ccfg = CampaignConfig::new("campaign-ut", 2);
+        let report = run_campaign(&ctx, &rm, &specs, &ccfg).unwrap();
+        assert_eq!(report.scenarios, 8);
+        assert_eq!(report.distinct_hashes, 8);
+        assert_eq!(report.shards, 2);
+        assert!(report.passed >= 1, "at least the clear scenarios must pass");
+        assert!(rm.live_containers() == 0, "containers must be released");
+        // Work dir cleaned up.
+        assert!(!ccfg.work_dir.exists());
+        // The app was unregistered: the same config is reusable.
+        let again = run_campaign(&ctx, &rm, &specs, &ccfg).unwrap();
+        assert_eq!(again.scenarios, 8);
+    }
+
+    #[test]
+    fn campaign_degrades_to_available_capacity() {
+        let cfg = PlatformConfig::test(); // 2 nodes x 2 cores
+        let ctx = DceContext::new(cfg.clone()).unwrap();
+        let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
+        let specs = generate_campaign_sized(5, 4, 8);
+        // Ask for more shards than the cluster has cores.
+        let ccfg = CampaignConfig::new("campaign-degrade", 64);
+        let report = run_campaign(&ctx, &rm, &specs, &ccfg).unwrap();
+        assert_eq!(report.scenarios, 4);
+        assert!(report.shards <= cfg.cluster.total_cores());
+        assert!(report.shards >= 1);
+    }
+}

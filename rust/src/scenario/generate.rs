@@ -1,0 +1,274 @@
+//! Procedural scenario generation.
+//!
+//! Two deterministic sources of diversity, both driven by the in-tree
+//! [`Rng`] so a campaign seed reproduces byte-identical specs:
+//!
+//! * **parameter-grid sweeps** — the cartesian product of weather x
+//!   actor count x sensor-noise level over a shared base route
+//!   ([`generate_grid`]);
+//! * **seeded mutation operators** — perturb an existing scenario into
+//!   a named variant family ([`mutate`]): weather shift, actor add /
+//!   remove, noise escalation, route jitter, fault injection.
+//!
+//! [`generate_campaign`] combines the two (roughly 3:1 grid:mutant) and
+//! guarantees every returned spec has a distinct
+//! [`ScenarioSpec::content_hash`].
+
+use std::collections::HashSet;
+
+use super::spec::{round3, ActorKind, ActorSpec, FaultSpec, RouteSpec, ScenarioSpec, Weather};
+use crate::util::Rng;
+
+/// Sensor-noise sigma sweep points (low / med / high buckets).
+pub const NOISE_LEVELS: [f64; 3] = [0.01, 0.04, 0.09];
+
+/// Names of the mutation operators (also the `mut-*` family suffixes).
+pub const MUTATIONS: [&str; 6] =
+    ["weather", "add-actor", "drop-actor", "noise", "route", "faults"];
+
+fn seed32(rng: &mut Rng) -> u64 {
+    rng.below(1 << 32)
+}
+
+/// A plausible drive route: a handful of forward-progress waypoints.
+pub fn base_route(rng: &mut Rng) -> RouteSpec {
+    let n = 4 + rng.below(4) as usize;
+    let mut waypoints = Vec::with_capacity(n);
+    let (mut x, mut y) = (0.0f64, 0.0f64);
+    for _ in 0..n {
+        x += round3(rng.range_f64(20.0, 80.0));
+        y += round3(rng.range_f64(-30.0, 30.0));
+        waypoints.push((round3(x), round3(y)));
+    }
+    RouteSpec { waypoints, speed_mps: round3(rng.range_f64(8.0, 22.0)) }
+}
+
+/// One actor in a given quadrant with the 4 px-margin placement
+/// discipline (keeps blobs separable for the ground-truth counter).
+fn gen_actor(quadrant: u8, frames: u32, rng: &mut Rng) -> ActorSpec {
+    let kind = ActorKind::ALL[rng.below(ActorKind::ALL.len() as u64) as usize];
+    let w = 8 + rng.below(5) as u8;
+    let h = 8 + rng.below(5) as u8;
+    let dx = rng.below(25 - w as u64) as u8;
+    let dy = rng.below(25 - h as u64) as u8;
+    let appear = rng.below((frames as u64 / 2).max(1)) as u32;
+    // `vanish` may exceed `frames` — the actor then stays to the end.
+    let vanish = appear + 1 + rng.below(frames.max(1) as u64 * 2) as u32;
+    ActorSpec { kind, quadrant, dx, dy, w, h, appear, vanish }
+}
+
+/// Full parameter-grid sweep over a shared base route. The weather axis
+/// cycles fastest so a truncated prefix still covers all four regimes.
+pub fn generate_grid(seed: u64, frames: u32) -> Vec<ScenarioSpec> {
+    let mut rng = Rng::new(seed);
+    let route = base_route(&mut rng);
+    let mut out = Vec::new();
+    let mut idx = 0usize;
+    for actors_n in 1..=4usize {
+        for &noise in &NOISE_LEVELS {
+            for weather in Weather::ALL {
+                let mut arng = rng.split(idx as u64);
+                let mut quadrants = [0u8, 1, 2, 3];
+                arng.shuffle(&mut quadrants);
+                let actors = quadrants[..actors_n]
+                    .iter()
+                    .map(|&q| gen_actor(q, frames, &mut arng))
+                    .collect();
+                out.push(ScenarioSpec {
+                    id: format!("grid-{idx:04}"),
+                    family: format!("grid-{}", weather.name()),
+                    seed: seed32(&mut arng),
+                    frames,
+                    weather,
+                    pixel_noise: noise,
+                    route: route.clone(),
+                    actors,
+                    faults: FaultSpec::none(),
+                });
+                idx += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Apply one seeded mutation operator, producing a `mut-*` family
+/// variant. Always reseeds the sensor-noise stream, so even a
+/// structurally-identical mutant records a different drive.
+pub fn mutate(base: &ScenarioSpec, id: usize, rng: &mut Rng) -> ScenarioSpec {
+    let op = MUTATIONS[rng.below(MUTATIONS.len() as u64) as usize];
+    let mut s = base.clone();
+    s.id = format!("mut-{id:04}");
+    s.family = format!("mut-{op}");
+    s.seed = seed32(rng);
+    match op {
+        "weather" => {
+            let i = Weather::ALL.iter().position(|w| *w == s.weather).unwrap_or(0);
+            s.weather = Weather::ALL[(i + 1 + rng.below(3) as usize) % Weather::ALL.len()];
+        }
+        "add-actor" => {
+            let used: HashSet<u8> = s.actors.iter().map(|a| a.quadrant).collect();
+            if let Some(q) = (0u8..4).find(|q| !used.contains(q)) {
+                s.actors.push(gen_actor(q, s.frames, rng));
+            }
+        }
+        "drop-actor" => {
+            if s.actors.len() >= 2 {
+                let i = rng.below(s.actors.len() as u64) as usize;
+                s.actors.remove(i);
+            }
+        }
+        "noise" => {
+            s.pixel_noise = round3((s.pixel_noise * 1.6 + 0.005).min(0.15));
+        }
+        "route" => {
+            for wp in s.route.waypoints.iter_mut() {
+                wp.0 = round3(wp.0 + rng.range_f64(-2.0, 2.0));
+                wp.1 = round3(wp.1 + rng.range_f64(-2.0, 2.0));
+            }
+        }
+        "faults" => {
+            s.faults.drop_rate = round3((s.faults.drop_rate + 0.08).min(0.4));
+            s.faults.corrupt_rate = round3((s.faults.corrupt_rate + 0.05).min(0.3));
+        }
+        _ => unreachable!("mutation table covers all ops"),
+    }
+    s
+}
+
+/// Generate `n` scenarios with distinct content hashes: a grid-sweep
+/// prefix (~3/4 of the budget) plus mutation families grown from it.
+pub fn generate_campaign(seed: u64, n: usize) -> Vec<ScenarioSpec> {
+    generate_campaign_sized(seed, n, 32)
+}
+
+/// [`generate_campaign`] with an explicit per-scenario frame count.
+pub fn generate_campaign_sized(seed: u64, n: usize, frames: u32) -> Vec<ScenarioSpec> {
+    let grid = generate_grid(seed, frames);
+    let grid_target = if n <= 4 { n } else { (n * 3 / 4).min(grid.len()) };
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut out: Vec<ScenarioSpec> = Vec::with_capacity(n);
+    for s in grid {
+        if out.len() >= grid_target {
+            break;
+        }
+        if seen.insert(s.content_hash()) {
+            out.push(s);
+        }
+    }
+    let mut rng = Rng::new(seed ^ 0x00C0_FFEE);
+    let mut id = 0usize;
+    // The reseed inside `mutate` makes hash collisions vanishingly
+    // rare; the attempt cap is a defensive bound, not an expected exit.
+    let mut attempts = 0usize;
+    while out.len() < n && attempts < n * 50 + 100 {
+        attempts += 1;
+        let base = out[rng.below(out.len() as u64) as usize].clone();
+        let m = mutate(&base, id, &mut rng);
+        if seen.insert(m.content_hash()) {
+            out.push(m);
+            id += 1;
+        }
+    }
+    out
+}
+
+/// Digest over every spec's canonical JSON — two campaigns with equal
+/// digests generated byte-identical spec sets (the reproducibility
+/// check `adcloud campaign` prints).
+pub fn campaign_digest(specs: &[ScenarioSpec]) -> u64 {
+    let mut joined = String::new();
+    for s in specs {
+        joined.push_str(&s.canonical_json());
+        joined.push('\n');
+    }
+    super::spec::fnv1a64(joined.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_every_axis_value() {
+        let grid = generate_grid(7, 32);
+        assert_eq!(grid.len(), 4 * 3 * 4);
+        for weather in Weather::ALL {
+            assert!(grid.iter().any(|s| s.weather == weather), "{weather:?} missing");
+        }
+        for n in 1..=4usize {
+            assert!(grid.iter().any(|s| s.actors.len() == n), "{n} actors missing");
+        }
+        for &noise in &NOISE_LEVELS {
+            assert!(grid.iter().any(|s| s.pixel_noise == noise));
+        }
+        // Weather cycles fastest: a 4-prefix already covers all regimes.
+        let prefix: HashSet<Weather> = grid[..4].iter().map(|s| s.weather).collect();
+        assert_eq!(prefix.len(), 4);
+    }
+
+    #[test]
+    fn campaign_is_deterministic_and_distinct() {
+        let a = generate_campaign(7, 32);
+        let b = generate_campaign(7, 32);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.canonical_json(), y.canonical_json());
+        }
+        assert_eq!(campaign_digest(&a), campaign_digest(&b));
+        let hashes: HashSet<u64> = a.iter().map(|s| s.content_hash()).collect();
+        assert_eq!(hashes.len(), 32, "content hashes must be distinct");
+        assert_ne!(campaign_digest(&a), campaign_digest(&generate_campaign(8, 32)));
+    }
+
+    #[test]
+    fn campaign_mixes_grid_and_mutant_families() {
+        let specs = generate_campaign(7, 32);
+        let grid = specs.iter().filter(|s| s.family.starts_with("grid-")).count();
+        let mutants = specs.iter().filter(|s| s.family.starts_with("mut-")).count();
+        assert_eq!(grid + mutants, 32);
+        assert!(grid >= 20, "grid share too small: {grid}");
+        assert!(mutants >= 4, "mutant share too small: {mutants}");
+    }
+
+    #[test]
+    fn oversubscribed_campaign_still_distinct() {
+        // More scenarios than the raw grid: mutation must fill the gap.
+        let specs = generate_campaign(3, 80);
+        assert_eq!(specs.len(), 80);
+        let hashes: HashSet<u64> = specs.iter().map(|s| s.content_hash()).collect();
+        assert_eq!(hashes.len(), 80);
+    }
+
+    #[test]
+    fn mutations_stay_in_bounds() {
+        let mut rng = Rng::new(11);
+        let mut spec = generate_grid(11, 16).remove(0);
+        for i in 0..200 {
+            spec = mutate(&spec, i, &mut rng);
+            assert!(spec.actors.len() <= 4);
+            assert!(!spec.actors.is_empty());
+            assert!(spec.pixel_noise <= 0.15);
+            assert!(spec.faults.drop_rate <= 0.4);
+            assert!(spec.faults.corrupt_rate <= 0.3);
+            for a in &spec.actors {
+                assert!(a.quadrant < 4);
+                assert!(a.dx as usize + a.w as usize <= 24, "{a:?} leaves margin");
+                assert!(a.dy as usize + a.h as usize <= 24, "{a:?} leaves margin");
+            }
+            // Quadrants stay exclusive — blobs must not merge.
+            let quads: HashSet<u8> = spec.actors.iter().map(|a| a.quadrant).collect();
+            assert_eq!(quads.len(), spec.actors.len());
+        }
+    }
+
+    #[test]
+    fn generated_specs_roundtrip_json() {
+        use crate::util::json::Json;
+        for s in generate_campaign(5, 40) {
+            let back =
+                ScenarioSpec::from_json(&Json::parse(&s.canonical_json()).unwrap()).unwrap();
+            assert_eq!(back, s);
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Scenario engine: procedural scenario generation and distributed
+//! test campaigns.
+//!
+//! The paper's simulation service replays *recorded* road data; this
+//! subsystem opens the scenario-diversity axis on top of it. A
+//! campaign is: declarative [`spec::ScenarioSpec`]s (route, actors,
+//! weather/noise, fault injection) → deterministic procedural
+//! generation ([`generate`]: parameter-grid sweeps + seeded mutation
+//! operators) → distributed execution ([`campaign`]: specs sharded as
+//! DCE partitions inside YARN-analog containers, each materialized to
+//! real bag chunks and replayed through the detector under test) →
+//! a qualification report ([`report`]: parameter-space coverage and
+//! per-family failure rates).
+//!
+//! Everything is seed-deterministic: the same campaign seed reproduces
+//! byte-identical canonical-JSON specs (and therefore identical bags),
+//! which `adcloud campaign` surfaces as a printed digest.
+
+pub mod campaign;
+pub mod generate;
+pub mod report;
+pub mod spec;
+
+pub use campaign::{
+    materialize_scenario, render_frame, run_campaign, score_scenario, CampaignConfig,
+};
+pub use generate::{
+    base_route, campaign_digest, generate_campaign, generate_campaign_sized, generate_grid,
+    mutate, MUTATIONS, NOISE_LEVELS,
+};
+pub use report::{aggregate, CampaignReport, Coverage, FamilyStats, ScenarioVerdict};
+pub use spec::{
+    fnv1a64, ActorKind, ActorSpec, FaultSpec, RouteSpec, ScenarioSpec, Weather,
+};

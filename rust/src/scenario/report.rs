@@ -1,0 +1,331 @@
+//! Campaign qualification reports: per-scenario verdicts aggregated
+//! into parameter-space coverage and per-family failure rates — the
+//! artifact a fleet-qualification run hands to the release gate.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+
+use super::spec::Weather;
+use crate::util::json::Json;
+
+/// Outcome of one scenario's replay through the detector under test.
+#[derive(Debug, Clone)]
+pub struct ScenarioVerdict {
+    pub id: String,
+    pub family: String,
+    pub content_hash: u64,
+    pub weather: Weather,
+    /// Actor count (parameter-space axis).
+    pub actors: usize,
+    /// Noise axis bucket ("low" / "med" / "high").
+    pub noise_bucket: &'static str,
+    /// Camera frames that reached the bag (post fault injection).
+    pub frames: usize,
+    /// Frames where the detector matched the planted truth exactly.
+    pub exact: usize,
+    /// Frames whose payload was corrupt (counted as misses).
+    pub faults: usize,
+    pub accuracy: f64,
+    pub passed: bool,
+}
+
+/// Pass/fail statistics for one scenario family.
+#[derive(Debug, Clone, Default)]
+pub struct FamilyStats {
+    pub total: usize,
+    pub passed: usize,
+    pub mean_accuracy: f64,
+}
+
+impl FamilyStats {
+    pub fn failure_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            (self.total - self.passed) as f64 / self.total as f64
+        }
+    }
+}
+
+/// How much of the scenario parameter space the campaign exercised.
+#[derive(Debug, Clone)]
+pub struct Coverage {
+    /// Weather regimes seen, out of [`Weather::ALL`].
+    pub weather_covered: usize,
+    pub weather_total: usize,
+    /// Actor counts seen, out of 0..=4.
+    pub actor_counts_covered: usize,
+    pub actor_counts_total: usize,
+    /// Noise buckets seen, out of low/med/high.
+    pub noise_buckets_covered: usize,
+    pub noise_buckets_total: usize,
+    /// Distinct (weather, actor count, noise bucket) grid cells seen.
+    pub cells_covered: usize,
+    pub cells_total: usize,
+}
+
+impl Coverage {
+    pub fn cell_fraction(&self) -> f64 {
+        if self.cells_total == 0 {
+            0.0
+        } else {
+            self.cells_covered as f64 / self.cells_total as f64
+        }
+    }
+}
+
+/// The aggregated campaign outcome.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub scenarios: usize,
+    pub distinct_hashes: usize,
+    /// Containers the campaign actually ran on.
+    pub shards: usize,
+    pub frames: usize,
+    pub faults: usize,
+    pub passed: usize,
+    pub elapsed: Duration,
+    pub coverage: Coverage,
+    /// Family name -> stats, sorted for deterministic rendering.
+    pub families: BTreeMap<String, FamilyStats>,
+    pub verdicts: Vec<ScenarioVerdict>,
+}
+
+impl CampaignReport {
+    pub fn failed(&self) -> usize {
+        self.scenarios - self.passed
+    }
+
+    pub fn scenarios_per_sec(&self) -> f64 {
+        self.scenarios as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// Paper-style text rendering for the CLI and benches.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "== campaign qualification report ({} scenarios, {} shards)\n",
+            self.scenarios, self.shards
+        ));
+        out.push_str(&format!(
+            "  scenarios: {} passed / {} failed ({} distinct spec hashes)\n",
+            self.passed,
+            self.failed(),
+            self.distinct_hashes
+        ));
+        out.push_str(&format!(
+            "  frames:    {} replayed, {} corrupt-frame faults survived\n",
+            self.frames, self.faults
+        ));
+        out.push_str(&format!(
+            "  wall time: {} ({:.1} scenarios/s)\n",
+            crate::util::fmt_duration(self.elapsed),
+            self.scenarios_per_sec()
+        ));
+        let c = &self.coverage;
+        out.push_str(&format!(
+            "  coverage:  weather {}/{}, actor-counts {}/{}, noise {}/{}, grid cells {}/{} ({:.0}%)\n",
+            c.weather_covered,
+            c.weather_total,
+            c.actor_counts_covered,
+            c.actor_counts_total,
+            c.noise_buckets_covered,
+            c.noise_buckets_total,
+            c.cells_covered,
+            c.cells_total,
+            c.cell_fraction() * 100.0
+        ));
+        out.push_str("  family                failure-rate  mean-acc  scenarios\n");
+        for (name, f) in &self.families {
+            out.push_str(&format!(
+                "    {:<20}  {:>10.0}%  {:>8.3}  {:>4}/{}\n",
+                name,
+                f.failure_rate() * 100.0,
+                f.mean_accuracy,
+                f.passed,
+                f.total
+            ));
+        }
+        out
+    }
+
+    /// JSON emission (for archiving a campaign's outcome).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenarios", Json::num(self.scenarios as f64)),
+            ("distinct_hashes", Json::num(self.distinct_hashes as f64)),
+            ("shards", Json::num(self.shards as f64)),
+            ("frames", Json::num(self.frames as f64)),
+            ("faults", Json::num(self.faults as f64)),
+            ("passed", Json::num(self.passed as f64)),
+            ("elapsed_ms", Json::num(self.elapsed.as_secs_f64() * 1e3)),
+            ("coverage_cells", Json::num(self.coverage.cells_covered as f64)),
+            ("coverage_cells_total", Json::num(self.coverage.cells_total as f64)),
+            (
+                "families",
+                Json::Obj(
+                    self.families
+                        .iter()
+                        .map(|(k, f)| {
+                            (
+                                k.clone(),
+                                Json::obj(vec![
+                                    ("total", Json::num(f.total as f64)),
+                                    ("passed", Json::num(f.passed as f64)),
+                                    ("failure_rate", Json::num(f.failure_rate())),
+                                    ("mean_accuracy", Json::num(f.mean_accuracy)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Fold per-scenario verdicts into the campaign report.
+pub fn aggregate(
+    verdicts: Vec<ScenarioVerdict>,
+    shards: usize,
+    elapsed: Duration,
+) -> CampaignReport {
+    let mut families: BTreeMap<String, (usize, usize, f64)> = BTreeMap::new();
+    let mut hashes = BTreeSet::new();
+    let mut weather = BTreeSet::new();
+    let mut actor_counts = BTreeSet::new();
+    let mut noise_buckets = BTreeSet::new();
+    let mut cells = BTreeSet::new();
+    let (mut frames, mut faults, mut passed) = (0usize, 0usize, 0usize);
+    for v in &verdicts {
+        let e = families.entry(v.family.clone()).or_insert((0, 0, 0.0));
+        e.0 += 1;
+        if v.passed {
+            e.1 += 1;
+            passed += 1;
+        }
+        e.2 += v.accuracy;
+        hashes.insert(v.content_hash);
+        weather.insert(v.weather);
+        actor_counts.insert(v.actors.min(4));
+        noise_buckets.insert(v.noise_bucket);
+        cells.insert((v.weather, v.actors.min(4), v.noise_bucket));
+        frames += v.frames;
+        faults += v.faults;
+    }
+    let families = families
+        .into_iter()
+        .map(|(k, (total, passed, acc_sum))| {
+            (
+                k,
+                FamilyStats {
+                    total,
+                    passed,
+                    mean_accuracy: if total == 0 { 0.0 } else { acc_sum / total as f64 },
+                },
+            )
+        })
+        .collect();
+    CampaignReport {
+        scenarios: verdicts.len(),
+        distinct_hashes: hashes.len(),
+        shards,
+        frames,
+        faults,
+        passed,
+        elapsed,
+        coverage: Coverage {
+            weather_covered: weather.len(),
+            weather_total: Weather::ALL.len(),
+            actor_counts_covered: actor_counts.len(),
+            actor_counts_total: 5,
+            noise_buckets_covered: noise_buckets.len(),
+            noise_buckets_total: 3,
+            cells_covered: cells.len(),
+            cells_total: Weather::ALL.len() * 5 * 3,
+        },
+        families,
+        verdicts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn verdict(family: &str, weather: Weather, actors: usize, passed: bool) -> ScenarioVerdict {
+        ScenarioVerdict {
+            id: format!("{family}-x"),
+            family: family.to_string(),
+            content_hash: crate::scenario::spec::fnv1a64(
+                format!("{family}{weather:?}{actors}{passed}").as_bytes(),
+            ),
+            weather,
+            actors,
+            noise_bucket: "low",
+            frames: 10,
+            exact: if passed { 9 } else { 2 },
+            faults: 1,
+            accuracy: if passed { 0.9 } else { 0.2 },
+            passed,
+        }
+    }
+
+    #[test]
+    fn aggregate_counts_families_and_coverage() {
+        let r = aggregate(
+            vec![
+                verdict("grid-clear", Weather::Clear, 1, true),
+                verdict("grid-clear", Weather::Clear, 2, true),
+                verdict("grid-fog", Weather::Fog, 1, false),
+                verdict("mut-noise", Weather::Rain, 3, false),
+            ],
+            2,
+            Duration::from_secs(1),
+        );
+        assert_eq!(r.scenarios, 4);
+        assert_eq!(r.passed, 2);
+        assert_eq!(r.failed(), 2);
+        assert_eq!(r.distinct_hashes, 4);
+        assert_eq!(r.frames, 40);
+        assert_eq!(r.faults, 4);
+        assert_eq!(r.coverage.weather_covered, 3);
+        assert_eq!(r.coverage.actor_counts_covered, 3);
+        assert_eq!(r.coverage.noise_buckets_covered, 1);
+        assert_eq!(r.coverage.cells_covered, 4);
+        assert_eq!(r.coverage.cells_total, 60);
+        let fog = &r.families["grid-fog"];
+        assert_eq!(fog.total, 1);
+        assert!((fog.failure_rate() - 1.0).abs() < 1e-9);
+        let clear = &r.families["grid-clear"];
+        assert!((clear.failure_rate() - 0.0).abs() < 1e-9);
+        assert!((clear.mean_accuracy - 0.9).abs() < 1e-9);
+        assert!((r.scenarios_per_sec() - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn render_and_json_are_complete() {
+        let r = aggregate(
+            vec![verdict("grid-clear", Weather::Clear, 1, true)],
+            1,
+            Duration::from_millis(100),
+        );
+        let text = r.render();
+        assert!(text.contains("grid-clear"));
+        assert!(text.contains("coverage"));
+        assert!(text.contains("failure-rate"));
+        let j = r.to_json();
+        assert_eq!(j.get("scenarios").unwrap().as_u64().unwrap(), 1);
+        assert!(j.get("families").unwrap().get("grid-clear").is_some());
+        // JSON emission parses back.
+        assert!(crate::util::json::Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn empty_campaign_report_is_sane() {
+        let r = aggregate(Vec::new(), 1, Duration::from_secs(1));
+        assert_eq!(r.scenarios, 0);
+        assert_eq!(r.coverage.cells_covered, 0);
+        assert!(r.render().contains("0 scenarios"));
+    }
+}

@@ -1,0 +1,484 @@
+//! Declarative scenario specifications.
+//!
+//! A [`ScenarioSpec`] fully determines one simulated test drive: route
+//! geometry, actor placements (the planted obstacles the detector under
+//! test must find), weather and sensor-noise parameters, and
+//! fault-injection rates for the recording path. Specs round-trip
+//! through [`crate::util::json`] — the canonical JSON emission is
+//! byte-deterministic (BTreeMap key order, shortest-round-trip float
+//! formatting), so a spec's [`ScenarioSpec::content_hash`] identifies
+//! its test content and `generate` can guarantee campaign diversity.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// FNV-1a over a byte string — the stable spec/digest hash (no external
+/// hashing crates in the offline build; DefaultHasher is not guaranteed
+/// stable across releases).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Round to 3 decimals so generated parameters emit as short, exact
+/// JSON numbers (f64 Display is shortest-round-trip, so re-parsing is
+/// byte-identical).
+pub fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// Weather regimes and their sensor-degradation models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Weather {
+    Clear,
+    Rain,
+    Fog,
+    Night,
+}
+
+impl Weather {
+    pub const ALL: [Weather; 4] = [Weather::Clear, Weather::Rain, Weather::Fog, Weather::Night];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Weather::Clear => "clear",
+            Weather::Rain => "rain",
+            Weather::Fog => "fog",
+            Weather::Night => "night",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Weather> {
+        Weather::ALL
+            .into_iter()
+            .find(|w| w.name() == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown weather '{name}'"))
+    }
+
+    /// `(brightness, obstacle_fade, extra_noise)` applied to rendered
+    /// frames. Fog washes out obstacle contrast, night dims the whole
+    /// frame, rain adds sensor noise — each pushes the gradient-feature
+    /// detector toward a different failure mode.
+    pub fn params(&self) -> (f32, f32, f32) {
+        match self {
+            Weather::Clear => (1.0, 0.0, 0.0),
+            Weather::Rain => (0.9, 0.05, 0.02),
+            Weather::Fog => (0.95, 0.22, 0.01),
+            Weather::Night => (0.65, 0.05, 0.03),
+        }
+    }
+}
+
+/// What kind of obstacle an actor renders as (drives its contrast).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ActorKind {
+    Vehicle,
+    Pedestrian,
+    Cyclist,
+    Debris,
+}
+
+impl ActorKind {
+    pub const ALL: [ActorKind; 4] =
+        [ActorKind::Vehicle, ActorKind::Pedestrian, ActorKind::Cyclist, ActorKind::Debris];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActorKind::Vehicle => "vehicle",
+            ActorKind::Pedestrian => "pedestrian",
+            ActorKind::Cyclist => "cyclist",
+            ActorKind::Debris => "debris",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<ActorKind> {
+        ActorKind::ALL
+            .into_iter()
+            .find(|k| k.name() == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown actor kind '{name}'"))
+    }
+
+    /// Rendered brightness level (before weather fade). Debris is the
+    /// lowest-contrast class and the first to vanish under fog. The
+    /// spread is deliberately narrow: in clear weather every kind sits
+    /// safely above the detector's gradient threshold, so failures come
+    /// from the weather/noise axes rather than kind lottery.
+    pub fn level(&self) -> f32 {
+        match self {
+            ActorKind::Vehicle => 0.85,
+            ActorKind::Cyclist => 0.83,
+            ActorKind::Pedestrian => 0.81,
+            ActorKind::Debris => 0.79,
+        }
+    }
+}
+
+/// Route geometry the simulated drive follows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteSpec {
+    /// Polyline waypoints in metres (map frame).
+    pub waypoints: Vec<(f64, f64)>,
+    pub speed_mps: f64,
+}
+
+impl RouteSpec {
+    pub fn length_m(&self) -> f64 {
+        self.waypoints
+            .windows(2)
+            .map(|w| {
+                let (dx, dy) = (w[1].0 - w[0].0, w[1].1 - w[0].1);
+                (dx * dx + dy * dy).sqrt()
+            })
+            .sum()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "waypoints",
+                Json::arr(
+                    self.waypoints
+                        .iter()
+                        .map(|(x, y)| Json::arr(vec![Json::num(*x), Json::num(*y)]))
+                        .collect(),
+                ),
+            ),
+            ("speed_mps", Json::num(self.speed_mps)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let mut waypoints = Vec::new();
+        for p in j.req("waypoints")?.as_arr()? {
+            let xy = p.as_arr()?;
+            if xy.len() != 2 {
+                bail!("waypoint must be [x, y], got {} values", xy.len());
+            }
+            waypoints.push((xy[0].as_f64()?, xy[1].as_f64()?));
+        }
+        Ok(Self { waypoints, speed_mps: j.req("speed_mps")?.as_f64()? })
+    }
+}
+
+/// One planted obstacle: a bright box in a 32x32 quadrant of the 64x64
+/// frame, visible over `[appear, vanish)` frames. Placement keeps a 4 px
+/// quadrant margin (same discipline as `sensors::gen_camera_frame`) so
+/// distinct actors stay separable blobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActorSpec {
+    pub kind: ActorKind,
+    /// Frame quadrant 0..4 (row-major: TL, TR, BL, BR).
+    pub quadrant: u8,
+    /// Offset from the quadrant's 4 px margin.
+    pub dx: u8,
+    pub dy: u8,
+    /// Box size in pixels, 8..=12 (one 8x8 feature cell minimum).
+    pub w: u8,
+    pub h: u8,
+    /// First frame the actor is visible.
+    pub appear: u32,
+    /// First frame the actor is gone (exclusive).
+    pub vanish: u32,
+}
+
+impl ActorSpec {
+    pub fn visible_at(&self, frame: u32) -> bool {
+        frame >= self.appear && frame < self.vanish
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.name())),
+            ("quadrant", Json::num(self.quadrant as f64)),
+            ("dx", Json::num(self.dx as f64)),
+            ("dy", Json::num(self.dy as f64)),
+            ("w", Json::num(self.w as f64)),
+            ("h", Json::num(self.h as f64)),
+            ("appear", Json::num(self.appear as f64)),
+            ("vanish", Json::num(self.vanish as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        // Bounds-check on the raw u64s: an `as` cast would silently
+        // truncate an oversized hand-authored value.
+        let field = |name: &str, max: u64| -> Result<u64> {
+            let v = j.req(name)?.as_u64()?;
+            if v > max {
+                bail!("actor {name}={v} exceeds {max}");
+            }
+            Ok(v)
+        };
+        let a = Self {
+            kind: ActorKind::from_name(j.req("kind")?.as_str()?)?,
+            quadrant: field("quadrant", 3)? as u8,
+            dx: field("dx", 24)? as u8,
+            dy: field("dy", 24)? as u8,
+            w: field("w", 12)? as u8,
+            h: field("h", 12)? as u8,
+            appear: field("appear", u32::MAX as u64)? as u32,
+            vanish: field("vanish", u32::MAX as u64)? as u32,
+        };
+        if !(8..=12).contains(&a.w) || !(8..=12).contains(&a.h) {
+            bail!("actor size {}x{} outside 8..=12", a.w, a.h);
+        }
+        // The placement invariant the generator maintains: the box must
+        // fit the quadrant's 24 px budget or neighboring actors' blobs
+        // would merge and corrupt the ground truth.
+        if a.dx + a.w > 24 || a.dy + a.h > 24 {
+            bail!("actor at ({},{}) size {}x{} overflows its quadrant", a.dx, a.dy, a.w, a.h);
+        }
+        if a.vanish <= a.appear {
+            bail!("actor vanish {} must exceed appear {}", a.vanish, a.appear);
+        }
+        Ok(a)
+    }
+}
+
+/// Recording-path fault injection: frames silently dropped by the
+/// "sensor bus", and frames whose payload is corrupted in the bag.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub drop_rate: f64,
+    pub corrupt_rate: f64,
+}
+
+impl FaultSpec {
+    pub fn none() -> Self {
+        Self { drop_rate: 0.0, corrupt_rate: 0.0 }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("drop_rate", Json::num(self.drop_rate)),
+            ("corrupt_rate", Json::num(self.corrupt_rate)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            drop_rate: j.req("drop_rate")?.as_f64()?,
+            corrupt_rate: j.req("corrupt_rate")?.as_f64()?,
+        })
+    }
+}
+
+/// One complete, reproducible test scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Unique within a campaign (e.g. `grid-0007`, `mut-0002`).
+    pub id: String,
+    /// Grouping key for failure-rate aggregation (e.g. `grid-fog`).
+    pub family: String,
+    /// Per-scenario sensor-noise seed. Kept < 2^32 so the JSON f64
+    /// representation is exact.
+    pub seed: u64,
+    /// Camera frames recorded (10 Hz).
+    pub frames: u32,
+    pub weather: Weather,
+    /// Base pixel-noise sigma (weather adds on top).
+    pub pixel_noise: f64,
+    pub route: RouteSpec,
+    pub actors: Vec<ActorSpec>,
+    pub faults: FaultSpec,
+}
+
+impl ScenarioSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("family", Json::str(self.family.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("frames", Json::num(self.frames as f64)),
+            ("weather", Json::str(self.weather.name())),
+            ("pixel_noise", Json::num(self.pixel_noise)),
+            ("route", self.route.to_json()),
+            ("actors", Json::arr(self.actors.iter().map(|a| a.to_json()).collect())),
+            ("faults", self.faults.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let s = Self {
+            id: j.req("id")?.as_str()?.to_string(),
+            family: j.req("family")?.as_str()?.to_string(),
+            seed: j.req("seed")?.as_u64()?,
+            frames: j.req("frames")?.as_u64()? as u32,
+            weather: Weather::from_name(j.req("weather")?.as_str()?)?,
+            pixel_noise: j.req("pixel_noise")?.as_f64()?,
+            route: RouteSpec::from_json(j.req("route")?)?,
+            actors: j
+                .req("actors")?
+                .as_arr()?
+                .iter()
+                .map(ActorSpec::from_json)
+                .collect::<Result<_>>()?,
+            faults: FaultSpec::from_json(j.req("faults")?)?,
+        };
+        if s.seed > u32::MAX as u64 {
+            bail!("scenario seed {} exceeds the exact-f64 range", s.seed);
+        }
+        // Quadrant exclusivity: two actors in one quadrant render as a
+        // single blob while the ground truth counts two, so the spec
+        // would be unsatisfiable by any detector.
+        let mut quads = [false; 4];
+        for a in &s.actors {
+            if std::mem::replace(&mut quads[a.quadrant as usize], true) {
+                bail!("two actors share quadrant {}", a.quadrant);
+            }
+        }
+        Ok(s)
+    }
+
+    /// Byte-deterministic JSON emission (sorted keys, compact).
+    pub fn canonical_json(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Hash of the scenario's *test content* — everything except its
+    /// campaign-local `id`/`family` labels. Two scenarios with equal
+    /// content hashes would record byte-identical bags.
+    pub fn content_hash(&self) -> u64 {
+        let mut j = self.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("id");
+            m.remove("family");
+        }
+        fnv1a64(j.to_string().as_bytes())
+    }
+
+    /// Ground-truth obstacle count at a frame index.
+    pub fn truth_at(&self, frame: u32) -> u32 {
+        self.actors.iter().filter(|a| a.visible_at(frame)).count() as u32
+    }
+
+    /// Coverage bucket for the noise axis (low/med/high).
+    pub fn noise_bucket(&self) -> &'static str {
+        if self.pixel_noise < 0.03 {
+            "low"
+        } else if self.pixel_noise < 0.07 {
+            "med"
+        } else {
+            "high"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            id: "grid-0000".into(),
+            family: "grid-clear".into(),
+            seed: 1234,
+            frames: 16,
+            weather: Weather::Clear,
+            pixel_noise: 0.01,
+            route: RouteSpec {
+                waypoints: vec![(0.0, 0.0), (42.5, 10.25), (80.125, -5.0)],
+                speed_mps: 12.5,
+            },
+            actors: vec![
+                ActorSpec {
+                    kind: ActorKind::Vehicle,
+                    quadrant: 0,
+                    dx: 3,
+                    dy: 5,
+                    w: 10,
+                    h: 9,
+                    appear: 0,
+                    vanish: 16,
+                },
+                ActorSpec {
+                    kind: ActorKind::Debris,
+                    quadrant: 3,
+                    dx: 0,
+                    dy: 0,
+                    w: 8,
+                    h: 8,
+                    appear: 4,
+                    vanish: 12,
+                },
+            ],
+            faults: FaultSpec { drop_rate: 0.05, corrupt_rate: 0.1 },
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let s = sample_spec();
+        let text = s.canonical_json();
+        let back = ScenarioSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        // Emission is byte-stable across the round trip too.
+        assert_eq!(back.canonical_json(), text);
+    }
+
+    #[test]
+    fn content_hash_ignores_labels_only() {
+        let s = sample_spec();
+        let mut relabeled = s.clone();
+        relabeled.id = "other".into();
+        relabeled.family = "elsewhere".into();
+        assert_eq!(s.content_hash(), relabeled.content_hash());
+        let mut changed = s.clone();
+        changed.pixel_noise = 0.09;
+        assert_ne!(s.content_hash(), changed.content_hash());
+        let mut reseeded = s;
+        reseeded.seed += 1;
+        assert_ne!(reseeded.content_hash(), relabeled.content_hash());
+    }
+
+    #[test]
+    fn truth_tracks_actor_windows() {
+        let s = sample_spec();
+        assert_eq!(s.truth_at(0), 1); // debris not yet visible
+        assert_eq!(s.truth_at(5), 2);
+        assert_eq!(s.truth_at(12), 1); // debris gone
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let s = sample_spec();
+        let mut j = s.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("seed".into(), Json::num((u32::MAX as f64) * 8.0));
+        }
+        assert!(ScenarioSpec::from_json(&j).is_err(), "oversized seed must fail");
+        let mut bad_actor = s.clone();
+        bad_actor.actors[0].quadrant = 9;
+        let text = bad_actor.canonical_json();
+        assert!(ScenarioSpec::from_json(&Json::parse(&text).unwrap()).is_err());
+        assert!(Weather::from_name("hail").is_err());
+        assert!(ActorKind::from_name("ufo").is_err());
+    }
+
+    #[test]
+    fn fnv_is_stable_and_spreads() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+    }
+
+    #[test]
+    fn weather_params_degrade_contrast() {
+        let (b_clear, f_clear, _) = Weather::Clear.params();
+        let (_, f_fog, _) = Weather::Fog.params();
+        let (b_night, _, _) = Weather::Night.params();
+        assert_eq!((b_clear, f_clear), (1.0, 0.0));
+        assert!(f_fog > 0.1, "fog must fade obstacles");
+        assert!(b_night < 0.8, "night must dim the frame");
+    }
+
+    #[test]
+    fn route_length_sums_segments() {
+        let r = RouteSpec { waypoints: vec![(0.0, 0.0), (3.0, 4.0), (3.0, 14.0)], speed_mps: 10.0 };
+        assert!((r.length_m() - 15.0).abs() < 1e-9);
+    }
+}

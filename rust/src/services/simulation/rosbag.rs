@@ -43,6 +43,12 @@ pub fn decode_bag(bytes: &[u8]) -> Result<Vec<Message>> {
         bail!("not a bag: {} bytes", bytes.len());
     }
     let count = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    // A message needs at least 16 bytes (empty topic + empty payload);
+    // reject impossible counts *before* allocating, so a truncated or
+    // bit-flipped header is an error, not an OOM abort.
+    if count > (bytes.len() - 8) / 16 {
+        bail!("bag header claims {count} messages in {} bytes", bytes.len());
+    }
     let mut off = 8usize;
     let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
         if *off + n > bytes.len() {
@@ -157,6 +163,65 @@ mod tests {
         let mut bytes3 = encode_bag(&msgs);
         bytes3.push(7);
         assert!(decode_bag(&bytes3).is_err());
+    }
+
+    #[test]
+    fn empty_bag_roundtrips() {
+        // Zero messages is a valid bag, in memory and on disk.
+        let bytes = encode_bag(&[]);
+        assert_eq!(decode_bag(&bytes).unwrap(), Vec::<Message>::new());
+        let dir = std::env::temp_dir().join(format!("adbag-empty-{}", std::process::id()));
+        let path = BagWriter::create(dir.join("empty.bag")).finish().unwrap();
+        assert_eq!(read_bag(&path).unwrap(), Vec::<Message>::new());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn truncated_file_is_an_error_not_a_panic() {
+        let dir = std::env::temp_dir().join(format!("adbag-trunc-{}", std::process::id()));
+        let mut w = BagWriter::create(dir.join("t.bag"));
+        for m in sample() {
+            w.write(m);
+        }
+        let path = w.finish().unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Every strict prefix of a non-empty bag must decode to an error.
+        for cut in [0, 3, 7, 8, full.len() / 2, full.len() - 1] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            assert!(read_bag(&path).is_err(), "prefix of {cut} bytes must fail");
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn absurd_message_count_rejected_without_allocation() {
+        // Magic + count=u32::MAX and no message bytes: must error out
+        // before reserving capacity for 4 billion messages.
+        let mut bytes = BAG_MAGIC.to_vec();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_bag(&bytes).is_err());
+        bytes.extend_from_slice(&[0u8; 64]);
+        assert!(decode_bag(&bytes).is_err());
+    }
+
+    #[test]
+    fn writer_read_write_roundtrip_large() {
+        // A denser round trip: many messages with mixed payload sizes.
+        let dir = std::env::temp_dir().join(format!("adbag-large-{}", std::process::id()));
+        let mut w = BagWriter::create(dir.join("big.bag"));
+        let msgs: Vec<Message> = (0..200)
+            .map(|i| Message {
+                topic: if i % 3 == 0 { "/camera/front".into() } else { "/lidar/top".into() },
+                ts_ns: i as u64 * 100_000_000,
+                payload: vec![(i % 256) as u8; (i * 7) % 513],
+            })
+            .collect();
+        for m in &msgs {
+            w.write(m.clone());
+        }
+        let path = w.finish().unwrap();
+        assert_eq!(read_bag(&path).unwrap(), msgs);
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

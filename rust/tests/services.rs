@@ -115,3 +115,32 @@ fn piped_and_inprocess_replay_agree() {
     assert_eq!(inproc.exact_matches, piped.exact_matches, "pipe and in-process disagree");
     let _ = std::fs::remove_dir_all(dir);
 }
+
+#[test]
+fn scenario_campaign_service_end_to_end() {
+    // The campaign engine runs on the CPU detection path: no artifacts
+    // gate — this exercises generation, YARN-analog containers, DCE
+    // sharding, bag materialization, replay scoring and aggregation.
+    use adcloud::scenario;
+    let p = Platform::local().unwrap();
+    let specs = scenario::generate_campaign_sized(7, 12, 8);
+    assert_eq!(specs.len(), 12);
+    let hashes: std::collections::HashSet<u64> =
+        specs.iter().map(|s| s.content_hash()).collect();
+    assert_eq!(hashes.len(), 12, "specs must be distinct");
+    // Same seed -> byte-identical canonical specs.
+    let again = scenario::generate_campaign_sized(7, 12, 8);
+    for (a, b) in specs.iter().zip(&again) {
+        assert_eq!(a.canonical_json(), b.canonical_json());
+    }
+    let cfg = scenario::CampaignConfig::new("svc-campaign", 2);
+    let report = scenario::run_campaign(&p.ctx, &p.resources, &specs, &cfg).unwrap();
+    assert_eq!(report.scenarios, 12);
+    assert_eq!(report.distinct_hashes, 12);
+    assert!(report.passed >= 1, "clear-weather scenarios must qualify");
+    assert!(report.families.len() >= 2, "grid families expected: {:?}", report.families);
+    assert!(report.coverage.weather_covered >= 2);
+    let rendered = report.render();
+    assert!(rendered.contains("failure-rate"));
+    assert!(rendered.contains("coverage"));
+}
