@@ -1,0 +1,15 @@
+# The `make artifacts` target every artifact-gated test and CLI message
+# points at: AOT-lower the Pallas/JAX kernels to HLO + manifest.json.
+# Requires a Python environment with jax installed; the Rust side
+# degrades gracefully (CPU reference kernels) when artifacts are absent.
+
+.PHONY: artifacts test bench
+
+artifacts:
+	python3 python/compile/aot.py
+
+test:
+	cargo test -q
+
+bench:
+	ADCLOUD_BENCH_QUICK=1 cargo bench

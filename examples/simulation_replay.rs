@@ -26,7 +26,8 @@ fn main() -> Result<()> {
 
     // Mode 1: in-process detection through the hetero dispatcher.
     if platform.has_accelerators() {
-        let report = simulation::replay(&platform.ctx, &platform.dispatcher, &bags, DeviceKind::Gpu)?;
+        let report =
+            simulation::replay(&platform.ctx, &platform.dispatcher, &bags, DeviceKind::Gpu)?;
         println!(
             "in-process replay on {}: {}/{} frames exact ({:.1}%) in {}",
             report.device,
@@ -60,7 +61,9 @@ fn main() -> Result<()> {
                 adcloud::util::fmt_duration(report.elapsed)
             );
         }
-        None => println!("(adcloud binary not found next to example — build with `cargo build --release` for the piped mode)"),
+        None => println!(
+            "(adcloud binary not found next to example — build with `cargo build --release` for the piped mode)"
+        ),
     }
 
     let _ = std::fs::remove_dir_all(dir);

@@ -1,0 +1,6 @@
+//! Fleet-ingest bench: E14 (sustained ingest throughput at 1/2/4/8 log
+//! partitions, with and without concurrent compaction contention).
+mod common;
+fn main() {
+    common::run(&["e14"]);
+}

@@ -58,8 +58,7 @@ pub(crate) struct CtxInner {
     pub dfs: Arc<DfsStore>,
     pub metrics: MetricsRegistry,
     next_id: AtomicUsize,
-    pub fail_injector:
-        Mutex<Option<Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync>>>,
+    pub fail_injector: Mutex<Option<Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync>>>,
 }
 
 /// The driver context. Clone freely — all clones share the cluster.
@@ -71,7 +70,8 @@ pub struct DceContext {
 impl DceContext {
     pub fn new(config: PlatformConfig) -> Result<Self> {
         let metrics = MetricsRegistry::new();
-        let under = UnderStore::temp("dce", config.storage.dfs.clone(), config.storage.model_devices)?;
+        let under =
+            UnderStore::temp("dce", config.storage.dfs.clone(), config.storage.model_devices)?;
         let store = TieredStore::new(&config.storage, under, EvictionPolicy::Lru, metrics.clone());
         let dfs = DfsStore::new(
             config.storage.dfs.clone(),

@@ -20,7 +20,8 @@ pub struct CostModel {
 
 impl CostModel {
     pub fn task_duration(&self, records: u64, bytes: u64) -> Duration {
-        let ns = self.fixed_ns + records as f64 * self.per_record_ns + bytes as f64 * self.per_byte_ns;
+        let ns =
+            self.fixed_ns + records as f64 * self.per_record_ns + bytes as f64 * self.per_byte_ns;
         Duration::from_nanos(ns.max(0.0) as u64)
     }
 

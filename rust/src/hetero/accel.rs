@@ -137,7 +137,11 @@ pub fn register_default_kernels(reg: &KernelRegistry, runtime: &XlaRuntime) {
             &name,
             DeviceKind::Fpga,
             Arc::new(FpgaKernel {
-                inner: PjrtKernel { runtime: runtime.clone(), artifact: name.clone(), device: None },
+                inner: PjrtKernel {
+                    runtime: runtime.clone(),
+                    artifact: name.clone(),
+                    device: None,
+                },
                 slowdown: 2.5,
             }),
         );
@@ -164,7 +168,11 @@ mod tests {
     use crate::runtime::shared_runtime;
 
     fn have_artifacts() -> bool {
-        crate::artifacts_dir().join("manifest.json").is_file()
+        let ok = crate::artifacts_dir().join("manifest.json").is_file();
+        if !ok {
+            eprintln!("skipped: run `make artifacts` to enable artifact-gated tests");
+        }
+        ok
     }
 
     fn registry() -> Option<KernelRegistry> {

@@ -1,0 +1,388 @@
+//! Compaction: drain log partitions into tiered-storage blocks.
+//!
+//! Workers run inside containers granted by the YARN-analog resource
+//! manager (one per requested worker, degrading gracefully on a small
+//! cluster). Each worker owns the partitions `p % workers == w`, reads
+//! batches from the partition's committed offset, packs them into
+//! `ADIB` blocks, lands the blocks in the Alluxio-analog
+//! [`TieredStore`], registers a lineage rule that can rebuild the block
+//! from the log range it covers, and only then commits the consumed
+//! offset — so a crash between batch and commit re-reads, never loses.
+
+use anyhow::{bail, Context, Result};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::log::{crc32, LogRecord, PartitionedLog};
+use crate::resource::{ResourceManager, ResourceVec};
+use crate::storage::TieredStore;
+
+/// Magic prefix of a compacted ingest block.
+pub const BLOCK_MAGIC: &[u8; 4] = b"ADIB";
+
+/// Pack log records into one block:
+/// `"ADIB" | u32 count | { u64 offset | u64 ts_ns | u32 source |
+///  u32 payload_len | payload }* | u32 crc32(everything before)`.
+pub fn encode_block(records: &[LogRecord]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(BLOCK_MAGIC);
+    out.extend_from_slice(&(records.len() as u32).to_le_bytes());
+    for r in records {
+        out.extend_from_slice(&r.offset.to_le_bytes());
+        out.extend_from_slice(&r.ts_ns.to_le_bytes());
+        out.extend_from_slice(&r.source.to_le_bytes());
+        out.extend_from_slice(&(r.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&r.payload);
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Unpack and CRC-verify a block.
+pub fn decode_block(bytes: &[u8]) -> Result<Vec<LogRecord>> {
+    if bytes.len() < 12 || &bytes[..4] != BLOCK_MAGIC {
+        bail!("not an ingest block: {} bytes", bytes.len());
+    }
+    let body = &bytes[..bytes.len() - 4];
+    let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    if crc32(body) != stored {
+        bail!("ingest block CRC mismatch");
+    }
+    let count = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    // Each record needs at least 24 bytes; reject impossible counts
+    // before allocating (same discipline as the bag codec).
+    if count > (body.len() - 8) / 24 {
+        bail!("block header claims {count} records in {} bytes", bytes.len());
+    }
+    let mut out = Vec::with_capacity(count);
+    let mut off = 8usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        if *off + n > body.len() {
+            bail!("ingest block truncated at byte {off}");
+        }
+        let s = &body[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+    for _ in 0..count {
+        let offset = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+        let ts_ns = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+        let source = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
+        let pl = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let payload = take(&mut off, pl)?.to_vec();
+        out.push(LogRecord { offset, ts_ns, source, payload });
+    }
+    if off != body.len() {
+        bail!("ingest block has {} trailing bytes", body.len() - off);
+    }
+    Ok(out)
+}
+
+/// One compacted block landed in the tiered store.
+#[derive(Debug, Clone)]
+pub struct BlockRef {
+    pub key: String,
+    pub partition: usize,
+    pub base_offset: u64,
+    pub records: u32,
+    pub bytes: u64,
+}
+
+/// Compactor knobs.
+#[derive(Debug, Clone)]
+pub struct CompactorConfig {
+    /// Application name registered with the resource manager.
+    pub app: String,
+    /// Requested worker count (one container each; degrades gracefully).
+    pub workers: usize,
+    /// Max records packed into one block.
+    pub batch_records: usize,
+    /// Store-key prefix for landed blocks.
+    pub block_prefix: String,
+}
+
+impl CompactorConfig {
+    pub fn new(app: impl Into<String>, workers: usize) -> Self {
+        Self {
+            app: app.into(),
+            workers: workers.max(1),
+            batch_records: 256,
+            block_prefix: "ingest".into(),
+        }
+    }
+}
+
+/// Outcome of one full compaction drain.
+#[derive(Debug, Clone)]
+pub struct CompactionReport {
+    pub blocks: Vec<BlockRef>,
+    pub records: u64,
+    pub bytes: u64,
+    /// Containers actually granted.
+    pub workers: usize,
+    pub elapsed: Duration,
+}
+
+impl CompactionReport {
+    pub fn render(&self) -> String {
+        format!(
+            "compaction: {} blocks ({} records, {}) via {} container(s) in {}",
+            self.blocks.len(),
+            self.records,
+            crate::util::fmt_bytes(self.bytes),
+            self.workers,
+            crate::util::fmt_duration(self.elapsed),
+        )
+    }
+}
+
+/// Store key for a block (partition + first covered offset).
+fn block_key(prefix: &str, partition: usize, base_offset: u64) -> String {
+    format!("{prefix}/p{partition:02}/b{base_offset:010}")
+}
+
+/// Drain one partition from its committed offset: pack batches into
+/// blocks, land them with lineage, commit after each block. Returns the
+/// blocks written.
+fn drain_partition(
+    log: &Arc<PartitionedLog>,
+    store: &Arc<TieredStore>,
+    cctx: &crate::resource::ContainerCtx<'_>,
+    partition: usize,
+    cfg: &CompactorConfig,
+) -> Result<Vec<BlockRef>> {
+    let mut out = Vec::new();
+    loop {
+        let from = log.committed(partition).max(log.start_offset(partition));
+        let batch = log.read_from(partition, from, cfg.batch_records)?;
+        if batch.is_empty() {
+            break;
+        }
+        let base = batch[0].offset;
+        let count = batch.len() as u32;
+        let block = encode_block(&batch);
+        let block_len = block.len() as u64;
+        let key = block_key(&cfg.block_prefix, partition, base);
+        // Charge the block against the container's memory limit while
+        // it is in flight (cgroup memcg-style).
+        cctx.alloc_mem(block_len)?;
+        let put = store.put(&key, block);
+        cctx.free_mem(block_len);
+        put.with_context(|| format!("landing block {key}"))?;
+        // Lineage: the block is recomputable from the log range it
+        // covers — until retention truncates that range, at which point
+        // recovery must come from the under-store instead.
+        let (lg, part, prefix) = (log.clone(), partition, cfg.block_prefix.clone());
+        store.lineage().register(&key, move || {
+            let recs = lg.read_from(part, base, count as usize)?;
+            if recs.len() != count as usize {
+                bail!(
+                    "lineage for {} covers {} records but log returned {}",
+                    block_key(&prefix, part, base),
+                    count,
+                    recs.len()
+                );
+            }
+            Ok(encode_block(&recs))
+        });
+        let next = batch.last().unwrap().offset + 1;
+        log.commit(partition, next)?;
+        store.metrics().counter("ingest.compact.blocks").inc();
+        store.metrics().counter("ingest.compact.records").add(count as u64);
+        out.push(BlockRef { key, partition, base_offset: base, records: count, bytes: block_len });
+    }
+    Ok(out)
+}
+
+/// One full drain: acquire containers, drain every partition to its
+/// head, release the grant. Safe to call repeatedly — each pass resumes
+/// from the committed offsets.
+pub fn compact(
+    log: &Arc<PartitionedLog>,
+    store: &Arc<TieredStore>,
+    rm: &Arc<ResourceManager>,
+    cfg: &CompactorConfig,
+) -> Result<CompactionReport> {
+    let start = Instant::now();
+    rm.submit_app(&cfg.app, "default")?;
+    // Size the grant for a batch of max-size blocks with headroom.
+    let mem = (4 * cfg.batch_records as u64 * 1024).max(8 << 20);
+    let mut containers = Vec::new();
+    for _ in 0..cfg.workers.min(log.partitions()) {
+        match rm.request_container(&cfg.app, ResourceVec::cores(1, mem)) {
+            Ok(c) => containers.push(c),
+            Err(_) => break,
+        }
+    }
+    if containers.is_empty() {
+        let _ = rm.remove_app(&cfg.app);
+        bail!("no container capacity for compactor '{}'", cfg.app);
+    }
+    let workers = containers.len();
+    let blocks: Mutex<Vec<BlockRef>> = Mutex::new(Vec::new());
+    let result: Result<()> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (w, container) in containers.iter().enumerate() {
+            let blocks = &blocks;
+            handles.push(s.spawn(move || -> Result<()> {
+                for partition in (0..log.partitions()).filter(|p| p % workers == w) {
+                    let written = container
+                        .run(|cctx| drain_partition(log, store, cctx, partition, cfg))??;
+                    blocks.lock().unwrap().extend(written);
+                }
+                Ok(())
+            }));
+        }
+        let mut first_err = Ok(());
+        for h in handles {
+            let r = h.join().expect("compaction worker panicked");
+            if r.is_err() && first_err.is_ok() {
+                first_err = r;
+            }
+        }
+        first_err
+    });
+    for c in &containers {
+        let _ = rm.release(c);
+    }
+    let _ = rm.remove_app(&cfg.app);
+    result?;
+    let mut blocks = blocks.into_inner().unwrap();
+    blocks.sort_by(|a, b| (a.partition, a.base_offset).cmp(&(b.partition, b.base_offset)));
+    let records = blocks.iter().map(|b| b.records as u64).sum();
+    let bytes = blocks.iter().map(|b| b.bytes).sum();
+    Ok(CompactionReport { blocks, records, bytes, workers, elapsed: start.elapsed() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::ingest::gateway::{encode_telemetry, gen_drive};
+    use crate::ingest::log::LogConfig;
+    use crate::metrics::MetricsRegistry;
+
+    fn filled_log(partitions: usize, per_part: usize) -> Arc<PartitionedLog> {
+        let log = PartitionedLog::temp(
+            "cp",
+            LogConfig { partitions, segment_bytes: 8 << 10, retention_bytes: 16 << 20 },
+        )
+        .unwrap();
+        for p in 0..partitions {
+            for i in 0..per_part {
+                let t = gen_drive(p as u32, 5, i + 1);
+                log.append(p, i as u64, p as u32, &encode_telemetry(&t)).unwrap();
+            }
+        }
+        log
+    }
+
+    #[test]
+    fn block_codec_roundtrips_and_rejects_corruption() {
+        let recs: Vec<LogRecord> = (0..20)
+            .map(|i| LogRecord {
+                offset: i,
+                ts_ns: i * 7,
+                source: (i % 3) as u32,
+                payload: vec![i as u8; (i as usize * 11) % 40],
+            })
+            .collect();
+        let block = encode_block(&recs);
+        assert_eq!(decode_block(&block).unwrap(), recs);
+        let mut bad = block.clone();
+        bad[10] ^= 1;
+        assert!(decode_block(&bad).is_err());
+        let mut trunc = block;
+        trunc.truncate(trunc.len() - 5);
+        assert!(decode_block(&trunc).is_err());
+        // Absurd count rejected before allocation.
+        let mut fake = BLOCK_MAGIC.to_vec();
+        fake.extend_from_slice(&u32::MAX.to_le_bytes());
+        fake.extend_from_slice(&crc32(&fake).to_le_bytes());
+        assert!(decode_block(&fake).is_err());
+    }
+
+    #[test]
+    fn compact_drains_all_partitions_and_commits() {
+        let cfg = PlatformConfig::test();
+        let log = filled_log(3, 50);
+        let store = TieredStore::test_store(&cfg.storage);
+        let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
+        let report = compact(&log, &store, &rm, &CompactorConfig::new("cp-ut", 2)).unwrap();
+        assert_eq!(report.records, 150);
+        assert!(!report.blocks.is_empty());
+        for p in 0..3 {
+            assert_eq!(log.committed(p), 50, "partition {p} must be fully drained");
+            assert_eq!(log.lag(p), 0);
+        }
+        // Blocks decode back to the original records.
+        let b = &report.blocks[0];
+        let bytes = store.get(&b.key).unwrap();
+        let recs = decode_block(&bytes).unwrap();
+        assert_eq!(recs.len(), b.records as usize);
+        assert_eq!(recs[0].offset, b.base_offset);
+        assert_eq!(rm.live_containers(), 0, "containers must be released");
+        // A second pass over a drained log is a no-op.
+        let again = compact(&log, &store, &rm, &CompactorConfig::new("cp-ut", 2)).unwrap();
+        assert_eq!(again.records, 0);
+        assert!(again.blocks.is_empty());
+    }
+
+    #[test]
+    fn compact_resumes_after_new_appends() {
+        let cfg = PlatformConfig::test();
+        let log = filled_log(1, 10);
+        let store = TieredStore::test_store(&cfg.storage);
+        let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
+        let ccfg = CompactorConfig::new("cp-resume", 1);
+        compact(&log, &store, &rm, &ccfg).unwrap();
+        for i in 0..5u64 {
+            log.append(0, 100 + i, 9, b"late").unwrap();
+        }
+        let second = compact(&log, &store, &rm, &ccfg).unwrap();
+        assert_eq!(second.records, 5);
+        assert_eq!(second.blocks[0].base_offset, 10);
+        assert_eq!(log.committed(0), 15);
+    }
+
+    #[test]
+    fn lineage_rebuilds_blocks_from_the_log() {
+        let cfg = PlatformConfig::test();
+        let log = filled_log(1, 30);
+        let store = TieredStore::test_store(&cfg.storage);
+        let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
+        let report = compact(&log, &store, &rm, &CompactorConfig::new("cp-lin", 1)).unwrap();
+        let b = &report.blocks[0];
+        let stored = store.get(&b.key).unwrap().as_ref().clone();
+        let recomputed = store.lineage().recompute(&b.key).unwrap().unwrap();
+        assert_eq!(recomputed, stored, "lineage must rebuild the exact block bytes");
+    }
+
+    #[test]
+    fn lineage_fails_loudly_once_retention_truncates() {
+        // Retention so tight the compacted range is truncated away.
+        let log = PartitionedLog::temp(
+            "cp-trunc",
+            LogConfig { partitions: 1, segment_bytes: 256, retention_bytes: 512 },
+        )
+        .unwrap();
+        for i in 0..20u64 {
+            log.append(0, i, 1, &[0u8; 100]).unwrap();
+        }
+        let cfg = PlatformConfig::test();
+        let store = TieredStore::test_store(&cfg.storage);
+        let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
+        // Compact what is still retained.
+        let start = log.start_offset(0);
+        assert!(start > 0);
+        let report = compact(&log, &store, &rm, &CompactorConfig::new("cp-tr", 1)).unwrap();
+        let b = &report.blocks[0];
+        // Push more data so retention advances past the compacted range.
+        for i in 0..40u64 {
+            log.append(0, 100 + i, 1, &[0u8; 100]).unwrap();
+        }
+        assert!(log.start_offset(0) > b.base_offset);
+        assert!(store.lineage().recompute(&b.key).is_err(), "recompute must not fabricate data");
+    }
+}

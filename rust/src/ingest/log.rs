@@ -1,0 +1,527 @@
+//! The durable partitioned telemetry log (Kafka analog).
+//!
+//! Each partition is a sequence of append-only segment files on real
+//! disk. Records are offset-addressed (dense, per-partition), framed as
+//! `u32 body_len | body | u32 crc32(body)` with
+//! `body = u64 offset | u64 ts_ns | u32 source | payload`, so a
+//! bit-flip anywhere in a frame is detected at read time. Segments roll
+//! at a configured size and the oldest sealed segments are truncated
+//! once a partition exceeds its retention budget — reads below the
+//! retained start offset fail loudly rather than returning a gap.
+//!
+//! Consumers (the [`super::compact`] workers) track progress through a
+//! per-partition committed offset stored on the log; `next - committed`
+//! is the lag the gateway's backpressure check watches.
+
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::MetricsRegistry;
+use crate::scenario::fnv1a64;
+
+/// IEEE CRC-32 lookup table, built at compile time.
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC-32 (the record-integrity check on every log frame).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// Sizing and retention knobs for one log instance.
+#[derive(Debug, Clone)]
+pub struct LogConfig {
+    /// Number of partitions (the unit of ingest/compaction parallelism).
+    pub partitions: usize,
+    /// Roll the active segment once it reaches this many bytes.
+    pub segment_bytes: u64,
+    /// Per-partition retention budget; oldest sealed segments are
+    /// dropped while a partition holds more than this.
+    pub retention_bytes: u64,
+}
+
+impl Default for LogConfig {
+    fn default() -> Self {
+        Self { partitions: 4, segment_bytes: 256 << 10, retention_bytes: 64 << 20 }
+    }
+}
+
+/// One decoded log record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogRecord {
+    /// Dense per-partition offset.
+    pub offset: u64,
+    pub ts_ns: u64,
+    /// Producer id (vehicle id for fleet ingest).
+    pub source: u32,
+    pub payload: Vec<u8>,
+}
+
+/// Frame header (body length) + trailing CRC.
+const FRAME_OVERHEAD: u64 = 8;
+/// Fixed body bytes before the payload.
+const BODY_HEADER: usize = 20;
+
+struct Segment {
+    base_offset: u64,
+    path: PathBuf,
+    bytes: u64,
+    records: u64,
+}
+
+struct PartState {
+    dir: PathBuf,
+    /// Sealed segments plus (last) the active one.
+    segments: Vec<Segment>,
+    /// Open handle for the active segment, if any.
+    writer: Option<File>,
+    next_offset: u64,
+    /// First offset still retained (advances on truncation).
+    start_offset: u64,
+    /// Consumer progress (exclusive upper bound of consumed offsets).
+    committed: u64,
+    bytes_total: u64,
+    /// Records truncated by retention before any consumer read them.
+    lost_records: u64,
+}
+
+/// The partitioned, segmented, CRC-checked append-only log.
+pub struct PartitionedLog {
+    cfg: LogConfig,
+    root: PathBuf,
+    parts: Vec<Mutex<PartState>>,
+    metrics: MetricsRegistry,
+}
+
+impl PartitionedLog {
+    pub fn create(
+        root: impl Into<PathBuf>,
+        cfg: LogConfig,
+        metrics: MetricsRegistry,
+    ) -> Result<Arc<Self>> {
+        anyhow::ensure!(cfg.partitions >= 1, "log needs at least one partition");
+        anyhow::ensure!(cfg.segment_bytes > 0, "segment_bytes must be positive");
+        let root = root.into();
+        let mut parts = Vec::with_capacity(cfg.partitions);
+        for p in 0..cfg.partitions {
+            let dir = root.join(format!("partition-{p:03}"));
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating log partition dir {dir:?}"))?;
+            parts.push(Mutex::new(PartState {
+                dir,
+                segments: Vec::new(),
+                writer: None,
+                next_offset: 0,
+                start_offset: 0,
+                committed: 0,
+                bytes_total: 0,
+                lost_records: 0,
+            }));
+        }
+        Ok(Arc::new(Self { cfg, root, parts, metrics }))
+    }
+
+    /// A throwaway log in the system temp dir (tests, examples, CLI).
+    pub fn temp(tag: &str, cfg: LogConfig) -> Result<Arc<Self>> {
+        let unique = format!(
+            "adcloud-log-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        );
+        Self::create(std::env::temp_dir().join(unique), cfg, MetricsRegistry::new())
+    }
+
+    pub fn partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn config(&self) -> &LogConfig {
+        &self.cfg
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Stable source -> partition routing (FNV over the source id).
+    pub fn partition_for(&self, source: u32) -> usize {
+        (fnv1a64(&source.to_le_bytes()) % self.parts.len() as u64) as usize
+    }
+
+    /// Append one record; returns its offset.
+    pub fn append(&self, part: usize, ts_ns: u64, source: u32, payload: &[u8]) -> Result<u64> {
+        let mut st = self.part(part)?.lock().unwrap();
+        if st.writer.is_none() {
+            self.open_segment(&mut st)?;
+        }
+        let offset = st.next_offset;
+        let mut body = Vec::with_capacity(BODY_HEADER + payload.len());
+        body.extend_from_slice(&offset.to_le_bytes());
+        body.extend_from_slice(&ts_ns.to_le_bytes());
+        body.extend_from_slice(&source.to_le_bytes());
+        body.extend_from_slice(payload);
+        let mut frame = Vec::with_capacity(body.len() + FRAME_OVERHEAD as usize);
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        let crc = crc32(&body);
+        frame.extend_from_slice(&body);
+        frame.extend_from_slice(&crc.to_le_bytes());
+        st.writer
+            .as_mut()
+            .expect("active segment writer")
+            .write_all(&frame)
+            .context("appending log frame")?;
+        st.next_offset += 1;
+        st.bytes_total += frame.len() as u64;
+        let seg = st.segments.last_mut().expect("active segment");
+        seg.bytes += frame.len() as u64;
+        seg.records += 1;
+        self.metrics.counter("ingest.log.appends").inc();
+        self.metrics.counter("ingest.log.bytes").add(frame.len() as u64);
+        if seg.bytes >= self.cfg.segment_bytes {
+            // Seal: the next append opens a fresh segment.
+            st.writer = None;
+            self.enforce_retention(&mut st);
+        }
+        Ok(offset)
+    }
+
+    fn open_segment(&self, st: &mut PartState) -> Result<()> {
+        let path = st.dir.join(format!("seg-{:012}.log", st.next_offset));
+        let file = File::create(&path).with_context(|| format!("creating segment {path:?}"))?;
+        st.segments.push(Segment { base_offset: st.next_offset, path, bytes: 0, records: 0 });
+        st.writer = Some(file);
+        Ok(())
+    }
+
+    fn enforce_retention(&self, st: &mut PartState) {
+        while st.bytes_total > self.cfg.retention_bytes && st.segments.len() > 1 {
+            let seg = st.segments.remove(0);
+            st.bytes_total -= seg.bytes;
+            let _ = std::fs::remove_file(&seg.path);
+            st.start_offset = st.segments[0].base_offset;
+            if st.committed < st.start_offset {
+                // Retention overran the consumer: those records are gone
+                // for good. The clamp keeps consumers drainable, but the
+                // loss must be observable, not silent.
+                let lost = st.start_offset - st.committed;
+                st.lost_records += lost;
+                st.committed = st.start_offset;
+                self.metrics.counter("ingest.log.lost_unconsumed").add(lost);
+            }
+            self.metrics.counter("ingest.log.truncated_segments").inc();
+        }
+    }
+
+    /// Read up to `max` records starting at `from` (inclusive). Offsets
+    /// below the retained start are an error — the data is gone, and a
+    /// consumer must decide, not silently skip.
+    pub fn read_from(&self, part: usize, from: u64, max: usize) -> Result<Vec<LogRecord>> {
+        let st = self.part(part)?.lock().unwrap();
+        if from < st.start_offset {
+            bail!(
+                "partition {part} offset {from} below retained start {} (truncated by retention)",
+                st.start_offset
+            );
+        }
+        if from >= st.next_offset || max == 0 {
+            return Ok(Vec::new());
+        }
+        let first = match st.segments.iter().rposition(|s| s.base_offset <= from) {
+            Some(i) => i,
+            None => bail!("partition {part} has no segment covering offset {from}"),
+        };
+        let mut out = Vec::new();
+        for seg in &st.segments[first..] {
+            if out.len() >= max {
+                break;
+            }
+            let bytes = std::fs::read(&seg.path)
+                .with_context(|| format!("reading segment {:?}", seg.path))?;
+            decode_frames(&bytes, seg.base_offset, |rec| {
+                if rec.offset >= from {
+                    out.push(rec);
+                }
+                // Stop decoding (and CRC-checking) once the batch is full.
+                out.len() < max
+            })?;
+        }
+        Ok(out)
+    }
+
+    /// Scan a whole partition, counting records whose CRC fails instead
+    /// of erroring (diagnostics / dead-letter audits).
+    pub fn verify(&self, part: usize) -> Result<(u64, u64)> {
+        let st = self.part(part)?.lock().unwrap();
+        let (mut ok, mut bad) = (0u64, 0u64);
+        for seg in &st.segments {
+            let bytes = std::fs::read(&seg.path)
+                .with_context(|| format!("reading segment {:?}", seg.path))?;
+            let mut off = 0usize;
+            while off + 4 <= bytes.len() {
+                let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+                if off + 4 + len + 4 > bytes.len() {
+                    bad += 1;
+                    break;
+                }
+                let body = &bytes[off + 4..off + 4 + len];
+                let stored = u32::from_le_bytes(
+                    bytes[off + 4 + len..off + 8 + len].try_into().unwrap(),
+                );
+                if crc32(body) == stored && len >= BODY_HEADER {
+                    ok += 1;
+                } else {
+                    bad += 1;
+                }
+                off += 4 + len + 4;
+            }
+        }
+        Ok((ok, bad))
+    }
+
+    /// Advance the consumer offset (monotonic; exclusive upper bound).
+    pub fn commit(&self, part: usize, upto: u64) -> Result<()> {
+        let mut st = self.part(part)?.lock().unwrap();
+        st.committed = st.committed.max(upto.min(st.next_offset));
+        Ok(())
+    }
+
+    pub fn committed(&self, part: usize) -> u64 {
+        self.parts[part].lock().unwrap().committed
+    }
+
+    pub fn next_offset(&self, part: usize) -> u64 {
+        self.parts[part].lock().unwrap().next_offset
+    }
+
+    pub fn start_offset(&self, part: usize) -> u64 {
+        self.parts[part].lock().unwrap().start_offset
+    }
+
+    /// Unconsumed records in a partition (the backpressure signal).
+    pub fn lag(&self, part: usize) -> u64 {
+        let st = self.parts[part].lock().unwrap();
+        st.next_offset - st.committed
+    }
+
+    /// Records retention truncated before any consumer read them. A
+    /// non-zero value means the retention budget overran the compactor
+    /// (raise `retention_bytes` or lower the gateway's `max_lag`).
+    pub fn lost_records(&self, part: usize) -> u64 {
+        self.parts[part].lock().unwrap().lost_records
+    }
+
+    /// Total bytes currently retained across all partitions.
+    pub fn retained_bytes(&self) -> u64 {
+        self.parts.iter().map(|p| p.lock().unwrap().bytes_total).sum()
+    }
+
+    fn part(&self, part: usize) -> Result<&Mutex<PartState>> {
+        self.parts
+            .get(part)
+            .ok_or_else(|| anyhow::anyhow!("partition {part} out of range 0..{}", self.parts.len()))
+    }
+}
+
+impl Drop for PartitionedLog {
+    fn drop(&mut self) {
+        // Best-effort cleanup of temp logs (mirrors UnderStore).
+        if self.root.starts_with(std::env::temp_dir()) {
+            let _ = std::fs::remove_dir_all(&self.root);
+        }
+    }
+}
+
+/// Decode frames in a segment's bytes, calling `sink` per record until
+/// it returns `false` (lets callers stop once a batch is full).
+fn decode_frames(
+    bytes: &[u8],
+    base_offset: u64,
+    mut sink: impl FnMut(LogRecord) -> bool,
+) -> Result<()> {
+    let mut off = 0usize;
+    let mut expect = base_offset;
+    while off < bytes.len() {
+        if off + 4 > bytes.len() {
+            bail!("segment truncated mid frame header at byte {off}");
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        if len < BODY_HEADER || off + 4 + len + 4 > bytes.len() {
+            bail!("segment frame at byte {off} claims {len} body bytes");
+        }
+        let body = &bytes[off + 4..off + 4 + len];
+        let stored = u32::from_le_bytes(bytes[off + 4 + len..off + 8 + len].try_into().unwrap());
+        if crc32(body) != stored {
+            bail!("CRC mismatch on record {expect} (frame at byte {off})");
+        }
+        let offset = u64::from_le_bytes(body[0..8].try_into().unwrap());
+        let ts_ns = u64::from_le_bytes(body[8..16].try_into().unwrap());
+        let source = u32::from_le_bytes(body[16..20].try_into().unwrap());
+        if offset != expect {
+            bail!("offset discontinuity: segment holds {offset}, expected {expect}");
+        }
+        let more = sink(LogRecord { offset, ts_ns, source, payload: body[BODY_HEADER..].to_vec() });
+        if !more {
+            break;
+        }
+        expect += 1;
+        off += 4 + len + 4;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_log(partitions: usize, segment: u64, retention: u64) -> Arc<PartitionedLog> {
+        PartitionedLog::temp(
+            "ut",
+            LogConfig { partitions, segment_bytes: segment, retention_bytes: retention },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn append_read_roundtrip() {
+        let log = small_log(2, 1 << 20, 1 << 30);
+        for i in 0..10u64 {
+            let off = log.append(0, i * 100, 7, &[i as u8; 16]).unwrap();
+            assert_eq!(off, i);
+        }
+        let recs = log.read_from(0, 0, 100).unwrap();
+        assert_eq!(recs.len(), 10);
+        assert_eq!(recs[3].offset, 3);
+        assert_eq!(recs[3].ts_ns, 300);
+        assert_eq!(recs[3].source, 7);
+        assert_eq!(recs[3].payload, vec![3u8; 16]);
+        // Offset-addressed read from the middle, bounded by max.
+        let mid = log.read_from(0, 6, 2).unwrap();
+        assert_eq!(mid.iter().map(|r| r.offset).collect::<Vec<_>>(), vec![6, 7]);
+        // Other partition untouched.
+        assert!(log.read_from(1, 0, 10).unwrap().is_empty());
+    }
+
+    #[test]
+    fn segments_roll_and_reads_span_them() {
+        // Tiny segments: every record or two rolls a new file.
+        let log = small_log(1, 64, 1 << 30);
+        for i in 0..50u64 {
+            log.append(0, i, 1, &[0u8; 24]).unwrap();
+        }
+        let recs = log.read_from(0, 0, 1000).unwrap();
+        assert_eq!(recs.len(), 50);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.offset, i as u64);
+        }
+    }
+
+    #[test]
+    fn retention_truncates_oldest_and_reads_below_start_fail() {
+        let log = small_log(1, 128, 384);
+        for i in 0..100u64 {
+            log.append(0, i, 1, &[0u8; 32]).unwrap();
+        }
+        assert!(log.start_offset(0) > 0, "retention must have truncated");
+        // Budget is enforced at seal time, so the bound is retention
+        // plus one in-flight segment's worth of slack.
+        assert!(log.retained_bytes() <= 2 * 384, "budget roughly respected");
+        let start = log.start_offset(0);
+        assert!(log.read_from(0, 0, 10).is_err(), "reading truncated offsets must fail");
+        let recs = log.read_from(0, start, 1000).unwrap();
+        assert_eq!(recs.first().unwrap().offset, start);
+        assert_eq!(recs.last().unwrap().offset, 99);
+        // Nothing was ever committed, so every truncated record counts
+        // as lost — the overrun is observable, not silent.
+        assert_eq!(log.lost_records(0), start);
+    }
+
+    #[test]
+    fn corruption_is_detected_on_read() {
+        let log = small_log(1, 1 << 20, 1 << 30);
+        for i in 0..5u64 {
+            log.append(0, i, 1, &[7u8; 64]).unwrap();
+        }
+        // Flip one payload byte in the active segment file.
+        let dir = std::fs::read_dir(log.root.join("partition-000")).unwrap();
+        let seg = dir.map(|e| e.unwrap().path()).next().unwrap();
+        let mut bytes = std::fs::read(&seg).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&seg, &bytes).unwrap();
+        assert!(log.read_from(0, 0, 10).is_err(), "bit flip must fail the CRC");
+        let (ok, bad) = log.verify(0).unwrap();
+        assert!(bad >= 1, "verify must count the corrupt record");
+        assert!(ok < 5);
+    }
+
+    #[test]
+    fn commit_and_lag_track_consumption() {
+        let log = small_log(1, 1 << 20, 1 << 30);
+        for i in 0..8u64 {
+            log.append(0, i, 1, b"x").unwrap();
+        }
+        assert_eq!(log.lag(0), 8);
+        log.commit(0, 5).unwrap();
+        assert_eq!(log.committed(0), 5);
+        assert_eq!(log.lag(0), 3);
+        // Commits are monotonic and clamped to the head.
+        log.commit(0, 2).unwrap();
+        assert_eq!(log.committed(0), 5);
+        log.commit(0, 99).unwrap();
+        assert_eq!(log.committed(0), 8);
+        assert_eq!(log.lag(0), 0);
+    }
+
+    #[test]
+    fn partition_routing_is_stable_and_in_range() {
+        let log = small_log(4, 1 << 20, 1 << 30);
+        for v in 0..100u32 {
+            let p = log.partition_for(v);
+            assert!(p < 4);
+            assert_eq!(p, log.partition_for(v), "routing must be deterministic");
+        }
+        // All partitions get some traffic.
+        let hit: std::collections::HashSet<usize> =
+            (0..100u32).map(|v| log.partition_for(v)).collect();
+        assert_eq!(hit.len(), 4);
+    }
+
+    #[test]
+    fn out_of_range_partition_errors() {
+        let log = small_log(2, 1 << 20, 1 << 30);
+        assert!(log.append(5, 0, 1, b"x").is_err());
+        assert!(log.read_from(5, 0, 1).is_err());
+    }
+}

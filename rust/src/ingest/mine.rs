@@ -1,0 +1,396 @@
+//! Scenario mining: turn compacted fleet drives into test scenarios.
+//!
+//! A DCE job scans the compacted blocks in the tiered store for safety
+//! events — hard brakes, disengagements, sensor dropouts — and distills
+//! each into a [`ScenarioSpec`] inside a named `mined-*` family. The
+//! emitted specs satisfy every invariant the scenario engine enforces
+//! (quadrant exclusivity, actor bounds, exact-f64 seeds), so
+//! [`crate::scenario::run_campaign`] executes them unmodified: the
+//! loop from fleet data back into qualification campaigns.
+//!
+//! Mining is deterministic: the same blocks produce byte-identical
+//! spec sets (every spec parameter derives from the event's identity
+//! through the in-tree RNG), which the e2e tests assert via
+//! [`crate::scenario::campaign_digest`].
+
+use anyhow::Result;
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::compact::{decode_block, BlockRef};
+use super::gateway::decode_telemetry;
+use crate::dce::DceContext;
+use crate::scenario::{
+    base_route, fnv1a64, ActorKind, ActorSpec, FaultSpec, ScenarioSpec, Weather,
+};
+use crate::storage::TieredStore;
+use crate::util::Rng;
+
+/// The event classes the miner detects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum EventKind {
+    HardBrake,
+    Disengagement,
+    SensorDropout,
+}
+
+impl EventKind {
+    pub const ALL: [EventKind; 3] =
+        [EventKind::HardBrake, EventKind::Disengagement, EventKind::SensorDropout];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::HardBrake => "hard-brake",
+            EventKind::Disengagement => "disengagement",
+            EventKind::SensorDropout => "sensor-dropout",
+        }
+    }
+}
+
+/// One detected safety event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MinedEvent {
+    pub kind: EventKind,
+    pub vehicle: u32,
+    pub ts_ns: u64,
+    pub speed_mps: f32,
+}
+
+/// Detection thresholds and spec-emission knobs.
+#[derive(Debug, Clone)]
+pub struct MinerConfig {
+    /// Deceleration at or below this is a hard brake (m/s^2).
+    pub hard_brake_mps2: f32,
+    /// Camera gap at or above this is a sensor dropout (ms).
+    pub dropout_ms: u32,
+    /// Events from one vehicle closer than this collapse into one.
+    pub merge_window_ns: u64,
+    /// Frames per emitted scenario.
+    pub frames: u32,
+    /// Cap on specs emitted per family.
+    pub max_specs_per_family: usize,
+}
+
+impl Default for MinerConfig {
+    fn default() -> Self {
+        Self {
+            hard_brake_mps2: -6.0,
+            dropout_ms: 500,
+            merge_window_ns: 500_000_000,
+            frames: 16,
+            max_specs_per_family: 64,
+        }
+    }
+}
+
+/// Scan one decoded block's telemetry for events. Rosbag-chunk payloads
+/// are skipped (the miner only reads the telemetry stream).
+pub fn scan_block(bytes: &[u8], cfg: &MinerConfig) -> Result<Vec<MinedEvent>> {
+    let mut out = Vec::new();
+    for rec in decode_block(bytes)? {
+        let Some(samples) = decode_telemetry(&rec.payload)? else {
+            continue;
+        };
+        for t in samples {
+            if t.accel_mps2 <= cfg.hard_brake_mps2 {
+                out.push(MinedEvent {
+                    kind: EventKind::HardBrake,
+                    vehicle: t.vehicle,
+                    ts_ns: t.ts_ns,
+                    speed_mps: t.speed_mps,
+                });
+            }
+            if t.disengaged {
+                out.push(MinedEvent {
+                    kind: EventKind::Disengagement,
+                    vehicle: t.vehicle,
+                    ts_ns: t.ts_ns,
+                    speed_mps: t.speed_mps,
+                });
+            }
+            if t.sensor_gap_ms >= cfg.dropout_ms {
+                out.push(MinedEvent {
+                    kind: EventKind::SensorDropout,
+                    vehicle: t.vehicle,
+                    ts_ns: t.ts_ns,
+                    speed_mps: t.speed_mps,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Sort events canonically and collapse bursts: consecutive events of
+/// one (vehicle, kind) within the merge window are one episode.
+pub fn dedupe_events(mut events: Vec<MinedEvent>, cfg: &MinerConfig) -> Vec<MinedEvent> {
+    events.sort_by(|a, b| (a.kind, a.vehicle, a.ts_ns).cmp(&(b.kind, b.vehicle, b.ts_ns)));
+    let mut out: Vec<MinedEvent> = Vec::with_capacity(events.len());
+    for e in events {
+        let merge = out.last().is_some_and(|p| {
+            p.kind == e.kind
+                && p.vehicle == e.vehicle
+                && e.ts_ns.saturating_sub(p.ts_ns) <= cfg.merge_window_ns
+        });
+        if merge {
+            // Extend the episode's window instead of emitting again.
+            out.last_mut().unwrap().ts_ns = e.ts_ns;
+        } else {
+            out.push(e);
+        }
+    }
+    out
+}
+
+/// Weather regime each event class stresses (the plausible aggravator:
+/// braking distance in rain, night handovers, fog-blind sensors).
+fn weather_for(kind: EventKind) -> Weather {
+    match kind {
+        EventKind::HardBrake => Weather::Rain,
+        EventKind::Disengagement => Weather::Night,
+        EventKind::SensorDropout => Weather::Fog,
+    }
+}
+
+/// Actor class planted in front of the replayed event.
+fn actor_kind_for(kind: EventKind) -> ActorKind {
+    match kind {
+        EventKind::HardBrake => ActorKind::Vehicle,
+        EventKind::Disengagement => ActorKind::Pedestrian,
+        EventKind::SensorDropout => ActorKind::Debris,
+    }
+}
+
+/// One actor with the scenario engine's placement discipline (4 px
+/// quadrant margin, 8..=12 px boxes, dx+w <= 24).
+fn gen_actor(kind: ActorKind, quadrant: u8, frames: u32, rng: &mut Rng) -> ActorSpec {
+    let w = 8 + rng.below(5) as u8;
+    let h = 8 + rng.below(5) as u8;
+    let dx = rng.below(25 - w as u64) as u8;
+    let dy = rng.below(25 - h as u64) as u8;
+    let appear = rng.below((frames as u64 / 2).max(1)) as u32;
+    let vanish = appear + 1 + rng.below(frames.max(1) as u64 * 2) as u32;
+    ActorSpec { kind, quadrant, dx, dy, w, h, appear, vanish }
+}
+
+/// Distill one event into a reproducible scenario spec. Every parameter
+/// derives from the event's identity, so mining is deterministic.
+pub fn event_to_spec(event: &MinedEvent, index: usize, cfg: &MinerConfig) -> ScenarioSpec {
+    let identity = format!("{}:{}:{}", event.kind.name(), event.vehicle, event.ts_ns);
+    // Keep the seed < 2^32 so the spec's JSON f64 representation is exact.
+    let seed = fnv1a64(identity.as_bytes()) & 0xFFFF_FFFF;
+    let mut rng = Rng::new(seed);
+    let route = base_route(&mut rng);
+    let actors_n = if event.kind == EventKind::HardBrake { 2 } else { 1 };
+    let mut quadrants = [0u8, 1, 2, 3];
+    rng.shuffle(&mut quadrants);
+    let actors = quadrants[..actors_n]
+        .iter()
+        .map(|&q| gen_actor(actor_kind_for(event.kind), q, cfg.frames, &mut rng))
+        .collect();
+    // Faster drives get noisier sensors; dropouts replay with the
+    // recording-path faults that produced them.
+    let pixel_noise =
+        crate::scenario::spec::round3(0.01 + (event.speed_mps as f64 / 33.0).min(1.0) * 0.05);
+    let faults = if event.kind == EventKind::SensorDropout {
+        FaultSpec { drop_rate: 0.1, corrupt_rate: 0.05 }
+    } else {
+        FaultSpec::none()
+    };
+    ScenarioSpec {
+        id: format!("mined-{}-{index:04}", event.kind.name()),
+        family: format!("mined-{}", event.kind.name()),
+        seed,
+        frames: cfg.frames,
+        weather: weather_for(event.kind),
+        pixel_noise,
+        route,
+        actors,
+        faults,
+    }
+}
+
+/// Mining outcome: the events found and the spec families emitted.
+#[derive(Debug, Clone)]
+pub struct MineReport {
+    pub events: Vec<MinedEvent>,
+    pub specs: Vec<ScenarioSpec>,
+    pub records_scanned: u64,
+    pub elapsed: Duration,
+}
+
+impl MineReport {
+    /// Distinct family names, sorted.
+    pub fn families(&self) -> Vec<String> {
+        let set: std::collections::BTreeSet<String> =
+            self.specs.iter().map(|s| s.family.clone()).collect();
+        set.into_iter().collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "mined {} events from {} records in {}:\n",
+            self.events.len(),
+            self.records_scanned,
+            crate::util::fmt_duration(self.elapsed),
+        );
+        for family in self.families() {
+            let n = self.specs.iter().filter(|s| s.family == family).count();
+            out.push_str(&format!("  {family:<24} {n} scenario(s)\n"));
+        }
+        out
+    }
+}
+
+/// Run the mining job: shard the block list over the compute engine,
+/// scan each block inside its partition's task, and distill the merged
+/// event stream into scenario families.
+pub fn mine(
+    ctx: &DceContext,
+    store: &Arc<TieredStore>,
+    blocks: &[BlockRef],
+    cfg: &MinerConfig,
+) -> Result<MineReport> {
+    let start = Instant::now();
+    let records_scanned = blocks.iter().map(|b| b.records as u64).sum();
+    let keys: Vec<String> = blocks.iter().map(|b| b.key.clone()).collect();
+    let parts = keys.len().clamp(1, ctx.default_parallelism());
+    let (store2, cfg2) = (store.clone(), cfg.clone());
+    let events: Vec<MinedEvent> = ctx
+        .parallelize(keys, parts)
+        .map_partitions(move |_, keys: Vec<String>| {
+            let mut out = Vec::new();
+            for key in keys {
+                let bytes = store2.get(&key)?;
+                out.extend(scan_block(&bytes, &cfg2)?);
+            }
+            Ok(out)
+        })
+        .collect()?;
+    let events = dedupe_events(events, cfg);
+    ctx.metrics().counter("ingest.mine.events").add(events.len() as u64);
+    let mut specs: Vec<ScenarioSpec> = Vec::new();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut per_family = [0usize; 3];
+    for e in &events {
+        let fam = EventKind::ALL.iter().position(|k| *k == e.kind).unwrap();
+        if per_family[fam] >= cfg.max_specs_per_family {
+            continue;
+        }
+        let spec = event_to_spec(e, per_family[fam], cfg);
+        if seen.insert(spec.content_hash()) {
+            per_family[fam] += 1;
+            specs.push(spec);
+        }
+    }
+    ctx.metrics().counter("ingest.mine.specs").add(specs.len() as u64);
+    Ok(MineReport { events, specs, records_scanned, elapsed: start.elapsed() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::ingest::compact::{compact, CompactorConfig};
+    use crate::ingest::gateway::{encode_telemetry, gen_drive};
+    use crate::ingest::log::{LogConfig, PartitionedLog};
+    use crate::metrics::MetricsRegistry;
+    use crate::resource::ResourceManager;
+    use crate::util::json::Json;
+
+    /// Ingest a deterministic fleet and compact it; returns the blocks.
+    fn compacted_fixture(
+        store: &Arc<TieredStore>,
+        vehicles: u32,
+        ticks: usize,
+    ) -> Vec<BlockRef> {
+        let log = PartitionedLog::temp("mine", LogConfig::default()).unwrap();
+        for v in 0..vehicles {
+            let drive = gen_drive(v, 11, ticks);
+            for chunk in drive.chunks(8) {
+                let p = log.partition_for(v);
+                log.append(p, chunk[0].ts_ns, v, &encode_telemetry(chunk)).unwrap();
+            }
+        }
+        let cfg = PlatformConfig::test();
+        let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
+        compact(&log, store, &rm, &CompactorConfig::new("mine-fix", 2)).unwrap().blocks
+    }
+
+    #[test]
+    fn mining_finds_every_event_family() {
+        let ctx = DceContext::new(PlatformConfig::test()).unwrap();
+        let blocks = compacted_fixture(ctx.store(), 8, 400);
+        let report = mine(&ctx, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
+        assert!(!report.events.is_empty());
+        assert_eq!(
+            report.families(),
+            vec![
+                "mined-disengagement".to_string(),
+                "mined-hard-brake".to_string(),
+                "mined-sensor-dropout".to_string()
+            ],
+            "all three event classes must surface at this fleet size"
+        );
+        assert!(report.specs.len() >= 3);
+    }
+
+    #[test]
+    fn mining_is_deterministic() {
+        let ctx = DceContext::new(PlatformConfig::test()).unwrap();
+        let blocks = compacted_fixture(ctx.store(), 4, 300);
+        let a = mine(&ctx, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
+        let b = mine(&ctx, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
+        assert_eq!(a.events, b.events);
+        assert_eq!(
+            crate::scenario::campaign_digest(&a.specs),
+            crate::scenario::campaign_digest(&b.specs)
+        );
+    }
+
+    #[test]
+    fn mined_specs_satisfy_scenario_invariants() {
+        let ctx = DceContext::new(PlatformConfig::test()).unwrap();
+        let blocks = compacted_fixture(ctx.store(), 6, 300);
+        let report = mine(&ctx, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
+        for s in &report.specs {
+            // from_json re-runs every spec validity check; a mined spec
+            // must survive it so campaigns can execute it unmodified.
+            let back = ScenarioSpec::from_json(&Json::parse(&s.canonical_json()).unwrap())
+                .unwrap_or_else(|e| panic!("mined spec {} invalid: {e:#}", s.id));
+            assert_eq!(&back, s);
+        }
+        let hashes: HashSet<u64> = report.specs.iter().map(|s| s.content_hash()).collect();
+        assert_eq!(hashes.len(), report.specs.len(), "content hashes must be distinct");
+    }
+
+    #[test]
+    fn dedupe_collapses_bursts_per_vehicle() {
+        let cfg = MinerConfig::default();
+        let e = |v: u32, ts: u64, kind| MinedEvent { kind, vehicle: v, ts_ns: ts, speed_mps: 10.0 };
+        let events = vec![
+            e(1, 0, EventKind::HardBrake),
+            e(1, 100_000_000, EventKind::HardBrake), // same episode
+            e(1, 200_000_000, EventKind::HardBrake), // still the same
+            e(1, 5_000_000_000, EventKind::HardBrake), // new episode
+            e(2, 100_000_000, EventKind::HardBrake), // other vehicle
+            e(1, 100_000_000, EventKind::Disengagement), // other kind
+        ];
+        let deduped = dedupe_events(events, &cfg);
+        assert_eq!(deduped.len(), 4);
+    }
+
+    #[test]
+    fn scan_skips_bag_chunks() {
+        let cfg = MinerConfig::default();
+        let recs = vec![crate::ingest::log::LogRecord {
+            offset: 0,
+            ts_ns: 0,
+            source: 1,
+            payload: crate::services::simulation::encode_bag(&[]),
+        }];
+        let block = crate::ingest::compact::encode_block(&recs);
+        assert!(scan_block(&block, &cfg).unwrap().is_empty());
+    }
+}

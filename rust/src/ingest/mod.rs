@@ -1,0 +1,36 @@
+//! Fleet ingestion: the platform's data plane front door.
+//!
+//! The paper's cloud exists to absorb what the fleet produces — raw
+//! sensor and bag data must land in the unified storage layer before
+//! simulation, training, and HD-map generation can consume it. This
+//! subsystem is that path:
+//!
+//! * [`log`] — the Kafka-analog durable partitioned log: segmented
+//!   append-only partitions, offset-addressed reads, CRC-checked
+//!   records, retention truncation.
+//! * [`gateway`] — the ingest gateway a simulated fleet uploads
+//!   telemetry and rosbag chunks through: per-vehicle rate limiting,
+//!   backpressure when partitions lag, dead-lettering of corrupt
+//!   uploads.
+//! * [`compact`] — container-granted workers that drain partitions
+//!   into blocks in the Alluxio-analog tiered store, with lineage
+//!   registered so a lost block is recomputable from the log.
+//! * [`mine`] — a DCE job over the compacted drives that detects
+//!   hard-brake / disengagement / sensor-dropout events and emits
+//!   [`crate::scenario::ScenarioSpec`] families the campaign engine
+//!   executes unmodified.
+
+pub mod compact;
+pub mod gateway;
+pub mod log;
+pub mod mine;
+
+pub use compact::{
+    compact, decode_block, encode_block, BlockRef, CompactionReport, CompactorConfig,
+};
+pub use gateway::{
+    decode_telemetry, encode_telemetry, gen_drive, simulate_fleet, Admission, DeadLetter,
+    FleetConfig, FleetReport, GatewayConfig, IngestGateway, Telemetry, VehicleUpload,
+};
+pub use log::{crc32, LogConfig, LogRecord, PartitionedLog};
+pub use mine::{mine, EventKind, MineReport, MinedEvent, MinerConfig};

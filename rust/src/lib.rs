@@ -25,6 +25,9 @@
 //! * [`hetero`] — kernel registry + dispatch across CPU / GPU-class /
 //!   FPGA-class devices.
 //! * [`runtime`] — the PJRT artifact runtime (device-server threads).
+//! * [`ingest`] — the fleet data plane: partitioned telemetry log,
+//!   ingest gateway (rate limiting, backpressure, dead-letter),
+//!   compaction into tiered storage, and scenario mining.
 //! * [`scenario`] — procedural scenario generation + distributed test
 //!   campaigns (spec → generate → campaign → qualification report).
 //! * [`services`] — simulation, training, HD-map generation, SQL.
@@ -33,6 +36,7 @@
 pub mod config;
 pub mod dce;
 pub mod hetero;
+pub mod ingest;
 pub mod mapreduce;
 pub mod metrics;
 pub mod platform;

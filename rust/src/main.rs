@@ -5,6 +5,8 @@
 //!   quickstart                   tiny end-to-end demo job
 //!   simulate  [--bags N] [--frames M] [--piped]
 //!   campaign  [--seed S] [--scenarios N] [--nodes K] [--frames F]
+//!   ingest    [--vehicles N] [--ticks T] [--partitions P] [--workers W]
+//!             [--campaign]   fleet ingest -> compaction -> scenario mining
 //!   train     [--examples N] [--rounds R] [--workers W]
 //!   mapgen    [--steps N]
 //!   sql       [--rows N]
@@ -81,6 +83,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "quickstart" => quickstart(&flags),
         "simulate" => simulate(&flags),
         "campaign" => campaign(&flags),
+        "ingest" => run_ingest(&flags),
         "train" => train(&flags),
         "mapgen" => run_mapgen(&flags),
         "sql" => run_sql(&flags),
@@ -96,7 +99,7 @@ fn run(args: Vec<String>) -> Result<()> {
         other => {
             eprintln!("unknown command '{other}'");
             eprintln!(
-                "commands: info quickstart simulate campaign train mapgen sql repro-tables pipe-worker metrics"
+                "commands: info quickstart simulate campaign ingest train mapgen sql repro-tables pipe-worker metrics"
             );
             std::process::exit(2);
         }
@@ -184,6 +187,47 @@ fn campaign(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = scenario::CampaignConfig::new(format!("campaign-{seed}"), nodes);
     let report = scenario::run_campaign(&p.ctx, &p.resources, &specs, &cfg)?;
     println!("{}", report.render());
+    Ok(())
+}
+
+fn run_ingest(flags: &HashMap<String, String>) -> Result<()> {
+    use adcloud::ingest;
+    let p = Platform::boot(config_from(flags))?;
+    let vehicles = flag(flags, "vehicles", 16u32);
+    let ticks = flag(flags, "ticks", 200usize);
+    let partitions = flag(flags, "partitions", 4usize);
+    let workers = flag(flags, "workers", 2usize);
+    println!("{}", p.describe());
+    println!("ingesting {vehicles} vehicles x {ticks} ticks into {partitions} partition(s)");
+
+    let log = ingest::PartitionedLog::temp(
+        "cli",
+        ingest::LogConfig { partitions, ..Default::default() },
+    )?;
+    let gw = ingest::IngestGateway::new(
+        log.clone(),
+        ingest::GatewayConfig::default(),
+        p.metrics.clone(),
+    );
+    let mut fleet_cfg = ingest::FleetConfig::new(vehicles, ticks, p.config.seed);
+    fleet_cfg.corrupt_rate = 0.02;
+    let fleet = ingest::simulate_fleet(&gw, &fleet_cfg)?;
+    println!("{}", fleet.render());
+
+    let ccfg = ingest::CompactorConfig::new("cli-ingest", workers);
+    let compaction = ingest::compact(&log, p.ctx.store(), &p.resources, &ccfg)?;
+    println!("{}", compaction.render());
+
+    let mined =
+        ingest::mine(&p.ctx, p.ctx.store(), &compaction.blocks, &ingest::MinerConfig::default())?;
+    print!("{}", mined.render());
+
+    if flags.contains_key("campaign") && !mined.specs.is_empty() {
+        let cfg = scenario::CampaignConfig::new("ingest-mined", workers);
+        let report = scenario::run_campaign(&p.ctx, &p.resources, &mined.specs, &cfg)?;
+        println!("{}", report.render());
+    }
+    println!("ingest done");
     Ok(())
 }
 

@@ -68,7 +68,10 @@ impl MapReduceEngine {
             // Real DFS write of the charged size (placeholder payload —
             // the typed data itself stays in memory, the *cost* is real).
             self.dfs
-                .write(&format!("mr/input-{i:05}"), &vec![0u8; est_bytes::<T>(chunk.len()) as usize])?;
+                .write(
+                    &format!("mr/input-{i:05}"),
+                    &vec![0u8; est_bytes::<T>(chunk.len()) as usize],
+                )?;
             chunks.push(Arc::new(chunk));
         }
         Ok(MrFile { parts: chunks })

@@ -40,10 +40,15 @@ pub struct Histogram {
 impl Default for Histogram {
     fn default() -> Self {
         // 1us .. ~1000s, roughly x4 per bucket.
-        let bounds: Vec<u64> =
-            (0..16).map(|i| 1u64 << (2 * i)).collect();
+        let bounds: Vec<u64> = (0..16).map(|i| 1u64 << (2 * i)).collect();
         let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
-        Self { bounds, buckets, count: AtomicU64::new(0), sum_us: AtomicU64::new(0), max_us: AtomicU64::new(0) }
+        Self {
+            bounds,
+            buckets,
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
     }
 }
 
@@ -92,7 +97,11 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                let us = if i < self.bounds.len() { self.bounds[i] } else { self.max_us.load(Ordering::Relaxed) };
+                let us = if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max_us.load(Ordering::Relaxed)
+                };
                 return Duration::from_micros(us);
             }
         }

@@ -66,8 +66,8 @@ impl Table {
     }
 }
 
-pub const ALL_IDS: [&str; 13] =
-    ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13"];
+pub const ALL_IDS: [&str; 14] =
+    ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13", "e14"];
 
 /// Run one experiment by id. `quick` shrinks workloads for CI/tests.
 pub fn run_experiment(id: &str, quick: bool) -> Result<Table> {
@@ -85,6 +85,7 @@ pub fn run_experiment(id: &str, quick: bool) -> Result<Table> {
         "e11" => e11_icp(quick),
         "e12" => e12_reliability(quick),
         "e13" => e13_campaign(quick),
+        "e14" => e14_ingest(quick),
         other => Err(anyhow!("unknown experiment '{other}' (have {ALL_IDS:?})")),
     }
 }
@@ -224,6 +225,9 @@ fn e2_storage(quick: bool) -> Result<Table> {
     }
     let dfs_time = t.elapsed();
     let total_bytes = (blocks * (reads + 1) * block) as u64;
+    let bw = |t: Duration| {
+        format!("{}/s", crate::util::fmt_bytes((total_bytes as f64 / t.as_secs_f64()) as u64))
+    };
     Ok(Table {
         id: "e2",
         title: format!(
@@ -238,13 +242,13 @@ fn e2_storage(quick: bool) -> Result<Table> {
             vec![
                 "tiered (mem-speed, async persist)".into(),
                 fmt_duration(tiered_time),
-                format!("{}/s", crate::util::fmt_bytes((total_bytes as f64 / tiered_time.as_secs_f64()) as u64)),
+                bw(tiered_time),
                 speedup(dfs_time, tiered_time),
             ],
             vec![
                 "dfs only (1GbE remote)".into(),
                 fmt_duration(dfs_time),
-                format!("{}/s", crate::util::fmt_bytes((total_bytes as f64 / dfs_time.as_secs_f64()) as u64)),
+                bw(dfs_time),
                 "1.0x".into(),
             ],
         ],
@@ -1038,12 +1042,130 @@ fn e13_campaign(quick: bool) -> Result<Table> {
     })
 }
 
+// ===========================================================================
+// E14: sustained ingest throughput, 1 -> 8 log partitions
+// ===========================================================================
+
+/// One timed ingest run: `parts` producer threads (one per partition)
+/// append a fixed record stream; optionally a concurrent compactor
+/// drains the partitions into a tiered store while they write.
+fn e14_run(
+    parts: usize,
+    records_per_part: u64,
+    payload: &[u8],
+    with_compaction: bool,
+) -> Result<Duration> {
+    use crate::ingest::{LogConfig, PartitionedLog};
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let log = PartitionedLog::temp(
+        "e14",
+        LogConfig {
+            partitions: parts,
+            segment_bytes: 512 << 10,
+            retention_bytes: 1 << 30,
+        },
+    )?;
+    let store = crate::storage::TieredStore::test_store(&PlatformConfig::test().storage);
+    let stop = AtomicBool::new(false);
+    let mut elapsed = Duration::ZERO;
+    std::thread::scope(|s| -> Result<()> {
+        let drainer = with_compaction.then(|| {
+            let (log, store, stop) = (log.clone(), store.clone(), &stop);
+            s.spawn(move || {
+                // A lean consumer loop: read committed..head, pack the
+                // batch into a block, land it, commit — the same lock
+                // and store traffic the container compactor generates.
+                while !stop.load(Ordering::Relaxed) {
+                    let mut idle = true;
+                    for p in 0..log.partitions() {
+                        let from = log.committed(p);
+                        if let Ok(batch) = log.read_from(p, from, 512) {
+                            if let Some(last) = batch.last() {
+                                idle = false;
+                                let next = last.offset + 1;
+                                let block = crate::ingest::encode_block(&batch);
+                                let _ = store.put(&format!("e14/p{p}/b{from:010}"), block);
+                                let _ = log.commit(p, next);
+                            }
+                        }
+                    }
+                    if idle {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        });
+        let t = Instant::now();
+        let mut producers = Vec::new();
+        for p in 0..parts {
+            let log = log.clone();
+            producers.push(s.spawn(move || -> Result<()> {
+                for i in 0..records_per_part {
+                    log.append(p, i * 100_000_000, p as u32, payload)?;
+                }
+                Ok(())
+            }));
+        }
+        for h in producers {
+            h.join().expect("e14 producer panicked")?;
+        }
+        elapsed = t.elapsed();
+        stop.store(true, Ordering::Relaxed);
+        if let Some(d) = drainer {
+            let _ = d.join();
+        }
+        Ok(())
+    })?;
+    Ok(elapsed)
+}
+
+fn e14_ingest(quick: bool) -> Result<Table> {
+    let records_per_part = if quick { 2_000u64 } else { 20_000 };
+    let payload = vec![7u8; 256];
+    let mut rows = Vec::new();
+    let mut base: Option<f64> = None;
+    for parts in [1usize, 2, 4, 8] {
+        let total = records_per_part * parts as u64;
+        let plain = e14_run(parts, records_per_part, &payload, false)?;
+        let contended = e14_run(parts, records_per_part, &payload, true)?;
+        let rps = total as f64 / plain.as_secs_f64().max(1e-9);
+        let rps_c = total as f64 / contended.as_secs_f64().max(1e-9);
+        let b = *base.get_or_insert(rps);
+        rows.push(vec![
+            format!("{parts}"),
+            format!("{:.0}/s", rps),
+            format!("{:.0}/s", rps_c),
+            format!("{:.0}%", rps_c / rps * 100.0),
+            format!("{:.2}x", rps / b),
+        ]);
+    }
+    Ok(Table {
+        id: "e14",
+        title: format!(
+            "sustained fleet ingest, {records_per_part} x 256 B records per partition \
+             (one producer thread per partition)"
+        ),
+        mode: "real",
+        header: vec!["partitions", "ingest only", "with compaction", "retained", "scaling"],
+        rows,
+        notes: "partitioned appends are independent, so throughput should grow with \
+                partition count until the disk or core budget saturates; the compaction \
+                column shows the cost of a concurrent drain contending for partition locks."
+            .into(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn have_artifacts() -> bool {
-        crate::artifacts_dir().join("manifest.json").is_file()
+        let ok = crate::artifacts_dir().join("manifest.json").is_file();
+        if !ok {
+            eprintln!("skipped: run `make artifacts` to enable artifact-gated tests");
+        }
+        ok
     }
 
     #[test]
@@ -1095,6 +1217,19 @@ mod tests {
         let speedup: f64 =
             t.rows.last().unwrap()[3].trim_end_matches('x').parse().unwrap();
         assert!(speedup > 2.0, "campaign speedup {speedup} too sub-linear");
+    }
+
+    #[test]
+    fn e14_ingest_runs_without_artifacts() {
+        // The ingest experiment is pure infrastructure — no artifacts gate.
+        let t = run_experiment("e14", true).unwrap();
+        assert_eq!(t.rows.len(), 4, "{:?}", t.rows);
+        for row in &t.rows {
+            let rps: f64 = row[1].trim_end_matches("/s").parse().unwrap();
+            assert!(rps > 0.0, "throughput must be positive: {row:?}");
+            let retained: f64 = row[3].trim_end_matches('%').parse().unwrap();
+            assert!(retained > 0.0, "contended run must still make progress: {row:?}");
+        }
     }
 
     #[test]

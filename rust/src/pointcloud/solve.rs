@@ -217,7 +217,8 @@ mod tests {
             // Build H = sum a_i b_i^T with b = R a.
             let mut h = [[0f32; 3]; 3];
             for _ in 0..50 {
-                let a = [rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0)];
+                let a =
+                    [rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0)];
                 let b = m_apply(&r_true, a);
                 for i in 0..3 {
                     for j in 0..3 {

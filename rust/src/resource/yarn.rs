@@ -111,7 +111,11 @@ impl ResourceManager {
 
     /// Non-blocking container request. Errors if nothing fits right now
     /// or the app's queue is at its capacity cap.
-    pub fn request_container(self: &Arc<Self>, app: &str, req: ResourceVec) -> Result<ContainerRef> {
+    pub fn request_container(
+        self: &Arc<Self>,
+        app: &str,
+        req: ResourceVec,
+    ) -> Result<ContainerRef> {
         let mut inner = self.inner.lock().unwrap();
         self.try_grant(&mut inner, app, req)
     }

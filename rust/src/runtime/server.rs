@@ -81,7 +81,9 @@ fn device_loop(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>, metrics: Me
     };
     let mut exes: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
 
-    let compile = |name: &str, exes: &mut HashMap<String, xla::PjRtLoadedExecutable>| -> Result<()> {
+    let compile = |name: &str,
+                   exes: &mut HashMap<String, xla::PjRtLoadedExecutable>|
+     -> Result<()> {
         if exes.contains_key(name) {
             return Ok(());
         }
@@ -175,7 +177,11 @@ struct RuntimeInner {
 
 impl XlaRuntime {
     /// Load the manifest from `dir` and spin up `num_devices` servers.
-    pub fn new(dir: impl AsRef<std::path::Path>, num_devices: usize, metrics: MetricsRegistry) -> Result<Self> {
+    pub fn new(
+        dir: impl AsRef<std::path::Path>,
+        num_devices: usize,
+        metrics: MetricsRegistry,
+    ) -> Result<Self> {
         let manifest = Arc::new(Manifest::load(dir)?);
         let devices = (0..num_devices.max(1))
             .map(|i| DeviceServer::spawn(i, manifest.clone(), metrics.clone()))
@@ -209,7 +215,12 @@ impl XlaRuntime {
     }
 
     /// Execute an artifact on a specific device queue.
-    pub fn execute_on(&self, device: usize, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+    pub fn execute_on(
+        &self,
+        device: usize,
+        name: &str,
+        inputs: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>> {
         let dev = self
             .inner
             .devices

@@ -108,7 +108,11 @@ mod tests {
     use crate::runtime::shared_runtime;
 
     fn have_artifacts() -> bool {
-        crate::artifacts_dir().join("manifest.json").is_file()
+        let ok = crate::artifacts_dir().join("manifest.json").is_file();
+        if !ok {
+            eprintln!("skipped: run `make artifacts` to enable artifact-gated tests");
+        }
+        ok
     }
 
     fn dispatcher() -> Dispatcher {

@@ -127,7 +127,11 @@ mod tests {
     use crate::services::mapgen::trace::{gen_drive, gen_world};
 
     fn have_artifacts() -> bool {
-        crate::artifacts_dir().join("manifest.json").is_file()
+        let ok = crate::artifacts_dir().join("manifest.json").is_file();
+        if !ok {
+            eprintln!("skipped: run `make artifacts` to enable artifact-gated tests");
+        }
+        ok
     }
 
     #[test]
@@ -171,7 +175,10 @@ mod tests {
         let fused = run_fused(&d, &log, &cfg, 0.1).unwrap();
         let before = dfs.device().bytes_total();
         let staged = run_staged(&d, &dfs, &log, &cfg, 0.1).unwrap();
-        assert!(dfs.device().bytes_total() > before + 1_000_000, "staged must move MBs through DFS");
+        assert!(
+            dfs.device().bytes_total() > before + 1_000_000,
+            "staged must move MBs through DFS"
+        );
         // Same outputs either way.
         assert_eq!(fused.occupied_cells, staged.occupied_cells);
         assert_eq!(fused.signs, staged.signs);

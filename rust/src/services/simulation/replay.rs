@@ -219,7 +219,12 @@ pub fn replay_piped(
     });
     let t = truths.collect()?;
     let d = detected.collect()?;
-    anyhow::ensure!(t.len() == d.len(), "worker returned {} records for {} frames", d.len(), t.len());
+    anyhow::ensure!(
+        t.len() == d.len(),
+        "worker returned {} records for {} frames",
+        d.len(),
+        t.len()
+    );
     let exact = t.iter().zip(d.iter()).filter(|(a, b)| a == b).count();
     Ok(ReplayReport {
         frames: t.len(),
@@ -253,7 +258,11 @@ mod tests {
     use crate::runtime::shared_runtime;
 
     fn have_artifacts() -> bool {
-        crate::artifacts_dir().join("manifest.json").is_file()
+        let ok = crate::artifacts_dir().join("manifest.json").is_file();
+        if !ok {
+            eprintln!("skipped: run `make artifacts` to enable artifact-gated tests");
+        }
+        ok
     }
 
     fn dispatcher() -> Dispatcher {

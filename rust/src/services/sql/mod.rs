@@ -80,7 +80,11 @@ pub fn q1_dce(data: &Rdd<Telemetry>, parts: usize) -> Result<AggRows> {
     Ok(sorted(pairs.collect()?))
 }
 
-pub fn q1_mr(engine: &MapReduceEngine, input: &crate::mapreduce::MrFile<Telemetry>, reducers: usize) -> Result<AggRows> {
+pub fn q1_mr(
+    engine: &MapReduceEngine,
+    input: &crate::mapreduce::MrFile<Telemetry>,
+    reducers: usize,
+) -> Result<AggRows> {
     let out = engine.run(
         input,
         |t: &Telemetry| {

@@ -161,7 +161,11 @@ mod tests {
     use crate::storage::TieredStore;
 
     fn have_artifacts() -> bool {
-        crate::artifacts_dir().join("manifest.json").is_file()
+        let ok = crate::artifacts_dir().join("manifest.json").is_file();
+        if !ok {
+            eprintln!("skipped: run `make artifacts` to enable artifact-gated tests");
+        }
+        ok
     }
 
     #[test]

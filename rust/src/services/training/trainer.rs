@@ -126,7 +126,8 @@ impl DistTrainer {
                         let ps_params = ps.pull(round as u64);
                         let f: Arc<dyn Fn(usize) -> Result<(f32, Vec<Vec<f32>>)> + Send + Sync> =
                             Arc::new(move |_| {
-                                let params = ps_params.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?;
+                                let params =
+                                    ps_params.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?;
                                 let (xs, ys) = pack_batch(&shard, round * BATCH, BATCH);
                                 let ins = train_inputs(params, xs, ys)?;
                                 let out = dispatcher.run_on(device, "cnn_train_b16", &ins)?;
@@ -168,7 +169,11 @@ mod tests {
     use crate::util::Rng;
 
     fn have_artifacts() -> bool {
-        crate::artifacts_dir().join("manifest.json").is_file()
+        let ok = crate::artifacts_dir().join("manifest.json").is_file();
+        if !ok {
+            eprintln!("skipped: run `make artifacts` to enable artifact-gated tests");
+        }
+        ok
     }
 
     fn dispatcher() -> Dispatcher {

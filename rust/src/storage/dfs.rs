@@ -20,7 +20,11 @@ pub struct DfsStore {
 }
 
 impl DfsStore {
-    pub fn new(cfg: TierConfig, enforce_model: bool, metrics: MetricsRegistry) -> Result<Arc<Self>> {
+    pub fn new(
+        cfg: TierConfig,
+        enforce_model: bool,
+        metrics: MetricsRegistry,
+    ) -> Result<Arc<Self>> {
         Ok(Arc::new(Self {
             files: UnderStore::temp("dfs", cfg, enforce_model)?,
             metrics,

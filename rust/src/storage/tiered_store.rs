@@ -124,7 +124,14 @@ impl TieredStore {
             inner.entries.insert(
                 key.to_string(),
                 Entry {
-                    meta: BlockMeta { size, tier: 0, pinned: pin, last_seq: seq, hits: 0, crf: 1.0 },
+                    meta: BlockMeta {
+                        size,
+                        tier: 0,
+                        pinned: pin,
+                        last_seq: seq,
+                        hits: 0,
+                        crf: 1.0,
+                    },
                     data: data.clone(),
                 },
             );
@@ -140,7 +147,11 @@ impl TieredStore {
 
     /// Cascade over-capacity tiers downward; blocks leaving HDD are
     /// collected into `spill` for under-store write-back outside the lock.
-    fn make_room(&self, inner: &mut Inner, spill: &mut Vec<(String, Arc<Vec<u8>>, bool)>) -> Result<()> {
+    fn make_room(
+        &self,
+        inner: &mut Inner,
+        spill: &mut Vec<(String, Arc<Vec<u8>>, bool)>,
+    ) -> Result<()> {
         for tier in 0..3 {
             while inner.used[tier] > self.caps[tier] {
                 let now = self.seq.load(Ordering::Relaxed);
@@ -249,7 +260,14 @@ impl TieredStore {
             inner.entries.insert(
                 key.to_string(),
                 Entry {
-                    meta: BlockMeta { size, tier: 0, pinned: false, last_seq: seq, hits: 1, crf: 1.0 },
+                    meta: BlockMeta {
+                        size,
+                        tier: 0,
+                        pinned: false,
+                        last_seq: seq,
+                        hits: 1,
+                        crf: 1.0,
+                    },
                     data,
                 },
             );
@@ -408,6 +426,64 @@ mod tests {
         assert_eq!(s.used()[0], 90);
         s.delete("a").unwrap();
         assert_eq!(s.used()[0], 40);
+    }
+
+    #[test]
+    fn interleaved_write_read_pressure_keeps_store_consistent() {
+        // Writes continuously displace blocks downward while reads
+        // promote them back up — the exact churn the ingest compactor
+        // puts on the store. Capacity accounting must hold throughout
+        // and every block must stay readable.
+        let caps = small_cfg(300, 300, 600);
+        let s = TieredStore::test_store(&caps);
+        let mut rng = crate::util::Rng::new(4242);
+        for i in 0..120u64 {
+            let key = format!("chk/{i}");
+            s.put(&key, vec![(i % 251) as u8; 60 + (i % 5) as usize]).unwrap();
+            // Re-read a random earlier block: promotion under pressure.
+            // (Drain the async persister first so a block that already
+            // spilled past HDD is durably readable — same contract a
+            // consumer relies on.)
+            s.flush();
+            let back = rng.below(i + 1);
+            let got = s.get(&format!("chk/{back}")).unwrap();
+            assert_eq!(got[0], (back % 251) as u8, "block chk/{back} corrupted");
+            let used = s.used();
+            assert!(used[0] <= 300 && used[1] <= 300 && used[2] <= 600, "over capacity: {used:?}");
+        }
+        s.flush();
+        // Everything is still reachable afterwards, wherever it lives.
+        for i in 0..120u64 {
+            let got = s.get(&format!("chk/{i}")).unwrap();
+            assert_eq!(got[0], (i % 251) as u8);
+        }
+    }
+
+    #[test]
+    fn lineage_recovers_evicted_then_lost_block() {
+        // The compactor's recovery contract: a block pushed out of every
+        // tier whose under-store copy is then lost must come back
+        // through its lineage rule.
+        let s = TieredStore::test_store(&small_cfg(64, 64, 64));
+        s.lineage().register("derived", || Ok(vec![42u8; 60]));
+        s.put("derived", vec![42u8; 60]).unwrap();
+        // Push it out of the whole tier stack.
+        for i in 0..3 {
+            s.put(&format!("filler/{i}"), vec![i as u8; 60]).unwrap();
+        }
+        assert_eq!(s.tier_of("derived"), None, "block must have left the tiers");
+        // Lose the durable copy too (async persist already landed it).
+        s.flush();
+        s.under().delete("derived").unwrap();
+        let before = s.metrics().counter("storage.tiered.lineage_recovered").get();
+        let got = s.get("derived").unwrap();
+        assert_eq!(*got, vec![42u8; 60]);
+        assert_eq!(
+            s.metrics().counter("storage.tiered.lineage_recovered").get(),
+            before + 1,
+            "recovery must have come from lineage, not the under-store"
+        );
+        assert_eq!(s.tier_of("derived"), Some(0), "recovered block reinserted hot");
     }
 
     #[test]

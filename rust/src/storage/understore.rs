@@ -26,7 +26,11 @@ pub struct UnderStore {
 
 impl UnderStore {
     /// Create under `root` (a fresh subdirectory is made per instance).
-    pub fn new(root: impl Into<PathBuf>, cfg: TierConfig, enforce_model: bool) -> Result<Arc<Self>> {
+    pub fn new(
+        root: impl Into<PathBuf>,
+        cfg: TierConfig,
+        enforce_model: bool,
+    ) -> Result<Arc<Self>> {
         let root = root.into();
         std::fs::create_dir_all(&root)
             .with_context(|| format!("creating under-store dir {root:?}"))?;

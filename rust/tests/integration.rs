@@ -8,7 +8,11 @@ use adcloud::resource::{DeviceKind, ResourceVec};
 use adcloud::runtime::Tensor;
 
 fn have_artifacts() -> bool {
-    adcloud::artifacts_dir().join("manifest.json").is_file()
+    let ok = adcloud::artifacts_dir().join("manifest.json").is_file();
+    if !ok {
+        eprintln!("skipped: run `make artifacts` to enable artifact-gated tests");
+    }
+    ok
 }
 
 #[test]

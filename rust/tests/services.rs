@@ -7,7 +7,11 @@ use adcloud::services::{mapgen, simulation, sql, training};
 use adcloud::util::Rng;
 
 fn have_artifacts() -> bool {
-    adcloud::artifacts_dir().join("manifest.json").is_file()
+    let ok = adcloud::artifacts_dir().join("manifest.json").is_file();
+    if !ok {
+        eprintln!("skipped: run `make artifacts` to enable artifact-gated tests");
+    }
+    ok
 }
 
 #[test]
