@@ -3,13 +3,17 @@
 # Requires a Python environment with jax installed; the Rust side
 # degrades gracefully (CPU reference kernels) when artifacts are absent.
 
-.PHONY: artifacts test bench
+.PHONY: artifacts test bench verify
 
 artifacts:
 	python3 python/compile/aot.py
 
 test:
 	cargo test -q
+
+# Tier-1 gate (what CI runs): release build + full test suite.
+verify:
+	cargo build --release && cargo test -q
 
 bench:
 	ADCLOUD_BENCH_QUICK=1 cargo bench

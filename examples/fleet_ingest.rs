@@ -61,6 +61,7 @@ fn main() -> Result<()> {
     // 3. Mining: compacted drives -> scenario families.
     let mined = ingest::mine(
         &platform.ctx,
+        &platform.resources,
         platform.ctx.store(),
         &compaction.blocks,
         &ingest::MinerConfig::default(),

@@ -6,7 +6,7 @@
 //!     cargo run --release --example train_perception [examples] [rounds]
 
 use adcloud::hetero::cpu_impls::init_params;
-use adcloud::platform::Platform;
+use adcloud::platform::{JobHandle, JobSpec, Platform};
 use adcloud::resource::{DeviceKind, ResourceVec};
 use adcloud::services::training::{self, ParamServer};
 use adcloud::util::Rng;
@@ -25,19 +25,16 @@ fn main() -> Result<()> {
         "this example needs the AOT artifacts — run `make artifacts` first"
     );
 
-    // Ask the resource manager for GPU-backed containers, as a training
-    // application would (paper §2.3).
-    platform.resources.submit_app("train-perception", "default")?;
-    let mut containers = Vec::new();
-    for _ in 0..platform.config.cluster.nodes.min(workers) {
-        if let Ok(c) = platform
-            .resources
-            .request_container("train-perception", ResourceVec::cores(1, 128 << 20).with_gpu(1))
-        {
-            containers.push(c);
-        }
-    }
-    println!("granted {} GPU containers", containers.len());
+    // Ask for GPU-backed containers through the unified job layer, as
+    // every platform workload does (paper §2.3): one JobSpec, an
+    // elastic grant, RAII release.
+    let job = JobHandle::submit(
+        &platform.resources,
+        JobSpec::new("train-perception")
+            .containers(1, platform.config.cluster.nodes.min(workers))
+            .resources(ResourceVec::cores(1, 128 << 20).with_gpu(1)),
+    )?;
+    println!("granted {} GPU containers", job.shards());
 
     // Data: synthetic 10-class labelled corpus, sharded per worker.
     println!("generating {n_examples} labelled examples...");
@@ -70,10 +67,9 @@ fn main() -> Result<()> {
         "loss did not decrease — training is broken"
     );
 
-    for c in &containers {
-        platform.resources.release(c)?;
-    }
-    println!("\n{}", platform.dispatcher.energy().joules(DeviceKind::Gpu));
+    let stats = job.finish();
+    println!("\n{}", stats.render());
+    println!("{}", platform.dispatcher.energy().joules(DeviceKind::Gpu));
     println!("{}", platform.metrics.report());
     println!("train_perception done (recorded in EXPERIMENTS.md)");
     Ok(())

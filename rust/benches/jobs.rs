@@ -1,0 +1,8 @@
+//! Unified-job-layer bench: E15 (two concurrent jobs — a scenario
+//! campaign and a fleet-compaction drain — under capacity-share queues
+//! at 1/2/4/8 nodes, reporting per-queue throughput and grant-wait
+//! latency).
+mod common;
+fn main() {
+    common::run(&["e15"]);
+}

@@ -14,6 +14,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::log::{crc32, LogRecord, PartitionedLog};
+use crate::platform::job::{JobHandle, JobSpec};
 use crate::resource::{ResourceManager, ResourceVec};
 use crate::storage::TieredStore;
 
@@ -94,6 +95,8 @@ pub struct BlockRef {
 pub struct CompactorConfig {
     /// Application name registered with the resource manager.
     pub app: String,
+    /// Capacity-share queue the compaction job is charged against.
+    pub queue: String,
     /// Requested worker count (one container each; degrades gracefully).
     pub workers: usize,
     /// Max records packed into one block.
@@ -106,6 +109,7 @@ impl CompactorConfig {
     pub fn new(app: impl Into<String>, workers: usize) -> Self {
         Self {
             app: app.into(),
+            queue: "default".into(),
             workers: workers.max(1),
             batch_records: 256,
             block_prefix: "ingest".into(),
@@ -143,16 +147,19 @@ fn block_key(prefix: &str, partition: usize, base_offset: u64) -> String {
 }
 
 /// Drain one partition from its committed offset: pack batches into
-/// blocks, land them with lineage, commit after each block. Returns the
-/// blocks written.
+/// blocks, land them with lineage, commit after each block. Each block
+/// is pushed into `landed` the moment its offset commits — NOT returned
+/// at the end — so a retried worker (which resumes from the committed
+/// offset and re-reads nothing) never loses first-attempt blocks from
+/// the report.
 fn drain_partition(
     log: &Arc<PartitionedLog>,
     store: &Arc<TieredStore>,
     cctx: &crate::resource::ContainerCtx<'_>,
     partition: usize,
     cfg: &CompactorConfig,
-) -> Result<Vec<BlockRef>> {
-    let mut out = Vec::new();
+    landed: &Mutex<Vec<BlockRef>>,
+) -> Result<()> {
     loop {
         let from = log.committed(partition).max(log.start_offset(partition));
         let batch = log.read_from(partition, from, cfg.batch_records)?;
@@ -190,14 +197,22 @@ fn drain_partition(
         log.commit(partition, next)?;
         store.metrics().counter("ingest.compact.blocks").inc();
         store.metrics().counter("ingest.compact.records").add(count as u64);
-        out.push(BlockRef { key, partition, base_offset: base, records: count, bytes: block_len });
+        landed.lock().unwrap().push(BlockRef {
+            key,
+            partition,
+            base_offset: base,
+            records: count,
+            bytes: block_len,
+        });
     }
-    Ok(out)
+    Ok(())
 }
 
-/// One full drain: acquire containers, drain every partition to its
-/// head, release the grant. Safe to call repeatedly — each pass resumes
-/// from the committed offsets.
+/// One full drain as a job on the unified job layer: acquire an
+/// elastic worker grant, drain every partition to its head (worker `w`
+/// owns partitions `p % workers == w`), and let the job's RAII guards
+/// release the grant on every exit path. Safe to call repeatedly —
+/// each pass resumes from the committed offsets.
 pub fn compact(
     log: &Arc<PartitionedLog>,
     store: &Arc<TieredStore>,
@@ -205,50 +220,27 @@ pub fn compact(
     cfg: &CompactorConfig,
 ) -> Result<CompactionReport> {
     let start = Instant::now();
-    rm.submit_app(&cfg.app, "default")?;
     // Size the grant for a batch of max-size blocks with headroom.
     let mem = (4 * cfg.batch_records as u64 * 1024).max(8 << 20);
-    let mut containers = Vec::new();
-    for _ in 0..cfg.workers.min(log.partitions()) {
-        match rm.request_container(&cfg.app, ResourceVec::cores(1, mem)) {
-            Ok(c) => containers.push(c),
-            Err(_) => break,
+    let job = JobHandle::submit(
+        rm,
+        JobSpec::new(cfg.app.as_str())
+            .queue(cfg.queue.as_str())
+            .containers(1, cfg.workers.min(log.partitions()).max(1))
+            .resources(ResourceVec::cores(1, mem)),
+    )
+    .with_context(|| format!("submitting compaction job '{}'", cfg.app))?;
+    let workers = job.shards();
+    let landed: Mutex<Vec<BlockRef>> = Mutex::new(Vec::new());
+    let drained = job.run_per_container(|sctx| -> Result<()> {
+        for partition in (0..log.partitions()).filter(|p| p % sctx.shards == sctx.shard) {
+            sctx.run(|cctx| drain_partition(log, store, cctx, partition, cfg, &landed))??;
         }
-    }
-    if containers.is_empty() {
-        let _ = rm.remove_app(&cfg.app);
-        bail!("no container capacity for compactor '{}'", cfg.app);
-    }
-    let workers = containers.len();
-    let blocks: Mutex<Vec<BlockRef>> = Mutex::new(Vec::new());
-    let result: Result<()> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for (w, container) in containers.iter().enumerate() {
-            let blocks = &blocks;
-            handles.push(s.spawn(move || -> Result<()> {
-                for partition in (0..log.partitions()).filter(|p| p % workers == w) {
-                    let written = container
-                        .run(|cctx| drain_partition(log, store, cctx, partition, cfg))??;
-                    blocks.lock().unwrap().extend(written);
-                }
-                Ok(())
-            }));
-        }
-        let mut first_err = Ok(());
-        for h in handles {
-            let r = h.join().expect("compaction worker panicked");
-            if r.is_err() && first_err.is_ok() {
-                first_err = r;
-            }
-        }
-        first_err
+        Ok(())
     });
-    for c in &containers {
-        let _ = rm.release(c);
-    }
-    let _ = rm.remove_app(&cfg.app);
-    result?;
-    let mut blocks = blocks.into_inner().unwrap();
+    let _ = job.finish();
+    drained?;
+    let mut blocks = landed.into_inner().unwrap();
     blocks.sort_by(|a, b| (a.partition, a.base_offset).cmp(&(b.partition, b.base_offset)));
     let records = blocks.iter().map(|b| b.records as u64).sum();
     let bytes = blocks.iter().map(|b| b.bytes).sum();

@@ -21,6 +21,8 @@ use std::time::{Duration, Instant};
 use super::compact::{decode_block, BlockRef};
 use super::gateway::decode_telemetry;
 use crate::dce::DceContext;
+use crate::platform::job::{JobHandle, JobSpec};
+use crate::resource::{ResourceManager, ResourceVec};
 use crate::scenario::{
     base_route, fnv1a64, ActorKind, ActorSpec, FaultSpec, ScenarioSpec, Weather,
 };
@@ -60,6 +62,14 @@ pub struct MinedEvent {
 /// Detection thresholds and spec-emission knobs.
 #[derive(Debug, Clone)]
 pub struct MinerConfig {
+    /// Application name the mining job registers with the resource
+    /// manager.
+    pub app: String,
+    /// Capacity-share queue the mining job is charged against.
+    pub queue: String,
+    /// Requested container count (degrades to the block count and the
+    /// cluster's free capacity).
+    pub workers: usize,
     /// Deceleration at or below this is a hard brake (m/s^2).
     pub hard_brake_mps2: f32,
     /// Camera gap at or above this is a sensor dropout (ms).
@@ -75,6 +85,9 @@ pub struct MinerConfig {
 impl Default for MinerConfig {
     fn default() -> Self {
         Self {
+            app: "scenario-miner".into(),
+            queue: "default".into(),
+            workers: 4,
             hard_brake_mps2: -6.0,
             dropout_ms: 500,
             merge_window_ns: 500_000_000,
@@ -243,32 +256,53 @@ impl MineReport {
     }
 }
 
-/// Run the mining job: shard the block list over the compute engine,
-/// scan each block inside its partition's task, and distill the merged
-/// event stream into scenario families.
+/// Run the mining job on the unified job layer: acquire a container
+/// grant, shard the block list over the compute engine (one shard per
+/// container), scan each block inside its container's accounting, and
+/// distill the merged event stream into scenario families.
 pub fn mine(
     ctx: &DceContext,
+    rm: &Arc<ResourceManager>,
     store: &Arc<TieredStore>,
     blocks: &[BlockRef],
     cfg: &MinerConfig,
 ) -> Result<MineReport> {
     let start = Instant::now();
+    if blocks.is_empty() {
+        return Ok(MineReport {
+            events: Vec::new(),
+            specs: Vec::new(),
+            records_scanned: 0,
+            elapsed: start.elapsed(),
+        });
+    }
     let records_scanned = blocks.iter().map(|b| b.records as u64).sum();
     let keys: Vec<String> = blocks.iter().map(|b| b.key.clone()).collect();
-    let parts = keys.len().clamp(1, ctx.default_parallelism());
+    let max_block = blocks.iter().map(|b| b.bytes).max().unwrap_or(0);
+    let job = JobHandle::submit(
+        rm,
+        JobSpec::new(cfg.app.as_str())
+            .queue(cfg.queue.as_str())
+            .containers(1, cfg.workers.clamp(1, keys.len()))
+            .resources(ResourceVec::cores(1, (4 * max_block).max(8 << 20))),
+    )?;
     let (store2, cfg2) = (store.clone(), cfg.clone());
-    let events: Vec<MinedEvent> = ctx
-        .parallelize(keys, parts)
-        .map_partitions(move |_, keys: Vec<String>| {
-            let mut out = Vec::new();
-            for key in keys {
-                let bytes = store2.get(&key)?;
-                out.extend(scan_block(&bytes, &cfg2)?);
-            }
-            Ok(out)
-        })
-        .collect()?;
-    let events = dedupe_events(events, cfg);
+    let scanned = job.run_sharded(ctx, keys, move |sctx, keys: Vec<String>| {
+        let mut out = Vec::new();
+        for key in keys {
+            let bytes = store2.get(&key)?;
+            let block_len = bytes.len() as u64;
+            out.extend(sctx.run(|cctx| -> Result<Vec<MinedEvent>> {
+                cctx.alloc_mem(block_len)?;
+                let events = scan_block(&bytes, &cfg2);
+                cctx.free_mem(block_len);
+                events
+            })??);
+        }
+        Ok(out)
+    });
+    let _ = job.finish();
+    let events = dedupe_events(scanned?, cfg);
     ctx.metrics().counter("ingest.mine.events").add(events.len() as u64);
     let mut specs: Vec<ScenarioSpec> = Vec::new();
     let mut seen: HashSet<u64> = HashSet::new();
@@ -318,12 +352,18 @@ mod tests {
         compact(&log, store, &rm, &CompactorConfig::new("mine-fix", 2)).unwrap().blocks
     }
 
+    fn test_rm() -> Arc<ResourceManager> {
+        ResourceManager::new(&PlatformConfig::test().cluster, MetricsRegistry::new())
+    }
+
     #[test]
     fn mining_finds_every_event_family() {
         let ctx = DceContext::new(PlatformConfig::test()).unwrap();
+        let rm = test_rm();
         let blocks = compacted_fixture(ctx.store(), 8, 400);
-        let report = mine(&ctx, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
+        let report = mine(&ctx, &rm, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
         assert!(!report.events.is_empty());
+        assert_eq!(rm.live_containers(), 0, "mining grant must be returned");
         assert_eq!(
             report.families(),
             vec![
@@ -339,9 +379,10 @@ mod tests {
     #[test]
     fn mining_is_deterministic() {
         let ctx = DceContext::new(PlatformConfig::test()).unwrap();
+        let rm = test_rm();
         let blocks = compacted_fixture(ctx.store(), 4, 300);
-        let a = mine(&ctx, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
-        let b = mine(&ctx, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
+        let a = mine(&ctx, &rm, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
+        let b = mine(&ctx, &rm, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
         assert_eq!(a.events, b.events);
         assert_eq!(
             crate::scenario::campaign_digest(&a.specs),
@@ -352,8 +393,9 @@ mod tests {
     #[test]
     fn mined_specs_satisfy_scenario_invariants() {
         let ctx = DceContext::new(PlatformConfig::test()).unwrap();
+        let rm = test_rm();
         let blocks = compacted_fixture(ctx.store(), 6, 300);
-        let report = mine(&ctx, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
+        let report = mine(&ctx, &rm, ctx.store(), &blocks, &MinerConfig::default()).unwrap();
         for s in &report.specs {
             // from_json re-runs every spec validity check; a mined spec
             // must survive it so campaigns can execute it unmodified.

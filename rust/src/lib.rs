@@ -21,7 +21,12 @@
 //! * [`storage`] — the Alluxio-analog tiered block store and the
 //!   HDFS-analog baseline.
 //! * [`resource`] — YARN-analog resource manager and LXC-analog
-//!   containers over a heterogeneous device inventory.
+//!   containers over a heterogeneous device inventory, with RAII
+//!   grants and app leases.
+//! * [`platform`] — one-call platform boot, the **unified job layer**
+//!   (`JobSpec`/`JobHandle`: an application-master analog every
+//!   workload schedules through), and the paper-experiment harness
+//!   (E1–E15).
 //! * [`hetero`] — kernel registry + dispatch across CPU / GPU-class /
 //!   FPGA-class devices.
 //! * [`runtime`] — the PJRT artifact runtime (device-server threads).

@@ -7,10 +7,13 @@
 //!   campaign  [--seed S] [--scenarios N] [--nodes K] [--frames F]
 //!   ingest    [--vehicles N] [--ticks T] [--partitions P] [--workers W]
 //!             [--campaign]   fleet ingest -> compaction -> scenario mining
+//!   jobs      [--nodes N] [--scenarios S] [--vehicles V] [--ticks T]
+//!             two concurrent jobs (campaign + compaction) on
+//!             capacity-share queues through the unified job layer
 //!   train     [--examples N] [--rounds R] [--workers W]
 //!   mapgen    [--steps N]
 //!   sql       [--rows N]
-//!   repro-tables [e1..e12|all] [--quick]
+//!   repro-tables [e1..e15|all] [--quick]
 //!   pipe-worker <logic>          BinPipe child process (detect)
 //!   metrics                      dump the metrics registry after a demo job
 //!
@@ -84,6 +87,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "simulate" => simulate(&flags),
         "campaign" => campaign(&flags),
         "ingest" => run_ingest(&flags),
+        "jobs" => run_jobs(&flags),
         "train" => train(&flags),
         "mapgen" => run_mapgen(&flags),
         "sql" => run_sql(&flags),
@@ -99,7 +103,7 @@ fn run(args: Vec<String>) -> Result<()> {
         other => {
             eprintln!("unknown command '{other}'");
             eprintln!(
-                "commands: info quickstart simulate campaign ingest train mapgen sql repro-tables pipe-worker metrics"
+                "commands: info quickstart simulate campaign ingest jobs train mapgen sql repro-tables pipe-worker metrics"
             );
             std::process::exit(2);
         }
@@ -218,8 +222,13 @@ fn run_ingest(flags: &HashMap<String, String>) -> Result<()> {
     let compaction = ingest::compact(&log, p.ctx.store(), &p.resources, &ccfg)?;
     println!("{}", compaction.render());
 
-    let mined =
-        ingest::mine(&p.ctx, p.ctx.store(), &compaction.blocks, &ingest::MinerConfig::default())?;
+    let mined = ingest::mine(
+        &p.ctx,
+        &p.resources,
+        p.ctx.store(),
+        &compaction.blocks,
+        &ingest::MinerConfig::default(),
+    )?;
     print!("{}", mined.render());
 
     if flags.contains_key("campaign") && !mined.specs.is_empty() {
@@ -228,6 +237,63 @@ fn run_ingest(flags: &HashMap<String, String>) -> Result<()> {
         println!("{}", report.render());
     }
     println!("ingest done");
+    Ok(())
+}
+
+/// Two tenants, one cluster: a scenario campaign (queue `sim`) and a
+/// fleet-compaction drain (queue `fleet`) run concurrently through the
+/// unified job layer against a 50/50 capacity split, then the job-layer
+/// metrics (grant waits, shard retries, container-seconds) are printed.
+fn run_jobs(flags: &HashMap<String, String>) -> Result<()> {
+    use adcloud::ingest;
+    let mut cfg = config_from(flags);
+    cfg.cluster.nodes = flag(flags, "nodes", cfg.cluster.nodes);
+    let scenarios = flag(flags, "scenarios", 16usize);
+    let vehicles = flag(flags, "vehicles", 8u32);
+    let ticks = flag(flags, "ticks", 200usize);
+    let metrics = adcloud::metrics::MetricsRegistry::new();
+    let rm = adcloud::resource::ResourceManager::with_queues(
+        &cfg.cluster,
+        vec![("sim".into(), 0.5), ("fleet".into(), 0.5)],
+        metrics.clone(),
+    );
+    let ctx = adcloud::dce::DceContext::new(cfg.clone())?;
+    println!(
+        "unified job layer: {} nodes x {} cores; queues sim=0.5 fleet=0.5",
+        cfg.cluster.nodes, cfg.cluster.cores_per_node
+    );
+
+    // Fleet side: simulated vehicles upload through the gateway into
+    // the partitioned log the compaction job will drain.
+    let log = ingest::PartitionedLog::temp(
+        "jobs-cli",
+        ingest::LogConfig { partitions: cfg.cluster.nodes.max(2), ..Default::default() },
+    )?;
+    let gw = ingest::IngestGateway::new(
+        log.clone(),
+        ingest::GatewayConfig::default(),
+        metrics.clone(),
+    );
+    let fleet = ingest::simulate_fleet(&gw, &ingest::FleetConfig::new(vehicles, ticks, cfg.seed))?;
+    println!("{}", fleet.render());
+
+    // Sim side: a procedurally generated campaign.
+    let specs = scenario::generate_campaign_sized(cfg.seed, scenarios, 16);
+    let mut ccfg = scenario::CampaignConfig::new("jobs-campaign", cfg.cluster.nodes);
+    ccfg.queue = "sim".into();
+    let mut kcfg = ingest::CompactorConfig::new("jobs-compact", cfg.cluster.nodes);
+    kcfg.queue = "fleet".into();
+
+    let run = experiments::run_tenant_pair(&ctx, &rm, &specs, &ccfg, &log, ctx.store(), &kcfg)?;
+    println!("{}", run.campaign.render());
+    println!("{}", run.compaction.render());
+    println!(
+        "both tenants done in {} (campaign {}, compaction {})",
+        adcloud::util::fmt_duration(run.makespan),
+        adcloud::util::fmt_duration(run.campaign_elapsed),
+        adcloud::util::fmt_duration(run.compaction_elapsed),
+    );
+    println!("job-layer metrics:\n{}", metrics.report());
     Ok(())
 }
 
@@ -264,7 +330,7 @@ fn run_mapgen(flags: &HashMap<String, String>) -> Result<()> {
     let world = mapgen::gen_world(p.config.seed);
     let log = mapgen::gen_drive(&world, steps, p.config.seed);
     let cfg = mapgen::SlamConfig::default();
-    let report = mapgen::run_fused(&p.dispatcher, &log, &cfg, 0.1)?;
+    let report = mapgen::run_fused(&p.dispatcher, &p.resources, &log, &cfg, 0.1)?;
     println!(
         "map built from {steps} steps in {}: {} occupied cells, {} signs, slam err {:.2} m",
         adcloud::util::fmt_duration(report.elapsed),

@@ -19,12 +19,16 @@ use std::time::{Duration, Instant};
 use crate::config::PlatformConfig;
 use crate::dce::{DceContext, SimCluster, SimJob, SimTask};
 use crate::hetero::Dispatcher;
+use crate::ingest;
 use crate::mapreduce::MapReduceEngine;
 use crate::metrics::MetricsRegistry;
-use crate::resource::{DeviceKind, ResourceVec};
+use crate::resource::{DeviceKind, ResourceManager, ResourceVec};
+use crate::scenario;
 use crate::services::{mapgen, simulation, sql, training};
 use crate::storage::{DfsStore, EvictionPolicy, TieredStore, UnderStore};
 use crate::util::{fmt_duration, Rng};
+
+use super::job::{JobHandle, JobSpec};
 
 /// A paper-style result table.
 #[derive(Debug, Clone)]
@@ -66,8 +70,10 @@ impl Table {
     }
 }
 
-pub const ALL_IDS: [&str; 14] =
-    ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13", "e14"];
+pub const ALL_IDS: [&str; 15] = [
+    "e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13", "e14",
+    "e15",
+];
 
 /// Run one experiment by id. `quick` shrinks workloads for CI/tests.
 pub fn run_experiment(id: &str, quick: bool) -> Result<Table> {
@@ -86,6 +92,7 @@ pub fn run_experiment(id: &str, quick: bool) -> Result<Table> {
         "e12" => e12_reliability(quick),
         "e13" => e13_campaign(quick),
         "e14" => e14_ingest(quick),
+        "e15" => e15_multitenant(quick),
         other => Err(anyhow!("unknown experiment '{other}' (have {ALL_IDS:?})")),
     }
 }
@@ -99,6 +106,26 @@ fn dispatcher() -> Result<Dispatcher> {
 
 fn speedup(slow: Duration, fast: Duration) -> String {
     format!("{:.1}x", slow.as_secs_f64() / fast.as_secs_f64().max(1e-12))
+}
+
+/// The standard 1→8 scaling sweep shared by E6/E13/E14/E15. `f` runs
+/// one configuration and returns the row's leading cells plus a rate
+/// (higher = better: throughput, or 1/makespan). A final column is
+/// appended showing the rate relative to the first (single-node) run.
+const SWEEP_NODES: [usize; 4] = [1, 2, 4, 8];
+
+fn sweep_rows(
+    mut f: impl FnMut(usize) -> Result<(Vec<String>, f64)>,
+) -> Result<Vec<Vec<String>>> {
+    let mut rows = Vec::new();
+    let mut base: Option<f64> = None;
+    for nodes in SWEEP_NODES {
+        let (mut cells, rate) = f(nodes)?;
+        let b = *base.get_or_insert(rate);
+        cells.push(format!("{:.2}x", rate / b.max(1e-12)));
+        rows.push(cells);
+    }
+    Ok(rows)
 }
 
 // ===========================================================================
@@ -348,9 +375,12 @@ fn e3_cnn(quick: bool) -> Result<Table> {
 
 fn e4_container(quick: bool) -> Result<Table> {
     let cfg = PlatformConfig::bench();
-    let rm = crate::resource::ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
-    rm.submit_app("e4", "default")?;
-    let c = rm.request_container("e4", ResourceVec::cores(1, 64 << 20))?;
+    let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
+    let job = JobHandle::submit(
+        &rm,
+        JobSpec::new("e4").resources(ResourceVec::cores(1, 64 << 20)),
+    )?;
+    let c = job.containers()[0].clone();
     let imgs = if quick { 32 } else { 64 };
     let mut rng = Rng::new(4);
     let frames: Vec<Vec<f32>> = (0..imgs)
@@ -384,7 +414,7 @@ fn e4_container(quick: bool) -> Result<Table> {
         .unwrap();
         contained = contained.min(t.elapsed());
     }
-    rm.release(&c)?;
+    let _ = job.finish();
     let overhead =
         (contained.as_secs_f64() - native.as_secs_f64()) / native.as_secs_f64() * 100.0;
     Ok(Table {
@@ -483,9 +513,7 @@ fn e6_replay_scaling(quick: bool) -> Result<Table> {
     let frames_total = 400_000u64; // ~11h of 10Hz driving
     let frames_per_task = 200u64;
     let frame_bytes = (8 + 4 + 64 * 64 * 4) as u64;
-    let mut rows = Vec::new();
-    let mut single: Option<Duration> = None;
-    for nodes in [1usize, 2, 4, 8] {
+    let rows = sweep_rows(|nodes| {
         let cluster = SimCluster {
             nodes,
             cores_per_node: 8,
@@ -504,13 +532,11 @@ fn e6_replay_scaling(quick: bool) -> Result<Table> {
                 .collect(),
         );
         let r = crate::dce::simclock::simulate(&cluster, &job);
-        let s = *single.get_or_insert(r.makespan);
-        rows.push(vec![
-            format!("{nodes}"),
-            fmt_duration(r.makespan),
-            format!("{:.2}x", s.as_secs_f64() / r.makespan.as_secs_f64()),
-        ]);
-    }
+        Ok((
+            vec![format!("{nodes}"), fmt_duration(r.makespan)],
+            1.0 / r.makespan.as_secs_f64().max(1e-9),
+        ))
+    })?;
     Ok(Table {
         id: "e6",
         title: format!(
@@ -552,10 +578,12 @@ fn e7_pipeline(quick: bool) -> Result<Table> {
         }
     }
     let store = TieredStore::test_store(&cfg.storage);
+    let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
     let ps_u = training::ParamServer::tiered(store.clone(), "e7u");
-    let u = training::run_unified(&ctx, &d, DeviceKind::Gpu, &ps_u, examples, rounds, 4, 7)?;
+    let u = training::run_unified(&ctx, &rm, &d, DeviceKind::Gpu, &ps_u, examples, rounds, 4, 7)?;
     let ps_s = training::ParamServer::tiered(store, "e7s");
-    let s = training::run_staged(ctx.dfs(), &d, DeviceKind::Gpu, &ps_s, examples, rounds, 4, 7)?;
+    let s =
+        training::run_staged(ctx.dfs(), &rm, &d, DeviceKind::Gpu, &ps_s, examples, rounds, 4, 7)?;
     Ok(Table {
         id: "e7",
         title: format!("ETL->feature->train pipeline, {examples} examples, {rounds} rounds"),
@@ -816,8 +844,9 @@ fn e10_mapgen(quick: bool) -> Result<Table> {
     };
     let tier = PlatformConfig::bench().storage.dfs;
     let dfs = DfsStore::new(tier, true, MetricsRegistry::new())?;
-    let fused = mapgen::run_fused(&d, &log, &cfg, 0.1)?;
-    let staged = mapgen::run_staged(&d, &dfs, &log, &cfg, 0.1)?;
+    let rm = ResourceManager::new(&PlatformConfig::bench().cluster, MetricsRegistry::new());
+    let fused = mapgen::run_fused(&d, &rm, &log, &cfg, 0.1)?;
+    let staged = mapgen::run_staged(&d, &rm, &dfs, &log, &cfg, 0.1)?;
     Ok(Table {
         id: "e10",
         title: format!("HD-map pipeline, {steps}-step drive (SLAM err {:.2} m)", fused.slam_err_m),
@@ -971,7 +1000,6 @@ fn e12_reliability(quick: bool) -> Result<Table> {
 // ===========================================================================
 
 fn e13_campaign(quick: bool) -> Result<Table> {
-    use crate::scenario;
     // Calibrate the per-scenario cost from a REAL campaign on the local
     // cluster (CPU detection path — no artifacts required).
     let n = if quick { 6 } else { 16 };
@@ -999,8 +1027,7 @@ fn e13_campaign(quick: bool) -> Result<Table> {
         format!("{:.1}/s", real.scenarios_per_sec()),
         "-".into(),
     ]];
-    let mut single: Option<Duration> = None;
-    for nodes in [1usize, 2, 4, 8] {
+    rows.extend(sweep_rows(|nodes| {
         let cluster = SimCluster {
             nodes,
             cores_per_node: 8,
@@ -1019,14 +1046,15 @@ fn e13_campaign(quick: bool) -> Result<Table> {
                 .collect(),
         );
         let r = crate::dce::simclock::simulate(&cluster, &job);
-        let s = *single.get_or_insert(r.makespan);
-        rows.push(vec![
-            format!("{nodes} node(s)"),
-            fmt_duration(r.makespan),
-            format!("{:.1}/s", campaign_n as f64 / r.makespan.as_secs_f64().max(1e-9)),
-            format!("{:.2}x", s.as_secs_f64() / r.makespan.as_secs_f64()),
-        ]);
-    }
+        Ok((
+            vec![
+                format!("{nodes} node(s)"),
+                fmt_duration(r.makespan),
+                format!("{:.1}/s", campaign_n as f64 / r.makespan.as_secs_f64().max(1e-9)),
+            ],
+            1.0 / r.makespan.as_secs_f64().max(1e-9),
+        ))
+    })?);
     Ok(Table {
         id: "e13",
         title: format!(
@@ -1123,23 +1151,22 @@ fn e14_run(
 fn e14_ingest(quick: bool) -> Result<Table> {
     let records_per_part = if quick { 2_000u64 } else { 20_000 };
     let payload = vec![7u8; 256];
-    let mut rows = Vec::new();
-    let mut base: Option<f64> = None;
-    for parts in [1usize, 2, 4, 8] {
+    let rows = sweep_rows(|parts| {
         let total = records_per_part * parts as u64;
         let plain = e14_run(parts, records_per_part, &payload, false)?;
         let contended = e14_run(parts, records_per_part, &payload, true)?;
         let rps = total as f64 / plain.as_secs_f64().max(1e-9);
         let rps_c = total as f64 / contended.as_secs_f64().max(1e-9);
-        let b = *base.get_or_insert(rps);
-        rows.push(vec![
-            format!("{parts}"),
-            format!("{:.0}/s", rps),
-            format!("{:.0}/s", rps_c),
-            format!("{:.0}%", rps_c / rps * 100.0),
-            format!("{:.2}x", rps / b),
-        ]);
-    }
+        Ok((
+            vec![
+                format!("{parts}"),
+                format!("{:.0}/s", rps),
+                format!("{:.0}/s", rps_c),
+                format!("{:.0}%", rps_c / rps * 100.0),
+            ],
+            rps,
+        ))
+    })?;
     Ok(Table {
         id: "e14",
         title: format!(
@@ -1152,6 +1179,127 @@ fn e14_ingest(quick: bool) -> Result<Table> {
         notes: "partitioned appends are independent, so throughput should grow with \
                 partition count until the disk or core budget saturates; the compaction \
                 column shows the cost of a concurrent drain contending for partition locks."
+            .into(),
+    })
+}
+
+// ===========================================================================
+// E15: multi-tenancy — two concurrent jobs under capacity-share queues
+// ===========================================================================
+
+/// One concurrent two-tenant run: a scenario campaign on its configured
+/// queue and a fleet-compaction drain on its configured queue, started
+/// together and joined. Shared by E15, the `jobs` CLI subcommand, and
+/// `examples/unified_jobs.rs`. Errors if any container is still live
+/// when both jobs have finished (the RAII-grant contract).
+pub struct TenantPairRun {
+    pub campaign: scenario::CampaignReport,
+    pub campaign_elapsed: Duration,
+    pub compaction: ingest::CompactionReport,
+    pub compaction_elapsed: Duration,
+    pub makespan: Duration,
+}
+
+pub fn run_tenant_pair(
+    ctx: &DceContext,
+    rm: &Arc<ResourceManager>,
+    specs: &[scenario::ScenarioSpec],
+    campaign_cfg: &scenario::CampaignConfig,
+    log: &Arc<ingest::PartitionedLog>,
+    store: &Arc<TieredStore>,
+    compactor_cfg: &ingest::CompactorConfig,
+) -> Result<TenantPairRun> {
+    let t = Instant::now();
+    let (camp, comp) = std::thread::scope(|s| {
+        let camp = s.spawn(|| {
+            let t = Instant::now();
+            scenario::run_campaign(ctx, rm, specs, campaign_cfg).map(|r| (r, t.elapsed()))
+        });
+        let comp = s.spawn(|| {
+            let t = Instant::now();
+            ingest::compact(log, store, rm, compactor_cfg).map(|r| (r, t.elapsed()))
+        });
+        (camp.join().expect("campaign job"), comp.join().expect("compaction job"))
+    });
+    let makespan = t.elapsed();
+    let (campaign, campaign_elapsed) = camp?;
+    let (compaction, compaction_elapsed) = comp?;
+    anyhow::ensure!(rm.live_containers() == 0, "tenant pair leaked containers");
+    Ok(TenantPairRun { campaign, campaign_elapsed, compaction, compaction_elapsed, makespan })
+}
+
+/// Two jobs run concurrently against a 50/50 capacity split: a scenario
+/// campaign on queue `sim` and a fleet-compaction drain on queue
+/// `fleet`, both scheduled through the unified job layer, at 1/2/4/8
+/// nodes. The first true multi-tenant benchmark of the platform:
+/// per-queue throughput plus the grant-wait latency the job layer
+/// records.
+fn e15_multitenant(quick: bool) -> Result<Table> {
+    use crate::ingest::{LogConfig, PartitionedLog};
+
+    let scen_n = if quick { 4 } else { 16 };
+    let frames = if quick { 8u32 } else { 16 };
+    let records_per_part = if quick { 200u64 } else { 2_000 };
+    let rows = sweep_rows(|nodes| {
+        let mut cfg = PlatformConfig::test();
+        cfg.cluster.nodes = nodes;
+        let metrics = MetricsRegistry::new();
+        let rm = ResourceManager::with_queues(
+            &cfg.cluster,
+            vec![("sim".into(), 0.5), ("fleet".into(), 0.5)],
+            metrics.clone(),
+        );
+        let ctx = DceContext::new(cfg.clone())?;
+        // Fleet side: a pre-filled partitioned log to drain.
+        let parts = nodes.max(2);
+        let log = PartitionedLog::temp(
+            &format!("e15-{nodes}"),
+            LogConfig { partitions: parts, segment_bytes: 64 << 10, retention_bytes: 1 << 30 },
+        )?;
+        for p in 0..parts {
+            for i in 0..records_per_part {
+                log.append(p, i * 1_000_000, p as u32, &[7u8; 200])?;
+            }
+        }
+        let store = TieredStore::test_store(&cfg.storage);
+        // Sim side: a procedurally generated campaign.
+        let specs = scenario::generate_campaign_sized(15, scen_n, frames);
+        let mut ccfg = scenario::CampaignConfig::new(format!("e15-camp-{nodes}"), nodes);
+        ccfg.queue = "sim".into();
+        let mut kcfg = ingest::CompactorConfig::new(format!("e15-comp-{nodes}"), nodes);
+        kcfg.queue = "fleet".into();
+
+        let run = run_tenant_pair(&ctx, &rm, &specs, &ccfg, &log, &store, &kcfg)?;
+        let wait = metrics.histogram("platform.job.grant_wait");
+        Ok((
+            vec![
+                format!("{nodes}"),
+                fmt_duration(run.makespan),
+                format!(
+                    "{:.1}/s",
+                    run.campaign.scenarios as f64 / run.campaign_elapsed.as_secs_f64().max(1e-9)
+                ),
+                format!(
+                    "{:.0}/s",
+                    run.compaction.records as f64 / run.compaction_elapsed.as_secs_f64().max(1e-9)
+                ),
+                fmt_duration(wait.max()),
+            ],
+            1.0 / run.makespan.as_secs_f64().max(1e-9),
+        ))
+    })?;
+    Ok(Table {
+        id: "e15",
+        title: format!(
+            "two concurrent jobs on capacity-share queues (sim 50% / fleet 50%): \
+             {scen_n}-scenario campaign + {records_per_part} records/partition compaction"
+        ),
+        mode: "real",
+        header: vec!["nodes", "makespan", "sim scen/s", "fleet rec/s", "grant wait max", "scaling"],
+        rows,
+        notes: "both tenants schedule through JobSpec/JobHandle; the capacity scheduler caps \
+                each queue at half the cores, so neither job can starve the other, and \
+                throughput on both queues should grow with node count."
             .into(),
     })
 }
@@ -1217,6 +1365,20 @@ mod tests {
         let speedup: f64 =
             t.rows.last().unwrap()[3].trim_end_matches('x').parse().unwrap();
         assert!(speedup > 2.0, "campaign speedup {speedup} too sub-linear");
+    }
+
+    #[test]
+    fn e15_multitenant_queues_both_make_progress() {
+        // Both tenants run on the CPU detection / pure-infrastructure
+        // paths — no artifacts gate.
+        let t = run_experiment("e15", true).unwrap();
+        assert_eq!(t.rows.len(), 4, "{:?}", t.rows);
+        for row in &t.rows {
+            let scen: f64 = row[2].trim_end_matches("/s").parse().unwrap();
+            let rec: f64 = row[3].trim_end_matches("/s").parse().unwrap();
+            assert!(scen > 0.0, "sim queue starved: {row:?}");
+            assert!(rec > 0.0, "fleet queue starved: {row:?}");
+        }
     }
 
     #[test]

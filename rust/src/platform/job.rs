@@ -1,0 +1,467 @@
+//! The unified job layer: an Application-Master analog over the
+//! YARN-analog resource manager and the DCE executor pool.
+//!
+//! Every platform workload — scenario campaigns, fleet compaction,
+//! scenario mining, training pipelines, HD-map generation — schedules
+//! through the same two types instead of hand-rolling container
+//! choreography:
+//!
+//! * [`JobSpec`] declares what the job needs: app name, capacity queue,
+//!   an elastic container range (`min..=max`), a per-container
+//!   [`ResourceVec`] (cores, memory, GPU/FPGA slots), a shard retry
+//!   budget, and how long to block when the cluster is briefly full.
+//! * [`JobHandle`] owns the full lifecycle: it registers the app,
+//!   acquires an elastic [`Grant`] (greedy up to `max`, blocking
+//!   escalation to the `min` floor), shards work lists across the grant
+//!   via the DCE executor pool, converts shard panics into job errors,
+//!   and — because the grant and app lease are RAII guards — releases
+//!   every container on every exit path, including `?` and unwinding.
+//!
+//! Per-job metrics land in the resource manager's [`MetricsRegistry`]:
+//! `platform.job.grant_wait` (histogram), `platform.job.shard_retries`,
+//! `platform.job.shard_panics`, `platform.job.container_ms`, and
+//! `platform.job.jobs` (counters). [`JobHandle::finish`] returns the
+//! same numbers per job as a [`JobStats`].
+
+use anyhow::{anyhow, Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::dce::{Data, DceContext};
+use crate::metrics::MetricsRegistry;
+use crate::resource::{
+    AppLease, ContainerCtx, ContainerRef, Grant, ResourceManager, ResourceVec,
+};
+
+/// Declarative description of a job's resource needs.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Application name registered with the resource manager (freed for
+    /// resubmission when the job finishes or fails).
+    pub app: String,
+    /// Capacity-share queue the app is charged against.
+    pub queue: String,
+    /// Grant floor: block (up to `grant_timeout`) until at least this
+    /// many containers are held.
+    pub min_containers: usize,
+    /// Grant ceiling: take up to this many containers when free.
+    pub max_containers: usize,
+    /// Resources per container.
+    pub resources: ResourceVec,
+    /// Extra attempts per shard before the job fails.
+    pub max_shard_retries: usize,
+    /// How long `submit` may block waiting for the grant floor.
+    pub grant_timeout: Duration,
+}
+
+impl JobSpec {
+    pub fn new(app: impl Into<String>) -> Self {
+        Self {
+            app: app.into(),
+            queue: "default".into(),
+            min_containers: 1,
+            max_containers: 1,
+            resources: ResourceVec::cores(1, 32 << 20),
+            max_shard_retries: 1,
+            grant_timeout: Duration::from_secs(10),
+        }
+    }
+
+    pub fn queue(mut self, queue: impl Into<String>) -> Self {
+        self.queue = queue.into();
+        self
+    }
+
+    /// Elastic container range (both floored at 1; `max >= min`).
+    pub fn containers(mut self, min: usize, max: usize) -> Self {
+        self.min_containers = min.max(1);
+        self.max_containers = max.max(self.min_containers);
+        self
+    }
+
+    pub fn resources(mut self, resources: ResourceVec) -> Self {
+        self.resources = resources;
+        self
+    }
+
+    pub fn retries(mut self, max_shard_retries: usize) -> Self {
+        self.max_shard_retries = max_shard_retries;
+        self
+    }
+
+    pub fn grant_timeout(mut self, timeout: Duration) -> Self {
+        self.grant_timeout = timeout;
+        self
+    }
+}
+
+/// What a finished job cost.
+#[derive(Debug, Clone)]
+pub struct JobStats {
+    pub app: String,
+    pub queue: String,
+    /// Containers actually granted (elastic: `min..=max` of the spec).
+    pub containers: usize,
+    /// How long `submit` blocked acquiring the grant.
+    pub grant_wait: Duration,
+    pub shard_retries: u64,
+    /// Containers held x wall time, in seconds.
+    pub container_seconds: f64,
+    pub elapsed: Duration,
+}
+
+impl JobStats {
+    pub fn render(&self) -> String {
+        format!(
+            "job '{}' on queue '{}': {} container(s), grant wait {}, {} shard retr{}, \
+             {:.2} container-seconds in {}",
+            self.app,
+            self.queue,
+            self.containers,
+            crate::util::fmt_duration(self.grant_wait),
+            self.shard_retries,
+            if self.shard_retries == 1 { "y" } else { "ies" },
+            self.container_seconds,
+            crate::util::fmt_duration(self.elapsed),
+        )
+    }
+}
+
+/// Context handed to a shard closure: which shard this is and the
+/// container whose accounting it runs under.
+pub struct ShardCtx {
+    pub shard: usize,
+    pub shards: usize,
+    /// 0 on the first try, incremented per job-layer retry.
+    pub attempt: usize,
+    container: ContainerRef,
+}
+
+impl ShardCtx {
+    pub fn container(&self) -> &ContainerRef {
+        &self.container
+    }
+
+    /// Run a closure inside this shard's container (memory limits,
+    /// cgroup-style accounting).
+    pub fn run<T>(&self, f: impl FnOnce(&ContainerCtx) -> T) -> Result<T> {
+        self.container.run(f)
+    }
+}
+
+/// A live job: app registered, grant held. Dropping the handle (on any
+/// path) releases the containers and unregisters the app, in that
+/// order — the field order below is load-bearing.
+pub struct JobHandle {
+    grant: Grant,
+    #[allow(dead_code)] // held for its Drop side effect
+    app: AppLease,
+    spec: JobSpec,
+    metrics: MetricsRegistry,
+    retries: Arc<AtomicU64>,
+    started: Instant,
+}
+
+impl JobHandle {
+    /// Register the app and acquire its elastic grant: everything free
+    /// right now up to `max_containers`, then blocking escalation until
+    /// the `min_containers` floor is met or `grant_timeout` expires.
+    pub fn submit(rm: &Arc<ResourceManager>, spec: JobSpec) -> Result<JobHandle> {
+        let metrics = rm.metrics().clone();
+        let app = AppLease::submit(rm, &spec.app, &spec.queue)?;
+        let grant = Grant::acquire(
+            rm,
+            &spec.app,
+            spec.resources,
+            spec.min_containers,
+            spec.max_containers,
+            spec.grant_timeout,
+        )
+        .with_context(|| format!("acquiring grant for job '{}'", spec.app))?;
+        metrics.histogram("platform.job.grant_wait").record(grant.wait());
+        metrics.counter("platform.job.jobs").inc();
+        Ok(JobHandle {
+            grant,
+            app,
+            spec,
+            metrics,
+            retries: Arc::new(AtomicU64::new(0)),
+            started: Instant::now(),
+        })
+    }
+
+    /// Containers actually granted — also the shard count.
+    pub fn shards(&self) -> usize {
+        self.grant.len()
+    }
+
+    pub fn containers(&self) -> &[ContainerRef] {
+        self.grant.containers()
+    }
+
+    pub fn grant_wait(&self) -> Duration {
+        self.grant.wait()
+    }
+
+    /// Shard `items` across the grant via the DCE executor pool: one
+    /// partition per container, each shard closure retried within the
+    /// job's budget, panics converted into job errors. Output order
+    /// follows input order.
+    pub fn run_sharded<T: Data, U: Data>(
+        &self,
+        ctx: &DceContext,
+        items: Vec<T>,
+        f: impl Fn(&ShardCtx, Vec<T>) -> Result<Vec<U>> + Send + Sync + 'static,
+    ) -> Result<Vec<U>> {
+        let conts: Vec<ContainerRef> = self.grant.containers().to_vec();
+        let shards = conts.len();
+        let budget = self.spec.max_shard_retries;
+        let retries = self.retries.clone();
+        let metrics = self.metrics.clone();
+        ctx.parallelize(items, shards)
+            .map_partitions(move |part, items: Vec<T>| {
+                let container = &conts[part % conts.len()];
+                // Clone the shard's input only while a retry could still
+                // follow; the final permitted attempt takes it by move.
+                let items = std::sync::Mutex::new(Some(items));
+                run_attempts(part, shards, container, budget, &retries, &metrics, |sctx| {
+                    let input = if sctx.attempt >= budget {
+                        items.lock().unwrap().take().expect("final attempt input")
+                    } else {
+                        items.lock().unwrap().as_ref().expect("attempt input").clone()
+                    };
+                    f(sctx, input)
+                })
+            })
+            .collect()
+    }
+
+    /// One closure per granted container on dedicated threads — for
+    /// workloads that poll or stream rather than consume a fixed list
+    /// (e.g. the compactor draining its share of log partitions). Same
+    /// retry budget and panic containment as [`Self::run_sharded`].
+    pub fn run_per_container<U: Send>(
+        &self,
+        f: impl Fn(&ShardCtx) -> Result<U> + Send + Sync,
+    ) -> Result<Vec<U>> {
+        let conts = self.grant.containers();
+        let shards = conts.len();
+        let budget = self.spec.max_shard_retries;
+        let results: Vec<std::thread::Result<Result<U>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..shards)
+                .map(|w| {
+                    let f = &f;
+                    let container = &conts[w];
+                    let retries = &self.retries;
+                    let metrics = &self.metrics;
+                    s.spawn(move || {
+                        run_attempts(w, shards, container, budget, retries, metrics, f)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+        let mut out = Vec::with_capacity(shards);
+        let mut first_err: Option<anyhow::Error> = None;
+        for r in results {
+            match r {
+                Ok(Ok(v)) => out.push(v),
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(payload) => {
+                    first_err.get_or_insert(anyhow!(
+                        "job worker panicked: {}",
+                        panic_msg(payload.as_ref())
+                    ));
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    /// Run one closure inside the first granted container — the shape
+    /// of a sequential single-container stage.
+    pub fn run_single<T>(&self, f: impl FnOnce(&ContainerCtx) -> Result<T>) -> Result<T> {
+        let c = self
+            .grant
+            .containers()
+            .first()
+            .ok_or_else(|| anyhow!("job '{}' holds no containers", self.spec.app))?;
+        c.run(f)?
+    }
+
+    /// Finish the job: record container-seconds, return the stats, and
+    /// release the grant + app registration (RAII).
+    pub fn finish(self) -> JobStats {
+        let elapsed = self.started.elapsed();
+        let containers = self.grant.len();
+        let container_seconds = elapsed.as_secs_f64() * containers as f64;
+        self.metrics
+            .counter("platform.job.container_ms")
+            .add((container_seconds * 1000.0) as u64);
+        JobStats {
+            app: self.spec.app.clone(),
+            queue: self.spec.queue.clone(),
+            containers,
+            grant_wait: self.grant.wait(),
+            shard_retries: self.retries.load(Ordering::Relaxed),
+            container_seconds,
+            elapsed,
+        }
+    }
+}
+
+/// Submit + run one closure in one container + finish: the shape of a
+/// pre-unification per-stage job (the staged pipeline baselines submit
+/// one of these per stage, paying the grant churn the unified path
+/// avoids).
+pub fn run_stage<T>(
+    rm: &Arc<ResourceManager>,
+    spec: JobSpec,
+    f: impl FnOnce(&ContainerCtx) -> Result<T>,
+) -> Result<T> {
+    let job = JobHandle::submit(rm, spec)?;
+    let out = job.run_single(f);
+    let _ = job.finish();
+    out
+}
+
+/// Retry loop shared by the sharded and per-container runners: panics
+/// are caught and converted to errors so the RAII guards — not luck —
+/// decide when containers go back to the pool.
+fn run_attempts<U>(
+    shard: usize,
+    shards: usize,
+    container: &ContainerRef,
+    budget: usize,
+    retries: &AtomicU64,
+    metrics: &MetricsRegistry,
+    attempt_fn: impl Fn(&ShardCtx) -> Result<U>,
+) -> Result<U> {
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..=budget {
+        if attempt > 0 {
+            retries.fetch_add(1, Ordering::Relaxed);
+            metrics.counter("platform.job.shard_retries").inc();
+        }
+        let sctx = ShardCtx { shard, shards, attempt, container: container.clone() };
+        match catch_unwind(AssertUnwindSafe(|| attempt_fn(&sctx))) {
+            Ok(Ok(v)) => return Ok(v),
+            Ok(Err(e)) => last = Some(e),
+            Err(payload) => {
+                metrics.counter("platform.job.shard_panics").inc();
+                last = Some(anyhow!("shard {shard} panicked: {}", panic_msg(payload.as_ref())));
+            }
+        }
+    }
+    let e = last.expect("at least one attempt ran");
+    Err(e.context(format!("shard {shard} failed after {} attempt(s)", budget + 1)))
+}
+
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn rm() -> Arc<ResourceManager> {
+        ResourceManager::new(&PlatformConfig::test().cluster, MetricsRegistry::new())
+    }
+
+    #[test]
+    fn spec_builder_clamps_ranges() {
+        let s = JobSpec::new("j").containers(0, 0);
+        assert_eq!((s.min_containers, s.max_containers), (1, 1));
+        let s = JobSpec::new("j").containers(3, 2);
+        assert_eq!((s.min_containers, s.max_containers), (3, 3));
+    }
+
+    #[test]
+    fn sharded_job_runs_and_releases() {
+        let rm = rm();
+        let ctx = DceContext::local().unwrap();
+        let job = JobHandle::submit(&rm, JobSpec::new("j").containers(1, 3)).unwrap();
+        assert!(job.shards() >= 1);
+        let out = job
+            .run_sharded(&ctx, (0..50u64).collect(), |sctx, items: Vec<u64>| {
+                assert!(sctx.shard < sctx.shards);
+                sctx.run(|_| items.into_iter().map(|x| x + 1).collect())
+            })
+            .unwrap();
+        assert_eq!(out, (1..=50).collect::<Vec<u64>>());
+        let stats = job.finish();
+        assert_eq!(stats.shard_retries, 0);
+        assert!(stats.containers >= 1);
+        assert_eq!(rm.live_containers(), 0);
+    }
+
+    #[test]
+    fn duplicate_submit_fails_until_finished() {
+        let rm = rm();
+        let job = JobHandle::submit(&rm, JobSpec::new("dup")).unwrap();
+        assert!(JobHandle::submit(&rm, JobSpec::new("dup")).is_err());
+        let _ = job.finish();
+        let again = JobHandle::submit(&rm, JobSpec::new("dup")).unwrap();
+        let _ = again.finish();
+    }
+
+    #[test]
+    fn shard_retry_budget_is_counted() {
+        let rm = rm();
+        let ctx = DceContext::local().unwrap();
+        let job =
+            JobHandle::submit(&rm, JobSpec::new("flaky").containers(1, 1).retries(2)).unwrap();
+        let calls = Arc::new(AtomicU64::new(0));
+        let c2 = calls.clone();
+        let out = job
+            .run_sharded(&ctx, vec![7u32], move |_sctx, items: Vec<u32>| {
+                if c2.fetch_add(1, Ordering::SeqCst) < 2 {
+                    anyhow::bail!("transient");
+                }
+                Ok(items)
+            })
+            .unwrap();
+        assert_eq!(out, vec![7]);
+        let stats = job.finish();
+        assert_eq!(stats.shard_retries, 2);
+        assert_eq!(rm.live_containers(), 0);
+    }
+
+    #[test]
+    fn run_single_uses_the_first_container() {
+        let rm = rm();
+        let job = JobHandle::submit(&rm, JobSpec::new("single")).unwrap();
+        let v = job.run_single(|cctx| {
+            cctx.alloc_mem(1024)?;
+            cctx.free_mem(1024);
+            Ok(99)
+        });
+        assert_eq!(v.unwrap(), 99);
+        let _ = job.finish();
+        assert_eq!(rm.live_containers(), 0);
+    }
+
+    #[test]
+    fn run_stage_is_a_self_contained_job() {
+        let rm = rm();
+        let out = run_stage(&rm, JobSpec::new("stage"), |_c| Ok(5u32)).unwrap();
+        assert_eq!(out, 5);
+        assert_eq!(rm.live_containers(), 0);
+        assert_eq!(rm.metrics().counter("platform.job.jobs").get(), 1);
+    }
+}

@@ -1,8 +1,13 @@
 //! The assembled platform: one call boots the whole stack — resource
 //! manager, tiered storage, PJRT runtime, kernel registry, dispatcher,
 //! and the compute-engine context — wired exactly as Figure 2 draws it.
+//! The [`job`] submodule is the unified job layer every workload
+//! schedules through.
 
 pub mod experiments;
+pub mod job;
+
+pub use job::{run_stage, JobHandle, JobSpec, JobStats, ShardCtx};
 
 use anyhow::Result;
 use std::sync::Arc;

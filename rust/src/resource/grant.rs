@@ -1,0 +1,238 @@
+//! RAII ownership of resource-manager state: container grants and app
+//! registrations that clean themselves up on every exit path.
+//!
+//! Before the unified job layer, each workload released its containers
+//! in straight-line code — a shard failure or panic between grant and
+//! release permanently deducted cluster capacity. [`Grant`] and
+//! [`AppLease`] make release structural: dropping them (normally, on
+//! `?`, or during unwinding) returns the containers and frees the app
+//! name for resubmission.
+
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::container::ContainerRef;
+use super::device::ResourceVec;
+use super::yarn::ResourceManager;
+
+/// An application registration that unregisters itself on drop.
+pub struct AppLease {
+    rm: Arc<ResourceManager>,
+    app: String,
+}
+
+impl AppLease {
+    /// Register `app` against `queue`; the registration is removed when
+    /// the lease drops (after its containers have been released).
+    pub fn submit(rm: &Arc<ResourceManager>, app: &str, queue: &str) -> Result<Self> {
+        rm.submit_app(app, queue)?;
+        Ok(Self { rm: rm.clone(), app: app.to_string() })
+    }
+
+    pub fn app(&self) -> &str {
+        &self.app
+    }
+}
+
+impl Drop for AppLease {
+    fn drop(&mut self) {
+        // Fails only if containers are still live (the Grant must drop
+        // first) or the app was already removed; neither is actionable
+        // during drop.
+        let _ = self.rm.remove_app(&self.app);
+    }
+}
+
+/// An elastic set of granted containers, released RAII-style.
+pub struct Grant {
+    rm: Arc<ResourceManager>,
+    containers: Vec<ContainerRef>,
+    wait: Duration,
+}
+
+impl Grant {
+    /// Elastic acquisition: greedily take whatever is free right now
+    /// (up to `max` containers of `req` each), then block — waiting for
+    /// other jobs to release — until at least `min` are held or
+    /// `timeout` expires. A partial grant below the floor is returned
+    /// to the pool before the error propagates.
+    pub fn acquire(
+        rm: &Arc<ResourceManager>,
+        app: &str,
+        req: ResourceVec,
+        min: usize,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<Grant> {
+        let min = min.max(1);
+        let max = max.max(min);
+        let start = Instant::now();
+        let mut grant = Grant { rm: rm.clone(), containers: Vec::new(), wait: Duration::ZERO };
+        for _ in 0..max {
+            match rm.request_container(app, req) {
+                Ok(c) => grant.containers.push(c),
+                Err(_) => break,
+            }
+        }
+        if grant.containers.len() < min {
+            // Fail fast on requests that no node shape or queue cap can
+            // ever satisfy — blocking would only burn the full timeout.
+            rm.check_feasible(app, req)?;
+        }
+        // Escalation holds the partial grant while waiting, so two jobs
+        // with floors > 1 can hold-and-wait each other into timeout
+        // (bounded by `timeout`, never a permanent deadlock). Atomic
+        // floor acquisition — gang scheduling — is tracked in ROADMAP.
+        while grant.containers.len() < min {
+            let left = timeout.saturating_sub(start.elapsed());
+            if left.is_zero() {
+                bail!(
+                    "grant for '{app}' timed out below its floor: {}/{} container(s) after {:?}",
+                    grant.containers.len(),
+                    min,
+                    timeout
+                );
+            }
+            grant.containers.push(rm.acquire_container(app, req, left)?);
+        }
+        grant.wait = start.elapsed();
+        Ok(grant)
+    }
+
+    pub fn containers(&self) -> &[ContainerRef] {
+        &self.containers
+    }
+
+    pub fn len(&self) -> usize {
+        self.containers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.containers.is_empty()
+    }
+
+    /// How long acquisition blocked waiting for capacity.
+    pub fn wait(&self) -> Duration {
+        self.wait
+    }
+
+    /// Explicit release (equivalent to drop, but readable at call sites).
+    pub fn release(self) {}
+}
+
+impl Drop for Grant {
+    fn drop(&mut self) {
+        for c in self.containers.drain(..) {
+            if !c.is_released() {
+                let _ = self.rm.release(&c);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::metrics::MetricsRegistry;
+
+    fn rm() -> Arc<ResourceManager> {
+        let cluster = ClusterConfig {
+            nodes: 2,
+            cores_per_node: 2,
+            gpus_per_node: 0,
+            fpgas_per_node: 0,
+            mem_per_node: 1000,
+        };
+        ResourceManager::new(&cluster, MetricsRegistry::new())
+    }
+
+    #[test]
+    fn grant_releases_on_drop() {
+        let rm = rm();
+        rm.submit_app("g", "default").unwrap();
+        {
+            let g = Grant::acquire(
+                &rm,
+                "g",
+                ResourceVec::cores(1, 10),
+                1,
+                3,
+                Duration::from_millis(10),
+            )
+            .unwrap();
+            assert_eq!(g.len(), 3);
+            assert_eq!(rm.live_containers(), 3);
+        }
+        assert_eq!(rm.live_containers(), 0, "drop must return every container");
+    }
+
+    #[test]
+    fn grant_is_elastic_between_min_and_max() {
+        let rm = rm();
+        rm.submit_app("g", "default").unwrap();
+        // Only 4 cores exist; asking for up to 16 degrades gracefully.
+        let g = Grant::acquire(
+            &rm,
+            "g",
+            ResourceVec::cores(1, 10),
+            1,
+            16,
+            Duration::from_millis(10),
+        )
+        .unwrap();
+        assert_eq!(g.len(), 4);
+    }
+
+    #[test]
+    fn grant_below_floor_times_out_and_returns_partials() {
+        let rm = rm();
+        rm.submit_app("hog", "default").unwrap();
+        rm.submit_app("g", "default").unwrap();
+        let _hold = rm.request_container("hog", ResourceVec::cores(2, 10)).unwrap();
+        let _hold2 = rm.request_container("hog", ResourceVec::cores(1, 10)).unwrap();
+        // One core free but the floor is 2: acquisition must time out
+        // and give back the single container it did get.
+        let r = Grant::acquire(
+            &rm,
+            "g",
+            ResourceVec::cores(1, 10),
+            2,
+            2,
+            Duration::from_millis(50),
+        );
+        assert!(r.is_err());
+        assert_eq!(rm.live_containers(), 2, "partial grant must be returned");
+    }
+
+    #[test]
+    fn infeasible_request_fails_fast() {
+        let rm = rm();
+        rm.submit_app("g", "default").unwrap();
+        let t = Instant::now();
+        // 3 cores can never fit a 2-core node: must not burn the
+        // 5-second blocking timeout before erroring.
+        let r = Grant::acquire(
+            &rm,
+            "g",
+            ResourceVec::cores(3, 10),
+            1,
+            1,
+            Duration::from_secs(5),
+        );
+        assert!(r.is_err());
+        assert!(t.elapsed() < Duration::from_secs(1), "must fail fast, not block");
+    }
+
+    #[test]
+    fn app_lease_unregisters_on_drop() {
+        let rm = rm();
+        {
+            let lease = AppLease::submit(&rm, "lease", "default").unwrap();
+            assert_eq!(lease.app(), "lease");
+            assert!(rm.submit_app("lease", "default").is_err(), "name held while leased");
+        }
+        rm.submit_app("lease", "default").unwrap();
+    }
+}

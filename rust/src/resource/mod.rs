@@ -4,8 +4,10 @@
 
 pub mod container;
 pub mod device;
+pub mod grant;
 pub mod yarn;
 
 pub use container::{Container, ContainerCtx, ContainerRef};
 pub use device::{DeviceId, DeviceKind, ResourceVec};
+pub use grant::{AppLease, Grant};
 pub use yarn::ResourceManager;

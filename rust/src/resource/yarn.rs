@@ -19,6 +19,8 @@ use crate::config::ClusterConfig;
 use crate::metrics::MetricsRegistry;
 
 struct NodeState {
+    /// Full node shape (never mutated) — used for feasibility checks.
+    capacity: ResourceVec,
     avail: ResourceVec,
     free_gpus: Vec<usize>,
     free_fpgas: Vec<usize>,
@@ -64,14 +66,16 @@ impl ResourceManager {
         queues: Vec<(String, f64)>,
         metrics: MetricsRegistry,
     ) -> Arc<Self> {
+        let shape = ResourceVec {
+            cores: cluster.cores_per_node,
+            mem_bytes: cluster.mem_per_node,
+            gpus: cluster.gpus_per_node,
+            fpgas: cluster.fpgas_per_node,
+        };
         let nodes = (0..cluster.nodes)
             .map(|_| NodeState {
-                avail: ResourceVec {
-                    cores: cluster.cores_per_node,
-                    mem_bytes: cluster.mem_per_node,
-                    gpus: cluster.gpus_per_node,
-                    fpgas: cluster.fpgas_per_node,
-                },
+                capacity: shape,
+                avail: shape,
                 free_gpus: (0..cluster.gpus_per_node).collect(),
                 free_fpgas: (0..cluster.fpgas_per_node).collect(),
             })
@@ -250,6 +254,37 @@ impl ResourceManager {
         Ok(())
     }
 
+    /// The registry this manager reports into (shared with the job
+    /// layer so grant-wait and per-job metrics land in one place).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Whether `req` could EVER be granted to `app`: it must fit an
+    /// *empty* node's full shape and sit within the app's queue
+    /// absolute capacity cap. The job layer calls this before blocking
+    /// so a permanently infeasible request fails fast instead of
+    /// burning the whole grant timeout.
+    pub fn check_feasible(&self, app: &str, req: ResourceVec) -> Result<()> {
+        let inner = self.inner.lock().unwrap();
+        let queue_name = match inner.apps.get(app) {
+            Some(a) => &a.queue,
+            None => bail!("app '{app}' not submitted"),
+        };
+        let q = inner.queues.get(queue_name).unwrap();
+        let cap = (q.share * inner.total_cores as f64).ceil() as usize;
+        if req.cores > cap {
+            bail!(
+                "request of {} core(s) exceeds queue '{queue_name}' cap of {cap}",
+                req.cores
+            );
+        }
+        if !inner.nodes.iter().any(|n| req.fits_in(&n.capacity)) {
+            bail!("no node shape can ever satisfy {req:?}");
+        }
+        Ok(())
+    }
+
     /// Total available resources across nodes (diagnostics).
     pub fn available(&self) -> ResourceVec {
         let inner = self.inner.lock().unwrap();
@@ -322,6 +357,79 @@ mod tests {
         // 25% of 8 cores = 2.
         rm.request_container("a", ResourceVec::cores(2, 10)).unwrap();
         assert!(rm.request_container("a", ResourceVec::cores(1, 10)).is_err());
+    }
+
+    #[test]
+    fn queue_cap_is_shared_across_apps() {
+        let rm = ResourceManager::with_queues(
+            &cluster(),
+            vec![("small".into(), 0.25), ("big".into(), 0.75)],
+            MetricsRegistry::new(),
+        );
+        rm.submit_app("a1", "small").unwrap();
+        rm.submit_app("a2", "small").unwrap();
+        // 25% of 8 cores = 2, shared by every app on the queue.
+        let c1 = rm.request_container("a1", ResourceVec::cores(1, 10)).unwrap();
+        rm.request_container("a2", ResourceVec::cores(1, 10)).unwrap();
+        assert!(rm.request_container("a2", ResourceVec::cores(1, 10)).is_err());
+        // Releasing one app's grant reopens the shared cap for the other.
+        rm.release(&c1).unwrap();
+        rm.request_container("a2", ResourceVec::cores(1, 10)).unwrap();
+    }
+
+    #[test]
+    fn queue_is_work_conserving_below_its_cap() {
+        // An idle sibling queue does not throttle allocation: the big
+        // queue immediately fills its full 75% share (6 of 8 cores)
+        // without waiting, and is denied only at the cap.
+        let rm = ResourceManager::with_queues(
+            &cluster(),
+            vec![("small".into(), 0.25), ("big".into(), 0.75)],
+            MetricsRegistry::new(),
+        );
+        rm.submit_app("b", "big").unwrap();
+        for i in 0..6 {
+            rm.request_container("b", ResourceVec::cores(1, 10))
+                .unwrap_or_else(|e| panic!("core {i} within share denied: {e}"));
+        }
+        assert!(
+            rm.request_container("b", ResourceVec::cores(1, 10)).is_err(),
+            "7th core exceeds the 75% cap"
+        );
+    }
+
+    #[test]
+    fn acquire_wakes_when_grant_from_another_queue_is_released() {
+        // Node capacity (not queue share) is the contended resource:
+        // queue "a" helps fill the node, queue "b" blocks below its own
+        // cap until a grant from "a" is released.
+        let one_node = ClusterConfig {
+            nodes: 1,
+            cores_per_node: 4,
+            gpus_per_node: 0,
+            fpgas_per_node: 0,
+            mem_per_node: 1000,
+        };
+        let rm = ResourceManager::with_queues(
+            &one_node,
+            vec![("a".into(), 0.5), ("b".into(), 0.75)],
+            MetricsRegistry::new(),
+        );
+        rm.submit_app("apa", "a").unwrap();
+        rm.submit_app("apb", "b").unwrap();
+        let a1 = rm.request_container("apa", ResourceVec::cores(1, 10)).unwrap();
+        let _a2 = rm.request_container("apa", ResourceVec::cores(1, 10)).unwrap();
+        let _b1 = rm.request_container("apb", ResourceVec::cores(2, 10)).unwrap();
+        // Node full; "b" holds 2 of its 3-core cap so the next request
+        // is node-bound, not share-bound.
+        let rm2 = rm.clone();
+        let waiter = std::thread::spawn(move || {
+            rm2.acquire_container("apb", ResourceVec::cores(1, 10), Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        rm.release(&a1).unwrap();
+        let got = waiter.join().unwrap();
+        assert!(got.is_ok(), "release in queue 'a' must wake the waiter in queue 'b'");
     }
 
     #[test]

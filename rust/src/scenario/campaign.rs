@@ -17,6 +17,7 @@ use std::time::Instant;
 use super::report::{self, CampaignReport, ScenarioVerdict};
 use super::spec::ScenarioSpec;
 use crate::dce::DceContext;
+use crate::platform::job::{JobHandle, JobSpec};
 use crate::resource::{ResourceManager, ResourceVec};
 use crate::services::simulation::{
     count_obstacles_from_features, gen_lidar_scan, read_bag, BagWriter, CameraFrame, Message,
@@ -30,6 +31,8 @@ use crate::util::Rng;
 pub struct CampaignConfig {
     /// Application name registered with the resource manager.
     pub app: String,
+    /// Capacity-share queue the campaign's job is charged against.
+    pub queue: String,
     /// Requested shard count (one container per shard; gracefully
     /// degrades if the cluster is smaller).
     pub nodes: usize,
@@ -46,6 +49,7 @@ impl CampaignConfig {
             work_dir: std::env::temp_dir()
                 .join(format!("adcloud-campaign-{}-{}", app, std::process::id())),
             app,
+            queue: "default".into(),
             nodes: nodes.max(1),
             pass_accuracy: 0.6,
         }
@@ -182,10 +186,13 @@ pub fn score_scenario(
     })
 }
 
-/// Run a full campaign: acquire containers from the resource manager
-/// (one per requested node), shard the scenario list across the DCE,
-/// materialize + score each scenario inside its container's accounting,
-/// and aggregate the verdicts into a qualification report.
+/// Run a full campaign as one job on the unified job layer: acquire an
+/// elastic container grant (one per requested node, degrading
+/// gracefully on a small cluster), shard the scenario list across the
+/// DCE, materialize + score each scenario inside its container's
+/// accounting, and aggregate the verdicts into a qualification report.
+/// The grant is an RAII guard: containers return to the pool on every
+/// exit path, including shard errors and panics.
 pub fn run_campaign(
     ctx: &DceContext,
     rm: &Arc<ResourceManager>,
@@ -194,65 +201,50 @@ pub fn run_campaign(
 ) -> Result<CampaignReport> {
     anyhow::ensure!(!specs.is_empty(), "campaign has no scenarios");
     let start = Instant::now();
-    rm.submit_app(&cfg.app, "default")?;
     // Size the grant for the largest scenario's frame buffers (with
     // headroom for the encoded bag), floored at 32 MiB.
     let max_frames = specs.iter().map(|s| s.frames as u64).max().unwrap_or(0);
     let mem = (2 * max_frames * (FRAME_W * FRAME_H * 4) as u64).max(32 << 20);
-    let mut containers = Vec::new();
-    for _ in 0..cfg.nodes {
-        match rm.request_container(&cfg.app, ResourceVec::cores(1, mem)) {
-            Ok(c) => containers.push(c),
-            // Cluster smaller than the requested fleet: run with what
-            // was granted rather than failing the campaign.
-            Err(_) => break,
-        }
-    }
-    if containers.is_empty() {
-        // Unregister so a retry with the same config can resubmit.
-        let _ = rm.remove_app(&cfg.app);
-        anyhow::bail!("no container capacity for campaign '{}'", cfg.app);
-    }
-    let shards = containers.len();
+    let job = JobHandle::submit(
+        rm,
+        JobSpec::new(cfg.app.as_str())
+            .queue(cfg.queue.as_str())
+            .containers(1, cfg.nodes)
+            .resources(ResourceVec::cores(1, mem)),
+    )
+    .with_context(|| format!("submitting campaign job '{}'", cfg.app))?;
+    let shards = job.shards();
     ctx.metrics().counter("scenario.campaigns").inc();
 
-    let rdd = ctx.parallelize(specs.to_vec(), shards);
-    let conts = containers.clone();
     let work_dir = cfg.work_dir.clone();
     let pass_accuracy = cfg.pass_accuracy;
-    let job = rdd
-        .map_partitions(move |part, specs: Vec<ScenarioSpec>| {
-            let container = &conts[part % conts.len()];
-            let mut out = Vec::with_capacity(specs.len());
-            for spec in specs {
-                let dir = work_dir.join(&spec.id);
-                let verdict = container.run(|cctx| -> Result<ScenarioVerdict> {
-                    // Charge the frame buffers against the container's
-                    // memory limit, cgroup-style.
-                    let est = spec.frames as u64 * (FRAME_W * FRAME_H * 4) as u64;
-                    cctx.alloc_mem(est)?;
-                    let result = (|| {
-                        let bags = materialize_scenario(&spec, &dir)?;
-                        score_scenario(&spec, &bags, pass_accuracy)
-                    })();
-                    cctx.free_mem(est);
-                    let _ = std::fs::remove_dir_all(&dir);
-                    result
-                })??;
-                out.push(verdict);
-            }
-            Ok(out)
-        })
-        .collect();
+    let result = job.run_sharded(ctx, specs.to_vec(), move |sctx, specs: Vec<ScenarioSpec>| {
+        let mut out = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let dir = work_dir.join(&spec.id);
+            let verdict = sctx.run(|cctx| -> Result<ScenarioVerdict> {
+                // Charge the frame buffers against the container's
+                // memory limit, cgroup-style.
+                let est = spec.frames as u64 * (FRAME_W * FRAME_H * 4) as u64;
+                cctx.alloc_mem(est)?;
+                let result = (|| {
+                    let bags = materialize_scenario(&spec, &dir)?;
+                    score_scenario(&spec, &bags, pass_accuracy)
+                })();
+                cctx.free_mem(est);
+                let _ = std::fs::remove_dir_all(&dir);
+                result
+            })??;
+            out.push(verdict);
+        }
+        Ok(out)
+    });
 
-    // Return the grant whether or not the job succeeded — a failed
-    // campaign must not permanently deduct cluster capacity.
-    for c in &containers {
-        let _ = rm.release(c);
-    }
-    let _ = rm.remove_app(&cfg.app);
+    // finish() returns the grant whether or not the job succeeded — a
+    // failed campaign must not permanently deduct cluster capacity.
+    let _ = job.finish();
     let _ = std::fs::remove_dir_all(&cfg.work_dir);
-    let verdicts = job?;
+    let verdicts = result?;
     ctx.metrics().counter("scenario.scenarios_run").add(verdicts.len() as u64);
     Ok(report::aggregate(verdicts, shards, start.elapsed()))
 }

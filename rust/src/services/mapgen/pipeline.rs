@@ -17,6 +17,8 @@ use super::semantic::{derive_lanes, extract_signs, HdMap};
 use super::slam::{slam_trajectory, SlamConfig};
 use super::trace::{DriveLog, LANE_HALF_WIDTH};
 use crate::hetero::Dispatcher;
+use crate::platform::job::{run_stage, JobHandle, JobSpec};
+use crate::resource::{ResourceManager, ResourceVec};
 use crate::storage::DfsStore;
 
 /// Pipeline outcome + quality metrics.
@@ -38,40 +40,62 @@ fn assemble_cloud(poses: &[crate::pointcloud::Se3], log: &DriveLog) -> Vec<f32> 
     cloud
 }
 
-/// Fused pipeline: one pass, intermediates stay in memory.
+/// Fused pipeline: ONE job on the unified job layer, all five stages
+/// in a single granted container, intermediates in memory. The
+/// assembled cloud (≈ scan bytes) is charged against the container's
+/// memory limit.
 pub fn run_fused(
     dispatcher: &Dispatcher,
+    rm: &Arc<ResourceManager>,
     log: &DriveLog,
     config: &SlamConfig,
     grid_res_m: f32,
 ) -> Result<MapgenReport> {
     let start = Instant::now();
-    // Stage 1+2: SLAM pose recovery (ICP-refined).
-    let slam = slam_trajectory(dispatcher, log, config)?;
-    // Stage 3: point-cloud assembly.
-    let cloud = assemble_cloud(&slam.poses, log);
-    // Stage 4: grid map.
-    let mut grid = GridMap::covering(&cloud, grid_res_m);
-    grid.add_points(&cloud);
-    // Stage 5: semantics.
-    let lanes = derive_lanes(&slam.poses, LANE_HALF_WIDTH);
-    let signs = extract_signs(&cloud);
-    let map = HdMap { grid, lanes, signs };
-    Ok(MapgenReport {
-        mode: "fused",
-        elapsed: start.elapsed(),
-        slam_err_m: slam.mean_err_m,
-        occupied_cells: map.grid.occupied_cells(),
-        signs: map.signs.len(),
-        lanes: map.lanes.len(),
-        map,
-    })
+    let scan_bytes: u64 = log.scans.iter().map(|s| (s.len() * 4) as u64).sum();
+    let job = JobHandle::submit(
+        rm,
+        JobSpec::new("mapgen-fused")
+            .resources(ResourceVec::cores(1, (4 * scan_bytes).max(32 << 20))),
+    )?;
+    let report = job.run_single(|cctx| {
+        cctx.alloc_mem(scan_bytes)?;
+        let result = (|| -> Result<MapgenReport> {
+            // Stage 1+2: SLAM pose recovery (ICP-refined).
+            let slam = slam_trajectory(dispatcher, log, config)?;
+            // Stage 3: point-cloud assembly.
+            let cloud = assemble_cloud(&slam.poses, log);
+            // Stage 4: grid map.
+            let mut grid = GridMap::covering(&cloud, grid_res_m);
+            grid.add_points(&cloud);
+            // Stage 5: semantics.
+            let lanes = derive_lanes(&slam.poses, LANE_HALF_WIDTH);
+            let signs = extract_signs(&cloud);
+            let map = HdMap { grid, lanes, signs };
+            Ok(MapgenReport {
+                mode: "fused",
+                elapsed: start.elapsed(),
+                slam_err_m: slam.mean_err_m,
+                occupied_cells: map.grid.occupied_cells(),
+                signs: map.signs.len(),
+                lanes: map.lanes.len(),
+                map,
+            })
+        })();
+        cctx.free_mem(scan_bytes);
+        result
+    });
+    let _ = job.finish();
+    report
 }
 
-/// Staged pipeline: identical stages, but every boundary round-trips the
-/// DFS device (separate jobs, as pre-unification infrastructure would).
+/// Staged pipeline: identical stages, but each one is its own
+/// application-master submission (one job per stage, the
+/// pre-unification shape) and every boundary round-trips the DFS
+/// device.
 pub fn run_staged(
     dispatcher: &Dispatcher,
+    rm: &Arc<ResourceManager>,
     dfs: &Arc<DfsStore>,
     log: &DriveLog,
     config: &SlamConfig,
@@ -79,52 +103,68 @@ pub fn run_staged(
 ) -> Result<MapgenReport> {
     let start = Instant::now();
     let scan_bytes: u64 = log.scans.iter().map(|s| (s.len() * 4) as u64).sum();
-    // Stage 0: raw logs land on DFS; stage 1 reads them back.
-    dfs.write("mapgen/raw-log", &vec![0u8; (scan_bytes / 64).max(1) as usize])?;
-    dfs.device().charge(scan_bytes);
-    // Stage 1+2: SLAM; poses written out.
-    let slam = slam_trajectory(dispatcher, log, config)?;
+    let mem = (4 * scan_bytes).max(32 << 20);
+    let spec = |name: &str| JobSpec::new(name).resources(ResourceVec::cores(1, mem));
+    // Stage 1+2: SLAM job — raw logs from DFS in, poses written out.
+    let slam = run_stage(rm, spec("mapgen-staged-slam"), |_cctx| {
+        dfs.write("mapgen/raw-log", &vec![0u8; (scan_bytes / 64).max(1) as usize])?;
+        dfs.device().charge(scan_bytes);
+        let slam = slam_trajectory(dispatcher, log, config)?;
+        let pose_bytes = (slam.poses.len() * 48) as u64;
+        dfs.device().charge(pose_bytes);
+        dfs.write("mapgen/poses", &vec![0u8; pose_bytes as usize])?;
+        Ok(slam)
+    })?;
     let pose_bytes = (slam.poses.len() * 48) as u64;
-    dfs.device().charge(pose_bytes);
-    dfs.write("mapgen/poses", &vec![0u8; pose_bytes as usize])?;
     // Stage 3: assembly job rereads logs + poses, writes the cloud.
-    dfs.device().charge(scan_bytes + pose_bytes);
-    let cloud = assemble_cloud(&slam.poses, log);
+    let cloud = run_stage(rm, spec("mapgen-staged-assemble"), |_cctx| {
+        dfs.device().charge(scan_bytes + pose_bytes);
+        let cloud = assemble_cloud(&slam.poses, log);
+        dfs.device().charge((cloud.len() * 4) as u64);
+        dfs.write("mapgen/cloud-manifest", b"cloud")?;
+        Ok(cloud)
+    })?;
     let cloud_bytes = (cloud.len() * 4) as u64;
-    dfs.device().charge(cloud_bytes);
-    dfs.write("mapgen/cloud-manifest", b"cloud")?;
     // Stage 4: grid job rereads the cloud, writes the grid.
-    dfs.device().charge(cloud_bytes);
-    let mut grid = GridMap::covering(&cloud, grid_res_m);
-    grid.add_points(&cloud);
-    let grid_bytes = grid.size_bytes() as u64;
-    dfs.device().charge(grid_bytes);
-    dfs.write("mapgen/grid-manifest", b"grid")?;
+    let grid = run_stage(rm, spec("mapgen-staged-grid"), |_cctx| {
+        dfs.device().charge(cloud_bytes);
+        let mut grid = GridMap::covering(&cloud, grid_res_m);
+        grid.add_points(&cloud);
+        dfs.device().charge(grid.size_bytes() as u64);
+        dfs.write("mapgen/grid-manifest", b"grid")?;
+        Ok(grid)
+    })?;
     // Stage 5: labelling job rereads grid + cloud + poses.
-    dfs.device().charge(cloud_bytes + grid_bytes + pose_bytes);
-    let lanes = derive_lanes(&slam.poses, LANE_HALF_WIDTH);
-    let signs = extract_signs(&cloud);
-    let map = HdMap { grid, lanes, signs };
-    Ok(MapgenReport {
-        mode: "staged",
-        elapsed: start.elapsed(),
-        slam_err_m: slam.mean_err_m,
-        occupied_cells: map.grid.occupied_cells(),
-        signs: map.signs.len(),
-        lanes: map.lanes.len(),
-        map,
+    run_stage(rm, spec("mapgen-staged-label"), |_cctx| {
+        dfs.device().charge(cloud_bytes + grid.size_bytes() as u64 + pose_bytes);
+        let lanes = derive_lanes(&slam.poses, LANE_HALF_WIDTH);
+        let signs = extract_signs(&cloud);
+        let map = HdMap { grid, lanes, signs };
+        Ok(MapgenReport {
+            mode: "staged",
+            elapsed: start.elapsed(),
+            slam_err_m: slam.mean_err_m,
+            occupied_cells: map.grid.occupied_cells(),
+            signs: map.signs.len(),
+            lanes: map.lanes.len(),
+            map,
+        })
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::TierConfig;
+    use crate::config::{PlatformConfig, TierConfig};
     use crate::hetero::{register_default_kernels, KernelRegistry};
     use crate::metrics::MetricsRegistry;
     use crate::resource::DeviceKind;
     use crate::runtime::shared_runtime;
     use crate::services::mapgen::trace::{gen_drive, gen_world};
+
+    fn test_rm() -> Arc<ResourceManager> {
+        ResourceManager::new(&PlatformConfig::test().cluster, MetricsRegistry::new())
+    }
 
     fn have_artifacts() -> bool {
         let ok = crate::artifacts_dir().join("manifest.json").is_file();
@@ -145,7 +185,9 @@ mod tests {
         let world = gen_world(20);
         let log = gen_drive(&world, 100, 20);
         let cfg = SlamConfig { device: DeviceKind::Gpu, ..Default::default() };
-        let report = run_fused(&d, &log, &cfg, 0.1).unwrap();
+        let rm = test_rm();
+        let report = run_fused(&d, &rm, &log, &cfg, 0.1).unwrap();
+        assert_eq!(rm.live_containers(), 0, "mapgen grant must be returned");
         // GPS sigma is 0.4 m with outage sectors; ~1-1.5 m mean error is
         // the expected envelope (dead reckoning alone drifts to 10+ m).
         assert!(report.slam_err_m < 2.0, "slam err {}", report.slam_err_m);
@@ -172,9 +214,10 @@ mod tests {
         let cfg = SlamConfig { device: DeviceKind::Gpu, icp_every: 20, ..Default::default() };
         let tier = TierConfig { capacity_bytes: u64::MAX, bandwidth_bps: 1e9, latency_us: 0 };
         let dfs = DfsStore::new(tier, false, MetricsRegistry::new()).unwrap();
-        let fused = run_fused(&d, &log, &cfg, 0.1).unwrap();
+        let rm = test_rm();
+        let fused = run_fused(&d, &rm, &log, &cfg, 0.1).unwrap();
         let before = dfs.device().bytes_total();
-        let staged = run_staged(&d, &dfs, &log, &cfg, 0.1).unwrap();
+        let staged = run_staged(&d, &rm, &dfs, &log, &cfg, 0.1).unwrap();
         assert!(
             dfs.device().bytes_total() > before + 1_000_000,
             "staged must move MBs through DFS"

@@ -21,7 +21,8 @@ use super::trainer::DistTrainer;
 use crate::dce::DceContext;
 use crate::hetero::cpu_impls::init_params;
 use crate::hetero::Dispatcher;
-use crate::resource::DeviceKind;
+use crate::platform::job::{run_stage, JobHandle, JobSpec};
+use crate::resource::{DeviceKind, ResourceManager, ResourceVec};
 use crate::storage::DfsStore;
 use crate::util::Rng;
 
@@ -70,9 +71,13 @@ fn augment(idx: usize, mut ex: Example) -> Example {
     ex
 }
 
-/// Unified pipeline: one in-memory dataflow, intermediates cached.
+/// Unified pipeline: ONE job on the unified job layer, intermediates
+/// kept in memory between stages. The grant is held for the whole
+/// pipeline; ETL + feature prep shard across it, training consumes the
+/// prepared shards directly (no storage hop).
 pub fn run_unified(
     ctx: &DceContext,
+    rm: &Arc<ResourceManager>,
     dispatcher: &Dispatcher,
     device: DeviceKind,
     ps: &ParamServer,
@@ -82,19 +87,47 @@ pub fn run_unified(
     seed: u64,
 ) -> Result<PipelineReport> {
     let start = Instant::now();
+    let workers = workers.max(1);
     let raw = gen_dataset(n_examples, seed);
-    let rdd = ctx
-        .parallelize(raw, workers.max(1))
-        .map(etl)
-        .map_partitions(|_, items: Vec<Example>| {
-            Ok(items.into_iter().enumerate().map(|(i, e)| augment(i, e)).collect())
-        })
-        .cache();
-    // Training consumes the cached partitions directly (no storage hop).
-    let prepared = rdd.collect()?;
-    let shards = shard(prepared, workers.max(1));
+    // The grant is elastic: fewer containers than `workers` means a
+    // shard can own up to the whole dataset, so size each container's
+    // limit for that worst case.
+    let job = JobHandle::submit(
+        rm,
+        JobSpec::new("training-unified")
+            .containers(1, workers)
+            .resources(ResourceVec::cores(
+                1,
+                (2 * EXAMPLE_BYTES * n_examples as u64).max(32 << 20),
+            )),
+    )?;
+    // Stages 1+2 shard across the grant, each shard charged against its
+    // container's memory limit; intermediates never leave memory.
+    let per_shard = n_examples.div_ceil(job.shards()).max(1);
+    let prepared = job.run_sharded(ctx, raw, move |sctx, items: Vec<Example>| {
+        sctx.run(|cctx| -> Result<Vec<Example>> {
+            let est = EXAMPLE_BYTES * items.len() as u64;
+            cctx.alloc_mem(est)?;
+            // Global example indices (partitions are contiguous chunks
+            // of `per_shard`), so the deterministic flip augmentation
+            // matches the staged pipeline whatever the grant size.
+            let base = sctx.shard * per_shard;
+            let out = items
+                .into_iter()
+                .map(etl)
+                .enumerate()
+                .map(|(i, e)| augment(base + i, e))
+                .collect();
+            cctx.free_mem(est);
+            Ok(out)
+        })?
+    })?;
+    // Stage 3: training consumes the prepared shards directly, still
+    // inside the job's grant.
+    let shards = shard(prepared, workers);
     let trainer = DistTrainer::new(dispatcher.clone(), device, shards);
     let report = trainer.train(ps, init_params(&mut Rng::new(seed)), rounds, 0.05)?;
+    let _ = job.finish();
     let elapsed = start.elapsed();
     Ok(PipelineReport {
         mode: "unified",
@@ -106,10 +139,13 @@ pub fn run_unified(
     })
 }
 
-/// Staged pipeline: ETL job → DFS → feature job → DFS → training job,
-/// every boundary paying the remote-storage device.
+/// Staged pipeline: ETL job → DFS → feature job → DFS → training job.
+/// Each stage is its own application-master submission (the
+/// pre-unification shape — one grant per stage, paid in churn) and
+/// every boundary pays the remote-storage device.
 pub fn run_staged(
     dfs: &Arc<DfsStore>,
+    rm: &Arc<ResourceManager>,
     dispatcher: &Dispatcher,
     device: DeviceKind,
     ps: &ParamServer,
@@ -119,27 +155,38 @@ pub fn run_staged(
     seed: u64,
 ) -> Result<PipelineReport> {
     let start = Instant::now();
-    // Stage 0: raw data lands on DFS (as it would from ingest).
+    let workers = workers.max(1);
+    let mem = (2 * EXAMPLE_BYTES * n_examples as u64).max(32 << 20);
+    let stage_spec = |name: &str| JobSpec::new(name).resources(ResourceVec::cores(1, mem));
     let raw = gen_dataset(n_examples, seed);
-    for (i, _chunk) in raw.chunks(64.max(raw.len() / workers.max(1))).enumerate() {
-        dfs.write(&format!("staged/raw-{i:05}"), &vec![0u8; (EXAMPLE_BYTES as usize) * 64])?;
-    }
-    // Stage 1: ETL — read raw from DFS, transform, write back.
-    dfs.device().charge(EXAMPLE_BYTES * n_examples as u64); // read all raw
-    let etled: Vec<Example> = raw.into_iter().map(etl).collect();
-    dfs.device().charge(EXAMPLE_BYTES * n_examples as u64); // write intermediates
-    dfs.write("staged/etl-manifest", b"etl done")?;
+    // Stage 1: ETL — raw data lands on DFS (as it would from ingest),
+    // is read back, transformed, and written out again.
+    let etled = run_stage(rm, stage_spec("training-staged-etl"), |_cctx| {
+        for (i, _chunk) in raw.chunks(64.max(raw.len() / workers)).enumerate() {
+            dfs.write(&format!("staged/raw-{i:05}"), &vec![0u8; (EXAMPLE_BYTES as usize) * 64])?;
+        }
+        dfs.device().charge(EXAMPLE_BYTES * n_examples as u64); // read all raw
+        let etled: Vec<Example> = raw.into_iter().map(etl).collect();
+        dfs.device().charge(EXAMPLE_BYTES * n_examples as u64); // write intermediates
+        dfs.write("staged/etl-manifest", b"etl done")?;
+        Ok(etled)
+    })?;
     // Stage 2: feature prep — read intermediates, transform, write back.
-    dfs.device().charge(EXAMPLE_BYTES * n_examples as u64);
-    let prepared: Vec<Example> =
-        etled.into_iter().enumerate().map(|(i, e)| augment(i, e)).collect();
-    dfs.device().charge(EXAMPLE_BYTES * n_examples as u64);
-    dfs.write("staged/feat-manifest", b"feat done")?;
+    let prepared = run_stage(rm, stage_spec("training-staged-feature"), |_cctx| {
+        dfs.device().charge(EXAMPLE_BYTES * n_examples as u64);
+        let prepared: Vec<Example> =
+            etled.into_iter().enumerate().map(|(i, e)| augment(i, e)).collect();
+        dfs.device().charge(EXAMPLE_BYTES * n_examples as u64);
+        dfs.write("staged/feat-manifest", b"feat done")?;
+        Ok(prepared)
+    })?;
     // Stage 3: training — read prepared data from DFS into shards.
-    dfs.device().charge(EXAMPLE_BYTES * n_examples as u64);
-    let shards = shard(prepared, workers.max(1));
-    let trainer = DistTrainer::new(dispatcher.clone(), device, shards);
-    let report = trainer.train(ps, init_params(&mut Rng::new(seed)), rounds, 0.05)?;
+    let report = run_stage(rm, stage_spec("training-staged-train"), |_cctx| {
+        dfs.device().charge(EXAMPLE_BYTES * n_examples as u64);
+        let shards = shard(prepared, workers);
+        let trainer = DistTrainer::new(dispatcher.clone(), device, shards);
+        trainer.train(ps, init_params(&mut Rng::new(seed)), rounds, 0.05)
+    })?;
     let elapsed = start.elapsed();
     Ok(PipelineReport {
         mode: "staged",
@@ -198,17 +245,22 @@ mod tests {
             return;
         }
         let ctx = DceContext::local().unwrap();
+        let rm = crate::resource::ResourceManager::new(
+            &PlatformConfig::test().cluster,
+            MetricsRegistry::new(),
+        );
         let reg = KernelRegistry::new();
         register_default_kernels(&reg, &shared_runtime().unwrap());
         let d = Dispatcher::new(reg, MetricsRegistry::new());
         let store = TieredStore::test_store(&PlatformConfig::test().storage);
         let ps_u = ParamServer::tiered(store.clone(), "u");
         let before = ctx.dfs().device().ops_total();
-        let u = run_unified(&ctx, &d, DeviceKind::Gpu, &ps_u, 64, 4, 2, 7).unwrap();
+        let u = run_unified(&ctx, &rm, &d, DeviceKind::Gpu, &ps_u, 64, 4, 2, 7).unwrap();
         assert_eq!(ctx.dfs().device().ops_total(), before, "unified must not touch DFS");
         let ps_s = ParamServer::tiered(store, "s");
-        let s = run_staged(ctx.dfs(), &d, DeviceKind::Gpu, &ps_s, 64, 4, 2, 7).unwrap();
+        let s = run_staged(ctx.dfs(), &rm, &d, DeviceKind::Gpu, &ps_s, 64, 4, 2, 7).unwrap();
         assert!(ctx.dfs().device().ops_total() > before, "staged must hit DFS");
+        assert_eq!(rm.live_containers(), 0, "both pipelines must return their grants");
         // Identical data + init => identical final loss.
         assert!((u.final_loss - s.final_loss).abs() < 1e-4, "{} vs {}", u.final_loss, s.final_loss);
     }

@@ -36,8 +36,15 @@ fn run_pipeline(
     for part in 0..log.partitions() {
         assert_eq!(log.lag(part), 0, "partition {part} not drained");
     }
-    let mined =
-        ingest::mine(&p.ctx, p.ctx.store(), &compaction.blocks, &MinerConfig::default()).unwrap();
+    let mined = ingest::mine(
+        &p.ctx,
+        &p.resources,
+        p.ctx.store(),
+        &compaction.blocks,
+        &MinerConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(p.resources.live_containers(), 0, "compaction + mining grants returned");
     (p, fleet, compaction, mined)
 }
 

@@ -3,7 +3,7 @@
 
 use adcloud::config::PlatformConfig;
 use adcloud::dce::{BinaryRddExt, DceContext};
-use adcloud::platform::{experiments, Platform};
+use adcloud::platform::{experiments, JobHandle, JobSpec, Platform};
 use adcloud::resource::{DeviceKind, ResourceVec};
 use adcloud::runtime::Tensor;
 
@@ -18,25 +18,118 @@ fn have_artifacts() -> bool {
 #[test]
 fn full_platform_job_flow() {
     let p = Platform::local().unwrap();
-    // resource grant -> compute job -> storage -> release
-    p.resources.submit_app("it", "default").unwrap();
-    let c = p
-        .resources
-        .request_container("it", ResourceVec::cores(1, 1 << 20))
-        .unwrap();
-    let out = c
-        .run(|_| {
-            p.ctx
-                .range(1000, 8)
-                .map(|x| x * x)
-                .filter(|x| x % 2 == 0)
-                .reduce(|a, b| a + b)
-                .unwrap()
+    // app submission -> elastic grant -> sharded compute -> RAII release,
+    // all through the unified job layer.
+    let job = JobHandle::submit(
+        &p.resources,
+        JobSpec::new("it").containers(1, 2).resources(ResourceVec::cores(1, 1 << 20)),
+    )
+    .unwrap();
+    let out = job
+        .run_sharded(&p.ctx, (0..1000u64).collect(), |sctx, items: Vec<u64>| {
+            sctx.run(|_| items.into_iter().map(|x| x * x).filter(|x| x % 2 == 0).collect())
         })
         .unwrap();
-    assert!(out.is_some());
-    p.resources.release(&c).unwrap();
+    let stats = job.finish();
+    assert_eq!(out.len(), 500);
+    assert!(stats.containers >= 1);
+    assert!(stats.container_seconds > 0.0);
     assert_eq!(p.resources.live_containers(), 0);
+}
+
+#[test]
+fn job_layer_releases_containers_when_a_shard_errs() {
+    let p = Platform::local().unwrap();
+    let job = JobHandle::submit(
+        &p.resources,
+        JobSpec::new("it-err").containers(1, 2).retries(0),
+    )
+    .unwrap();
+    assert!(p.resources.live_containers() > 0);
+    let r = job.run_sharded(
+        &p.ctx,
+        vec![1u32, 2, 3, 4],
+        |_sctx, _items: Vec<u32>| -> adcloud::Result<Vec<u32>> { anyhow::bail!("shard exploded") },
+    );
+    assert!(r.is_err());
+    drop(job);
+    assert_eq!(
+        p.resources.live_containers(),
+        0,
+        "RAII grant must return every container on the error path"
+    );
+    // The app name is freed for resubmission too.
+    p.resources.submit_app("it-err", "default").unwrap();
+    p.resources.remove_app("it-err").unwrap();
+}
+
+#[test]
+fn job_layer_releases_containers_when_a_shard_panics() {
+    let p = Platform::local().unwrap();
+    let job = JobHandle::submit(
+        &p.resources,
+        JobSpec::new("it-panic").containers(1, 2).retries(0),
+    )
+    .unwrap();
+    let r = job.run_sharded(
+        &p.ctx,
+        vec![1u32, 2],
+        |_sctx, _items: Vec<u32>| -> adcloud::Result<Vec<u32>> {
+            panic!("shard panicked on purpose")
+        },
+    );
+    assert!(r.is_err(), "a panicking shard must surface as a job error, not a hang");
+    drop(job);
+    assert_eq!(
+        p.resources.live_containers(),
+        0,
+        "RAII grant must return every container on the panic path"
+    );
+}
+
+#[test]
+fn job_layer_releases_containers_when_a_worker_panics() {
+    let p = Platform::local().unwrap();
+    let job = JobHandle::submit(
+        &p.resources,
+        JobSpec::new("it-worker").containers(1, 2).retries(0),
+    )
+    .unwrap();
+    let r = job.run_per_container(|sctx| {
+        if sctx.shard == 0 {
+            panic!("worker 0 dies");
+        }
+        Ok(7u32)
+    });
+    assert!(r.is_err());
+    let stats = job.finish();
+    assert!(stats.containers >= 1);
+    assert_eq!(p.resources.live_containers(), 0);
+}
+
+#[test]
+fn failed_campaign_returns_its_grant() {
+    // End-to-end regression for the workload-level RAII behaviour: a
+    // campaign whose shards all fail must not leak containers and must
+    // leave the app name reusable.
+    use adcloud::scenario;
+    let p = Platform::local().unwrap();
+    let specs = scenario::generate_campaign_sized(3, 4, 8);
+    let mut cfg = scenario::CampaignConfig::new("it-badcamp", 2);
+    // Point the work dir INSIDE an existing file so bag creation fails.
+    let blocker = std::env::temp_dir().join(format!("adcloud-it-blocker-{}", std::process::id()));
+    std::fs::write(&blocker, b"not a dir").unwrap();
+    cfg.work_dir = blocker.join("nested");
+    let r = scenario::run_campaign(&p.ctx, &p.resources, &specs, &cfg);
+    assert!(r.is_err(), "campaign into an unwritable work dir must fail");
+    assert_eq!(p.resources.live_containers(), 0, "failed campaign must return its grant");
+    // Same config is immediately resubmittable (app name freed) — give
+    // it a writable dir and it succeeds.
+    cfg.work_dir = std::env::temp_dir().join(format!("adcloud-it-ok-{}", std::process::id()));
+    let report = scenario::run_campaign(&p.ctx, &p.resources, &specs, &cfg).unwrap();
+    assert_eq!(report.scenarios, 4);
+    assert_eq!(p.resources.live_containers(), 0);
+    let _ = std::fs::remove_file(&blocker);
 }
 
 #[test]

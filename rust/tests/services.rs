@@ -60,11 +60,13 @@ fn mapgen_service_end_to_end() {
     let log = mapgen::gen_drive(&world, 80, 321);
     let report = mapgen::run_fused(
         &p.dispatcher,
+        &p.resources,
         &log,
         &mapgen::SlamConfig { icp_every: 20, ..Default::default() },
         0.1,
     )
     .unwrap();
+    assert_eq!(p.resources.live_containers(), 0, "mapgen grant returned");
     assert!(report.slam_err_m < 2.5, "slam err {}", report.slam_err_m);
     assert!(report.occupied_cells > 500);
     // Map answers the paper's three layer queries: grid, lane, signs.
