@@ -11,9 +11,10 @@ artifacts:
 test:
 	cargo test -q
 
-# Tier-1 gate (what CI runs): release build + full test suite.
+# Tier-1 gate (what CI runs): format check + release build + full test
+# suite. The tree is rustfmt-formatted as of PR 4; keep it that way.
 verify:
-	cargo build --release && cargo test -q
+	cargo fmt --check && cargo build --release && cargo test -q
 
 bench:
 	ADCLOUD_BENCH_QUICK=1 cargo bench

@@ -64,6 +64,7 @@ fn main() -> Result<()> {
         &log,
         ctx.store(),
         &compactor_cfg,
+        std::time::Duration::ZERO,
     )?;
     println!("{}", run.campaign.render());
     println!("{}", run.compaction.render());

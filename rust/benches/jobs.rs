@@ -1,8 +1,9 @@
-//! Unified-job-layer bench: E15 (two concurrent jobs — a scenario
-//! campaign and a fleet-compaction drain — under capacity-share queues
-//! at 1/2/4/8 nodes, reporting per-queue throughput and grant-wait
-//! latency).
+//! Unified-job-layer bench: E15 (two concurrent jobs under
+//! capacity-share queues at 1/2/4/8 nodes, per-queue throughput and
+//! grant-wait latency) and E16 (fair-share preemption on/off — reclaim
+//! latency for a late below-share tenant and the work wasted, with
+//! checkpoint/resume absorbing the requeues).
 mod common;
 fn main() {
-    common::run(&["e15"]);
+    common::run(&["e15", "e16"]);
 }

@@ -152,6 +152,12 @@ fn block_key(prefix: &str, partition: usize, base_offset: u64) -> String {
 /// at the end — so a retried worker (which resumes from the committed
 /// offset and re-reads nothing) never loses first-attempt blocks from
 /// the report.
+///
+/// The commit-offset discipline is the original instance of the
+/// pattern `platform::ShardCheckpoint` generalizes: it also makes the
+/// drain preemption-safe for free. The loop yields at block boundaries
+/// when the container is flagged, and the requeued worker resumes from
+/// the committed offset — nothing is re-read, nothing is lost.
 fn drain_partition(
     log: &Arc<PartitionedLog>,
     store: &Arc<TieredStore>,
@@ -162,6 +168,9 @@ fn drain_partition(
 ) -> Result<()> {
     loop {
         let from = log.committed(partition).max(log.start_offset(partition));
+        if cctx.preempt_requested() {
+            bail!("compaction worker preempted at partition {partition} offset {from}");
+        }
         let batch = log.read_from(partition, from, cfg.batch_records)?;
         if batch.is_empty() {
             break;
@@ -212,7 +221,10 @@ fn drain_partition(
 /// elastic worker grant, drain every partition to its head (worker `w`
 /// owns partitions `p % workers == w`), and let the job's RAII guards
 /// release the grant on every exit path. Safe to call repeatedly —
-/// each pass resumes from the committed offsets.
+/// each pass resumes from the committed offsets, which also makes the
+/// drain preemptible: a flagged worker yields at a block boundary, the
+/// job layer requeues it on a replacement container, and the rerun
+/// picks up exactly where the committed offsets point.
 pub fn compact(
     log: &Arc<PartitionedLog>,
     store: &Arc<TieredStore>,
@@ -336,6 +348,42 @@ mod tests {
         assert_eq!(second.records, 5);
         assert_eq!(second.blocks[0].base_offset, 10);
         assert_eq!(log.committed(0), 15);
+    }
+
+    #[test]
+    fn preempted_drain_resumes_from_committed_offsets() {
+        let cfg = PlatformConfig::test();
+        let log = filled_log(2, 200);
+        let store = TieredStore::test_store(&cfg.storage);
+        let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
+        let mut ccfg = CompactorConfig::new("cp-preempt", 2);
+        ccfg.batch_records = 16; // many block boundaries = many yield points
+        let report = std::thread::scope(|s| {
+            let rm2 = rm.clone();
+            let flagger = s.spawn(move || {
+                // Flag a worker as soon as the grant is live; the drain
+                // yields at the next block boundary and requeues.
+                let deadline = Instant::now() + Duration::from_secs(2);
+                while rm2.live_containers() == 0 && Instant::now() < deadline {
+                    std::thread::yield_now();
+                }
+                rm2.request_preemption("cp-preempt", 1)
+            });
+            let report = compact(&log, &store, &rm, &ccfg);
+            let _ = flagger.join();
+            report
+        })
+        .unwrap();
+        // The drain still reaches the head, with no block landed twice.
+        assert_eq!(report.records, 400);
+        for p in 0..2 {
+            assert_eq!(log.committed(p), 200, "partition {p} must be fully drained");
+        }
+        let mut keys: Vec<&str> = report.blocks.iter().map(|b| b.key.as_str()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), report.blocks.len(), "no block may land twice");
+        assert_eq!(rm.live_containers(), 0);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 use super::compact::{decode_block, BlockRef};
 use super::gateway::decode_telemetry;
 use crate::dce::DceContext;
+use crate::platform::checkpoint::ShardCheckpoint;
 use crate::platform::job::{JobHandle, JobSpec};
 use crate::resource::{ResourceManager, ResourceVec};
 use crate::scenario::{
@@ -80,6 +81,9 @@ pub struct MinerConfig {
     pub frames: u32,
     /// Cap on specs emitted per family.
     pub max_specs_per_family: usize,
+    /// Commit each block's scan result into a [`ShardCheckpoint`] so a
+    /// preempted or resubmitted mining job skips scanned blocks.
+    pub checkpoint: bool,
 }
 
 impl Default for MinerConfig {
@@ -93,8 +97,57 @@ impl Default for MinerConfig {
             merge_window_ns: 500_000_000,
             frames: 16,
             max_specs_per_family: 64,
+            checkpoint: true,
         }
     }
+}
+
+/// Checkpoint key for one block's scan: the block key plus a digest of
+/// the detection thresholds, so a resubmission with different knobs
+/// can never reuse scans made under the old ones.
+fn ckpt_key(block_key: &str, cfg: &MinerConfig) -> String {
+    let knobs = format!("{:016x}-{}", cfg.hard_brake_mps2.to_bits(), cfg.dropout_ms);
+    format!("{block_key}-{:016x}", fnv1a64(knobs.as_bytes()))
+}
+
+/// Checkpoint codec for one block's scan result:
+/// `u32 count | { u8 kind | u32 vehicle | u64 ts_ns | f32 speed }*`.
+fn encode_events(events: &[MinedEvent]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + events.len() * 17);
+    out.extend_from_slice(&(events.len() as u32).to_le_bytes());
+    for e in events {
+        let kind = EventKind::ALL.iter().position(|k| *k == e.kind).unwrap() as u8;
+        out.push(kind);
+        out.extend_from_slice(&e.vehicle.to_le_bytes());
+        out.extend_from_slice(&e.ts_ns.to_le_bytes());
+        out.extend_from_slice(&e.speed_mps.to_le_bytes());
+    }
+    out
+}
+
+fn decode_events(bytes: &[u8]) -> Result<Vec<MinedEvent>> {
+    if bytes.len() < 4 {
+        anyhow::bail!("event blob too short: {} bytes", bytes.len());
+    }
+    let count = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    if bytes.len() != 4 + count * 17 {
+        anyhow::bail!("event blob claims {count} events in {} bytes", bytes.len());
+    }
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let b = &bytes[4 + i * 17..4 + (i + 1) * 17];
+        let kind = match EventKind::ALL.get(b[0] as usize) {
+            Some(k) => *k,
+            None => anyhow::bail!("event blob has invalid kind index {}", b[0]),
+        };
+        out.push(MinedEvent {
+            kind,
+            vehicle: u32::from_le_bytes(b[1..5].try_into().unwrap()),
+            ts_ns: u64::from_le_bytes(b[5..13].try_into().unwrap()),
+            speed_mps: f32::from_le_bytes(b[13..17].try_into().unwrap()),
+        });
+    }
+    Ok(out)
 }
 
 /// Scan one decoded block's telemetry for events. Rosbag-chunk payloads
@@ -259,7 +312,11 @@ impl MineReport {
 /// Run the mining job on the unified job layer: acquire a container
 /// grant, shard the block list over the compute engine (one shard per
 /// container), scan each block inside its container's accounting, and
-/// distill the merged event stream into scenario families.
+/// distill the merged event stream into scenario families. With
+/// `checkpoint` enabled (the default), per-block scan results are
+/// committed as they land and shards yield between blocks when their
+/// container is flagged for preemption, so a requeued or resubmitted
+/// mining job rescans nothing.
 pub fn mine(
     ctx: &DceContext,
     rm: &Arc<ResourceManager>,
@@ -286,23 +343,49 @@ pub fn mine(
             .containers(1, cfg.workers.clamp(1, keys.len()))
             .resources(ResourceVec::cores(1, (4 * max_block).max(8 << 20))),
     )?;
+    let ckpt = cfg.checkpoint.then(|| ShardCheckpoint::new(store, &cfg.app));
+    let shard_ckpt = ckpt.clone();
+    let metrics = ctx.metrics().clone();
     let (store2, cfg2) = (store.clone(), cfg.clone());
-    let scanned = job.run_sharded(ctx, keys, move |sctx, keys: Vec<String>| {
+    let scanned = job.run_sharded(ctx, keys.clone(), move |sctx, keys: Vec<String>| {
         let mut out = Vec::new();
         for key in keys {
+            let item = ckpt_key(&key, &cfg2);
+            // Resume path: blocks scanned before a preemption or by a
+            // prior submission are reloaded from the checkpoint. A
+            // blob that fails to decode must not poison the job —
+            // fall through and rescan instead.
+            if let Some(bytes) = shard_ckpt.as_ref().and_then(|c| c.lookup(&item)) {
+                if let Ok(events) = decode_events(&bytes) {
+                    out.extend(events);
+                    metrics.counter("ingest.mine.ckpt_hits").inc();
+                    continue;
+                }
+                metrics.counter("ingest.mine.ckpt_corrupt").inc();
+            }
+            sctx.check_preempted()?;
             let bytes = store2.get(&key)?;
             let block_len = bytes.len() as u64;
-            out.extend(sctx.run(|cctx| -> Result<Vec<MinedEvent>> {
+            let events = sctx.run(|cctx| -> Result<Vec<MinedEvent>> {
                 cctx.alloc_mem(block_len)?;
                 let events = scan_block(&bytes, &cfg2);
                 cctx.free_mem(block_len);
                 events
-            })??);
+            })??;
+            if let Some(c) = &shard_ckpt {
+                c.commit(&item, encode_events(&events))?;
+            }
+            out.extend(events);
         }
         Ok(out)
     });
     let _ = job.finish();
-    let events = dedupe_events(scanned?, cfg);
+    let scanned = scanned?;
+    if let Some(c) = &ckpt {
+        // Success: the next mining pass over these blocks starts fresh.
+        c.clear(keys.iter().map(|k| ckpt_key(k, cfg)));
+    }
+    let events = dedupe_events(scanned, cfg);
     ctx.metrics().counter("ingest.mine.events").add(events.len() as u64);
     let mut specs: Vec<ScenarioSpec> = Vec::new();
     let mut seen: HashSet<u64> = HashSet::new();
@@ -391,6 +474,33 @@ mod tests {
     }
 
     #[test]
+    fn mining_resumes_from_block_checkpoints() {
+        let ctx = DceContext::new(PlatformConfig::test()).unwrap();
+        let rm = test_rm();
+        let blocks = compacted_fixture(ctx.store(), 4, 300);
+        let cfg = MinerConfig::default();
+        // Simulate an interrupted job: one block's scan is already
+        // committed under the miner's app name, and one blob is
+        // corrupt (must be rescanned, not fatal).
+        let ckpt = ShardCheckpoint::new(ctx.store(), &cfg.app);
+        let pre = scan_block(ctx.store().get(&blocks[0].key).unwrap().as_ref(), &cfg).unwrap();
+        ckpt.commit(&ckpt_key(&blocks[0].key, &cfg), encode_events(&pre)).unwrap();
+        ckpt.commit(&ckpt_key(&blocks[1].key, &cfg), b"garbage".to_vec()).unwrap();
+        let report = mine(&ctx, &rm, ctx.store(), &blocks, &cfg).unwrap();
+        assert_eq!(ctx.metrics().counter("ingest.mine.ckpt_hits").get(), 1);
+        assert_eq!(ctx.metrics().counter("ingest.mine.ckpt_corrupt").get(), 1);
+        // Resumed output is identical to a from-scratch run.
+        let fresh = mine(&ctx, &rm, ctx.store(), &blocks, &cfg).unwrap();
+        assert_eq!(report.events, fresh.events);
+        assert_eq!(
+            crate::scenario::campaign_digest(&report.specs),
+            crate::scenario::campaign_digest(&fresh.specs)
+        );
+        // Success cleared the checkpoint.
+        assert!(!ckpt.contains(&ckpt_key(&blocks[0].key, &cfg)));
+    }
+
+    #[test]
     fn mined_specs_satisfy_scenario_invariants() {
         let ctx = DceContext::new(PlatformConfig::test()).unwrap();
         let rm = test_rm();
@@ -405,6 +515,18 @@ mod tests {
         }
         let hashes: HashSet<u64> = report.specs.iter().map(|s| s.content_hash()).collect();
         assert_eq!(hashes.len(), report.specs.len(), "content hashes must be distinct");
+    }
+
+    #[test]
+    fn event_codec_roundtrips_and_rejects_corruption() {
+        let events = vec![
+            MinedEvent { kind: EventKind::HardBrake, vehicle: 3, ts_ns: 99, speed_mps: 21.5 },
+            MinedEvent { kind: EventKind::SensorDropout, vehicle: 8, ts_ns: 5, speed_mps: 0.0 },
+        ];
+        let b = encode_events(&events);
+        assert_eq!(decode_events(&b).unwrap(), events);
+        assert!(decode_events(&b[..b.len() - 1]).is_err());
+        assert!(decode_events(&[9, 9]).is_err());
     }
 
     #[test]

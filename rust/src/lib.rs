@@ -22,11 +22,17 @@
 //!   HDFS-analog baseline.
 //! * [`resource`] — YARN-analog resource manager and LXC-analog
 //!   containers over a heterogeneous device inventory, with RAII
-//!   grants and app leases.
+//!   grants and app leases. Queues carry a guaranteed share plus an
+//!   elastic ceiling; grant floors are admitted **gang-atomically**
+//!   (all-or-nothing, no hold-and-wait deadlocks), and **fair-share
+//!   preemption** flags victim containers of over-guarantee tenants
+//!   when a below-guarantee queue is starved.
 //! * [`platform`] — one-call platform boot, the **unified job layer**
 //!   (`JobSpec`/`JobHandle`: an application-master analog every
-//!   workload schedules through), and the paper-experiment harness
-//!   (E1–E15).
+//!   workload schedules through; preempted shards checkpoint via
+//!   `ShardCheckpoint`, yield their container, and requeue without
+//!   burning their retry budget), and the paper-experiment harness
+//!   (E1–E16).
 //! * [`hetero`] — kernel registry + dispatch across CPU / GPU-class /
 //!   FPGA-class devices.
 //! * [`runtime`] — the PJRT artifact runtime (device-server threads).

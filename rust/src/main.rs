@@ -8,12 +8,16 @@
 //!   ingest    [--vehicles N] [--ticks T] [--partitions P] [--workers W]
 //!             [--campaign]   fleet ingest -> compaction -> scenario mining
 //!   jobs      [--nodes N] [--scenarios S] [--vehicles V] [--ticks T]
-//!             two concurrent jobs (campaign + compaction) on
-//!             capacity-share queues through the unified job layer
+//!             [--preempt]  two concurrent jobs (campaign + compaction)
+//!             on capacity-share queues through the unified job layer;
+//!             --preempt opens elastic 100% ceilings over the 50%
+//!             guarantees, lets the campaign balloon over-share, and
+//!             has the late compaction job reclaim its share through
+//!             fair-share preemption + checkpointed shard requeue
 //!   train     [--examples N] [--rounds R] [--workers W]
 //!   mapgen    [--steps N]
 //!   sql       [--rows N]
-//!   repro-tables [e1..e15|all] [--quick]
+//!   repro-tables [e1..e16|all] [--quick]
 //!   pipe-worker <logic>          BinPipe child process (detect)
 //!   metrics                      dump the metrics registry after a demo job
 //!
@@ -244,6 +248,9 @@ fn run_ingest(flags: &HashMap<String, String>) -> Result<()> {
 /// fleet-compaction drain (queue `fleet`) run concurrently through the
 /// unified job layer against a 50/50 capacity split, then the job-layer
 /// metrics (grant waits, shard retries, container-seconds) are printed.
+/// With `--preempt`, both queues get elastic 100% ceilings, preemption
+/// is enabled, and the compaction job arrives late — so the over-share
+/// campaign is visibly preempted, checkpointed, and requeued.
 fn run_jobs(flags: &HashMap<String, String>) -> Result<()> {
     use adcloud::ingest;
     let mut cfg = config_from(flags);
@@ -251,16 +258,30 @@ fn run_jobs(flags: &HashMap<String, String>) -> Result<()> {
     let scenarios = flag(flags, "scenarios", 16usize);
     let vehicles = flag(flags, "vehicles", 8u32);
     let ticks = flag(flags, "ticks", 200usize);
+    let preempt = flags.contains_key("preempt");
     let metrics = adcloud::metrics::MetricsRegistry::new();
-    let rm = adcloud::resource::ResourceManager::with_queues(
-        &cfg.cluster,
-        vec![("sim".into(), 0.5), ("fleet".into(), 0.5)],
-        metrics.clone(),
-    );
+    let rm = if preempt {
+        adcloud::resource::ResourceManager::with_elastic_queues(
+            &cfg.cluster,
+            vec![("sim".into(), 0.5, 1.0), ("fleet".into(), 0.5, 1.0)],
+            metrics.clone(),
+        )
+    } else {
+        adcloud::resource::ResourceManager::with_queues(
+            &cfg.cluster,
+            vec![("sim".into(), 0.5), ("fleet".into(), 0.5)],
+            metrics.clone(),
+        )
+    };
+    rm.set_preemption(preempt);
     let ctx = adcloud::dce::DceContext::new(cfg.clone())?;
     println!(
-        "unified job layer: {} nodes x {} cores; queues sim=0.5 fleet=0.5",
-        cfg.cluster.nodes, cfg.cluster.cores_per_node
+        "unified job layer: {} nodes x {} cores; queues sim/fleet guaranteed 0.5 each, \
+         ceilings {}, preemption {}",
+        cfg.cluster.nodes,
+        cfg.cluster.cores_per_node,
+        if preempt { "1.0 (elastic)" } else { "0.5 (hard)" },
+        if preempt { "on" } else { "off" },
     );
 
     // Fleet side: simulated vehicles upload through the gateway into
@@ -277,14 +298,26 @@ fn run_jobs(flags: &HashMap<String, String>) -> Result<()> {
     let fleet = ingest::simulate_fleet(&gw, &ingest::FleetConfig::new(vehicles, ticks, cfg.seed))?;
     println!("{}", fleet.render());
 
-    // Sim side: a procedurally generated campaign.
+    // Sim side: a procedurally generated campaign. Under --preempt it
+    // asks for the whole cluster so it visibly balloons over-share.
     let specs = scenario::generate_campaign_sized(cfg.seed, scenarios, 16);
-    let mut ccfg = scenario::CampaignConfig::new("jobs-campaign", cfg.cluster.nodes);
+    let campaign_nodes = if preempt {
+        cfg.cluster.total_cores()
+    } else {
+        cfg.cluster.nodes
+    };
+    let mut ccfg = scenario::CampaignConfig::new("jobs-campaign", campaign_nodes);
     ccfg.queue = "sim".into();
     let mut kcfg = ingest::CompactorConfig::new("jobs-compact", cfg.cluster.nodes);
     kcfg.queue = "fleet".into();
 
-    let run = experiments::run_tenant_pair(&ctx, &rm, &specs, &ccfg, &log, ctx.store(), &kcfg)?;
+    let stagger = if preempt {
+        std::time::Duration::from_millis(30)
+    } else {
+        std::time::Duration::ZERO
+    };
+    let run =
+        experiments::run_tenant_pair(&ctx, &rm, &specs, &ccfg, &log, ctx.store(), &kcfg, stagger)?;
     println!("{}", run.campaign.render());
     println!("{}", run.compaction.render());
     println!(
@@ -293,6 +326,14 @@ fn run_jobs(flags: &HashMap<String, String>) -> Result<()> {
         adcloud::util::fmt_duration(run.campaign_elapsed),
         adcloud::util::fmt_duration(run.compaction_elapsed),
     );
+    if preempt {
+        println!(
+            "preemption: {} container(s) flagged, {} shard requeue(s), 0 scenarios re-scored \
+             (checkpoint/resume)",
+            metrics.counter("resource.preemptions").get(),
+            metrics.counter("platform.job.preemptions").get(),
+        );
+    }
     println!("job-layer metrics:\n{}", metrics.report());
     Ok(())
 }
@@ -365,12 +406,19 @@ fn repro_tables(ids: &[String], flags: &HashMap<String, String>) -> Result<()> {
     } else {
         ids.to_vec()
     };
+    let mut failed = Vec::new();
     for id in ids {
         match experiments::run_experiment(&id, quick) {
             Ok(table) => println!("{}", table.render()),
-            Err(e) => eprintln!("{id} failed: {e:#}"),
+            Err(e) => {
+                eprintln!("{id} failed: {e:#}");
+                failed.push(id);
+            }
         }
     }
+    // A failing experiment fails the command, so CI smoke runs gate on
+    // the tables actually reproducing.
+    anyhow::ensure!(failed.is_empty(), "experiment(s) failed: {}", failed.join(", "));
     Ok(())
 }
 

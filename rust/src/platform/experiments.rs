@@ -70,9 +70,9 @@ impl Table {
     }
 }
 
-pub const ALL_IDS: [&str; 15] = [
+pub const ALL_IDS: [&str; 16] = [
     "e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13", "e14",
-    "e15",
+    "e15", "e16",
 ];
 
 /// Run one experiment by id. `quick` shrinks workloads for CI/tests.
@@ -93,6 +93,7 @@ pub fn run_experiment(id: &str, quick: bool) -> Result<Table> {
         "e13" => e13_campaign(quick),
         "e14" => e14_ingest(quick),
         "e15" => e15_multitenant(quick),
+        "e16" => e16_preemption(quick),
         other => Err(anyhow!("unknown experiment '{other}' (have {ALL_IDS:?})")),
     }
 }
@@ -1189,7 +1190,9 @@ fn e14_ingest(quick: bool) -> Result<Table> {
 
 /// One concurrent two-tenant run: a scenario campaign on its configured
 /// queue and a fleet-compaction drain on its configured queue, started
-/// together and joined. Shared by E15, the `jobs` CLI subcommand, and
+/// together (or with the compaction arriving `stagger` later — the
+/// late-tenant shape the preemption experiments measure) and joined.
+/// Shared by E15, E16, the `jobs` CLI subcommand, and
 /// `examples/unified_jobs.rs`. Errors if any container is still live
 /// when both jobs have finished (the RAII-grant contract).
 pub struct TenantPairRun {
@@ -1208,6 +1211,7 @@ pub fn run_tenant_pair(
     log: &Arc<ingest::PartitionedLog>,
     store: &Arc<TieredStore>,
     compactor_cfg: &ingest::CompactorConfig,
+    stagger: Duration,
 ) -> Result<TenantPairRun> {
     let t = Instant::now();
     let (camp, comp) = std::thread::scope(|s| {
@@ -1216,6 +1220,9 @@ pub fn run_tenant_pair(
             scenario::run_campaign(ctx, rm, specs, campaign_cfg).map(|r| (r, t.elapsed()))
         });
         let comp = s.spawn(|| {
+            if !stagger.is_zero() {
+                std::thread::sleep(stagger);
+            }
             let t = Instant::now();
             ingest::compact(log, store, rm, compactor_cfg).map(|r| (r, t.elapsed()))
         });
@@ -1269,7 +1276,7 @@ fn e15_multitenant(quick: bool) -> Result<Table> {
         let mut kcfg = ingest::CompactorConfig::new(format!("e15-comp-{nodes}"), nodes);
         kcfg.queue = "fleet".into();
 
-        let run = run_tenant_pair(&ctx, &rm, &specs, &ccfg, &log, &store, &kcfg)?;
+        let run = run_tenant_pair(&ctx, &rm, &specs, &ccfg, &log, &store, &kcfg, Duration::ZERO)?;
         let wait = metrics.histogram("platform.job.grant_wait");
         Ok((
             vec![
@@ -1300,6 +1307,145 @@ fn e15_multitenant(quick: bool) -> Result<Table> {
         notes: "both tenants schedule through JobSpec/JobHandle; the capacity scheduler caps \
                 each queue at half the cores, so neither job can starve the other, and \
                 throughput on both queues should grow with node count."
+            .into(),
+    })
+}
+
+// ===========================================================================
+// E16: fair-share preemption — reclaim latency and wasted work
+// ===========================================================================
+
+/// One E16 configuration. Queues `sim` and `fleet` are guaranteed 50%
+/// each with elastic ceilings of 100%: a scenario campaign balloons
+/// over its share to the whole idle cluster, then a compaction job
+/// arrives late on `fleet`, below its guarantee. Returns `(reclaim
+/// wait, rescored scenarios, campaign wall time, makespan)` — reclaim
+/// wait is how long the late tenant's first (gang) grant blocked, and
+/// rescored counts scenario scorings beyond one per scenario (the work
+/// preemption wasted; zero when checkpointing absorbs the requeue).
+fn e16_run(
+    nodes: usize,
+    preempt: bool,
+    scen_per_core: usize,
+    frames: u32,
+    records_per_part: u64,
+) -> Result<(Duration, u64, Duration, Duration)> {
+    use crate::ingest::{LogConfig, PartitionedLog};
+
+    let mut cfg = PlatformConfig::test();
+    cfg.cluster.nodes = nodes;
+    let cores = cfg.cluster.total_cores();
+    let metrics = MetricsRegistry::new();
+    let rm = ResourceManager::with_elastic_queues(
+        &cfg.cluster,
+        vec![("sim".into(), 0.5, 1.0), ("fleet".into(), 0.5, 1.0)],
+        metrics.clone(),
+    );
+    rm.set_preemption(preempt);
+    let ctx = DceContext::new(cfg.clone())?;
+    let parts = nodes.max(2);
+    let log = PartitionedLog::temp(
+        &format!("e16-{nodes}-{preempt}"),
+        LogConfig { partitions: parts, segment_bytes: 64 << 10, retention_bytes: 1 << 30 },
+    )?;
+    for p in 0..parts {
+        for i in 0..records_per_part {
+            log.append(p, i * 1_000_000, p as u32, &[7u8; 200])?;
+        }
+    }
+    let store = TieredStore::test_store(&cfg.storage);
+    let specs = scenario::generate_campaign_sized(16, scen_per_core * cores, frames);
+    let mut ccfg = scenario::CampaignConfig::new(format!("e16-camp-{nodes}-{preempt}"), cores);
+    ccfg.queue = "sim".into();
+    ccfg.checkpoint = true;
+    let mut kcfg = ingest::CompactorConfig::new(format!("e16-comp-{nodes}-{preempt}"), parts);
+    kcfg.queue = "fleet".into();
+
+    let t0 = Instant::now();
+    let (camp, comp) = std::thread::scope(|s| {
+        let camp = s.spawn(|| {
+            let t = Instant::now();
+            scenario::run_campaign(&ctx, &rm, &specs, &ccfg).map(|r| (r, t.elapsed()))
+        });
+        // The late tenant arrives once the campaign holds the whole
+        // cluster (not a guessed sleep — poll the live-container count
+        // so the over-share state is guaranteed).
+        while rm.live_containers() < cores && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let comp = ingest::compact(&log, &store, &rm, &kcfg);
+        (camp.join().expect("campaign job"), comp)
+    });
+    let makespan = t0.elapsed();
+    let (campaign, campaign_elapsed) = camp?;
+    let compaction = comp?;
+    anyhow::ensure!(rm.live_containers() == 0, "e16 leaked containers");
+    anyhow::ensure!(campaign.scenarios == specs.len(), "campaign lost scenarios");
+    anyhow::ensure!(
+        compaction.records == parts as u64 * records_per_part,
+        "compaction lost records"
+    );
+    // The campaign's grant lands on an idle cluster (wait ~0); the
+    // histogram max is therefore the late tenant's reclaim wait.
+    let reclaim = metrics.histogram("platform.job.grant_wait").max();
+    let scored = ctx.metrics().counter("scenario.scored").get();
+    Ok((reclaim, scored.saturating_sub(specs.len() as u64), campaign_elapsed, makespan))
+}
+
+/// Fair-share preemption on/off at 1/2/4/8 nodes: an over-share
+/// campaign vs. a late-arriving compaction job. With preemption off the
+/// late tenant's first grant waits for the campaign to finish; with it
+/// on, a victim shard checkpoints and yields, so the grant lands at a
+/// scenario boundary and checkpoint/resume reruns zero completed work.
+fn e16_preemption(quick: bool) -> Result<Table> {
+    let scen_per_core = if quick { 3 } else { 4 };
+    let frames = if quick { 12 } else { 24 };
+    let records = if quick { 300 } else { 2_000 };
+    let mut rows = Vec::new();
+    for nodes in SWEEP_NODES {
+        let mut off_reclaim = Duration::ZERO;
+        for preempt in [false, true] {
+            let (reclaim, rescored, campaign_elapsed, makespan) =
+                e16_run(nodes, preempt, scen_per_core, frames, records)?;
+            let speedup = if preempt {
+                format!("{:.1}x", off_reclaim.as_secs_f64() / reclaim.as_secs_f64().max(1e-9))
+            } else {
+                off_reclaim = reclaim;
+                "-".into()
+            };
+            rows.push(vec![
+                format!("{nodes}"),
+                String::from(if preempt { "on" } else { "off" }),
+                fmt_duration(reclaim),
+                format!("{rescored}"),
+                fmt_duration(campaign_elapsed),
+                fmt_duration(makespan),
+                speedup,
+            ]);
+        }
+    }
+    Ok(Table {
+        id: "e16",
+        title: format!(
+            "fair-share preemption: over-share campaign ({scen_per_core} scen/core) vs. \
+             late compaction ({records} records/partition), queues sim/fleet 50% \
+             guaranteed with 100% ceilings"
+        ),
+        mode: "real",
+        header: vec![
+            "nodes",
+            "preempt",
+            "reclaim wait",
+            "rescored",
+            "campaign",
+            "makespan",
+            "reclaim speedup",
+        ],
+        rows,
+        notes: "reclaim wait is the late below-share tenant's first grant wait; with \
+                preemption on it lands at a scenario boundary instead of the campaign's end, \
+                and the rescored column shows checkpoint/resume rerunning zero completed \
+                scenarios."
             .into(),
     })
 }
@@ -1378,6 +1524,41 @@ mod tests {
             let rec: f64 = row[3].trim_end_matches("/s").parse().unwrap();
             assert!(scen > 0.0, "sim queue starved: {row:?}");
             assert!(rec > 0.0, "fleet queue starved: {row:?}");
+        }
+    }
+
+    #[test]
+    fn e16_preemption_reclaims_before_the_over_share_job_ends() {
+        // Pure-infrastructure paths — no artifacts gate. One mid-size
+        // configuration, asserted directly on e16_run's numbers.
+        let mut off = Duration::ZERO;
+        let mut off_campaign = Duration::ZERO;
+        let mut on = Duration::ZERO;
+        for preempt in [false, true] {
+            let (reclaim, rescored, campaign, _mk) = e16_run(2, preempt, 4, 16, 200).unwrap();
+            if preempt {
+                on = reclaim;
+                assert_eq!(rescored, 0, "checkpoint/resume must rerun zero scenarios");
+            } else {
+                off = reclaim;
+                off_campaign = campaign;
+            }
+        }
+        assert!(
+            on < off,
+            "with preemption the below-share grant ({on:?}) must land before the \
+             over-share campaign finishes ({off:?}, campaign {off_campaign:?})"
+        );
+    }
+
+    #[test]
+    fn e16_table_has_on_off_rows_per_node_count() {
+        let t = run_experiment("e16", true).unwrap();
+        assert_eq!(t.rows.len(), 8, "{:?}", t.rows);
+        for pair in t.rows.chunks(2) {
+            assert_eq!(pair[0][1], "off");
+            assert_eq!(pair[1][1], "on");
+            assert_eq!(pair[1][3], "0", "preempt+checkpoint rows must rescore nothing");
         }
     }
 

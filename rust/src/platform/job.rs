@@ -11,14 +11,25 @@
 //!   [`ResourceVec`] (cores, memory, GPU/FPGA slots), a shard retry
 //!   budget, and how long to block when the cluster is briefly full.
 //! * [`JobHandle`] owns the full lifecycle: it registers the app,
-//!   acquires an elastic [`Grant`] (greedy up to `max`, blocking
-//!   escalation to the `min` floor), shards work lists across the grant
-//!   via the DCE executor pool, converts shard panics into job errors,
-//!   and — because the grant and app lease are RAII guards — releases
-//!   every container on every exit path, including `?` and unwinding.
+//!   acquires a gang-atomic elastic [`Grant`] (the `min` floor is
+//!   reserved all-or-nothing, extras up to `max` are taken greedily),
+//!   shards work lists across the grant via the DCE executor pool,
+//!   converts shard panics into job errors, and — because the grant
+//!   and app lease are RAII guards — releases every container on every
+//!   exit path, including `?` and unwinding.
+//!
+//! **Preemption.** When the resource manager flags a shard's container
+//! (fair-share reclaim for a queue below its guarantee), the failure is
+//! NOT charged against the shard's retry budget: the job layer releases
+//! the flagged container to the reclaiming queue, blocks for a
+//! replacement, and requeues the shard. Workloads cooperate by calling
+//! [`ShardCtx::check_preempted`] between work items — after committing
+//! a [`super::ShardCheckpoint`] — so a requeued shard resumes from
+//! completed work instead of redoing it.
 //!
 //! Per-job metrics land in the resource manager's [`MetricsRegistry`]:
-//! `platform.job.grant_wait` (histogram), `platform.job.shard_retries`,
+//! `platform.job.grant_wait` and `platform.job.preempt_requeue_wait`
+//! (histograms), `platform.job.shard_retries`, `platform.job.preemptions`,
 //! `platform.job.shard_panics`, `platform.job.container_ms`, and
 //! `platform.job.jobs` (counters). [`JobHandle::finish`] returns the
 //! same numbers per job as a [`JobStats`].
@@ -26,7 +37,7 @@
 use anyhow::{anyhow, Context, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::dce::{Data, DceContext};
@@ -34,6 +45,11 @@ use crate::metrics::MetricsRegistry;
 use crate::resource::{
     AppLease, ContainerCtx, ContainerRef, Grant, ResourceManager, ResourceVec,
 };
+
+/// A shard may be preempted repeatedly while a sibling queue churns;
+/// past this many requeues the job layer treats the signal as livelock
+/// and fails the shard instead of cycling forever.
+const MAX_PREEMPT_REQUEUES: usize = 32;
 
 /// Declarative description of a job's resource needs.
 #[derive(Debug, Clone)]
@@ -43,16 +59,18 @@ pub struct JobSpec {
     pub app: String,
     /// Capacity-share queue the app is charged against.
     pub queue: String,
-    /// Grant floor: block (up to `grant_timeout`) until at least this
-    /// many containers are held.
+    /// Grant floor: block (up to `grant_timeout`) until this many
+    /// containers can be reserved gang-atomically.
     pub min_containers: usize,
     /// Grant ceiling: take up to this many containers when free.
     pub max_containers: usize,
     /// Resources per container.
     pub resources: ResourceVec,
-    /// Extra attempts per shard before the job fails.
+    /// Extra attempts per shard before the job fails (preemption
+    /// requeues are never charged against this budget).
     pub max_shard_retries: usize,
-    /// How long `submit` may block waiting for the grant floor.
+    /// How long `submit` may block waiting for the grant floor (also
+    /// the budget for reacquiring a preempted shard's replacement).
     pub grant_timeout: Duration,
 }
 
@@ -107,6 +125,9 @@ pub struct JobStats {
     /// How long `submit` blocked acquiring the grant.
     pub grant_wait: Duration,
     pub shard_retries: u64,
+    /// Times a shard yielded its container to a reclaiming queue and
+    /// was requeued on a replacement.
+    pub preemptions: u64,
     /// Containers held x wall time, in seconds.
     pub container_seconds: f64,
     pub elapsed: Duration,
@@ -116,13 +137,14 @@ impl JobStats {
     pub fn render(&self) -> String {
         format!(
             "job '{}' on queue '{}': {} container(s), grant wait {}, {} shard retr{}, \
-             {:.2} container-seconds in {}",
+             {} preemption(s), {:.2} container-seconds in {}",
             self.app,
             self.queue,
             self.containers,
             crate::util::fmt_duration(self.grant_wait),
             self.shard_retries,
             if self.shard_retries == 1 { "y" } else { "ies" },
+            self.preemptions,
             self.container_seconds,
             crate::util::fmt_duration(self.elapsed),
         )
@@ -134,7 +156,8 @@ impl JobStats {
 pub struct ShardCtx {
     pub shard: usize,
     pub shards: usize,
-    /// 0 on the first try, incremented per job-layer retry.
+    /// 0 on the first try, incremented per job-layer retry (preemption
+    /// requeues do NOT increment it).
     pub attempt: usize,
     container: ContainerRef,
 }
@@ -149,6 +172,28 @@ impl ShardCtx {
     pub fn run<T>(&self, f: impl FnOnce(&ContainerCtx) -> T) -> Result<T> {
         self.container.run(f)
     }
+
+    /// Whether the resource manager has asked this shard's container to
+    /// yield to a reclaiming queue. Poll between work items.
+    pub fn preempt_requested(&self) -> bool {
+        self.container.preempt_requested()
+    }
+
+    /// Yield point: errors when the container has been flagged for
+    /// preemption. Call between work items, after committing progress
+    /// to a shard checkpoint — the job layer recognises the flagged
+    /// container, releases it, and requeues this shard on a
+    /// replacement without charging the retry budget.
+    pub fn check_preempted(&self) -> Result<()> {
+        if self.container.preempt_requested() {
+            anyhow::bail!(
+                "shard {} preempted (container {} asked to yield)",
+                self.shard,
+                self.container.id
+            );
+        }
+        Ok(())
+    }
 }
 
 /// A live job: app registered, grant held. Dropping the handle (on any
@@ -158,16 +203,19 @@ pub struct JobHandle {
     grant: Grant,
     #[allow(dead_code)] // held for its Drop side effect
     app: AppLease,
+    rm: Arc<ResourceManager>,
     spec: JobSpec,
     metrics: MetricsRegistry,
     retries: Arc<AtomicU64>,
+    preemptions: Arc<AtomicU64>,
     started: Instant,
 }
 
 impl JobHandle {
-    /// Register the app and acquire its elastic grant: everything free
-    /// right now up to `max_containers`, then blocking escalation until
-    /// the `min_containers` floor is met or `grant_timeout` expires.
+    /// Register the app and acquire its elastic grant: the
+    /// `min_containers` floor is reserved gang-atomically (blocking up
+    /// to `grant_timeout`; nothing is held while waiting), then extras
+    /// up to `max_containers` are taken greedily.
     pub fn submit(rm: &Arc<ResourceManager>, spec: JobSpec) -> Result<JobHandle> {
         let metrics = rm.metrics().clone();
         let app = AppLease::submit(rm, &spec.app, &spec.queue)?;
@@ -185,9 +233,11 @@ impl JobHandle {
         Ok(JobHandle {
             grant,
             app,
+            rm: rm.clone(),
             spec,
             metrics,
             retries: Arc::new(AtomicU64::new(0)),
+            preemptions: Arc::new(AtomicU64::new(0)),
             started: Instant::now(),
         })
     }
@@ -197,7 +247,7 @@ impl JobHandle {
         self.grant.len()
     }
 
-    pub fn containers(&self) -> &[ContainerRef] {
+    pub fn containers(&self) -> Vec<ContainerRef> {
         self.grant.containers()
     }
 
@@ -205,35 +255,41 @@ impl JobHandle {
         self.grant.wait()
     }
 
+    fn shard_env(&self) -> ShardEnv {
+        ShardEnv {
+            rm: self.rm.clone(),
+            app: self.spec.app.clone(),
+            resources: self.spec.resources,
+            grant_timeout: self.spec.grant_timeout,
+            held: self.grant.shared(),
+            budget: self.spec.max_shard_retries,
+            retries: self.retries.clone(),
+            preemptions: self.preemptions.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
     /// Shard `items` across the grant via the DCE executor pool: one
     /// partition per container, each shard closure retried within the
-    /// job's budget, panics converted into job errors. Output order
-    /// follows input order.
+    /// job's budget, panics converted into job errors, preempted
+    /// containers swapped for replacements. Output order follows input
+    /// order.
     pub fn run_sharded<T: Data, U: Data>(
         &self,
         ctx: &DceContext,
         items: Vec<T>,
         f: impl Fn(&ShardCtx, Vec<T>) -> Result<Vec<U>> + Send + Sync + 'static,
     ) -> Result<Vec<U>> {
-        let conts: Vec<ContainerRef> = self.grant.containers().to_vec();
+        let conts: Vec<ContainerRef> = self.grant.containers();
         let shards = conts.len();
-        let budget = self.spec.max_shard_retries;
-        let retries = self.retries.clone();
-        let metrics = self.metrics.clone();
+        let env = self.shard_env();
         ctx.parallelize(items, shards)
             .map_partitions(move |part, items: Vec<T>| {
-                let container = &conts[part % conts.len()];
-                // Clone the shard's input only while a retry could still
-                // follow; the final permitted attempt takes it by move.
-                let items = std::sync::Mutex::new(Some(items));
-                run_attempts(part, shards, container, budget, &retries, &metrics, |sctx| {
-                    let input = if sctx.attempt >= budget {
-                        items.lock().unwrap().take().expect("final attempt input")
-                    } else {
-                        items.lock().unwrap().as_ref().expect("attempt input").clone()
-                    };
-                    f(sctx, input)
-                })
+                let container = conts[part % conts.len()].clone();
+                // The shard's input is cloned per attempt: a preemption
+                // can interrupt even the final permitted retry, and the
+                // requeued attempt needs the items again.
+                env.run_attempts(part, shards, container, |sctx| f(sctx, items.clone()))
             })
             .collect()
     }
@@ -241,24 +297,22 @@ impl JobHandle {
     /// One closure per granted container on dedicated threads — for
     /// workloads that poll or stream rather than consume a fixed list
     /// (e.g. the compactor draining its share of log partitions). Same
-    /// retry budget and panic containment as [`Self::run_sharded`].
+    /// retry budget, panic containment, and preemption requeue as
+    /// [`Self::run_sharded`].
     pub fn run_per_container<U: Send>(
         &self,
         f: impl Fn(&ShardCtx) -> Result<U> + Send + Sync,
     ) -> Result<Vec<U>> {
         let conts = self.grant.containers();
         let shards = conts.len();
-        let budget = self.spec.max_shard_retries;
+        let env = self.shard_env();
         let results: Vec<std::thread::Result<Result<U>>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..shards)
                 .map(|w| {
                     let f = &f;
-                    let container = &conts[w];
-                    let retries = &self.retries;
-                    let metrics = &self.metrics;
-                    s.spawn(move || {
-                        run_attempts(w, shards, container, budget, retries, metrics, f)
-                    })
+                    let env = &env;
+                    let container = conts[w].clone();
+                    s.spawn(move || env.run_attempts(w, shards, container, f))
                 })
                 .collect();
             handles.into_iter().map(|h| h.join()).collect()
@@ -286,11 +340,11 @@ impl JobHandle {
     }
 
     /// Run one closure inside the first granted container — the shape
-    /// of a sequential single-container stage.
+    /// of a sequential single-container stage (not preemptible: the
+    /// closure is `FnOnce`, so there is nothing to requeue).
     pub fn run_single<T>(&self, f: impl FnOnce(&ContainerCtx) -> Result<T>) -> Result<T> {
-        let c = self
-            .grant
-            .containers()
+        let conts = self.grant.containers();
+        let c = conts
             .first()
             .ok_or_else(|| anyhow!("job '{}' holds no containers", self.spec.app))?;
         c.run(f)?
@@ -311,6 +365,7 @@ impl JobHandle {
             containers,
             grant_wait: self.grant.wait(),
             shard_retries: self.retries.load(Ordering::Relaxed),
+            preemptions: self.preemptions.load(Ordering::Relaxed),
             container_seconds,
             elapsed,
         }
@@ -332,36 +387,102 @@ pub fn run_stage<T>(
     out
 }
 
-/// Retry loop shared by the sharded and per-container runners: panics
-/// are caught and converted to errors so the RAII guards — not luck —
-/// decide when containers go back to the pool.
-fn run_attempts<U>(
-    shard: usize,
-    shards: usize,
-    container: &ContainerRef,
+/// Everything a shard attempt needs beyond its closure: the job's
+/// resource handles (for preemption requeue) and the grant's shared
+/// container set (replacements are adopted into it so the RAII release
+/// still covers them).
+#[derive(Clone)]
+struct ShardEnv {
+    rm: Arc<ResourceManager>,
+    app: String,
+    resources: ResourceVec,
+    grant_timeout: Duration,
+    held: Arc<Mutex<Vec<ContainerRef>>>,
     budget: usize,
-    retries: &AtomicU64,
-    metrics: &MetricsRegistry,
-    attempt_fn: impl Fn(&ShardCtx) -> Result<U>,
-) -> Result<U> {
-    let mut last: Option<anyhow::Error> = None;
-    for attempt in 0..=budget {
-        if attempt > 0 {
-            retries.fetch_add(1, Ordering::Relaxed);
-            metrics.counter("platform.job.shard_retries").inc();
-        }
-        let sctx = ShardCtx { shard, shards, attempt, container: container.clone() };
-        match catch_unwind(AssertUnwindSafe(|| attempt_fn(&sctx))) {
-            Ok(Ok(v)) => return Ok(v),
-            Ok(Err(e)) => last = Some(e),
-            Err(payload) => {
-                metrics.counter("platform.job.shard_panics").inc();
-                last = Some(anyhow!("shard {shard} panicked: {}", panic_msg(payload.as_ref())));
+    retries: Arc<AtomicU64>,
+    preemptions: Arc<AtomicU64>,
+    metrics: MetricsRegistry,
+}
+
+impl ShardEnv {
+    /// Retry loop shared by the sharded and per-container runners:
+    /// panics are caught and converted to errors so the RAII guards —
+    /// not luck — decide when containers go back to the pool. A failure
+    /// on a container flagged for preemption is not charged against the
+    /// retry budget: the container is yielded to the reclaiming queue,
+    /// a replacement is acquired, and the shard is requeued.
+    ///
+    /// Classification is deliberately conservative: ANY failure on a
+    /// flagged container counts as a preemption. A genuine shard bug
+    /// that coincides with a flag costs exactly one extra execution —
+    /// the replacement container starts unflagged, so the rerun fails
+    /// into the normal retry budget (the requeue cap only matters
+    /// under sustained re-flagging, i.e. real preemption pressure).
+    fn run_attempts<U>(
+        &self,
+        shard: usize,
+        shards: usize,
+        mut container: ContainerRef,
+        attempt_fn: impl Fn(&ShardCtx) -> Result<U>,
+    ) -> Result<U> {
+        let mut last: Option<anyhow::Error> = None;
+        let mut attempt = 0usize;
+        let mut requeues = 0usize;
+        while attempt <= self.budget {
+            let sctx = ShardCtx { shard, shards, attempt, container: container.clone() };
+            let err = match catch_unwind(AssertUnwindSafe(|| attempt_fn(&sctx))) {
+                Ok(Ok(v)) => return Ok(v),
+                Ok(Err(e)) => e,
+                Err(payload) => {
+                    self.metrics.counter("platform.job.shard_panics").inc();
+                    anyhow!("shard {shard} panicked: {}", panic_msg(payload.as_ref()))
+                }
+            };
+            if container.preempt_requested() && requeues < MAX_PREEMPT_REQUEUES {
+                requeues += 1;
+                self.preemptions.fetch_add(1, Ordering::Relaxed);
+                self.metrics.counter("platform.job.preemptions").inc();
+                match self.requeue(&container) {
+                    Ok(replacement) => {
+                        container = replacement;
+                        continue; // the retry budget is untouched
+                    }
+                    Err(e) => {
+                        let msg = format!("shard {shard} preempted and could not reacquire");
+                        last = Some(e.context(msg));
+                        break;
+                    }
+                }
+            }
+            last = Some(err);
+            attempt += 1;
+            if attempt <= self.budget {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+                self.metrics.counter("platform.job.shard_retries").inc();
             }
         }
+        let e = last.expect("at least one attempt ran");
+        Err(e.context(format!("shard {shard} failed after {} attempt(s)", self.budget + 1)))
     }
-    let e = last.expect("at least one attempt ran");
-    Err(e.context(format!("shard {shard} failed after {} attempt(s)", budget + 1)))
+
+    /// Yield a preempted container back to the pool (waking the
+    /// reclaiming queue) and adopt a replacement into the grant's
+    /// shared set so the RAII release covers it.
+    fn requeue(&self, old: &ContainerRef) -> Result<ContainerRef> {
+        self.held.lock().unwrap().retain(|c| c.id != old.id);
+        if !old.is_released() {
+            self.rm.release(old)?;
+        }
+        let start = Instant::now();
+        let replacement = self
+            .rm
+            .acquire_container(&self.app, self.resources, self.grant_timeout)?;
+        self.metrics
+            .histogram("platform.job.preempt_requeue_wait")
+            .record(start.elapsed());
+        self.held.lock().unwrap().push(replacement.clone());
+        Ok(replacement)
+    }
 }
 
 fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
@@ -440,6 +561,34 @@ mod tests {
         let stats = job.finish();
         assert_eq!(stats.shard_retries, 2);
         assert_eq!(rm.live_containers(), 0);
+    }
+
+    #[test]
+    fn preempted_shard_requeues_without_burning_its_retry_budget() {
+        let rm = rm();
+        let ctx = DceContext::local().unwrap();
+        // Zero retries: if the preemption were charged as a retry, the
+        // job would fail.
+        let job =
+            JobHandle::submit(&rm, JobSpec::new("victim").containers(1, 1).retries(0)).unwrap();
+        assert_eq!(rm.request_preemption("victim", 1), 1);
+        let seen: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let seen2 = seen.clone();
+        let out = job
+            .run_sharded(&ctx, vec![5u32], move |sctx, items: Vec<u32>| {
+                seen2.lock().unwrap().push(sctx.container().id);
+                sctx.check_preempted()?;
+                Ok(items)
+            })
+            .unwrap();
+        assert_eq!(out, vec![5]);
+        let stats = job.finish();
+        assert_eq!(stats.preemptions, 1);
+        assert_eq!(stats.shard_retries, 0, "preemption must not burn the retry budget");
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 2, "one preempted attempt + one requeued attempt");
+        assert_ne!(seen[0], seen[1], "the requeue must run on a replacement container");
+        assert_eq!(rm.live_containers(), 0, "victim and replacement are both released");
     }
 
     #[test]

@@ -4,9 +4,11 @@
 //! The [`job`] submodule is the unified job layer every workload
 //! schedules through.
 
+pub mod checkpoint;
 pub mod experiments;
 pub mod job;
 
+pub use checkpoint::ShardCheckpoint;
 pub use job::{run_stage, JobHandle, JobSpec, JobStats, ShardCtx};
 
 use anyhow::Result;

@@ -27,6 +27,7 @@ pub struct Container {
     pub devices: Vec<DeviceId>,
     mem_used: AtomicU64,
     released: AtomicBool,
+    preempt_requested: AtomicBool,
     cpu_time_us: AtomicU64,
     metrics: MetricsRegistry,
 }
@@ -48,6 +49,7 @@ impl Container {
             devices,
             mem_used: AtomicU64::new(0),
             released: AtomicBool::new(false),
+            preempt_requested: AtomicBool::new(false),
             cpu_time_us: AtomicU64::new(0),
             metrics,
         }
@@ -107,6 +109,18 @@ impl Container {
         self.released.store(true, Ordering::Release);
     }
 
+    /// Whether the resource manager has asked this container to yield
+    /// so a queue below its guaranteed share can reclaim capacity. The
+    /// signal is cooperative: workloads poll it between work items,
+    /// checkpoint, and return the container.
+    pub fn preempt_requested(&self) -> bool {
+        self.preempt_requested.load(Ordering::Acquire)
+    }
+
+    pub(super) fn request_preempt(&self) {
+        self.preempt_requested.store(true, Ordering::Release);
+    }
+
     /// First granted device of the requested kind, if any.
     pub fn device(&self, kind: super::device::DeviceKind) -> Option<DeviceId> {
         self.devices.iter().copied().find(|d| d.kind == kind)
@@ -133,6 +147,12 @@ impl ContainerCtx<'_> {
 
     pub fn devices(&self) -> &[DeviceId] {
         &self.container.devices
+    }
+
+    /// Preemption signal, visible to code running inside the container
+    /// (e.g. the compactor's drain loop checks it between blocks).
+    pub fn preempt_requested(&self) -> bool {
+        self.container.preempt_requested()
     }
 }
 

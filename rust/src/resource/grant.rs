@@ -7,9 +7,17 @@
 //! [`AppLease`] make release structural: dropping them (normally, on
 //! `?`, or during unwinding) returns the containers and frees the app
 //! name for resubmission.
+//!
+//! Acquisition is **gang-atomic**: the `min` floor is reserved
+//! all-or-nothing by [`ResourceManager::acquire_gang`] under the
+//! scheduler lock, so a grant waiting for its floor holds zero
+//! containers and two concurrent floors can no longer hold-and-wait
+//! each other into deadlock on a full cluster. The container set is
+//! shared with the job layer so a preempted container can be swapped
+//! for its replacement while the RAII release still covers everything.
 
-use anyhow::{bail, Result};
-use std::sync::Arc;
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::container::ContainerRef;
@@ -47,16 +55,16 @@ impl Drop for AppLease {
 /// An elastic set of granted containers, released RAII-style.
 pub struct Grant {
     rm: Arc<ResourceManager>,
-    containers: Vec<ContainerRef>,
+    containers: Arc<Mutex<Vec<ContainerRef>>>,
     wait: Duration,
 }
 
 impl Grant {
-    /// Elastic acquisition: greedily take whatever is free right now
-    /// (up to `max` containers of `req` each), then block — waiting for
-    /// other jobs to release — until at least `min` are held or
-    /// `timeout` expires. A partial grant below the floor is returned
-    /// to the pool before the error propagates.
+    /// Gang-atomic elastic acquisition: block (up to `timeout`) until
+    /// the `min` floor can be reserved in one scheduler transaction,
+    /// then take elastic extras up to `max`. While waiting, nothing is
+    /// held; on timeout a typed [`super::GrantTimeout`] names the
+    /// queue and the deficit.
     pub fn acquire(
         rm: &Arc<ResourceManager>,
         app: &str,
@@ -65,56 +73,38 @@ impl Grant {
         max: usize,
         timeout: Duration,
     ) -> Result<Grant> {
-        let min = min.max(1);
-        let max = max.max(min);
         let start = Instant::now();
-        let mut grant = Grant { rm: rm.clone(), containers: Vec::new(), wait: Duration::ZERO };
-        for _ in 0..max {
-            match rm.request_container(app, req) {
-                Ok(c) => grant.containers.push(c),
-                Err(_) => break,
-            }
-        }
-        if grant.containers.len() < min {
-            // Fail fast on requests that no node shape or queue cap can
-            // ever satisfy — blocking would only burn the full timeout.
-            rm.check_feasible(app, req)?;
-        }
-        // Escalation holds the partial grant while waiting, so two jobs
-        // with floors > 1 can hold-and-wait each other into timeout
-        // (bounded by `timeout`, never a permanent deadlock). Atomic
-        // floor acquisition — gang scheduling — is tracked in ROADMAP.
-        while grant.containers.len() < min {
-            let left = timeout.saturating_sub(start.elapsed());
-            if left.is_zero() {
-                bail!(
-                    "grant for '{app}' timed out below its floor: {}/{} container(s) after {:?}",
-                    grant.containers.len(),
-                    min,
-                    timeout
-                );
-            }
-            grant.containers.push(rm.acquire_container(app, req, left)?);
-        }
-        grant.wait = start.elapsed();
-        Ok(grant)
+        let containers = rm.acquire_gang(app, req, min, max, timeout)?;
+        Ok(Grant {
+            rm: rm.clone(),
+            containers: Arc::new(Mutex::new(containers)),
+            wait: start.elapsed(),
+        })
     }
 
-    pub fn containers(&self) -> &[ContainerRef] {
-        &self.containers
+    /// Snapshot of the currently held containers.
+    pub fn containers(&self) -> Vec<ContainerRef> {
+        self.containers.lock().unwrap().clone()
     }
 
     pub fn len(&self) -> usize {
-        self.containers.len()
+        self.containers.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.containers.is_empty()
+        self.containers.lock().unwrap().is_empty()
     }
 
     /// How long acquisition blocked waiting for capacity.
     pub fn wait(&self) -> Duration {
         self.wait
+    }
+
+    /// Shared handle to the live container set: the job layer swaps a
+    /// preempted container for its replacement through it, so the RAII
+    /// release on drop still covers every container the job ever held.
+    pub(crate) fn shared(&self) -> Arc<Mutex<Vec<ContainerRef>>> {
+        self.containers.clone()
     }
 
     /// Explicit release (equivalent to drop, but readable at call sites).
@@ -123,7 +113,7 @@ impl Grant {
 
 impl Drop for Grant {
     fn drop(&mut self) {
-        for c in self.containers.drain(..) {
+        for c in self.containers.lock().unwrap().drain(..) {
             if !c.is_released() {
                 let _ = self.rm.release(&c);
             }
@@ -136,6 +126,7 @@ mod tests {
     use super::*;
     use crate::config::ClusterConfig;
     use crate::metrics::MetricsRegistry;
+    use crate::resource::GrantTimeout;
 
     fn rm() -> Arc<ResourceManager> {
         let cluster = ClusterConfig {
@@ -186,14 +177,14 @@ mod tests {
     }
 
     #[test]
-    fn grant_below_floor_times_out_and_returns_partials() {
+    fn grant_below_floor_times_out_holding_nothing() {
         let rm = rm();
         rm.submit_app("hog", "default").unwrap();
         rm.submit_app("g", "default").unwrap();
         let _hold = rm.request_container("hog", ResourceVec::cores(2, 10)).unwrap();
         let _hold2 = rm.request_container("hog", ResourceVec::cores(1, 10)).unwrap();
-        // One core free but the floor is 2: acquisition must time out
-        // and give back the single container it did get.
+        // One core free but the floor is 2: gang admission must time
+        // out without ever holding the single container it could get.
         let r = Grant::acquire(
             &rm,
             "g",
@@ -202,8 +193,46 @@ mod tests {
             2,
             Duration::from_millis(50),
         );
-        assert!(r.is_err());
-        assert_eq!(rm.live_containers(), 2, "partial grant must be returned");
+        let e = r.unwrap_err();
+        let t = e.downcast_ref::<GrantTimeout>().expect("typed GrantTimeout");
+        assert_eq!((t.deficit, t.grantable), (1, 1));
+        assert_eq!(rm.live_containers(), 2, "only the hog's containers remain live");
+    }
+
+    #[test]
+    fn concurrent_floors_exceeding_the_cluster_do_not_deadlock() {
+        // Regression for the PR-3 escalation path: two floor-3 grants
+        // on a 4-core cluster could hold 2+2 and starve each other to
+        // timeout. Gang admission serializes them: each floor is
+        // reserved whole, so both jobs complete within the timeout.
+        let rm = rm();
+        rm.submit_app("j1", "default").unwrap();
+        rm.submit_app("j2", "default").unwrap();
+        let (r1, r2) = std::thread::scope(|s| {
+            let spawn_job = |app: &'static str| {
+                let rm = rm.clone();
+                move || -> Result<usize> {
+                    let g = Grant::acquire(
+                        &rm,
+                        app,
+                        ResourceVec::cores(1, 10),
+                        3,
+                        3,
+                        Duration::from_secs(5),
+                    )?;
+                    let n = g.len();
+                    std::thread::sleep(Duration::from_millis(20));
+                    g.release();
+                    Ok(n)
+                }
+            };
+            let h1 = s.spawn(spawn_job("j1"));
+            let h2 = s.spawn(spawn_job("j2"));
+            (h1.join().unwrap(), h2.join().unwrap())
+        });
+        assert_eq!(r1.unwrap(), 3, "first floor must admit");
+        assert_eq!(r2.unwrap(), 3, "second floor must admit after the first releases");
+        assert_eq!(rm.live_containers(), 0);
     }
 
     #[test]

@@ -10,4 +10,4 @@ pub mod yarn;
 pub use container::{Container, ContainerCtx, ContainerRef};
 pub use device::{DeviceId, DeviceKind, ResourceVec};
 pub use grant::{AppLease, Grant};
-pub use yarn::ResourceManager;
+pub use yarn::{GrantTimeout, ResourceManager};

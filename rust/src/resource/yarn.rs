@@ -7,16 +7,63 @@
 //! memory, and GPU/FPGA device slots, and either get a grant, an error,
 //! or (with [`ResourceManager::acquire_container`]) block until capacity
 //! frees up.
+//!
+//! Three scheduler behaviours layer on top of the basic allocator:
+//!
+//! * **Elastic queues** — every queue has a *guaranteed* share and an
+//!   *elastic ceiling* ([`ResourceManager::with_elastic_queues`]). A
+//!   queue may borrow idle capacity up to its ceiling while siblings
+//!   are quiet; [`ResourceManager::with_queues`] keeps the older
+//!   hard-cap behaviour (ceiling == guarantee).
+//! * **Fair-share preemption** — when preemption is enabled and a
+//!   request from a queue *below its guarantee* is blocked, the
+//!   scheduler flags victim containers of apps on queues *above* their
+//!   guarantee, newest first. The signal is cooperative: the job layer
+//!   checkpoints the interrupted shard, releases the container, and
+//!   requeues — see `platform::job`.
+//! * **Gang admission** — [`ResourceManager::acquire_gang`] reserves a
+//!   job's container floor all-or-nothing under the scheduler lock, so
+//!   two concurrent floors can no longer hold-and-wait each other into
+//!   deadlock; timeouts surface as a typed [`GrantTimeout`] naming the
+//!   queue and the deficit.
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::container::{Container, ContainerRef};
 use super::device::{DeviceId, DeviceKind, ResourceVec};
 use crate::config::ClusterConfig;
 use crate::metrics::MetricsRegistry;
+
+/// Typed error for blocking acquisition that hit its deadline: names
+/// the queue and the deficit so a starved share is diagnosable from the
+/// error alone (and so callers can downcast and requeue whole).
+#[derive(Debug, Clone)]
+pub struct GrantTimeout {
+    pub app: String,
+    pub queue: String,
+    /// Containers still missing when the deadline passed.
+    pub deficit: usize,
+    /// Containers that were grantable at the last attempt (gang floors
+    /// report how close admission came; nothing is actually held).
+    pub grantable: usize,
+}
+
+impl std::fmt::Display for GrantTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "grant for app '{}' on queue '{}' timed out {} container(s) short \
+             ({} grantable at deadline)",
+            self.app, self.queue, self.deficit, self.grantable
+        )
+    }
+}
+
+impl std::error::Error for GrantTimeout {}
 
 struct NodeState {
     /// Full node shape (never mutated) — used for feasibility checks.
@@ -32,9 +79,12 @@ struct AppState {
 }
 
 struct QueueState {
-    /// Fraction of total cluster cores this queue may hold (capacity
-    /// scheduler semantics: hard cap, work-conserving below it).
+    /// Guaranteed fraction of total cluster cores (capacity scheduler
+    /// semantics: the share preemption defends).
     share: f64,
+    /// Elastic ceiling fraction: how far the queue may borrow idle
+    /// capacity beyond its guarantee (== `share` for hard caps).
+    max_share: f64,
     cores_used: usize,
 }
 
@@ -42,7 +92,9 @@ struct RmInner {
     nodes: Vec<NodeState>,
     apps: HashMap<String, AppState>,
     queues: HashMap<String, QueueState>,
-    live: HashMap<u64, (String, usize, ResourceVec, Vec<DeviceId>)>,
+    /// Live containers by id; the scheduler keeps the handle so it can
+    /// deliver preemption signals to victims.
+    live: HashMap<u64, ContainerRef>,
     next_id: u64,
     total_cores: usize,
 }
@@ -51,6 +103,7 @@ struct RmInner {
 pub struct ResourceManager {
     inner: Mutex<RmInner>,
     freed: Condvar,
+    preempt: AtomicBool,
     metrics: MetricsRegistry,
 }
 
@@ -61,9 +114,24 @@ impl ResourceManager {
     }
 
     /// Build with named capacity queues; shares should sum to <= 1.
+    /// Each queue's elastic ceiling equals its guarantee (hard caps —
+    /// the pre-preemption behaviour).
     pub fn with_queues(
         cluster: &ClusterConfig,
         queues: Vec<(String, f64)>,
+        metrics: MetricsRegistry,
+    ) -> Arc<Self> {
+        let queues = queues.into_iter().map(|(n, s)| (n, s, s)).collect();
+        Self::with_elastic_queues(cluster, queues, metrics)
+    }
+
+    /// Build with `(name, guaranteed share, elastic ceiling)` queues: a
+    /// queue may borrow idle capacity up to its ceiling; with
+    /// preemption enabled, a queue blocked below its guarantee claws
+    /// borrowed capacity back from over-guarantee tenants.
+    pub fn with_elastic_queues(
+        cluster: &ClusterConfig,
+        queues: Vec<(String, f64, f64)>,
         metrics: MetricsRegistry,
     ) -> Arc<Self> {
         let shape = ResourceVec {
@@ -86,15 +154,29 @@ impl ResourceManager {
                 apps: HashMap::new(),
                 queues: queues
                     .into_iter()
-                    .map(|(n, share)| (n, QueueState { share, cores_used: 0 }))
+                    .map(|(n, share, max_share)| {
+                        (n, QueueState { share, max_share: max_share.max(share), cores_used: 0 })
+                    })
                     .collect(),
                 live: HashMap::new(),
                 next_id: 0,
                 total_cores: cluster.total_cores(),
             }),
             freed: Condvar::new(),
+            preempt: AtomicBool::new(false),
             metrics,
         })
+    }
+
+    /// Enable or disable fair-share preemption (off by default: without
+    /// it, an over-guarantee tenant keeps borrowed capacity until it
+    /// finishes — the pre-PR-4 behaviour).
+    pub fn set_preemption(&self, enabled: bool) {
+        self.preempt.store(enabled, Ordering::Relaxed);
+    }
+
+    pub fn preemption_enabled(&self) -> bool {
+        self.preempt.load(Ordering::Relaxed)
     }
 
     /// Register an application against a queue.
@@ -114,41 +196,286 @@ impl ResourceManager {
     }
 
     /// Non-blocking container request. Errors if nothing fits right now
-    /// or the app's queue is at its capacity cap.
+    /// or the app's queue is at its elastic ceiling.
     pub fn request_container(
         self: &Arc<Self>,
         app: &str,
         req: ResourceVec,
     ) -> Result<ContainerRef> {
         let mut inner = self.inner.lock().unwrap();
-        self.try_grant(&mut inner, app, req)
+        let c = self.try_grant(&mut inner, app, req)?;
+        self.metrics.counter("resource.containers_granted").inc();
+        Ok(c)
     }
 
     /// Blocking request: waits until a grant is possible (with timeout).
+    /// When preemption is enabled and the requesting queue is below its
+    /// guarantee, victim containers on over-guarantee queues are flagged
+    /// so cooperative yields can free the capacity. The deadline is
+    /// rechecked after *every* wakeup — a waiter can be woken by a
+    /// release it then loses the race for, and that must not extend the
+    /// wait past the timeout.
     pub fn acquire_container(
         self: &Arc<Self>,
         app: &str,
         req: ResourceVec,
         timeout: Duration,
     ) -> Result<ContainerRef> {
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = Instant::now() + timeout;
         let mut inner = self.inner.lock().unwrap();
         loop {
             match self.try_grant(&mut inner, app, req) {
-                Ok(c) => return Ok(c),
+                Ok(c) => {
+                    self.metrics.counter("resource.containers_granted").inc();
+                    return Ok(c);
+                }
                 Err(_) => {
-                    let now = std::time::Instant::now();
-                    if now >= deadline {
-                        bail!("timed out waiting for {req:?} for app '{app}'");
+                    if self.preemption_enabled() {
+                        self.preempt_for(&mut inner, app, req.cores, req.cores);
                     }
-                    let (guard, _) = self
-                        .freed
-                        .wait_timeout(inner, deadline - now)
-                        .unwrap();
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(self.grant_timeout_err(&inner, app, 1, 0));
+                    }
+                    let (guard, _) = self.freed.wait_timeout(inner, deadline - now).unwrap();
                     inner = guard;
                 }
             }
         }
+    }
+
+    /// Gang-atomic blocking acquisition: reserve at least `min`
+    /// containers of `req` all-or-nothing, then extend greedily up to
+    /// `max`. The floor is assembled — and on failure rolled back —
+    /// entirely under the scheduler lock, so a floor that cannot
+    /// complete is never observable by other applications and a waiting
+    /// gang holds *nothing*: the hold-and-wait edge two concurrent
+    /// floors need to deadlock each other on a full cluster is gone.
+    pub fn acquire_gang(
+        self: &Arc<Self>,
+        app: &str,
+        req: ResourceVec,
+        min: usize,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<Vec<ContainerRef>> {
+        let min = min.max(1);
+        let max = max.max(min);
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        // Fail fast on floors no empty cluster or queue ceiling can
+        // ever admit — blocking would only burn the whole timeout.
+        self.check_gang_feasible(&inner, app, req, min)?;
+        loop {
+            let mut gang: Vec<ContainerRef> = Vec::with_capacity(max);
+            while gang.len() < min {
+                match self.try_grant(&mut inner, app, req) {
+                    Ok(c) => gang.push(c),
+                    Err(_) => break,
+                }
+            }
+            if gang.len() >= min {
+                // Floor secured atomically; take elastic extras.
+                while gang.len() < max {
+                    match self.try_grant(&mut inner, app, req) {
+                        Ok(c) => gang.push(c),
+                        Err(_) => break,
+                    }
+                }
+                self.metrics
+                    .counter("resource.containers_granted")
+                    .add(gang.len() as u64);
+                return Ok(gang);
+            }
+            // Below the floor: roll the partial gang back before
+            // waiting (holding it would reintroduce hold-and-wait).
+            let grantable = gang.len();
+            for c in gang.drain(..) {
+                let _ = self.release_locked(&mut inner, &c);
+            }
+            if self.preemption_enabled() {
+                self.preempt_for(&mut inner, app, min * req.cores, (min - grantable) * req.cores);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(self.grant_timeout_err(&inner, app, min - grantable, grantable));
+            }
+            let (guard, _) = self.freed.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+
+    fn grant_timeout_err(
+        &self,
+        inner: &RmInner,
+        app: &str,
+        deficit: usize,
+        grantable: usize,
+    ) -> anyhow::Error {
+        let queue = inner
+            .apps
+            .get(app)
+            .map(|a| a.queue.clone())
+            .unwrap_or_else(|| "<unsubmitted>".into());
+        self.metrics.counter("resource.grant_timeouts").inc();
+        anyhow::Error::new(GrantTimeout { app: app.to_string(), queue, deficit, grantable })
+    }
+
+    /// How many `req`-shaped containers fit an empty node of `cap`.
+    fn fit_count(cap: &ResourceVec, req: &ResourceVec) -> usize {
+        let mut n = usize::MAX;
+        if req.cores > 0 {
+            n = n.min(cap.cores / req.cores);
+        }
+        if req.mem_bytes > 0 {
+            n = n.min((cap.mem_bytes / req.mem_bytes).min(usize::MAX as u64) as usize);
+        }
+        if req.gpus > 0 {
+            n = n.min(cap.gpus / req.gpus);
+        }
+        if req.fpgas > 0 {
+            n = n.min(cap.fpgas / req.fpgas);
+        }
+        n
+    }
+
+    fn check_gang_feasible(
+        &self,
+        inner: &RmInner,
+        app: &str,
+        req: ResourceVec,
+        min: usize,
+    ) -> Result<()> {
+        let queue_name = match inner.apps.get(app) {
+            Some(a) => &a.queue,
+            None => bail!("app '{app}' not submitted"),
+        };
+        let q = inner.queues.get(queue_name).unwrap();
+        let cap = (q.max_share * inner.total_cores as f64).ceil() as usize;
+        if min * req.cores > cap {
+            bail!(
+                "gang floor of {min} x {} core(s) exceeds queue '{queue_name}' ceiling of {cap}",
+                req.cores
+            );
+        }
+        let placeable: usize = inner
+            .nodes
+            .iter()
+            .map(|n| Self::fit_count(&n.capacity, &req))
+            .fold(0usize, |acc, n| acc.saturating_add(n));
+        if placeable < min {
+            bail!(
+                "gang floor of {min} x {req:?} can never be placed \
+                 (empty cluster fits only {placeable})"
+            );
+        }
+        Ok(())
+    }
+
+    /// Flag preemption victims so a blocked request from a queue below
+    /// its guaranteed share can reclaim capacity. `floor_cores` is the
+    /// whole request being placed (the guard: preemption only defends
+    /// requests that fit inside the requester's guarantee);
+    /// `deficit_cores` is how much must actually be freed. Victims are
+    /// live containers of apps on queues above their guarantee, newest
+    /// first; cores already flagged but not yet yielded count against
+    /// the deficit so repeated wakeups do not cascade through the
+    /// whole cluster.
+    ///
+    /// Known limitation of the cooperative protocol: a flagged
+    /// container whose shard never reaches another yield point keeps
+    /// its cores until its job ends, and its pending flag suppresses
+    /// flagging further victims — the waiter then degrades to plain
+    /// FIFO blocking (bounded by its timeout). Smarter victim
+    /// accounting is the ROADMAP "preemption cost model" rung.
+    fn preempt_for(
+        &self,
+        inner: &mut RmInner,
+        app: &str,
+        floor_cores: usize,
+        deficit_cores: usize,
+    ) {
+        let Some(a) = inner.apps.get(app) else { return };
+        let req_queue = a.queue.clone();
+        let total = inner.total_cores as f64;
+        let guaranteed = |q: &QueueState| -> usize { (q.share * total).ceil() as usize };
+        {
+            let q = inner.queues.get(&req_queue).unwrap();
+            if q.cores_used + floor_cores > guaranteed(q) {
+                return;
+            }
+        }
+        let app_queue: HashMap<&str, &str> = inner
+            .apps
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.queue.as_str()))
+            .collect();
+        // Per-queue cores above guarantee, net of victims already
+        // flagged (their capacity is on its way back).
+        let mut reclaimable: HashMap<&str, i64> = inner
+            .queues
+            .iter()
+            .map(|(n, q)| (n.as_str(), q.cores_used as i64 - guaranteed(q) as i64))
+            .collect();
+        let mut pending = 0usize;
+        for c in inner.live.values() {
+            if c.preempt_requested() && !c.is_released() {
+                pending += c.limits.cores;
+                let q = app_queue.get(c.app.as_str());
+                if let Some(r) = q.and_then(|q| reclaimable.get_mut(q)) {
+                    *r -= c.limits.cores as i64;
+                }
+            }
+        }
+        let mut deficit = deficit_cores.saturating_sub(pending);
+        if deficit == 0 {
+            return;
+        }
+        // Newest containers first: they carry the least sunk work.
+        let mut victims: Vec<&ContainerRef> = inner
+            .live
+            .values()
+            .filter(|c| !c.preempt_requested() && !c.is_released())
+            .filter(|c| app_queue.get(c.app.as_str()).is_some_and(|q| *q != req_queue))
+            .collect();
+        victims.sort_unstable_by(|a, b| b.id.cmp(&a.id));
+        for c in victims {
+            if deficit == 0 {
+                break;
+            }
+            let q = app_queue.get(c.app.as_str());
+            let Some(r) = q.and_then(|q| reclaimable.get_mut(q)) else {
+                continue;
+            };
+            if *r <= 0 {
+                continue;
+            }
+            c.request_preempt();
+            self.metrics.counter("resource.preemptions").inc();
+            *r -= c.limits.cores as i64;
+            deficit = deficit.saturating_sub(c.limits.cores);
+        }
+    }
+
+    /// Directly flag an app's newest `n` live containers for preemption
+    /// (operational tooling and tests; the scheduler's automatic path
+    /// delivers the same signal). Returns how many were flagged.
+    pub fn request_preemption(&self, app: &str, n: usize) -> usize {
+        let inner = self.inner.lock().unwrap();
+        let mut ids: Vec<u64> = inner
+            .live
+            .iter()
+            .filter(|(_, c)| c.app == app && !c.preempt_requested())
+            .map(|(id, _)| *id)
+            .collect();
+        ids.sort_unstable_by(|a, b| b.cmp(a));
+        let mut flagged = 0;
+        for id in ids.into_iter().take(n) {
+            inner.live[&id].request_preempt();
+            self.metrics.counter("resource.preemptions").inc();
+            flagged += 1;
+        }
+        flagged
     }
 
     fn try_grant(
@@ -161,11 +488,11 @@ impl ResourceManager {
             Some(a) => a.queue.clone(),
             None => bail!("app '{app}' not submitted"),
         };
-        // Capacity check: hard cap at share * total_cores.
+        // Capacity check: elastic ceiling at max_share * total_cores.
         {
             let total = inner.total_cores;
             let q = inner.queues.get(&queue_name).unwrap();
-            let cap = (q.share * total as f64).ceil() as usize;
+            let cap = (q.max_share * total as f64).ceil() as usize;
             if q.cores_used + req.cores > cap {
                 self.metrics.counter("resource.queue_rejections").inc();
                 bail!(
@@ -198,16 +525,16 @@ impl ResourceManager {
         inner.apps.get_mut(app).unwrap().containers += 1;
         let id = inner.next_id;
         inner.next_id += 1;
-        inner.live.insert(id, (app.to_string(), node_idx, req, devices.clone()));
-        self.metrics.counter("resource.containers_granted").inc();
-        Ok(Arc::new(Container::new(
+        let container = Arc::new(Container::new(
             id,
             app.to_string(),
             node_idx,
             req,
             devices,
             self.metrics.clone(),
-        )))
+        ));
+        inner.live.insert(id, container.clone());
+        Ok(container)
     }
 
     /// Unregister a finished application (it must hold no containers),
@@ -228,29 +555,36 @@ impl ResourceManager {
     /// Return a container's resources to the pool.
     pub fn release(&self, container: &ContainerRef) -> Result<()> {
         let mut inner = self.inner.lock().unwrap();
-        let (app, node_idx, req, devices) = match inner.live.remove(&container.id) {
-            Some(v) => v,
-            None => bail!("container {} not live", container.id),
-        };
+        self.release_locked(&mut inner, container)?;
+        self.metrics.counter("resource.containers_released").inc();
+        self.freed.notify_all();
+        Ok(())
+    }
+
+    /// Release under an already-held scheduler lock (also the gang
+    /// rollback path, which must not be observable as a release).
+    fn release_locked(&self, inner: &mut RmInner, container: &ContainerRef) -> Result<()> {
+        if inner.live.remove(&container.id).is_none() {
+            bail!("container {} not live", container.id);
+        }
         container.mark_released();
-        let node = &mut inner.nodes[node_idx];
+        let req = container.limits;
+        let node = &mut inner.nodes[container.node];
         node.avail.add(&req);
-        for d in devices {
+        for d in &container.devices {
             match d.kind {
                 DeviceKind::Gpu => node.free_gpus.push(d.index),
                 DeviceKind::Fpga => node.free_fpgas.push(d.index),
                 DeviceKind::Cpu => {}
             }
         }
-        let queue = inner.apps.get(&app).map(|a| a.queue.clone());
+        let queue = inner.apps.get(&container.app).map(|a| a.queue.clone());
         if let Some(q) = queue.and_then(|q| inner.queues.get_mut(&q)) {
             q.cores_used -= req.cores;
         }
-        if let Some(a) = inner.apps.get_mut(&app) {
+        if let Some(a) = inner.apps.get_mut(&container.app) {
             a.containers -= 1;
         }
-        self.metrics.counter("resource.containers_released").inc();
-        self.freed.notify_all();
         Ok(())
     }
 
@@ -262,9 +596,9 @@ impl ResourceManager {
 
     /// Whether `req` could EVER be granted to `app`: it must fit an
     /// *empty* node's full shape and sit within the app's queue
-    /// absolute capacity cap. The job layer calls this before blocking
-    /// so a permanently infeasible request fails fast instead of
-    /// burning the whole grant timeout.
+    /// elastic ceiling. The job layer calls this before blocking so a
+    /// permanently infeasible request fails fast instead of burning
+    /// the whole grant timeout.
     pub fn check_feasible(&self, app: &str, req: ResourceVec) -> Result<()> {
         let inner = self.inner.lock().unwrap();
         let queue_name = match inner.apps.get(app) {
@@ -272,10 +606,10 @@ impl ResourceManager {
             None => bail!("app '{app}' not submitted"),
         };
         let q = inner.queues.get(queue_name).unwrap();
-        let cap = (q.share * inner.total_cores as f64).ceil() as usize;
+        let cap = (q.max_share * inner.total_cores as f64).ceil() as usize;
         if req.cores > cap {
             bail!(
-                "request of {} core(s) exceeds queue '{queue_name}' cap of {cap}",
+                "request of {} core(s) exceeds queue '{queue_name}' ceiling of {cap}",
                 req.cores
             );
         }
@@ -399,6 +733,90 @@ mod tests {
     }
 
     #[test]
+    fn elastic_queue_borrows_idle_capacity_to_its_ceiling() {
+        // Guarantee 50%, ceiling 100%: with the sibling idle, the queue
+        // may borrow the whole cluster — the over-share state preemption
+        // exists to claw back.
+        let rm = ResourceManager::with_elastic_queues(
+            &cluster(),
+            vec![("sim".into(), 0.5, 1.0), ("fleet".into(), 0.5, 0.5)],
+            MetricsRegistry::new(),
+        );
+        rm.submit_app("a", "sim").unwrap();
+        for i in 0..8 {
+            rm.request_container("a", ResourceVec::cores(1, 10))
+                .unwrap_or_else(|e| panic!("core {i} within ceiling denied: {e}"));
+        }
+        assert!(rm.request_container("a", ResourceVec::cores(1, 10)).is_err());
+    }
+
+    #[test]
+    fn preemption_flags_newest_over_guarantee_victims() {
+        let rm = ResourceManager::with_elastic_queues(
+            &cluster(),
+            vec![("sim".into(), 0.5, 1.0), ("fleet".into(), 0.5, 0.5)],
+            MetricsRegistry::new(),
+        );
+        rm.set_preemption(true);
+        rm.submit_app("hog", "sim").unwrap();
+        rm.submit_app("late", "fleet").unwrap();
+        let held: Vec<_> = (0..8)
+            .map(|_| rm.request_container("hog", ResourceVec::cores(1, 10)).unwrap())
+            .collect();
+        // The fleet queue is empty (below its 4-core guarantee); its
+        // blocked request must flag exactly one victim — the newest
+        // container of the over-guarantee tenant — and be admitted
+        // once that victim cooperatively yields.
+        let rm2 = rm.clone();
+        let waiter = std::thread::spawn(move || {
+            rm2.acquire_container("late", ResourceVec::cores(1, 10), Duration::from_secs(5))
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !held.last().unwrap().preempt_requested() {
+            assert!(Instant::now() < deadline, "victim was never flagged");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(
+            held[..7].iter().all(|c| !c.preempt_requested()),
+            "only the newest container should be flagged for a 1-core deficit"
+        );
+        rm.release(held.last().unwrap()).unwrap();
+        let got = waiter.join().unwrap().unwrap();
+        assert_eq!(rm.metrics().counter("resource.preemptions").get(), 1);
+        rm.release(&got).unwrap();
+        for c in &held[..7] {
+            rm.release(c).unwrap();
+        }
+    }
+
+    #[test]
+    fn preemption_does_not_defend_requests_above_the_guarantee() {
+        let rm = ResourceManager::with_elastic_queues(
+            &cluster(),
+            vec![("sim".into(), 0.5, 1.0), ("fleet".into(), 0.5, 1.0)],
+            MetricsRegistry::new(),
+        );
+        rm.set_preemption(true);
+        rm.submit_app("hog", "sim").unwrap();
+        rm.submit_app("greedy", "fleet").unwrap();
+        let held: Vec<_> = (0..4)
+            .map(|_| rm.request_container("hog", ResourceVec::cores(1, 10)).unwrap())
+            .collect();
+        let mine: Vec<_> = (0..4)
+            .map(|_| rm.request_container("greedy", ResourceVec::cores(1, 10)).unwrap())
+            .collect();
+        // "greedy" already sits AT its 4-core guarantee: asking for a
+        // 5th core is borrowing, and borrowing never preempts.
+        let r =
+            rm.acquire_container("greedy", ResourceVec::cores(1, 10), Duration::from_millis(50));
+        assert!(r.is_err());
+        assert!(held.iter().all(|c| !c.preempt_requested()), "no victim may be flagged");
+        for c in held.iter().chain(mine.iter()) {
+            rm.release(c).unwrap();
+        }
+    }
+
+    #[test]
     fn acquire_wakes_when_grant_from_another_queue_is_released() {
         // Node capacity (not queue share) is the contended resource:
         // queue "a" helps fill the node, queue "b" blocks below its own
@@ -477,12 +895,80 @@ mod tests {
     }
 
     #[test]
-    fn acquire_times_out() {
+    fn acquire_timeout_names_queue_and_deficit() {
         let rm = rm();
         rm.submit_app("a", "default").unwrap();
         let _c1 = rm.request_container("a", ResourceVec::cores(4, 100)).unwrap();
         let _c2 = rm.request_container("a", ResourceVec::cores(4, 100)).unwrap();
         let r = rm.acquire_container("a", ResourceVec::cores(1, 1), Duration::from_millis(50));
+        let e = r.unwrap_err();
+        let t = e.downcast_ref::<GrantTimeout>().expect("typed GrantTimeout");
+        assert_eq!(t.queue, "default");
+        assert_eq!(t.deficit, 1);
+        assert!(e.to_string().contains("queue 'default'"), "{e}");
+    }
+
+    #[test]
+    fn gang_floor_is_all_or_nothing() {
+        let rm = rm();
+        rm.submit_app("hog", "default").unwrap();
+        rm.submit_app("g", "default").unwrap();
+        let _hold = rm.request_container("hog", ResourceVec::cores(4, 100)).unwrap();
+        let _hold2 = rm.request_container("hog", ResourceVec::cores(3, 100)).unwrap();
+        // One core free, floor of 3: the gang must hold NOTHING while
+        // failing, then report the deficit.
+        let req = ResourceVec::cores(1, 10);
+        let r = rm.acquire_gang("g", req, 3, 3, Duration::from_millis(50));
+        let e = r.unwrap_err();
+        let t = e.downcast_ref::<GrantTimeout>().expect("typed GrantTimeout");
+        assert_eq!((t.deficit, t.grantable), (2, 1));
+        assert_eq!(rm.live_containers(), 2, "failed gang must hold nothing");
+    }
+
+    #[test]
+    fn infeasible_gang_floor_fails_fast() {
+        let rm = rm();
+        rm.submit_app("g", "default").unwrap();
+        let t = Instant::now();
+        // 9 one-core containers can never fit 8 cores.
+        let req = ResourceVec::cores(1, 10);
+        let r = rm.acquire_gang("g", req, 9, 9, Duration::from_secs(5));
         assert!(r.is_err());
+        assert!(t.elapsed() < Duration::from_secs(1), "must fail fast, not block");
+    }
+
+    #[test]
+    fn concurrent_gang_floors_serialize_instead_of_deadlocking() {
+        // The PR-3 escalation path could interleave two floor-3 jobs on
+        // an 8-core cluster into 4+4 hold-and-wait. Gang admission
+        // reserves floors atomically, so both must now complete.
+        let rm = rm();
+        rm.submit_app("j1", "default").unwrap();
+        rm.submit_app("j2", "default").unwrap();
+        let req = ResourceVec::cores(1, 10);
+        let (r1, r2) = std::thread::scope(|s| {
+            let rm1 = rm.clone();
+            let rm2 = rm.clone();
+            let h1 = s.spawn(move || {
+                let g = rm1.acquire_gang("j1", req, 6, 6, Duration::from_secs(5))?;
+                std::thread::sleep(Duration::from_millis(20));
+                for c in &g {
+                    rm1.release(c)?;
+                }
+                Ok::<usize, anyhow::Error>(g.len())
+            });
+            let h2 = s.spawn(move || {
+                let g = rm2.acquire_gang("j2", req, 6, 6, Duration::from_secs(5))?;
+                std::thread::sleep(Duration::from_millis(20));
+                for c in &g {
+                    rm2.release(c)?;
+                }
+                Ok::<usize, anyhow::Error>(g.len())
+            });
+            (h1.join().unwrap(), h2.join().unwrap())
+        });
+        assert_eq!(r1.unwrap(), 6);
+        assert_eq!(r2.unwrap(), 6);
+        assert_eq!(rm.live_containers(), 0);
     }
 }

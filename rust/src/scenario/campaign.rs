@@ -17,6 +17,7 @@ use std::time::Instant;
 use super::report::{self, CampaignReport, ScenarioVerdict};
 use super::spec::ScenarioSpec;
 use crate::dce::DceContext;
+use crate::platform::checkpoint::ShardCheckpoint;
 use crate::platform::job::{JobHandle, JobSpec};
 use crate::resource::{ResourceManager, ResourceVec};
 use crate::services::simulation::{
@@ -40,6 +41,11 @@ pub struct CampaignConfig {
     pub pass_accuracy: f64,
     /// Scratch directory for materialized bag chunks.
     pub work_dir: PathBuf,
+    /// Commit each verdict into a [`ShardCheckpoint`] keyed by the
+    /// scenario's content hash, so a preempted or resubmitted campaign
+    /// resumes from completed scenarios instead of re-scoring them.
+    /// The checkpoint is cleared when the campaign succeeds.
+    pub checkpoint: bool,
 }
 
 impl CampaignConfig {
@@ -52,6 +58,7 @@ impl CampaignConfig {
             queue: "default".into(),
             nodes: nodes.max(1),
             pass_accuracy: 0.6,
+            checkpoint: true,
         }
     }
 }
@@ -186,6 +193,13 @@ pub fn score_scenario(
     })
 }
 
+/// Checkpoint item key for one scenario: content hash plus the scoring
+/// bar, so a resubmission with a different `pass_accuracy` can never
+/// reuse verdicts judged under the old threshold.
+fn ckpt_item(spec: &ScenarioSpec, pass_accuracy: f64) -> String {
+    format!("{:016x}-{:016x}", spec.content_hash(), pass_accuracy.to_bits())
+}
+
 /// Run a full campaign as one job on the unified job layer: acquire an
 /// elastic container grant (one per requested node, degrading
 /// gracefully on a small cluster), shard the scenario list across the
@@ -193,6 +207,13 @@ pub fn score_scenario(
 /// accounting, and aggregate the verdicts into a qualification report.
 /// The grant is an RAII guard: containers return to the pool on every
 /// exit path, including shard errors and panics.
+///
+/// With `checkpoint` enabled (the default), every verdict is committed
+/// to a [`ShardCheckpoint`] as it lands and each shard yields at
+/// scenario boundaries when its container is flagged for preemption —
+/// the requeued (or resubmitted) shard reloads completed verdicts
+/// instead of re-scoring them, so preemption costs at most the
+/// in-flight scenario and a resubmitted campaign reruns nothing.
 pub fn run_campaign(
     ctx: &DceContext,
     rm: &Arc<ResourceManager>,
@@ -218,9 +239,29 @@ pub fn run_campaign(
 
     let work_dir = cfg.work_dir.clone();
     let pass_accuracy = cfg.pass_accuracy;
+    let ckpt = cfg.checkpoint.then(|| ShardCheckpoint::new(ctx.store(), &cfg.app));
+    let shard_ckpt = ckpt.clone();
+    let metrics = ctx.metrics().clone();
     let result = job.run_sharded(ctx, specs.to_vec(), move |sctx, specs: Vec<ScenarioSpec>| {
         let mut out = Vec::with_capacity(specs.len());
         for spec in specs {
+            let item = ckpt_item(&spec, pass_accuracy);
+            // Resume path: a verdict committed before a preemption or
+            // by a prior submission is reloaded, never re-scored. A
+            // blob that fails to decode must not poison the job — fall
+            // through and re-score instead.
+            if let Some(bytes) = shard_ckpt.as_ref().and_then(|c| c.lookup(&item)) {
+                if let Ok(v) = ScenarioVerdict::from_bytes(&bytes) {
+                    out.push(v);
+                    metrics.counter("scenario.ckpt_hits").inc();
+                    continue;
+                }
+                metrics.counter("scenario.ckpt_corrupt").inc();
+            }
+            // Yield at a scenario boundary when asked to: everything
+            // scored so far is already committed, so the requeued
+            // shard loses no work.
+            sctx.check_preempted()?;
             let dir = work_dir.join(&spec.id);
             let verdict = sctx.run(|cctx| -> Result<ScenarioVerdict> {
                 // Charge the frame buffers against the container's
@@ -235,6 +276,10 @@ pub fn run_campaign(
                 let _ = std::fs::remove_dir_all(&dir);
                 result
             })??;
+            metrics.counter("scenario.scored").inc();
+            if let Some(c) = &shard_ckpt {
+                c.commit(&item, verdict.to_bytes())?;
+            }
             out.push(verdict);
         }
         Ok(out)
@@ -245,6 +290,12 @@ pub fn run_campaign(
     let _ = job.finish();
     let _ = std::fs::remove_dir_all(&cfg.work_dir);
     let verdicts = result?;
+    if let Some(c) = &ckpt {
+        // Success: later campaigns under this app name start fresh. A
+        // FAILED campaign keeps its checkpoint, which is the point —
+        // resubmission resumes from the completed scenarios.
+        c.clear(specs.iter().map(|s| ckpt_item(s, cfg.pass_accuracy)));
+    }
     ctx.metrics().counter("scenario.scenarios_run").add(verdicts.len() as u64);
     Ok(report::aggregate(verdicts, shards, start.elapsed()))
 }
@@ -332,6 +383,44 @@ mod tests {
         // The app was unregistered: the same config is reusable.
         let again = run_campaign(&ctx, &rm, &specs, &ccfg).unwrap();
         assert_eq!(again.scenarios, 8);
+    }
+
+    #[test]
+    fn checkpointed_campaign_resumes_without_rescoring() {
+        let cfg = PlatformConfig::test();
+        let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
+        let specs = generate_campaign_sized(11, 6, 8);
+        // Baseline: an uninterrupted run.
+        let ctx1 = DceContext::new(cfg.clone()).unwrap();
+        let base_cfg = CampaignConfig::new("ckpt-base", 2);
+        let base = run_campaign(&ctx1, &rm, &specs, &base_cfg).unwrap();
+        assert_eq!(ctx1.metrics().counter("scenario.scored").get(), 6);
+        // Interrupted submission: half the verdicts already sit in the
+        // app's checkpoint (exactly what a preempted shard leaves
+        // behind), plus one corrupt blob that must be ignored, not
+        // poison the job. The resubmitted campaign scores only what is
+        // genuinely missing.
+        let ctx2 = DceContext::new(cfg.clone()).unwrap();
+        let resume_cfg = CampaignConfig::new("ckpt-resume", 2);
+        let bar = resume_cfg.pass_accuracy;
+        let ckpt = ShardCheckpoint::new(ctx2.store(), "ckpt-resume");
+        for (s, v) in specs.iter().zip(&base.verdicts).take(3) {
+            ckpt.commit(&ckpt_item(s, bar), v.to_bytes()).unwrap();
+        }
+        ckpt.commit(&ckpt_item(&specs[3], bar), b"not a verdict".to_vec()).unwrap();
+        let resumed = run_campaign(&ctx2, &rm, &specs, &resume_cfg).unwrap();
+        assert_eq!(ctx2.metrics().counter("scenario.scored").get(), 3, "3 already done");
+        assert_eq!(ctx2.metrics().counter("scenario.ckpt_hits").get(), 3);
+        assert_eq!(ctx2.metrics().counter("scenario.ckpt_corrupt").get(), 1);
+        // Byte-identical final output, resumed or not.
+        let bytes = |r: &crate::scenario::CampaignReport| -> Vec<u8> {
+            r.verdicts.iter().flat_map(|v| v.to_bytes()).collect()
+        };
+        assert_eq!(bytes(&base), bytes(&resumed));
+        // Success clears the checkpoint for the next submission.
+        for s in &specs {
+            assert!(!ckpt.contains(&ckpt_item(s, bar)));
+        }
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! into parameter-space coverage and per-family failure rates — the
 //! artifact a fleet-qualification run hands to the release gate.
 
+use anyhow::{bail, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::Duration;
 
@@ -27,6 +28,82 @@ pub struct ScenarioVerdict {
     pub faults: usize,
     pub accuracy: f64,
     pub passed: bool,
+}
+
+const NOISE_BUCKETS: [&str; 3] = ["low", "med", "high"];
+
+impl ScenarioVerdict {
+    /// Deterministic binary encoding — the blob a campaign commits per
+    /// scenario into its [`crate::platform::ShardCheckpoint`], so a
+    /// preempted or resubmitted campaign resumes byte-identically.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.id.len() as u16).to_le_bytes());
+        out.extend_from_slice(self.id.as_bytes());
+        out.extend_from_slice(&(self.family.len() as u16).to_le_bytes());
+        out.extend_from_slice(self.family.as_bytes());
+        out.extend_from_slice(&self.content_hash.to_le_bytes());
+        let weather = Weather::ALL.iter().position(|w| *w == self.weather).unwrap() as u8;
+        out.push(weather);
+        out.extend_from_slice(&(self.actors as u32).to_le_bytes());
+        let noise = NOISE_BUCKETS.iter().position(|b| *b == self.noise_bucket).unwrap() as u8;
+        out.push(noise);
+        out.extend_from_slice(&(self.frames as u32).to_le_bytes());
+        out.extend_from_slice(&(self.exact as u32).to_le_bytes());
+        out.extend_from_slice(&(self.faults as u32).to_le_bytes());
+        out.extend_from_slice(&self.accuracy.to_le_bytes());
+        out.push(self.passed as u8);
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if *off + n > bytes.len() {
+                bail!("verdict blob truncated at byte {off}");
+            }
+            let s = &bytes[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        let take_str = |off: &mut usize| -> Result<String> {
+            let n = u16::from_le_bytes(take(off, 2)?.try_into().unwrap()) as usize;
+            Ok(String::from_utf8(take(off, n)?.to_vec())?)
+        };
+        let id = take_str(&mut off)?;
+        let family = take_str(&mut off)?;
+        let content_hash = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+        let weather = match Weather::ALL.get(take(&mut off, 1)?[0] as usize) {
+            Some(w) => *w,
+            None => bail!("verdict blob has invalid weather index"),
+        };
+        let actors = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let noise_bucket = match NOISE_BUCKETS.get(take(&mut off, 1)?[0] as usize) {
+            Some(b) => *b,
+            None => bail!("verdict blob has invalid noise bucket"),
+        };
+        let frames = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let exact = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let faults = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let accuracy = f64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+        let passed = take(&mut off, 1)?[0] != 0;
+        if off != bytes.len() {
+            bail!("verdict blob has {} trailing bytes", bytes.len() - off);
+        }
+        Ok(Self {
+            id,
+            family,
+            content_hash,
+            weather,
+            actors,
+            noise_bucket,
+            frames,
+            exact,
+            faults,
+            accuracy,
+            passed,
+        })
+    }
 }
 
 /// Pass/fail statistics for one scenario family.
@@ -319,6 +396,21 @@ mod tests {
         assert!(j.get("families").unwrap().get("grid-clear").is_some());
         // JSON emission parses back.
         assert!(crate::util::json::Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn verdict_binary_roundtrip() {
+        let v = verdict("grid-night", Weather::Night, 3, true);
+        let b = v.to_bytes();
+        let back = ScenarioVerdict::from_bytes(&b).unwrap();
+        assert_eq!(back.to_bytes(), b, "re-encoding must be byte-identical");
+        assert_eq!(back.id, v.id);
+        assert_eq!(back.family, v.family);
+        assert_eq!(back.content_hash, v.content_hash);
+        assert_eq!(back.noise_bucket, v.noise_bucket);
+        assert_eq!(back.accuracy, v.accuracy);
+        assert_eq!(back.passed, v.passed);
+        assert!(ScenarioVerdict::from_bytes(&b[..b.len() - 1]).is_err(), "truncation rejected");
     }
 
     #[test]

@@ -43,7 +43,9 @@ fn assemble_cloud(poses: &[crate::pointcloud::Se3], log: &DriveLog) -> Vec<f32> 
 /// Fused pipeline: ONE job on the unified job layer, all five stages
 /// in a single granted container, intermediates in memory. The
 /// assembled cloud (≈ scan bytes) is charged against the container's
-/// memory limit.
+/// memory limit. The stage chain is deterministic and runs through the
+/// per-container runner, so it is preemptible as a unit: a flagged
+/// container is yielded and the requeued replacement reruns the chain.
 pub fn run_fused(
     dispatcher: &Dispatcher,
     rm: &Arc<ResourceManager>,
@@ -58,35 +60,40 @@ pub fn run_fused(
         JobSpec::new("mapgen-fused")
             .resources(ResourceVec::cores(1, (4 * scan_bytes).max(32 << 20))),
     )?;
-    let report = job.run_single(|cctx| {
-        cctx.alloc_mem(scan_bytes)?;
-        let result = (|| -> Result<MapgenReport> {
-            // Stage 1+2: SLAM pose recovery (ICP-refined).
-            let slam = slam_trajectory(dispatcher, log, config)?;
-            // Stage 3: point-cloud assembly.
-            let cloud = assemble_cloud(&slam.poses, log);
-            // Stage 4: grid map.
-            let mut grid = GridMap::covering(&cloud, grid_res_m);
-            grid.add_points(&cloud);
-            // Stage 5: semantics.
-            let lanes = derive_lanes(&slam.poses, LANE_HALF_WIDTH);
-            let signs = extract_signs(&cloud);
-            let map = HdMap { grid, lanes, signs };
-            Ok(MapgenReport {
-                mode: "fused",
-                elapsed: start.elapsed(),
-                slam_err_m: slam.mean_err_m,
-                occupied_cells: map.grid.occupied_cells(),
-                signs: map.signs.len(),
-                lanes: map.lanes.len(),
-                map,
-            })
-        })();
-        cctx.free_mem(scan_bytes);
-        result
+    let reports = job.run_per_container(|sctx| {
+        sctx.check_preempted()?;
+        sctx.run(|cctx| {
+            cctx.alloc_mem(scan_bytes)?;
+            let result = (|| -> Result<MapgenReport> {
+                // Stage 1+2: SLAM pose recovery (ICP-refined).
+                let slam = slam_trajectory(dispatcher, log, config)?;
+                // Stage 3: point-cloud assembly.
+                let cloud = assemble_cloud(&slam.poses, log);
+                // Stage 4: grid map.
+                let mut grid = GridMap::covering(&cloud, grid_res_m);
+                grid.add_points(&cloud);
+                // Stage 5: semantics.
+                let lanes = derive_lanes(&slam.poses, LANE_HALF_WIDTH);
+                let signs = extract_signs(&cloud);
+                let map = HdMap { grid, lanes, signs };
+                Ok(MapgenReport {
+                    mode: "fused",
+                    elapsed: start.elapsed(),
+                    slam_err_m: slam.mean_err_m,
+                    occupied_cells: map.grid.occupied_cells(),
+                    signs: map.signs.len(),
+                    lanes: map.lanes.len(),
+                    map,
+                })
+            })();
+            cctx.free_mem(scan_bytes);
+            result
+        })?
     });
     let _ = job.finish();
-    report
+    let mut reports = reports?;
+    anyhow::ensure!(!reports.is_empty(), "mapgen job produced no report");
+    Ok(reports.remove(0))
 }
 
 /// Staged pipeline: identical stages, but each one is its own

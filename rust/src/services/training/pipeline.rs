@@ -105,6 +105,11 @@ pub fn run_unified(
     // container's memory limit; intermediates never leave memory.
     let per_shard = n_examples.div_ceil(job.shards()).max(1);
     let prepared = job.run_sharded(ctx, raw, move |sctx, items: Vec<Example>| {
+        // ETL + augmentation are pure functions of the shard's input,
+        // so preemption needs no checkpoint here: yield before doing
+        // the work and the requeued shard recomputes it exactly. Round
+        // state in stage 3 is already durable in the param server.
+        sctx.check_preempted()?;
         sctx.run(|cctx| -> Result<Vec<Example>> {
             let est = EXAMPLE_BYTES * items.len() as u64;
             cctx.alloc_mem(est)?;

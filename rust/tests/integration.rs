@@ -4,8 +4,9 @@
 use adcloud::config::PlatformConfig;
 use adcloud::dce::{BinaryRddExt, DceContext};
 use adcloud::platform::{experiments, JobHandle, JobSpec, Platform};
-use adcloud::resource::{DeviceKind, ResourceVec};
+use adcloud::resource::{DeviceKind, GrantTimeout, ResourceVec};
 use adcloud::runtime::Tensor;
+use std::time::Duration;
 
 fn have_artifacts() -> bool {
     let ok = adcloud::artifacts_dir().join("manifest.json").is_file();
@@ -104,6 +105,65 @@ fn job_layer_releases_containers_when_a_worker_panics() {
     assert!(r.is_err());
     let stats = job.finish();
     assert!(stats.containers >= 1);
+    assert_eq!(p.resources.live_containers(), 0);
+}
+
+#[test]
+fn forced_preemption_mid_shard_releases_the_victim_container() {
+    let p = Platform::local().unwrap();
+    let job = JobHandle::submit(
+        &p.resources,
+        JobSpec::new("it-preempt").containers(1, 1).retries(0),
+    )
+    .unwrap();
+    let victim = job.containers()[0].clone();
+    let victim_id = victim.id;
+    let rm = p.resources.clone();
+    let r = job.run_sharded(&p.ctx, vec![1u32, 2, 3], move |sctx, items: Vec<u32>| {
+        if sctx.container().id == victim_id {
+            // Mid-shard: have the scheduler preempt this very shard,
+            // then yield at the next item boundary.
+            assert_eq!(rm.request_preemption("it-preempt", 1), 1);
+            sctx.check_preempted()?;
+        }
+        Ok(items)
+    });
+    assert_eq!(r.unwrap(), vec![1, 2, 3], "the requeued shard must still finish the work");
+    assert!(victim.is_released(), "the victim container was released mid-job");
+    assert_eq!(p.resources.live_containers(), 1, "only the replacement remains held");
+    let stats = job.finish();
+    assert_eq!(stats.preemptions, 1);
+    assert_eq!(stats.shard_retries, 0, "preemption must not burn the retry budget");
+    assert_eq!(p.resources.live_containers(), 0, "replacement released by the RAII grant");
+}
+
+#[test]
+fn gang_floors_exceeding_the_cluster_queue_whole_or_time_out() {
+    // 4 cores total: two floor-3 jobs cannot run concurrently. Gang
+    // admission means the loser holds NOTHING while blocked — one job
+    // admits, the other times out whole with a typed GrantTimeout —
+    // instead of the 2+2 hold-and-wait deadlock the escalating
+    // acquisition allowed.
+    let p = Platform::local().unwrap();
+    let spec = |app: &str, timeout_ms: u64| {
+        JobSpec::new(app)
+            .containers(3, 3)
+            .resources(ResourceVec::cores(1, 1 << 20))
+            .grant_timeout(Duration::from_millis(timeout_ms))
+    };
+    let winner = JobHandle::submit(&p.resources, spec("it-gang-a", 1000)).unwrap();
+    assert_eq!(winner.shards(), 3);
+    let loser = JobHandle::submit(&p.resources, spec("it-gang-b", 100));
+    let e = loser.err().expect("second floor cannot be admitted");
+    let t = e.downcast_ref::<GrantTimeout>().expect("timeout must be a typed GrantTimeout");
+    assert_eq!(t.queue, "default");
+    assert_eq!(t.deficit + t.grantable, 3, "the whole floor was still pending");
+    assert_eq!(p.resources.live_containers(), 3, "the loser held nothing while waiting");
+    let _ = winner.finish();
+    // With the winner gone, the same floor admits immediately.
+    let retry = JobHandle::submit(&p.resources, spec("it-gang-b", 1000)).unwrap();
+    assert_eq!(retry.shards(), 3);
+    let _ = retry.finish();
     assert_eq!(p.resources.live_containers(), 0);
 }
 
