@@ -1,7 +1,7 @@
 //! Infrastructure benches: E1 (SQL DCE vs MapReduce, §2.1), E2 (tiered
 //! store vs DFS, §2.2), E4 (container overhead, §2.3), E12 (reliability
-//! soak, §2.1).
+//! soak, §2.1), E17 (sharded-store fast path vs single-lock baseline).
 mod common;
 fn main() {
-    common::run(&["e1", "e2", "e4", "e12"]);
+    common::run(&["e1", "e2", "e4", "e12", "e17"]);
 }

@@ -100,7 +100,19 @@ pub struct StorageConfig {
     /// DFS (HDFS-analog) device: disk bandwidth + network round trip.
     pub dfs: TierConfig,
     pub model_devices: bool,
+    /// Lock stripes for the tiered store's block map. Victim selection
+    /// is still globally ordered (each shard keeps a per-tier eviction
+    /// index and the evictor takes the min across shards), so the
+    /// shard count changes contention, never eviction order.
+    pub shards: usize,
+    /// A/B baseline knob (`adcloud --baseline`, experiment E17): force
+    /// the pre-PR-5 storage path — one shard, one global lock, and an
+    /// O(n) full-map scan per eviction victim.
+    pub scan_evict: bool,
 }
+
+/// Default lock-stripe count for the tiered store's block map.
+pub const DEFAULT_STORE_SHARDS: usize = 16;
 
 impl Default for StorageConfig {
     fn default() -> Self {
@@ -116,6 +128,8 @@ impl Default for StorageConfig {
             hdd: TierConfig { capacity_bytes: 8 << 30, bandwidth_bps: 150e6, latency_us: 8_000 },
             dfs: TierConfig { capacity_bytes: u64::MAX, bandwidth_bps: 120e6, latency_us: 5_000 },
             model_devices: false,
+            shards: DEFAULT_STORE_SHARDS,
+            scan_evict: false,
         }
     }
 }
@@ -128,6 +142,8 @@ impl StorageConfig {
             ("hdd", self.hdd.to_json()),
             ("dfs", self.dfs.to_json()),
             ("model_devices", Json::Bool(self.model_devices)),
+            ("shards", Json::num(self.shards as f64)),
+            ("scan_evict", Json::Bool(self.scan_evict)),
         ])
     }
 
@@ -138,6 +154,17 @@ impl StorageConfig {
             hdd: TierConfig::from_json(j.req("hdd")?)?,
             dfs: TierConfig::from_json(j.req("dfs")?)?,
             model_devices: j.req("model_devices")?.as_bool()?,
+            // Optional for configs saved before the sharded store.
+            shards: j
+                .get("shards")
+                .map(|s| s.as_usize())
+                .transpose()?
+                .unwrap_or(DEFAULT_STORE_SHARDS),
+            scan_evict: j
+                .get("scan_evict")
+                .map(|s| s.as_bool())
+                .transpose()?
+                .unwrap_or(false),
         })
     }
 }
@@ -206,6 +233,8 @@ impl PlatformConfig {
                 hdd: TierConfig { capacity_bytes: 64 << 20, bandwidth_bps: 200e6, latency_us: 0 },
                 dfs: TierConfig { capacity_bytes: u64::MAX, bandwidth_bps: 120e6, latency_us: 0 },
                 model_devices: false,
+                shards: DEFAULT_STORE_SHARDS,
+                scan_evict: false,
             },
             engine: EngineConfig {
                 default_parallelism: 4,
@@ -290,5 +319,16 @@ mod tests {
     #[test]
     fn missing_key_is_error() {
         assert!(PlatformConfig::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn pre_sharding_configs_still_load() {
+        // A config saved before the sharded store has no shards /
+        // scan_evict keys; it must parse with the defaults.
+        let mut j = PlatformConfig::default().to_json().to_string();
+        j = j.replace("\"shards\":16,", "").replace("\"scan_evict\":false,", "");
+        let c = PlatformConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c.storage.shards, DEFAULT_STORE_SHARDS);
+        assert!(!c.storage.scan_evict);
     }
 }

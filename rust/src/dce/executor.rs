@@ -5,10 +5,25 @@
 //! simulated cluster). Tasks are retryable closures; failures are
 //! retried up to the configured limit, which is what the fault-injection
 //! soak (experiment E12) exercises.
+//!
+//! **Dispatch is work-stealing.** The old pool handed every job through
+//! one `Mutex<mpsc::Receiver>`, so an 8-worker pool serialized all
+//! dispatch on a single lock. Now each worker owns a deque: external
+//! submitters round-robin across the worker deques (contending on one
+//! worker's lock, not the pool's), a worker spawning from inside a task
+//! pushes to its *own* deque (no cross-thread contention at all; past a
+//! small cap it overflows into the shared condvar-guarded injector so
+//! siblings pick the surplus up without stealing), and an idle worker
+//! pops its own deque first, then the injector, then steals from its
+//! siblings. Idle workers park on the injector's condvar; every push
+//! notifies it, and the final not-empty re-check runs under the
+//! injector lock so a wakeup can never be lost.
 
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::metrics::MetricsRegistry;
@@ -35,9 +50,130 @@ impl TaskContext {
 
 type PoolJob = Box<dyn FnOnce() + Send>;
 
-/// Fixed-size worker pool.
+/// A worker-local spawn keeps at most this many jobs on its own deque
+/// before overflowing into the shared injector.
+const LOCAL_OVERFLOW_CAP: usize = 64;
+
+thread_local! {
+    /// `(pool identity, worker index)` when the current thread is an
+    /// executor worker — lets spawn-from-a-task hit the local deque.
+    static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+struct PoolShared {
+    /// Overflow/entry queue; its mutex doubles as the condvar's guard,
+    /// so a worker's final empty re-check and a producer's notify are
+    /// ordered and a wakeup can never be lost.
+    injector: Mutex<VecDeque<PoolJob>>,
+    available: Condvar,
+    /// One deque per worker.
+    locals: Vec<Mutex<VecDeque<PoolJob>>>,
+    /// Workers currently inside the sleep protocol. A producer only
+    /// touches the injector lock to notify when this is non-zero, so
+    /// the busy-pool fast path pays one striped lock per push, total.
+    parked: AtomicUsize,
+    shutdown: AtomicBool,
+    /// External-submission round-robin cursor.
+    rr: AtomicUsize,
+    /// Jobs that ran on a different worker than they were queued on
+    /// (observability only).
+    steals: AtomicU64,
+}
+
+impl PoolShared {
+    /// Stable identity for the thread-local worker tag (the shared
+    /// state's address — fixed for the pool's lifetime inside its Arc).
+    fn id(&self) -> usize {
+        self as *const PoolShared as usize
+    }
+
+    fn push_local(&self, w: usize, job: PoolJob) {
+        self.locals[w].lock().unwrap().push_back(job);
+        self.notify();
+    }
+
+    fn push_injector(&self, job: PoolJob) {
+        self.injector.lock().unwrap().push_back(job);
+        self.notify();
+    }
+
+    /// Wake one parked worker, if any. A parked worker increments
+    /// `parked` (SeqCst) *before* its final re-scan of every queue, so
+    /// if this load sees zero the worker's re-scan is guaranteed to see
+    /// the job we just pushed; if it sees non-zero we take the injector
+    /// lock — serializing with the sleeper — and notify.
+    fn notify(&self) {
+        if self.parked.load(Ordering::SeqCst) > 0 {
+            drop(self.injector.lock().unwrap());
+            self.available.notify_one();
+        }
+    }
+
+    /// Non-blocking find: own deque, then injector, then steal.
+    fn try_pop(&self, w: usize) -> Option<PoolJob> {
+        if let Some(job) = self.locals[w].lock().unwrap().pop_front() {
+            return Some(job);
+        }
+        if let Some(job) = self.injector.lock().unwrap().pop_front() {
+            return Some(job);
+        }
+        let n = self.locals.len();
+        for off in 1..n {
+            let victim = (w + off) % n;
+            // Steal the victim's newest job: the victim drains from the
+            // front, so the two ends never contend logically.
+            if let Some(job) = self.locals[victim].lock().unwrap().pop_back() {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    /// Blocking pop; None means shutdown with nothing left to drain.
+    fn pop(&self, w: usize) -> Option<PoolJob> {
+        loop {
+            if let Some(job) = self.try_pop(w) {
+                return Some(job);
+            }
+            let mut inj = self.injector.lock().unwrap();
+            self.parked.fetch_add(1, Ordering::SeqCst);
+            // Final re-check, ordered after the parked increment (see
+            // `notify`): anything pushed after our failed try_pop is
+            // either visible to this scan or will wake us.
+            let found = inj.pop_front().or_else(|| self.steal_scan(w));
+            if let Some(job) = found {
+                self.parked.fetch_sub(1, Ordering::SeqCst);
+                return Some(job);
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                self.parked.fetch_sub(1, Ordering::SeqCst);
+                return None;
+            }
+            inj = self.available.wait(inj).unwrap();
+            drop(inj);
+            self.parked.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    fn steal_scan(&self, w: usize) -> Option<PoolJob> {
+        let n = self.locals.len();
+        for off in 0..n {
+            let q = (w + off) % n;
+            if let Some(job) = self.locals[q].lock().unwrap().pop_front() {
+                if q != w {
+                    self.steals.fetch_add(1, Ordering::Relaxed);
+                }
+                return Some(job);
+            }
+        }
+        None
+    }
+}
+
+/// Fixed-size worker pool with per-worker deques + work stealing.
 pub struct ExecutorPool {
-    tx: Mutex<Option<mpsc::Sender<PoolJob>>>,
+    shared: Arc<PoolShared>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
     in_flight: Arc<AtomicUsize>,
@@ -46,28 +182,31 @@ pub struct ExecutorPool {
 impl ExecutorPool {
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
-        let (tx, rx) = mpsc::channel::<PoolJob>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(PoolShared {
+            injector: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            locals: (0..size).map(|_| Mutex::new(VecDeque::new())).collect(),
+            parked: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            rr: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+        });
         let in_flight = Arc::new(AtomicUsize::new(0));
         let workers = (0..size)
             .map(|i| {
-                let rx = rx.clone();
+                let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("dce-executor-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break,
+                    .spawn(move || {
+                        WORKER.with(|c| c.set(Some((shared.id(), i))));
+                        while let Some(job) = shared.pop(i) {
+                            job();
                         }
                     })
                     .expect("spawn executor")
             })
             .collect();
-        Self { tx: Mutex::new(Some(tx)), workers, size, in_flight }
+        Self { shared, workers, size, in_flight }
     }
 
     pub fn size(&self) -> usize {
@@ -78,17 +217,49 @@ impl ExecutorPool {
         self.in_flight.load(Ordering::Relaxed)
     }
 
+    /// Jobs that ran on a different worker than they were queued on.
+    pub fn steals(&self) -> u64 {
+        self.shared.steals.load(Ordering::Relaxed)
+    }
+
     /// Submit a fire-and-forget job.
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
-        let guard = self.tx.lock().unwrap();
-        let tx = guard.as_ref().ok_or_else(|| anyhow!("pool shut down"))?;
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(anyhow!("pool shut down"));
+        }
         let inflight = self.in_flight.clone();
         inflight.fetch_add(1, Ordering::Relaxed);
-        tx.send(Box::new(move || {
+        let job: PoolJob = Box::new(move || {
             job();
             inflight.fetch_sub(1, Ordering::Relaxed);
-        }))
-        .map_err(|_| anyhow!("pool workers gone"))
+        });
+        let own = WORKER
+            .with(|c| c.get())
+            .and_then(|(pool, w)| (pool == self.shared.id()).then_some(w));
+        match own {
+            // A task spawning subtasks: keep them on this worker's
+            // deque (zero contention) unless it is already deep, in
+            // which case overflow to the injector so parked siblings
+            // can pick the surplus up directly.
+            Some(w) => {
+                let mut q = self.shared.locals[w].lock().unwrap();
+                if q.len() < LOCAL_OVERFLOW_CAP {
+                    q.push_back(job);
+                    drop(q);
+                    self.shared.notify();
+                } else {
+                    drop(q);
+                    self.shared.push_injector(job);
+                }
+            }
+            // External submitters spread round-robin over the deques so
+            // no single lock serializes dispatch.
+            None => {
+                let w = self.shared.rr.fetch_add(1, Ordering::Relaxed) % self.size;
+                self.shared.push_local(w, job);
+            }
+        }
+        Ok(())
     }
 
     /// Run a set of retryable tasks to completion, preserving order.
@@ -155,7 +326,10 @@ impl ExecutorPool {
 
 impl Drop for ExecutorPool {
     fn drop(&mut self) {
-        *self.tx.lock().unwrap() = None;
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Serialize with any worker's final re-check (see pop).
+        drop(self.shared.injector.lock().unwrap());
+        self.shared.available.notify_all();
         // The pool can be dropped FROM a worker thread (task closures
         // hold context clones; the last one may die inside a worker).
         // Joining yourself is EDEADLK — detach in that case, join the
@@ -242,6 +416,60 @@ mod tests {
             })
             .collect();
         pool.run_tasks(tasks, 0).unwrap();
+    }
+
+    #[test]
+    fn idle_workers_steal_queued_work() {
+        // Pin worker deques full from outside, then have one slow job
+        // block its owner: the rest must drain via injector/steals, so
+        // the whole batch still finishes promptly.
+        let pool = ExecutorPool::new(4);
+        let done = Arc::new(AtomicU32::new(0));
+        for i in 0..64u32 {
+            let done = done.clone();
+            pool.spawn(move || {
+                if i == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while done.load(Ordering::SeqCst) < 64 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 64, "pool lost jobs");
+        // in_flight decrements after the job body; give it a beat.
+        while pool.in_flight() > 0 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn worker_local_spawn_is_drained() {
+        // A task fanning out subtasks from inside the pool: the
+        // children land on the worker's own deque (or overflow to the
+        // injector) and must all run.
+        let pool = Arc::new(ExecutorPool::new(2));
+        let done = Arc::new(AtomicU32::new(0));
+        let (p2, d2) = (pool.clone(), done.clone());
+        pool.spawn(move || {
+            for _ in 0..100 {
+                let d = d2.clone();
+                p2.spawn(move || {
+                    d.fetch_add(1, Ordering::SeqCst);
+                })
+                .unwrap();
+            }
+        })
+        .unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while done.load(Ordering::SeqCst) < 100 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 100);
     }
 
     #[test]

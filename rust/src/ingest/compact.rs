@@ -166,6 +166,9 @@ fn drain_partition(
     cfg: &CompactorConfig,
     landed: &Mutex<Vec<BlockRef>>,
 ) -> Result<()> {
+    // Per-block counters resolved once per drain, not per block.
+    let blocks_landed = store.metrics().counter("ingest.compact.blocks");
+    let records_landed = store.metrics().counter("ingest.compact.records");
     loop {
         let from = log.committed(partition).max(log.start_offset(partition));
         if cctx.preempt_requested() {
@@ -204,8 +207,8 @@ fn drain_partition(
         });
         let next = batch.last().unwrap().offset + 1;
         log.commit(partition, next)?;
-        store.metrics().counter("ingest.compact.blocks").inc();
-        store.metrics().counter("ingest.compact.records").add(count as u64);
+        blocks_landed.inc();
+        records_landed.add(count as u64);
         landed.lock().unwrap().push(BlockRef {
             key,
             partition,

@@ -22,7 +22,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use super::log::{crc32, PartitionedLog};
-use crate::metrics::MetricsRegistry;
+use crate::metrics::{GatewayMetrics, MetricsRegistry};
 use crate::services::simulation::{encode_bag, Message};
 use crate::util::Rng;
 
@@ -199,12 +199,19 @@ pub struct IngestGateway {
     cfg: GatewayConfig,
     tokens: Mutex<HashMap<u32, u32>>,
     dead: Mutex<Vec<DeadLetter>>,
-    metrics: MetricsRegistry,
+    /// Admission counters resolved once — one decision per upload.
+    m: GatewayMetrics,
 }
 
 impl IngestGateway {
     pub fn new(log: Arc<PartitionedLog>, cfg: GatewayConfig, metrics: MetricsRegistry) -> Self {
-        Self { log, cfg, tokens: Mutex::new(HashMap::new()), dead: Mutex::new(Vec::new()), metrics }
+        Self {
+            log,
+            cfg,
+            tokens: Mutex::new(HashMap::new()),
+            dead: Mutex::new(Vec::new()),
+            m: GatewayMetrics::new(&metrics),
+        }
     }
 
     pub fn log(&self) -> &Arc<PartitionedLog> {
@@ -222,13 +229,13 @@ impl IngestGateway {
             let mut tokens = self.tokens.lock().unwrap();
             let t = tokens.entry(up.vehicle).or_insert(self.cfg.rate_per_tick);
             if *t == 0 {
-                self.metrics.counter("ingest.gateway.throttled").inc();
+                self.m.throttled.inc();
                 return Ok(Admission::Throttled);
             }
             *t -= 1;
         }
         if crc32(&up.payload) != up.declared_crc {
-            self.metrics.counter("ingest.gateway.dead_lettered").inc();
+            self.m.dead_lettered.inc();
             self.dead.lock().unwrap().push(DeadLetter {
                 vehicle: up.vehicle,
                 ts_ns: up.ts_ns,
@@ -239,11 +246,11 @@ impl IngestGateway {
         }
         let partition = self.log.partition_for(up.vehicle);
         if self.log.lag(partition) >= self.cfg.max_lag {
-            self.metrics.counter("ingest.gateway.backpressured").inc();
+            self.m.backpressured.inc();
             return Ok(Admission::Backpressure);
         }
         let offset = self.log.append(partition, up.ts_ns, up.vehicle, &up.payload)?;
-        self.metrics.counter("ingest.gateway.accepted").inc();
+        self.m.accepted.inc();
         Ok(Admission::Accepted { partition, offset })
     }
 

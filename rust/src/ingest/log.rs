@@ -19,12 +19,15 @@ use std::io::Write;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
-use crate::metrics::MetricsRegistry;
+use crate::metrics::{LogMetrics, MetricsRegistry};
 use crate::scenario::fnv1a64;
 
-/// IEEE CRC-32 lookup table, built at compile time.
-const fn crc32_table() -> [u32; 256] {
-    let mut table = [0u32; 256];
+/// IEEE CRC-32 lookup tables for slicing-by-8, built at compile time.
+/// `TABLES[0]` is the classic byte-at-a-time table; `TABLES[k][b]` is
+/// the CRC of byte `b` followed by `k` zero bytes, which lets one table
+/// lookup per input byte absorb eight bytes per iteration.
+const fn crc32_tables() -> [[u32; 256]; 8] {
+    let mut t = [[0u32; 256]; 8];
     let mut i = 0;
     while i < 256 {
         let mut crc = i as u32;
@@ -33,19 +36,55 @@ const fn crc32_table() -> [u32; 256] {
             crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
             bit += 1;
         }
-        table[i] = crc;
+        t[0][i] = crc;
         i += 1;
     }
-    table
+    let mut k = 1;
+    while k < 8 {
+        let mut i = 0;
+        while i < 256 {
+            let prev = t[k - 1][i];
+            t[k][i] = (prev >> 8) ^ t[0][(prev & 0xFF) as usize];
+            i += 1;
+        }
+        k += 1;
+    }
+    t
 }
 
-static CRC_TABLE: [u32; 256] = crc32_table();
+static CRC_TABLES: [[u32; 256]; 8] = crc32_tables();
 
-/// IEEE CRC-32 (the record-integrity check on every log frame).
+/// IEEE CRC-32 (the record-integrity check on every log frame),
+/// slicing-by-8: eight table lookups fold eight input bytes per
+/// iteration instead of one, ~4-6x the byte-at-a-time throughput on
+/// the append path. Bit-identical to [`crc32_bytewise`].
 pub fn crc32(bytes: &[u8]) -> u32 {
     let mut crc = 0xFFFF_FFFFu32;
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        let lo = crc ^ u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        let hi = u32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+        crc = CRC_TABLES[7][(lo & 0xFF) as usize]
+            ^ CRC_TABLES[6][((lo >> 8) & 0xFF) as usize]
+            ^ CRC_TABLES[5][((lo >> 16) & 0xFF) as usize]
+            ^ CRC_TABLES[4][(lo >> 24) as usize]
+            ^ CRC_TABLES[3][(hi & 0xFF) as usize]
+            ^ CRC_TABLES[2][((hi >> 8) & 0xFF) as usize]
+            ^ CRC_TABLES[1][((hi >> 16) & 0xFF) as usize]
+            ^ CRC_TABLES[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = (crc >> 8) ^ CRC_TABLES[0][((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// The reference byte-at-a-time implementation, kept as the oracle the
+/// sliced version is tested against.
+pub fn crc32_bytewise(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
     for &b in bytes {
-        crc = (crc >> 8) ^ CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+        crc = (crc >> 8) ^ CRC_TABLES[0][((crc ^ b as u32) & 0xFF) as usize];
     }
     !crc
 }
@@ -113,6 +152,9 @@ pub struct PartitionedLog {
     root: PathBuf,
     parts: Vec<Mutex<PartState>>,
     metrics: MetricsRegistry,
+    /// Handles resolved once: the append path must not pay the
+    /// registry lock + name allocation per record.
+    m: LogMetrics,
 }
 
 impl PartitionedLog {
@@ -140,7 +182,7 @@ impl PartitionedLog {
                 lost_records: 0,
             }));
         }
-        Ok(Arc::new(Self { cfg, root, parts, metrics }))
+        Ok(Arc::new(Self { cfg, root, parts, m: LogMetrics::new(&metrics), metrics }))
     }
 
     /// A throwaway log in the system temp dir (tests, examples, CLI).
@@ -200,8 +242,8 @@ impl PartitionedLog {
         let seg = st.segments.last_mut().expect("active segment");
         seg.bytes += frame.len() as u64;
         seg.records += 1;
-        self.metrics.counter("ingest.log.appends").inc();
-        self.metrics.counter("ingest.log.bytes").add(frame.len() as u64);
+        self.m.appends.inc();
+        self.m.bytes.add(frame.len() as u64);
         if seg.bytes >= self.cfg.segment_bytes {
             // Seal: the next append opens a fresh segment.
             st.writer = None;
@@ -231,9 +273,9 @@ impl PartitionedLog {
                 let lost = st.start_offset - st.committed;
                 st.lost_records += lost;
                 st.committed = st.start_offset;
-                self.metrics.counter("ingest.log.lost_unconsumed").add(lost);
+                self.m.lost_unconsumed.add(lost);
             }
-            self.metrics.counter("ingest.log.truncated_segments").inc();
+            self.m.truncated_segments.inc();
         }
     }
 
@@ -408,9 +450,30 @@ mod tests {
 
     #[test]
     fn crc32_known_vectors() {
-        assert_eq!(crc32(b""), 0);
-        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        // IEEE 802.3 check values — both implementations must hit them.
+        for f in [crc32, crc32_bytewise] {
+            assert_eq!(f(b""), 0);
+            assert_eq!(f(b"123456789"), 0xCBF4_3926);
+            assert_eq!(f(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+            assert_eq!(f(&[0u8; 32]), 0x190A_55AD);
+            assert_eq!(f(&[0xFFu8; 32]), 0xFF6C_AB0B);
+        }
         assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn crc32_slicing_matches_bytewise_on_random_buffers() {
+        // Every length 0..64 (all remainder shapes around the 8-byte
+        // slices) plus larger odd sizes, random contents.
+        let mut rng = crate::util::Rng::new(0xC3C3);
+        for len in (0..64usize).chain([255, 1000, 4093, 1 << 16]) {
+            let buf: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            assert_eq!(
+                crc32(&buf),
+                crc32_bytewise(&buf),
+                "sliced and bytewise CRC diverge at len {len}"
+            );
+        }
     }
 
     #[test]

@@ -345,7 +345,10 @@ pub fn mine(
     )?;
     let ckpt = cfg.checkpoint.then(|| ShardCheckpoint::new(store, &cfg.app));
     let shard_ckpt = ckpt.clone();
-    let metrics = ctx.metrics().clone();
+    // Resolve the per-block counters once; the scan loop must not take
+    // the registry lock per block.
+    let ckpt_hits = ctx.metrics().counter("ingest.mine.ckpt_hits");
+    let ckpt_corrupt = ctx.metrics().counter("ingest.mine.ckpt_corrupt");
     let (store2, cfg2) = (store.clone(), cfg.clone());
     let scanned = job.run_sharded(ctx, keys.clone(), move |sctx, keys: Vec<String>| {
         let mut out = Vec::new();
@@ -358,10 +361,10 @@ pub fn mine(
             if let Some(bytes) = shard_ckpt.as_ref().and_then(|c| c.lookup(&item)) {
                 if let Ok(events) = decode_events(&bytes) {
                     out.extend(events);
-                    metrics.counter("ingest.mine.ckpt_hits").inc();
+                    ckpt_hits.inc();
                     continue;
                 }
-                metrics.counter("ingest.mine.ckpt_corrupt").inc();
+                ckpt_corrupt.inc();
             }
             sctx.check_preempted()?;
             let bytes = store2.get(&key)?;

@@ -32,5 +32,5 @@ pub use gateway::{
     decode_telemetry, encode_telemetry, gen_drive, simulate_fleet, Admission, DeadLetter,
     FleetConfig, FleetReport, GatewayConfig, IngestGateway, Telemetry, VehicleUpload,
 };
-pub use log::{crc32, LogConfig, LogRecord, PartitionedLog};
+pub use log::{crc32, crc32_bytewise, LogConfig, LogRecord, PartitionedLog};
 pub use mine::{mine, EventKind, MineReport, MinedEvent, MinerConfig};

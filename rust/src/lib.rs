@@ -17,9 +17,19 @@
 //! Layer map:
 //! * [`dce`] — the Spark-analog distributed compute engine (RDDs, DAG
 //!   scheduler, shuffle, BinPipeRDD, virtual-time cluster simulation).
+//!   Task dispatch is work-stealing: per-worker deques with a
+//!   condvar-guarded overflow injector, not one mutex-wrapped channel.
 //! * [`mapreduce`] — the disk-staged MapReduce baseline engine.
 //! * [`storage`] — the Alluxio-analog tiered block store and the
-//!   HDFS-analog baseline.
+//!   HDFS-analog baseline. The block map is lock-striped into
+//!   `StorageConfig::shards` shards (per-tier `used` in atomics);
+//!   each shard keeps one ordered eviction index per tier —
+//!   `BTreeSet<(EvictionPolicy::rank, key)>`, maintained on every
+//!   access — whose invariant is that min-rank across the shard
+//!   minima is exactly the victim the policy's O(n) scan would pick,
+//!   so eviction is O(log n) with unchanged eviction order. The old
+//!   single-lock scan path survives behind `StorageConfig::scan_evict`
+//!   (`adcloud --baseline`) as experiment E17's A/B baseline.
 //! * [`resource`] — YARN-analog resource manager and LXC-analog
 //!   containers over a heterogeneous device inventory, with RAII
 //!   grants and app leases. Queues carry a guaranteed share plus an
@@ -31,8 +41,9 @@
 //!   (`JobSpec`/`JobHandle`: an application-master analog every
 //!   workload schedules through; preempted shards checkpoint via
 //!   `ShardCheckpoint`, yield their container, and requeue without
-//!   burning their retry budget), and the paper-experiment harness
-//!   (E1–E16).
+//!   burning their retry budget; `ShardCheckpoint::sweep` GCs orphaned
+//!   checkpoint blobs past a retention window), and the
+//!   paper-experiment harness (E1–E17).
 //! * [`hetero`] — kernel registry + dispatch across CPU / GPU-class /
 //!   FPGA-class devices.
 //! * [`runtime`] — the PJRT artifact runtime (device-server threads).

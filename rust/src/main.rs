@@ -14,12 +14,19 @@
 //!             guarantees, lets the campaign balloon over-share, and
 //!             has the late compaction job reclaim its share through
 //!             fair-share preemption + checkpointed shard requeue
+//!             [--ckpt-gc-secs S]  after the jobs finish, sweep ckpt/*
+//!             blobs older than S seconds (orphans from failed,
+//!             never-resubmitted jobs) and report the reclaimed count
 //!   train     [--examples N] [--rounds R] [--workers W]
 //!   mapgen    [--steps N]
 //!   sql       [--rows N]
-//!   repro-tables [e1..e16|all] [--quick]
+//!   repro-tables [e1..e17|all] [--quick]
 //!   pipe-worker <logic>          BinPipe child process (detect)
 //!   metrics                      dump the metrics registry after a demo job
+//!
+//! Every subcommand also accepts `--baseline`: force the pre-fast-path
+//! storage plane (single-lock block map, O(n) eviction scans) for A/B
+//! runs against experiment E17's sharded default.
 //!
 //! Arg parsing is hand-rolled (offline build: no clap in the vendored
 //! crate set).
@@ -115,19 +122,28 @@ fn run(args: Vec<String>) -> Result<()> {
 }
 
 fn config_from(flags: &HashMap<String, String>) -> adcloud::config::PlatformConfig {
+    let mut loaded = None;
     if let Some(path) = flags.get("config") {
         match adcloud::config::PlatformConfig::load(path) {
-            Ok(c) => return c,
+            Ok(c) => loaded = Some(c),
             Err(e) => {
                 eprintln!("config load failed ({e:#}); using defaults");
             }
         }
     }
-    if flags.contains_key("bench") {
-        adcloud::config::PlatformConfig::bench()
-    } else {
-        adcloud::config::PlatformConfig::default()
+    let mut cfg = loaded.unwrap_or_else(|| {
+        if flags.contains_key("bench") {
+            adcloud::config::PlatformConfig::bench()
+        } else {
+            adcloud::config::PlatformConfig::default()
+        }
+    });
+    if flags.contains_key("baseline") {
+        // The E17 A/B knob: old single-lock storage path.
+        cfg.storage.scan_evict = true;
+        cfg.storage.shards = 1;
     }
+    cfg
 }
 
 fn quickstart(flags: &HashMap<String, String>) -> Result<()> {
@@ -333,6 +349,16 @@ fn run_jobs(flags: &HashMap<String, String>) -> Result<()> {
             metrics.counter("resource.preemptions").get(),
             metrics.counter("platform.job.preemptions").get(),
         );
+    }
+    if let Some(secs) = flags.get("ckpt-gc-secs").and_then(|v| v.parse::<u64>().ok()) {
+        // Both jobs succeeded and cleared their own checkpoints; what
+        // the sweep reclaims is orphans from failed, never-resubmitted
+        // jobs (here: anything a previous crashed run left behind).
+        let reclaimed = adcloud::platform::ShardCheckpoint::sweep(
+            ctx.store(),
+            std::time::Duration::from_secs(secs),
+        )?;
+        println!("checkpoint GC: reclaimed {reclaimed} orphaned blob(s) older than {secs}s");
     }
     println!("job-layer metrics:\n{}", metrics.report());
     Ok(())

@@ -4,6 +4,15 @@
 //! reports through a shared [`MetricsRegistry`]; benches and the CLI
 //! render [`MetricsRegistry::report`] tables, which is how the paper-style
 //! experiment rows in EXPERIMENTS.md are produced.
+//!
+//! **Hot paths use pre-resolved handles.** `registry.counter(name)`
+//! takes the registry lock and allocates the name on every call, which
+//! is fine for `report()` but not for a per-put/per-append/per-shard
+//! loop. The handle structs below ([`StoreMetrics`], [`LogMetrics`],
+//! [`GatewayMetrics`], [`JobMetrics`], [`CampaignMetrics`]) resolve
+//! their `Arc<Counter>`/`Arc<Histogram>`s once at construction; the
+//! name-keyed API stays the source of truth, so `report()` and
+//! name-based test assertions see exactly the same atomics.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -210,6 +219,134 @@ impl Drop for ScopedTimer {
     }
 }
 
+/// Pre-resolved handles for the tiered store's per-op counters
+/// (`storage.tiered.*` + the checkpoint counters that ride the store).
+/// Indexed arrays replace the old per-get
+/// `format!("storage.tiered.hit.{tier}")` allocation.
+#[derive(Clone)]
+pub struct StoreMetrics {
+    pub puts: Arc<Counter>,
+    /// Tier hits, indexed mem/ssd/hdd.
+    pub hits: [Arc<Counter>; 3],
+    /// Tier evictions, indexed mem/ssd/hdd.
+    pub evicts: [Arc<Counter>; 3],
+    pub miss: Arc<Counter>,
+    pub writeback: Arc<Counter>,
+    pub lineage_recovered: Arc<Counter>,
+    pub ckpt_commits: Arc<Counter>,
+    pub ckpt_hits: Arc<Counter>,
+    pub ckpt_swept: Arc<Counter>,
+}
+
+impl StoreMetrics {
+    pub fn new(reg: &MetricsRegistry) -> Self {
+        let tiered = |t: &str| reg.counter(&format!("storage.tiered.{t}"));
+        Self {
+            puts: tiered("puts"),
+            hits: [tiered("hit.mem"), tiered("hit.ssd"), tiered("hit.hdd")],
+            evicts: [tiered("evict.mem"), tiered("evict.ssd"), tiered("evict.hdd")],
+            miss: tiered("miss"),
+            writeback: tiered("writeback"),
+            lineage_recovered: tiered("lineage_recovered"),
+            ckpt_commits: reg.counter("platform.ckpt.commits"),
+            ckpt_hits: reg.counter("platform.ckpt.hits"),
+            ckpt_swept: reg.counter("platform.ckpt.swept"),
+        }
+    }
+}
+
+/// Pre-resolved handles for the partitioned log's append path
+/// (`ingest.log.*`).
+#[derive(Clone)]
+pub struct LogMetrics {
+    pub appends: Arc<Counter>,
+    pub bytes: Arc<Counter>,
+    pub truncated_segments: Arc<Counter>,
+    pub lost_unconsumed: Arc<Counter>,
+}
+
+impl LogMetrics {
+    pub fn new(reg: &MetricsRegistry) -> Self {
+        Self {
+            appends: reg.counter("ingest.log.appends"),
+            bytes: reg.counter("ingest.log.bytes"),
+            truncated_segments: reg.counter("ingest.log.truncated_segments"),
+            lost_unconsumed: reg.counter("ingest.log.lost_unconsumed"),
+        }
+    }
+}
+
+/// Pre-resolved handles for the ingest gateway's admission path
+/// (`ingest.gateway.*`, one decision per upload).
+#[derive(Clone)]
+pub struct GatewayMetrics {
+    pub accepted: Arc<Counter>,
+    pub throttled: Arc<Counter>,
+    pub dead_lettered: Arc<Counter>,
+    pub backpressured: Arc<Counter>,
+}
+
+impl GatewayMetrics {
+    pub fn new(reg: &MetricsRegistry) -> Self {
+        Self {
+            accepted: reg.counter("ingest.gateway.accepted"),
+            throttled: reg.counter("ingest.gateway.throttled"),
+            dead_lettered: reg.counter("ingest.gateway.dead_lettered"),
+            backpressured: reg.counter("ingest.gateway.backpressured"),
+        }
+    }
+}
+
+/// Pre-resolved handles for the unified job layer (`platform.job.*`,
+/// touched per shard attempt and per preemption requeue).
+#[derive(Clone)]
+pub struct JobMetrics {
+    pub jobs: Arc<Counter>,
+    pub grant_wait: Arc<Histogram>,
+    pub shard_retries: Arc<Counter>,
+    pub shard_panics: Arc<Counter>,
+    pub preemptions: Arc<Counter>,
+    pub preempt_requeue_wait: Arc<Histogram>,
+    pub container_ms: Arc<Counter>,
+}
+
+impl JobMetrics {
+    pub fn new(reg: &MetricsRegistry) -> Self {
+        Self {
+            jobs: reg.counter("platform.job.jobs"),
+            grant_wait: reg.histogram("platform.job.grant_wait"),
+            shard_retries: reg.counter("platform.job.shard_retries"),
+            shard_panics: reg.counter("platform.job.shard_panics"),
+            preemptions: reg.counter("platform.job.preemptions"),
+            preempt_requeue_wait: reg.histogram("platform.job.preempt_requeue_wait"),
+            container_ms: reg.counter("platform.job.container_ms"),
+        }
+    }
+}
+
+/// Pre-resolved handles for the campaign scoring loop (`scenario.*`,
+/// touched once per scenario inside every shard).
+#[derive(Clone)]
+pub struct CampaignMetrics {
+    pub campaigns: Arc<Counter>,
+    pub scored: Arc<Counter>,
+    pub ckpt_hits: Arc<Counter>,
+    pub ckpt_corrupt: Arc<Counter>,
+    pub scenarios_run: Arc<Counter>,
+}
+
+impl CampaignMetrics {
+    pub fn new(reg: &MetricsRegistry) -> Self {
+        Self {
+            campaigns: reg.counter("scenario.campaigns"),
+            scored: reg.counter("scenario.scored"),
+            ckpt_hits: reg.counter("scenario.ckpt_hits"),
+            ckpt_corrupt: reg.counter("scenario.ckpt_corrupt"),
+            scenarios_run: reg.counter("scenario.scenarios_run"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +387,21 @@ mod tests {
         let r = m.report();
         assert!(r.contains("a.b"));
         assert!(r.contains("c.d"));
+    }
+
+    #[test]
+    fn handle_structs_alias_the_registry_atomics() {
+        // A handle resolved before OR after name-keyed traffic must see
+        // the same counter — report() and handles never diverge.
+        let m = MetricsRegistry::new();
+        let h = StoreMetrics::new(&m);
+        h.puts.inc();
+        m.counter("storage.tiered.puts").inc();
+        assert_eq!(m.counter("storage.tiered.puts").get(), 2);
+        assert_eq!(h.puts.get(), 2);
+        let j = JobMetrics::new(&m);
+        j.grant_wait.record(Duration::from_millis(3));
+        assert_eq!(m.histogram("platform.job.grant_wait").count(), 1);
     }
 
     #[test]

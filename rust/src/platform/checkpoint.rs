@@ -18,8 +18,12 @@
 
 use anyhow::Result;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::storage::TieredStore;
+
+/// Every checkpoint blob lives under this store-key prefix.
+pub const CKPT_PREFIX: &str = "ckpt/";
 
 /// Durable per-item progress for one job (see module docs).
 #[derive(Clone)]
@@ -45,7 +49,7 @@ impl ShardCheckpoint {
     /// work is done and before yielding to a preemption signal.
     pub fn commit(&self, item: &str, bytes: Vec<u8>) -> Result<()> {
         self.store.put(&self.key(item), bytes)?;
-        self.store.metrics().counter("platform.ckpt.commits").inc();
+        self.store.counters().ckpt_commits.inc();
         Ok(())
     }
 
@@ -56,7 +60,7 @@ impl ShardCheckpoint {
             return None;
         }
         let bytes = self.store.get(&key).ok()?;
-        self.store.metrics().counter("platform.ckpt.hits").inc();
+        self.store.counters().ckpt_hits.inc();
         Some(bytes.as_ref().clone())
     }
 
@@ -75,6 +79,33 @@ impl ShardCheckpoint {
         for item in items {
             let _ = self.store.delete(&self.key(item.as_ref()));
         }
+    }
+
+    /// Garbage-collect orphaned checkpoints: delete every `ckpt/*` blob
+    /// (across ALL jobs) whose durable copy is older than `retention`.
+    /// Successful jobs clear their own keys; blobs that outlive the
+    /// window belong to jobs that failed and were never resubmitted,
+    /// and would otherwise occupy tier + under-store capacity forever.
+    /// Returns the number of blobs reclaimed.
+    ///
+    /// Pending persists are flushed first so age is read from the
+    /// durable copy; a blob with no readable timestamp is treated as
+    /// fresh (never reclaimed by guesswork).
+    pub fn sweep(store: &Arc<TieredStore>, retention: Duration) -> Result<u64> {
+        store.flush();
+        let mut reclaimed = 0u64;
+        for key in store.keys_with_prefix(CKPT_PREFIX) {
+            let old_enough = store
+                .under()
+                .age_of(&key)
+                .map_or(false, |age| age >= retention);
+            if old_enough {
+                store.delete(&key)?;
+                reclaimed += 1;
+            }
+        }
+        store.counters().ckpt_swept.add(reclaimed);
+        Ok(reclaimed)
     }
 }
 
@@ -111,6 +142,38 @@ mod tests {
     }
 
     #[test]
+    fn sweep_reclaims_orphans_and_spares_fresh_blobs() {
+        let s = store();
+        // A job that failed and was never resubmitted: its blobs are
+        // orphans nothing will ever clear.
+        let dead = ShardCheckpoint::new(&s, "never-resubmitted");
+        for i in 0..5 {
+            dead.commit(&format!("item-{i}"), vec![i as u8; 64]).unwrap();
+        }
+        // Unrelated non-checkpoint data must never be swept.
+        s.put("ingest/p00/b0000000000", vec![7u8; 64]).unwrap();
+        // Everything is younger than an hour: a sane retention window
+        // reclaims nothing.
+        assert_eq!(
+            ShardCheckpoint::sweep(&s, Duration::from_secs(3600)).unwrap(),
+            0,
+            "fresh blobs must survive a long retention window"
+        );
+        assert!(dead.contains("item-0"));
+        // Zero retention says "anything already durable is reclaimable":
+        // all five orphans go, the ingest block stays.
+        assert_eq!(ShardCheckpoint::sweep(&s, Duration::ZERO).unwrap(), 5);
+        for i in 0..5 {
+            assert!(!dead.contains(&format!("item-{i}")), "orphan item-{i} not reclaimed");
+        }
+        assert!(s.contains("ingest/p00/b0000000000"), "non-ckpt data must be untouched");
+        assert_eq!(s.metrics().counter("platform.ckpt.swept").get(), 5);
+        // A later job under the same name starts clean.
+        let again = ShardCheckpoint::new(&s, "never-resubmitted");
+        assert!(again.lookup("item-0").is_none());
+    }
+
+    #[test]
     fn checkpoint_survives_eviction_through_the_under_store() {
         // Tiny tiers: later commits push earlier ones out of the whole
         // stack; the async persist keeps them durable, exactly like any
@@ -120,7 +183,7 @@ mod tests {
             ssd: TierConfig { capacity_bytes: 128, bandwidth_bps: 1e12, latency_us: 0 },
             hdd: TierConfig { capacity_bytes: 128, bandwidth_bps: 1e12, latency_us: 0 },
             dfs: TierConfig { capacity_bytes: u64::MAX, bandwidth_bps: 1e12, latency_us: 0 },
-            model_devices: false,
+            ..StorageConfig::default()
         };
         let s = TieredStore::test_store(&cfg);
         let ckpt = ShardCheckpoint::new(&s, "evicted");

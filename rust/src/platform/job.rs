@@ -41,7 +41,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::dce::{Data, DceContext};
-use crate::metrics::MetricsRegistry;
+use crate::metrics::JobMetrics;
 use crate::resource::{
     AppLease, ContainerCtx, ContainerRef, Grant, ResourceManager, ResourceVec,
 };
@@ -205,7 +205,7 @@ pub struct JobHandle {
     app: AppLease,
     rm: Arc<ResourceManager>,
     spec: JobSpec,
-    metrics: MetricsRegistry,
+    metrics: JobMetrics,
     retries: Arc<AtomicU64>,
     preemptions: Arc<AtomicU64>,
     started: Instant,
@@ -217,7 +217,9 @@ impl JobHandle {
     /// to `grant_timeout`; nothing is held while waiting), then extras
     /// up to `max_containers` are taken greedily.
     pub fn submit(rm: &Arc<ResourceManager>, spec: JobSpec) -> Result<JobHandle> {
-        let metrics = rm.metrics().clone();
+        // One registry resolution per job; shard attempts and requeues
+        // then touch plain atomics.
+        let metrics = JobMetrics::new(rm.metrics());
         let app = AppLease::submit(rm, &spec.app, &spec.queue)?;
         let grant = Grant::acquire(
             rm,
@@ -228,8 +230,8 @@ impl JobHandle {
             spec.grant_timeout,
         )
         .with_context(|| format!("acquiring grant for job '{}'", spec.app))?;
-        metrics.histogram("platform.job.grant_wait").record(grant.wait());
-        metrics.counter("platform.job.jobs").inc();
+        metrics.grant_wait.record(grant.wait());
+        metrics.jobs.inc();
         Ok(JobHandle {
             grant,
             app,
@@ -356,9 +358,7 @@ impl JobHandle {
         let elapsed = self.started.elapsed();
         let containers = self.grant.len();
         let container_seconds = elapsed.as_secs_f64() * containers as f64;
-        self.metrics
-            .counter("platform.job.container_ms")
-            .add((container_seconds * 1000.0) as u64);
+        self.metrics.container_ms.add((container_seconds * 1000.0) as u64);
         JobStats {
             app: self.spec.app.clone(),
             queue: self.spec.queue.clone(),
@@ -401,7 +401,7 @@ struct ShardEnv {
     budget: usize,
     retries: Arc<AtomicU64>,
     preemptions: Arc<AtomicU64>,
-    metrics: MetricsRegistry,
+    metrics: JobMetrics,
 }
 
 impl ShardEnv {
@@ -434,14 +434,14 @@ impl ShardEnv {
                 Ok(Ok(v)) => return Ok(v),
                 Ok(Err(e)) => e,
                 Err(payload) => {
-                    self.metrics.counter("platform.job.shard_panics").inc();
+                    self.metrics.shard_panics.inc();
                     anyhow!("shard {shard} panicked: {}", panic_msg(payload.as_ref()))
                 }
             };
             if container.preempt_requested() && requeues < MAX_PREEMPT_REQUEUES {
                 requeues += 1;
                 self.preemptions.fetch_add(1, Ordering::Relaxed);
-                self.metrics.counter("platform.job.preemptions").inc();
+                self.metrics.preemptions.inc();
                 match self.requeue(&container) {
                     Ok(replacement) => {
                         container = replacement;
@@ -458,7 +458,7 @@ impl ShardEnv {
             attempt += 1;
             if attempt <= self.budget {
                 self.retries.fetch_add(1, Ordering::Relaxed);
-                self.metrics.counter("platform.job.shard_retries").inc();
+                self.metrics.shard_retries.inc();
             }
         }
         let e = last.expect("at least one attempt ran");
@@ -477,9 +477,7 @@ impl ShardEnv {
         let replacement = self
             .rm
             .acquire_container(&self.app, self.resources, self.grant_timeout)?;
-        self.metrics
-            .histogram("platform.job.preempt_requeue_wait")
-            .record(start.elapsed());
+        self.metrics.preempt_requeue_wait.record(start.elapsed());
         self.held.lock().unwrap().push(replacement.clone());
         Ok(replacement)
     }
@@ -499,6 +497,7 @@ fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
 mod tests {
     use super::*;
     use crate::config::PlatformConfig;
+    use crate::metrics::MetricsRegistry;
 
     fn rm() -> Arc<ResourceManager> {
         ResourceManager::new(&PlatformConfig::test().cluster, MetricsRegistry::new())

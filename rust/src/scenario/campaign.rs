@@ -235,13 +235,16 @@ pub fn run_campaign(
     )
     .with_context(|| format!("submitting campaign job '{}'", cfg.app))?;
     let shards = job.shards();
-    ctx.metrics().counter("scenario.campaigns").inc();
+    // One resolution for the whole campaign; the scoring loop touches
+    // these per scenario on every shard.
+    let m = crate::metrics::CampaignMetrics::new(ctx.metrics());
+    m.campaigns.inc();
 
     let work_dir = cfg.work_dir.clone();
     let pass_accuracy = cfg.pass_accuracy;
     let ckpt = cfg.checkpoint.then(|| ShardCheckpoint::new(ctx.store(), &cfg.app));
     let shard_ckpt = ckpt.clone();
-    let metrics = ctx.metrics().clone();
+    let metrics = m.clone();
     let result = job.run_sharded(ctx, specs.to_vec(), move |sctx, specs: Vec<ScenarioSpec>| {
         let mut out = Vec::with_capacity(specs.len());
         for spec in specs {
@@ -253,10 +256,10 @@ pub fn run_campaign(
             if let Some(bytes) = shard_ckpt.as_ref().and_then(|c| c.lookup(&item)) {
                 if let Ok(v) = ScenarioVerdict::from_bytes(&bytes) {
                     out.push(v);
-                    metrics.counter("scenario.ckpt_hits").inc();
+                    metrics.ckpt_hits.inc();
                     continue;
                 }
-                metrics.counter("scenario.ckpt_corrupt").inc();
+                metrics.ckpt_corrupt.inc();
             }
             // Yield at a scenario boundary when asked to: everything
             // scored so far is already committed, so the requeued
@@ -276,7 +279,7 @@ pub fn run_campaign(
                 let _ = std::fs::remove_dir_all(&dir);
                 result
             })??;
-            metrics.counter("scenario.scored").inc();
+            metrics.scored.inc();
             if let Some(c) = &shard_ckpt {
                 c.commit(&item, verdict.to_bytes())?;
             }
@@ -296,7 +299,7 @@ pub fn run_campaign(
         // resubmission resumes from the completed scenarios.
         c.clear(specs.iter().map(|s| ckpt_item(s, cfg.pass_accuracy)));
     }
-    ctx.metrics().counter("scenario.scenarios_run").add(verdicts.len() as u64);
+    m.scenarios_run.add(verdicts.len() as u64);
     Ok(report::aggregate(verdicts, shards, start.elapsed()))
 }
 

@@ -53,6 +53,30 @@ impl EvictionPolicy {
         }
     }
 
+    /// Static eviction rank for the tiered store's ordered per-tier
+    /// index: among any candidate set the block with the SMALLEST rank
+    /// is the victim [`Self::choose`] would pick, and the rank depends
+    /// only on the block's own metadata — never on `now` — so the index
+    /// only needs updating when a block is accessed.
+    ///
+    /// LRU: rank = `last_seq` (oldest access = smallest).
+    /// LRFU: the score `crf * (1-λ)^(now-last_seq)` shares the positive
+    /// factor `(1-λ)^now` across all candidates, so the ordering is the
+    /// ordering of `ln(crf) - last_seq * ln(1-λ)` — a static key. Both
+    /// terms are non-negative (`crf >= 1`, `ln(1-λ) < 0`), so the IEEE
+    /// bit pattern of the f64 is itself monotonically ordered and fits
+    /// the same `u64` index.
+    pub fn rank(&self, meta: &BlockMeta) -> u64 {
+        match self {
+            EvictionPolicy::Lru => meta.last_seq,
+            EvictionPolicy::Lrfu { lambda } => {
+                let decay = (1.0 - lambda).clamp(1e-12, 1.0 - 1e-12);
+                let key = meta.crf.max(1.0).ln() + meta.last_seq as f64 * -decay.ln();
+                key.max(0.0).to_bits()
+            }
+        }
+    }
+
     /// Update a block's CRF on access (LRFU bookkeeping; harmless for LRU).
     pub fn on_access(&self, meta: &mut BlockMeta, now_seq: u64) {
         if let EvictionPolicy::Lrfu { lambda } = self {
@@ -97,6 +121,50 @@ mod tests {
     fn empty_candidates_none() {
         let m: HashMap<String, BlockMeta> = HashMap::new();
         assert!(EvictionPolicy::Lru.choose(m.iter(), 0).is_none());
+    }
+
+    #[test]
+    fn rank_agrees_with_choose_for_lru_and_lrfu() {
+        // The incremental index is only correct if min-rank always
+        // names the block the O(n) scan would have chosen.
+        for policy in [
+            EvictionPolicy::Lru,
+            EvictionPolicy::Lrfu { lambda: 0.1 },
+            EvictionPolicy::Lrfu { lambda: 0.7 },
+        ] {
+            let mut m = HashMap::new();
+            let mut rng = crate::util::Rng::new(99);
+            for i in 0..64u64 {
+                let mut meta = meta(rng.below(1000), 0);
+                meta.crf = 1.0 + rng.next_f32() as f64 * 40.0;
+                m.insert(format!("k{i}"), meta);
+            }
+            for now in [1000u64, 5000] {
+                let scanned = policy.choose(m.iter(), now).unwrap();
+                let indexed = m
+                    .iter()
+                    .min_by_key(|(k, meta)| (policy.rank(meta), (*k).clone()))
+                    .map(|(k, _)| k.clone())
+                    .unwrap();
+                assert_eq!(
+                    policy.rank(&m[&scanned]),
+                    policy.rank(&m[&indexed]),
+                    "{policy:?} at now={now}: scan chose {scanned}, index chose {indexed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rank_is_monotonic_in_recency() {
+        for policy in [EvictionPolicy::Lru, EvictionPolicy::Lrfu { lambda: 0.3 }] {
+            let older = meta(10, 3);
+            let newer = meta(500, 3);
+            assert!(
+                policy.rank(&older) < policy.rank(&newer),
+                "{policy:?}: an older access must rank as a better victim"
+            );
+        }
     }
 
     #[test]

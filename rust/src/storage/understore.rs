@@ -98,6 +98,26 @@ impl UnderStore {
         self.names.lock().unwrap().len()
     }
 
+    /// All durable keys starting with `prefix` (checkpoint GC sweeps
+    /// `ckpt/` through this).
+    pub fn keys_with_prefix(&self, prefix: &str) -> Vec<String> {
+        self.names
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect()
+    }
+
+    /// How long ago a key's blob was last written (file mtime); None if
+    /// the key is absent or the filesystem hides timestamps.
+    pub fn age_of(&self, key: &str) -> Option<std::time::Duration> {
+        let fname = self.names.lock().unwrap().get(key)?.clone();
+        let modified = std::fs::metadata(self.root.join(fname)).ok()?.modified().ok()?;
+        std::time::SystemTime::now().duration_since(modified).ok()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -152,7 +152,7 @@ fn prop_tiered_store_never_loses_acked_blocks() {
             ssd: TierConfig { capacity_bytes: 4000, bandwidth_bps: 1e12, latency_us: 0 },
             hdd: TierConfig { capacity_bytes: 8000, bandwidth_bps: 1e12, latency_us: 0 },
             dfs: TierConfig { capacity_bytes: u64::MAX, bandwidth_bps: 1e12, latency_us: 0 },
-            model_devices: false,
+            ..StorageConfig::default()
         };
         let store = TieredStore::test_store(&cfg);
         let mut model: HashMap<String, Vec<u8>> = HashMap::new();
