@@ -16,6 +16,7 @@ use super::rdd::{Data, Rdd, RddNode, ShuffleDep};
 use crate::config::PlatformConfig;
 use crate::metrics::MetricsRegistry;
 use crate::storage::{DfsStore, EvictionPolicy, TieredStore, UnderStore};
+use crate::trace;
 
 /// Deserialised-object partition cache (Spark MEMORY_ONLY analog).
 #[derive(Default)]
@@ -210,6 +211,10 @@ impl DceContext {
         action: Arc<dyn Fn(usize, Vec<T>) -> Result<U> + Send + Sync>,
     ) -> Result<Vec<U>> {
         let job_start = Instant::now();
+        // Nests under whatever span is current on the driving thread
+        // (a `job.shard` attempt or the job root, typically).
+        let mut jsp = trace::span("dce.job", trace::Category::Compute);
+        jsp.arg("parts", node.num_partitions() as u64);
         let retries = self.inner.config.engine.max_task_retries;
         for dep in Self::topo_shuffle_deps(&node.shuffle_deps()) {
             if self.inner.shuffle.is_complete(dep.shuffle_id()) {
@@ -217,6 +222,9 @@ impl DceContext {
             }
             let stage_name = format!("shuffle-{}", dep.shuffle_id());
             let stage_start = Instant::now();
+            let mut ssp = trace::span("dce.shuffle", trace::Category::Shuffle);
+            ssp.arg("shuffle", dep.shuffle_id() as u64)
+                .arg("maps", dep.num_maps() as u64);
             let tasks: Vec<Arc<dyn Fn(usize) -> Result<()> + Send + Sync>> = (0..dep.num_maps())
                 .map(|m| {
                     let dep = dep.clone();
@@ -231,8 +239,11 @@ impl DceContext {
                     f
                 })
                 .collect();
-            self.inner.pool.run_tasks(tasks, retries)?;
+            self.inner
+                .pool
+                .run_tasks_traced(tasks, retries, "dce.task", trace::Category::Shuffle)?;
             self.inner.shuffle.mark_complete(dep.shuffle_id());
+            drop(ssp);
             self.inner
                 .metrics
                 .histogram("dce.stage.map")

@@ -27,6 +27,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::metrics::MetricsRegistry;
+use crate::trace;
 
 /// Context visible to a running task.
 #[derive(Clone)]
@@ -272,16 +273,34 @@ impl ExecutorPool {
         tasks: Vec<Arc<dyn Fn(usize) -> Result<T> + Send + Sync>>,
         max_retries: usize,
     ) -> Result<Vec<T>> {
+        self.run_tasks_traced(tasks, max_retries, "dce.task", trace::Category::Compute)
+    }
+
+    /// [`Self::run_tasks`] with an explicit span name/category: every
+    /// attempt runs under a span parented on the *caller's* current
+    /// span, so work executed on (possibly stolen-to) worker threads
+    /// still lands in the submitting job's trace.
+    pub fn run_tasks_traced<T: Send + 'static>(
+        &self,
+        tasks: Vec<Arc<dyn Fn(usize) -> Result<T> + Send + Sync>>,
+        max_retries: usize,
+        span_name: &'static str,
+        cat: trace::Category,
+    ) -> Result<Vec<T>> {
         let n = tasks.len();
         if n == 0 {
             return Ok(Vec::new());
         }
+        let parent = trace::current();
         let (rtx, rrx) = mpsc::channel::<(usize, usize, Result<T>)>();
         let submit = |i: usize, attempt: usize| -> Result<()> {
             let task = tasks[i].clone();
             let rtx = rtx.clone();
             self.spawn(move || {
+                let mut sp = trace::span_in(span_name, cat, parent);
+                sp.arg("task", i as u64).arg("attempt", attempt as u64);
                 let r = task(attempt);
+                drop(sp);
                 let _ = rtx.send((i, attempt, r));
             })
         };

@@ -17,6 +17,7 @@ use super::log::{crc32, LogRecord, PartitionedLog};
 use crate::platform::job::{JobHandle, JobSpec};
 use crate::resource::{ResourceManager, ResourceVec};
 use crate::storage::TieredStore;
+use crate::trace;
 
 /// Magic prefix of a compacted ingest block.
 pub const BLOCK_MAGIC: &[u8; 4] = b"ADIB";
@@ -180,6 +181,13 @@ fn drain_partition(
         }
         let base = batch[0].offset;
         let count = batch.len() as u32;
+        // Parented on the shard attempt that entered the container, so
+        // a requeued worker's blocks land under its new attempt span.
+        let mut sp =
+            trace::span_in("compact.block", trace::Category::StoreIo, cctx.trace());
+        sp.arg("partition", partition as u64)
+            .arg("base", base)
+            .arg("records", count as u64);
         let block = encode_block(&batch);
         let block_len = block.len() as u64;
         let key = block_key(&cfg.block_prefix, partition, base);

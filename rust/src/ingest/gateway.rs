@@ -24,6 +24,7 @@ use std::sync::{Arc, Mutex};
 use super::log::{crc32, PartitionedLog};
 use crate::metrics::{GatewayMetrics, MetricsRegistry};
 use crate::services::simulation::{encode_bag, Message};
+use crate::trace;
 use crate::util::Rng;
 
 /// Magic prefix of an encoded telemetry batch payload (rosbag chunks
@@ -225,6 +226,8 @@ impl IngestGateway {
 
     /// Admit one upload.
     pub fn upload(&self, up: &VehicleUpload) -> Result<Admission> {
+        let mut sp = trace::span("gateway.upload", trace::Category::LogIo);
+        sp.arg("vehicle", up.vehicle as u64).arg("bytes", up.payload.len() as u64);
         {
             let mut tokens = self.tokens.lock().unwrap();
             let t = tokens.entry(up.vehicle).or_insert(self.cfg.rate_per_tick);

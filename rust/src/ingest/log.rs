@@ -21,6 +21,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::metrics::{LogMetrics, MetricsRegistry};
 use crate::scenario::fnv1a64;
+use crate::trace;
 
 /// IEEE CRC-32 lookup tables for slicing-by-8, built at compile time.
 /// `TABLES[0]` is the classic byte-at-a-time table; `TABLES[k][b]` is
@@ -217,6 +218,8 @@ impl PartitionedLog {
 
     /// Append one record; returns its offset.
     pub fn append(&self, part: usize, ts_ns: u64, source: u32, payload: &[u8]) -> Result<u64> {
+        let mut sp = trace::span("log.append", trace::Category::LogIo);
+        sp.arg("partition", part as u64).arg("bytes", payload.len() as u64);
         let mut st = self.part(part)?.lock().unwrap();
         if st.writer.is_none() {
             self.open_segment(&mut st)?;

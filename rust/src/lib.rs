@@ -54,6 +54,12 @@
 //!   campaigns (spec → generate → campaign → qualification report).
 //! * [`services`] — simulation, training, HD-map generation, SQL.
 //! * [`pointcloud`] — SE(3) math, KD-trees, the 3x3 polar solve.
+//! * [`trace`] — causal tracing across every plane: spans recorded
+//!   into per-thread lock-free rings (near-zero cost while disabled),
+//!   Chrome-trace-event export (`--trace <out.json>`, Perfetto
+//!   loadable), and critical-path attribution of a finished job's
+//!   makespan to grant-wait / preempt-requeue / checkpoint-replay /
+//!   compute / shuffle / store-I/O / log-I/O (experiment E18).
 
 pub mod config;
 pub mod dce;
@@ -68,6 +74,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod services;
 pub mod storage;
+pub mod trace;
 pub mod util;
 
 pub use anyhow::{anyhow, bail, Context as AnyhowContext, Error, Result};

@@ -20,13 +20,17 @@
 //!   train     [--examples N] [--rounds R] [--workers W]
 //!   mapgen    [--steps N]
 //!   sql       [--rows N]
-//!   repro-tables [e1..e17|all] [--quick]
+//!   repro-tables [e1..e18|all] [--quick]
+//!   trace <trace.json>           pretty-print a recorded trace as a span tree
 //!   pipe-worker <logic>          BinPipe child process (detect)
 //!   metrics                      dump the metrics registry after a demo job
 //!
 //! Every subcommand also accepts `--baseline`: force the pre-fast-path
 //! storage plane (single-lock block map, O(n) eviction scans) for A/B
-//! runs against experiment E17's sharded default.
+//! runs against experiment E17's sharded default — and
+//! `--trace <out.json>`: enable the causal tracer for the run and write
+//! every recorded span as Chrome trace-event JSON (loadable in
+//! Perfetto / chrome://tracing, or pretty-printed by `adcloud trace`).
 //!
 //! Arg parsing is hand-rolled (offline build: no clap in the vendored
 //! crate set).
@@ -82,9 +86,28 @@ fn main() {
 fn run(args: Vec<String>) -> Result<()> {
     let (pos, flags) = parse_flags(&args);
     let cmd = pos.first().map(String::as_str).unwrap_or("info");
+    // `--trace <out.json>`: record every span of this run and dump it
+    // as Chrome trace-event JSON on exit (success or failure — a trace
+    // of a failed run is the one you want most).
+    let trace_out = flags.get("trace").cloned();
+    if trace_out.is_some() {
+        adcloud::trace::tracer().enable();
+    }
+    let result = dispatch(cmd, &pos, &flags);
+    if let Some(path) = trace_out {
+        let spans = adcloud::trace::tracer().take_all();
+        match adcloud::trace::export::write_chrome_trace(&path, &spans) {
+            Ok(()) => eprintln!("trace: {} span(s) written to {path}", spans.len()),
+            Err(e) => eprintln!("trace write failed: {e:#}"),
+        }
+    }
+    result
+}
+
+fn dispatch(cmd: &str, pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     match cmd {
         "info" => {
-            let p = Platform::boot(config_from(&flags))?;
+            let p = Platform::boot(config_from(flags))?;
             println!("{}", p.describe());
             if let Some(rt) = &p.runtime {
                 println!("artifacts dir: {:?}", adcloud::artifacts_dir());
@@ -94,18 +117,26 @@ fn run(args: Vec<String>) -> Result<()> {
             }
             Ok(())
         }
-        "quickstart" => quickstart(&flags),
-        "simulate" => simulate(&flags),
-        "campaign" => campaign(&flags),
-        "ingest" => run_ingest(&flags),
-        "jobs" => run_jobs(&flags),
-        "train" => train(&flags),
-        "mapgen" => run_mapgen(&flags),
-        "sql" => run_sql(&flags),
-        "repro-tables" => repro_tables(&pos[1..], &flags),
+        "quickstart" => quickstart(flags),
+        "simulate" => simulate(flags),
+        "campaign" => campaign(flags),
+        "ingest" => run_ingest(flags),
+        "jobs" => run_jobs(flags),
+        "train" => train(flags),
+        "mapgen" => run_mapgen(flags),
+        "sql" => run_sql(flags),
+        "repro-tables" => repro_tables(&pos[1..], flags),
+        "trace" => {
+            let path = pos.get(1).map(String::as_str);
+            let path =
+                path.ok_or_else(|| anyhow::anyhow!("usage: adcloud trace <trace.json>"))?;
+            let spans = adcloud::trace::export::load_chrome_trace(path)?;
+            print!("{}", adcloud::trace::export::render_tree(&spans));
+            Ok(())
+        }
         "pipe-worker" => pipe_worker(pos.get(1).map(String::as_str)),
         "metrics" => {
-            let p = Platform::boot(config_from(&flags))?;
+            let p = Platform::boot(config_from(flags))?;
             let _ = p.ctx.range(10_000, 8).map(|x| x * 2).count()?;
             println!("{}", p.metrics.report());
             println!("{}", p.ctx.metrics().report());
@@ -114,7 +145,7 @@ fn run(args: Vec<String>) -> Result<()> {
         other => {
             eprintln!("unknown command '{other}'");
             eprintln!(
-                "commands: info quickstart simulate campaign ingest jobs train mapgen sql repro-tables pipe-worker metrics"
+                "commands: info quickstart simulate campaign ingest jobs train mapgen sql repro-tables trace pipe-worker metrics"
             );
             std::process::exit(2);
         }

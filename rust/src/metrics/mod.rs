@@ -35,6 +35,39 @@ impl Counter {
     }
 }
 
+/// A point-in-time level that can move both ways (live containers,
+/// bytes resident per storage tier). `set` overwrites; `add`/`sub`
+/// adjust, saturating at zero rather than wrapping.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn sub(&self, n: u64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self.0.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Fixed-boundary latency histogram (microseconds), lock-free on record.
 #[derive(Debug)]
 pub struct Histogram {
@@ -95,24 +128,31 @@ impl Histogram {
         Duration::from_micros(self.sum_us.load(Ordering::Relaxed))
     }
 
-    /// Approximate quantile from bucket boundaries.
+    /// Quantile with linear interpolation inside the winning bucket.
+    /// The bucket's lower bound is the floor — the overflow bucket
+    /// interpolates between the last bound and the observed max, so a
+    /// p99 can no longer be overstated by a whole x4 bucket width.
     pub fn quantile(&self, q: f64) -> Duration {
         let total = self.count();
         if total == 0 {
             return Duration::ZERO;
         }
-        let target = (q * total as f64).ceil() as u64;
+        let target = (q * total as f64).ceil().max(1.0) as u64;
         let mut seen = 0;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                let us = if i < self.bounds.len() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 && seen + n >= target {
+                let lo = if i == 0 { 0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() {
                     self.bounds[i]
                 } else {
-                    self.max_us.load(Ordering::Relaxed)
+                    self.max_us.load(Ordering::Relaxed).max(lo)
                 };
-                return Duration::from_micros(us);
+                let frac = (target - seen) as f64 / n as f64;
+                let us = lo as f64 + frac * (hi - lo) as f64;
+                return Duration::from_micros(us.round() as u64);
             }
+            seen += n;
         }
         self.max()
     }
@@ -127,6 +167,7 @@ pub struct MetricsRegistry {
 #[derive(Debug, Default)]
 struct MetricsInner {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
@@ -138,6 +179,16 @@ impl MetricsRegistry {
     pub fn counter(&self, name: &str) -> Arc<Counter> {
         self.inner
             .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.inner
+            .gauges
             .lock()
             .unwrap()
             .entry(name.to_string())
@@ -174,6 +225,13 @@ impl MetricsRegistry {
                 out.push_str(&format!("  {:<44} {}\n", k, v.get()));
             }
         }
+        let gauges = self.inner.gauges.lock().unwrap();
+        if !gauges.is_empty() {
+            out.push_str("gauges:\n");
+            for (k, g) in gauges.iter() {
+                out.push_str(&format!("  {:<44} {}\n", k, g.get()));
+            }
+        }
         let hists = self.inner.histograms.lock().unwrap();
         if !hists.is_empty() {
             out.push_str("timings:\n");
@@ -194,9 +252,61 @@ impl MetricsRegistry {
         out
     }
 
+    /// Machine-readable snapshot of every metric: counters and gauges
+    /// as numbers, histograms as `{count, mean_us, p50_us, p99_us,
+    /// max_us, total_us}`. Embedded wholesale in `BENCH_*.json` rows
+    /// so experiment artifacts carry the full picture, not a
+    /// hand-picked column subset.
+    pub fn report_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let counters: Vec<(String, Json)> = self
+            .inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(v.get() as f64)))
+            .collect();
+        let gauges: Vec<(String, Json)> = self
+            .inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, g)| (k.clone(), Json::num(g.get() as f64)))
+            .collect();
+        let hists: Vec<(String, Json)> = self
+            .inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, h)| h.count() > 0)
+            .map(|(k, h)| {
+                let us = |d: Duration| Json::num(d.as_micros() as f64);
+                let v = Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("mean_us", us(h.mean())),
+                    ("p50_us", us(h.quantile(0.5))),
+                    ("p99_us", us(h.quantile(0.99))),
+                    ("max_us", us(h.max())),
+                    ("total_us", us(h.total())),
+                ]);
+                (k.clone(), v)
+            })
+            .collect();
+        let obj = |pairs: Vec<(String, Json)>| Json::Obj(pairs.into_iter().collect());
+        Json::obj(vec![
+            ("counters", obj(counters)),
+            ("gauges", obj(gauges)),
+            ("histograms", obj(hists)),
+        ])
+    }
+
     /// Reset everything (used between bench iterations).
     pub fn clear(&self) {
         self.inner.counters.lock().unwrap().clear();
+        self.inner.gauges.lock().unwrap().clear();
         self.inner.histograms.lock().unwrap().clear();
     }
 }
@@ -233,6 +343,9 @@ pub struct StoreMetrics {
     pub miss: Arc<Counter>,
     pub writeback: Arc<Counter>,
     pub lineage_recovered: Arc<Counter>,
+    /// Bytes resident per tier, indexed mem/ssd/hdd
+    /// (`storage.tier_used.*`), refreshed on put/evict/delete.
+    pub tier_used: [Arc<Gauge>; 3],
     pub ckpt_commits: Arc<Counter>,
     pub ckpt_hits: Arc<Counter>,
     pub ckpt_swept: Arc<Counter>,
@@ -248,6 +361,11 @@ impl StoreMetrics {
             miss: tiered("miss"),
             writeback: tiered("writeback"),
             lineage_recovered: tiered("lineage_recovered"),
+            tier_used: [
+                reg.gauge("storage.tier_used.mem"),
+                reg.gauge("storage.tier_used.ssd"),
+                reg.gauge("storage.tier_used.hdd"),
+            ],
             ckpt_commits: reg.counter("platform.ckpt.commits"),
             ckpt_hits: reg.counter("platform.ckpt.hits"),
             ckpt_swept: reg.counter("platform.ckpt.swept"),
@@ -369,6 +487,88 @@ mod tests {
         assert!(h.mean() >= Duration::from_millis(10));
         assert!(h.max() >= Duration::from_millis(100));
         assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn quantile_interpolates_within_the_winning_bucket() {
+        // 100 samples of 10us all land in the (4, 16] bucket. The old
+        // code returned the bucket's upper bound (16us) for every
+        // quantile; interpolation pins the exact positions.
+        let h = Histogram::default();
+        for _ in 0..100 {
+            h.record(Duration::from_micros(10));
+        }
+        // target = 50 of 100 -> halfway through [4, 16] = 10us.
+        assert_eq!(h.quantile(0.5), Duration::from_micros(10));
+        // target = 25 -> 4 + 0.25 * 12 = 7us.
+        assert_eq!(h.quantile(0.25), Duration::from_micros(7));
+        // target = 100 -> the bucket's upper bound.
+        assert_eq!(h.quantile(1.0), Duration::from_micros(16));
+    }
+
+    #[test]
+    fn quantile_skips_empty_buckets_and_spans_distributions() {
+        // 50 samples at 3us (bucket (1,4]) and 50 at 40us (bucket
+        // (16,64]): the median sits at the top of the low bucket, p75
+        // exactly halfway through the high one.
+        let h = Histogram::default();
+        for _ in 0..50 {
+            h.record(Duration::from_micros(3));
+        }
+        for _ in 0..50 {
+            h.record(Duration::from_micros(40));
+        }
+        assert_eq!(h.quantile(0.5), Duration::from_micros(4));
+        // target = 75, 25 into the 50-sample bucket: 16 + 24 = 40us.
+        assert_eq!(h.quantile(0.75), Duration::from_micros(40));
+    }
+
+    #[test]
+    fn quantile_overflow_bucket_floors_at_the_last_bound() {
+        // Two samples past the last bound (1 << 30 us): interpolate
+        // between that bound and the observed max, not jump to max.
+        let top = 1u64 << 30;
+        let h = Histogram::default();
+        h.record(Duration::from_micros(2 * top));
+        h.record(Duration::from_micros(2 * top));
+        // target = 1 of 2 -> halfway between top and 2*top.
+        assert_eq!(h.quantile(0.5), Duration::from_micros(top + top / 2));
+        assert_eq!(h.quantile(1.0), Duration::from_micros(2 * top));
+    }
+
+    #[test]
+    fn gauge_moves_both_ways_and_saturates() {
+        let m = MetricsRegistry::new();
+        let g = m.gauge("resource.live_containers");
+        g.add(5);
+        g.sub(2);
+        assert_eq!(m.gauge("resource.live_containers").get(), 3);
+        g.sub(100);
+        assert_eq!(g.get(), 0, "sub saturates instead of wrapping");
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        assert!(m.report().contains("gauges:"));
+        assert!(m.report().contains("resource.live_containers"));
+    }
+
+    #[test]
+    fn report_json_snapshots_every_metric_kind() {
+        let m = MetricsRegistry::new();
+        m.counter("a.count").add(3);
+        m.gauge("b.level").set(9);
+        m.histogram("c.lat").record(Duration::from_micros(10));
+        let j = m.report_json();
+        let counters = j.req("counters").unwrap();
+        assert_eq!(counters.req("a.count").unwrap().as_u64().unwrap(), 3);
+        let gauges = j.req("gauges").unwrap();
+        assert_eq!(gauges.req("b.level").unwrap().as_u64().unwrap(), 9);
+        let hist = j.req("histograms").unwrap().req("c.lat").unwrap();
+        assert_eq!(hist.req("count").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(hist.req("max_us").unwrap().as_u64().unwrap(), 10);
+        // Round-trips through the in-tree codec.
+        let text = j.to_string_pretty();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back, j);
     }
 
     #[test]

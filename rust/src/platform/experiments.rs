@@ -26,6 +26,8 @@ use crate::resource::{DeviceKind, ResourceManager, ResourceVec};
 use crate::scenario;
 use crate::services::{mapgen, simulation, sql, training};
 use crate::storage::{DfsStore, EvictionPolicy, TieredStore, UnderStore};
+use crate::trace;
+use crate::trace::critical_path::{analyze, CriticalPath};
 use crate::util::{fmt_duration, Rng};
 
 use super::job::{JobHandle, JobSpec};
@@ -70,9 +72,9 @@ impl Table {
     }
 }
 
-pub const ALL_IDS: [&str; 17] = [
+pub const ALL_IDS: [&str; 18] = [
     "e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13", "e14",
-    "e15", "e16", "e17",
+    "e15", "e16", "e17", "e18",
 ];
 
 /// Run one experiment by id. `quick` shrinks workloads for CI/tests.
@@ -95,6 +97,7 @@ pub fn run_experiment(id: &str, quick: bool) -> Result<Table> {
         "e15" => e15_multitenant(quick),
         "e16" => e16_preemption(quick),
         "e17" => e17_fastpath(quick),
+        "e18" => e18_trace(quick),
         other => Err(anyhow!("unknown experiment '{other}' (have {ALL_IDS:?})")),
     }
 }
@@ -1475,9 +1478,14 @@ fn e17_store(baseline: bool) -> Arc<TieredStore> {
 /// (2/3 put, 1/3 get-with-promotion) over per-thread key ranges sized
 /// so every MEM insert evicts. Returns aggregate ops/sec.
 fn e17_store_run(threads: usize, ops: u64, baseline: bool) -> Result<f64> {
+    e17_store_run_on(&e17_store(baseline), threads, ops)
+}
+
+/// The microbench core, against a caller-owned store — E18 reuses it
+/// to measure the same workload with the tracer on vs. off.
+fn e17_store_run_on(store: &Arc<TieredStore>, threads: usize, ops: u64) -> Result<f64> {
     const KEYS_PER_THREAD: u64 = 512;
     const BLOCK: usize = 4096;
-    let store = e17_store(baseline);
     let val = vec![7u8; BLOCK];
     // Pre-populate the resident set so the first measured op already
     // pays steady-state eviction cost (persist=false: this measures
@@ -1520,14 +1528,16 @@ fn e17_store_run(threads: usize, ops: u64, baseline: bool) -> Result<f64> {
 /// One end-to-end configuration: the E15 tenant pair (campaign on
 /// `sim`, compaction drain on `fleet`) over a store whose MEM tier is
 /// squeezed so blocks + checkpoints churn through eviction, with the
-/// storage path picked by `baseline`. Returns the makespan.
+/// storage path picked by `baseline`. Returns the makespan plus the
+/// run's full metrics snapshot (counters/gauges/histograms), which
+/// the BENCH json embeds per row.
 fn e17_e2e_run(
     nodes: usize,
     baseline: bool,
     scen_n: usize,
     frames: u32,
     records_per_part: u64,
-) -> Result<Duration> {
+) -> Result<(Duration, crate::util::json::Json)> {
     use crate::ingest::{LogConfig, PartitionedLog};
 
     let mut cfg = PlatformConfig::test();
@@ -1571,7 +1581,13 @@ fn e17_e2e_run(
         run.compaction.records == parts as u64 * records_per_part,
         "e17 compaction lost records"
     );
-    Ok(run.makespan)
+    // Two registries drive the run: the scheduler's (grant waits, live
+    // containers) and the compute context's (store tiers, scenarios).
+    let snapshot = crate::util::json::Json::obj(vec![
+        ("scheduler", metrics.report_json()),
+        ("workload", ctx.metrics().report_json()),
+    ]);
+    Ok((run.makespan, snapshot))
 }
 
 /// Data-plane fast path A/B: sharded lock-striped store + O(log n)
@@ -1591,8 +1607,8 @@ fn e17_fastpath(quick: bool) -> Result<Table> {
         let base_ops = e17_store_run(threads, ops, true)?;
         let fast_ops = e17_store_run(threads, ops, false)?;
         let store_speedup = fast_ops / base_ops.max(1e-9);
-        let base_e2e = e17_e2e_run(threads, true, scen_n, frames, records)?;
-        let fast_e2e = e17_e2e_run(threads, false, scen_n, frames, records)?;
+        let (base_e2e, _) = e17_e2e_run(threads, true, scen_n, frames, records)?;
+        let (fast_e2e, fast_metrics) = e17_e2e_run(threads, false, scen_n, frames, records)?;
         let e2e_speedup = base_e2e.as_secs_f64() / fast_e2e.as_secs_f64().max(1e-9);
         if threads == 8 {
             speedup_at_8 = store_speedup;
@@ -1614,6 +1630,7 @@ fn e17_fastpath(quick: bool) -> Result<Table> {
             ("e2e_baseline_sec", crate::util::json::Json::num(base_e2e.as_secs_f64())),
             ("e2e_sharded_sec", crate::util::json::Json::num(fast_e2e.as_secs_f64())),
             ("e2e_speedup", crate::util::json::Json::num(e2e_speedup)),
+            ("metrics", fast_metrics),
         ]));
     }
     let json = crate::util::json::Json::obj(vec![
@@ -1647,6 +1664,256 @@ fn e17_fastpath(quick: bool) -> Result<Table> {
              victim), forced by StorageConfig.scan_evict / `adcloud --baseline`. e2e = \
              concurrent campaign+compaction tenant pair on the same store. Rows written \
              to {json_path}."
+        ),
+    })
+}
+
+// ===========================================================================
+// E18: causal tracing — critical-path attribution and tracing overhead
+// ===========================================================================
+
+/// Merge the critical paths of every job root in `spans`. Log pre-fill
+/// and store microbenches leave stray single-span traces in the
+/// archive, so only parentless spans named "job" count as roots.
+fn job_critical_paths(spans: &[trace::SpanEvent]) -> (usize, CriticalPath) {
+    let mut merged = CriticalPath::default();
+    let mut jobs = 0;
+    for e in spans {
+        if e.parent_id == 0 && e.name == "job" {
+            if let Some(cp) = analyze(spans, e.span_id) {
+                merged.merge(&cp);
+                jobs += 1;
+            }
+        }
+    }
+    (jobs, merged)
+}
+
+/// Run `f` with the tracer on and return its output plus every span
+/// recorded during the run. A harvester thread drains the per-thread
+/// rings every few milliseconds so span-heavy runs can't overflow one
+/// container thread's ring between collections. Leaves the tracer
+/// disabled on return.
+fn with_tracing<T>(f: impl FnOnce() -> Result<T>) -> Result<(T, Vec<trace::SpanEvent>)> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    trace::tracer().enable();
+    trace::tracer().clear();
+    let stop = Arc::new(AtomicBool::new(false));
+    let harvester = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                trace::tracer().collect();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        })
+    };
+    let out = f();
+    stop.store(true, Ordering::Relaxed);
+    harvester.join().expect("trace harvester panicked");
+    let spans = trace::tracer().take_all();
+    trace::tracer().disable();
+    Ok((out?, spans))
+}
+
+/// One traced E15-shaped tenant pair: concurrent campaign (queue
+/// `sim`) + compaction drain (queue `fleet`). Returns the makespan,
+/// the run's spans, and the metrics snapshot the BENCH json embeds.
+fn e18_traced_pair(
+    nodes: usize,
+    scen_n: usize,
+    frames: u32,
+    records_per_part: u64,
+) -> Result<(Duration, Vec<trace::SpanEvent>, crate::util::json::Json)> {
+    use crate::ingest::{LogConfig, PartitionedLog};
+
+    let mut cfg = PlatformConfig::test();
+    cfg.cluster.nodes = nodes;
+    let metrics = MetricsRegistry::new();
+    let rm = ResourceManager::with_queues(
+        &cfg.cluster,
+        vec![("sim".into(), 0.5), ("fleet".into(), 0.5)],
+        metrics.clone(),
+    );
+    let ctx = DceContext::new(cfg.clone())?;
+    let parts = nodes.max(2);
+    let log = PartitionedLog::temp(
+        &format!("e18-{nodes}"),
+        LogConfig { partitions: parts, segment_bytes: 64 << 10, retention_bytes: 1 << 30 },
+    )?;
+    for p in 0..parts {
+        for i in 0..records_per_part {
+            log.append(p, i * 1_000_000, p as u32, &[7u8; 200])?;
+        }
+    }
+    let store = TieredStore::test_store(&cfg.storage);
+    let specs = scenario::generate_campaign_sized(18, scen_n, frames);
+    let mut ccfg = scenario::CampaignConfig::new(format!("e18-camp-{nodes}"), nodes);
+    ccfg.queue = "sim".into();
+    let mut kcfg = ingest::CompactorConfig::new(format!("e18-comp-{nodes}"), nodes);
+    kcfg.queue = "fleet".into();
+    let (run, spans) = with_tracing(|| {
+        run_tenant_pair(&ctx, &rm, &specs, &ccfg, &log, &store, &kcfg, Duration::ZERO)
+    })?;
+    let snapshot = crate::util::json::Json::obj(vec![
+        ("scheduler", metrics.report_json()),
+        ("workload", ctx.metrics().report_json()),
+    ]);
+    Ok((run.makespan, spans, snapshot))
+}
+
+/// Tracing-overhead gate: the E17 store microbench (8 threads, fast
+/// path) with the tracer off vs. on, best-of-3 each way to shave
+/// scheduler noise. Returns `(untraced ops/s, traced ops/s, overhead
+/// %)`; the acceptance budget is <5%.
+fn e18_overhead(ops: u64) -> Result<(f64, f64, f64)> {
+    let mut best_off = 0.0f64;
+    let mut best_on = 0.0f64;
+    trace::tracer().disable();
+    for _ in 0..3 {
+        best_off = best_off.max(e17_store_run(8, ops, false)?);
+    }
+    trace::tracer().enable();
+    for _ in 0..3 {
+        best_on = best_on.max(e17_store_run(8, ops, false)?);
+    }
+    trace::tracer().disable();
+    // Microbench spans are measurement exhaust, not a trace anyone
+    // reads — keep them out of the attribution archive.
+    trace::tracer().clear();
+    let overhead_pct = (1.0 - best_on / best_off.max(1e-9)) * 100.0;
+    Ok((best_off, best_on, overhead_pct))
+}
+
+/// Causal tracing end-to-end: per-category critical-path attribution
+/// of the two-tenant pair at 1/2/4/8 nodes plus one preemption-heavy
+/// E16 configuration, gated on tracing overhead staying under 5% on
+/// the E17 store microbench. Emits machine-readable `BENCH_E18.json`.
+fn e18_trace(quick: bool) -> Result<Table> {
+    use crate::trace::Category as C;
+    use crate::util::json::Json;
+
+    let scen_n = if quick { 4 } else { 16 };
+    let frames = if quick { 8u32 } else { 16 };
+    let records = if quick { 200u64 } else { 2_000 };
+    let ops = if quick { 800u64 } else { 3_000 };
+    let was_enabled = trace::tracer().enabled();
+
+    // Gate first: the attribution numbers are only worth reading if
+    // collecting them stays effectively free.
+    let (off_ops, on_ops, overhead_pct) = e18_overhead(ops)?;
+    anyhow::ensure!(
+        overhead_pct < 5.0,
+        "tracing overhead {overhead_pct:.2}% exceeds the 5% budget \
+         ({off_ops:.0}/s untraced vs {on_ops:.0}/s traced)"
+    );
+
+    let pct = |cp: &CriticalPath, cats: &[C]| -> String {
+        let f: f64 = cats.iter().map(|&c| cp.category_frac(c)).sum();
+        format!("{:.0}%", f * 100.0)
+    };
+    let compute = [C::Compute, C::Shuffle];
+    let io = [C::StoreIo, C::LogIo];
+    let waits = [C::GrantWait, C::PreemptRequeue, C::CheckpointReplay, C::Other];
+    let mut json_rows = Vec::new();
+    let mut rows = sweep_rows(|nodes| {
+        let (makespan, spans, snapshot) = e18_traced_pair(nodes, scen_n, frames, records)?;
+        let (jobs, cp) = job_critical_paths(&spans);
+        anyhow::ensure!(jobs >= 2, "tenant pair must trace both job roots, got {jobs}");
+        anyhow::ensure!(
+            cp.sum_us() == cp.total_us,
+            "attribution must partition the makespan exactly"
+        );
+        json_rows.push(Json::obj(vec![
+            ("nodes", Json::num(nodes as f64)),
+            ("shape", Json::str("pair")),
+            ("makespan_sec", Json::num(makespan.as_secs_f64())),
+            ("spans", Json::num(spans.len() as f64)),
+            ("jobs", Json::num(jobs as f64)),
+            ("critical_path", cp.to_json()),
+            ("metrics", snapshot),
+        ]));
+        Ok((
+            vec![
+                format!("{nodes}"),
+                "pair".into(),
+                fmt_duration(makespan),
+                format!("{}", spans.len()),
+                pct(&cp, &compute),
+                pct(&cp, &io),
+                pct(&cp, &waits),
+            ],
+            1.0 / makespan.as_secs_f64().max(1e-9),
+        ))
+    })?;
+
+    // One preemption-heavy configuration: the traced E16 over-share
+    // campaign vs. a late compaction with preemption on, so the
+    // preempt-requeue and grant-wait categories actually appear.
+    let ((_, _, _, mk), spans) =
+        with_tracing(|| e16_run(2, true, if quick { 3 } else { 4 }, frames, records))?;
+    let (jobs, pcp) = job_critical_paths(&spans);
+    anyhow::ensure!(jobs >= 2, "e16 pair must trace both job roots, got {jobs}");
+    json_rows.push(Json::obj(vec![
+        ("nodes", Json::num(2.0)),
+        ("shape", Json::str("pair+preempt")),
+        ("makespan_sec", Json::num(mk.as_secs_f64())),
+        ("spans", Json::num(spans.len() as f64)),
+        ("jobs", Json::num(jobs as f64)),
+        ("critical_path", pcp.to_json()),
+    ]));
+    rows.push(vec![
+        "2".into(),
+        "pair+preempt".into(),
+        fmt_duration(mk),
+        format!("{}", spans.len()),
+        pct(&pcp, &compute),
+        pct(&pcp, &io),
+        pct(&pcp, &waits),
+        "-".into(),
+    ]);
+
+    let json = Json::obj(vec![
+        ("experiment", Json::str("e18")),
+        ("quick", Json::Bool(quick)),
+        ("tracing_overhead_pct", Json::num(overhead_pct)),
+        ("store_ops_per_sec_untraced", Json::num(off_ops)),
+        ("store_ops_per_sec_traced", Json::num(on_ops)),
+        ("rows", Json::arr(json_rows)),
+    ]);
+    let json_path = "BENCH_E18.json";
+    std::fs::write(json_path, json.to_string_pretty())?;
+    if was_enabled {
+        // `--trace` was on when we started; keep tracing whatever the
+        // caller runs next.
+        trace::tracer().enable();
+    }
+    Ok(Table {
+        id: "e18",
+        title: format!(
+            "causal tracing: critical-path attribution of the two-tenant pair \
+             ({scen_n} scenarios + {records} records/partition) and tracing \
+             overhead on the E17 store microbench"
+        ),
+        mode: "real",
+        header: vec![
+            "nodes",
+            "shape",
+            "makespan",
+            "spans",
+            "compute",
+            "io",
+            "wait/other",
+            "scaling",
+        ],
+        rows,
+        notes: format!(
+            "compute = compute+shuffle, io = store-io+log-io, wait/other = grant-wait+\
+             preempt-requeue+checkpoint-replay+other; each job's attribution partitions \
+             its root span exactly (sums checked). Tracing overhead {overhead_pct:.1}% \
+             on the store microbench (budget 5%, {off_ops:.0}/s untraced vs \
+             {on_ops:.0}/s traced). Per-category micros in {json_path}."
         ),
     })
 }
@@ -1788,6 +2055,56 @@ mod tests {
         assert_eq!(j.req("rows").unwrap().as_arr().unwrap().len(), 4);
         let s = j.req("store_speedup_at_8_threads").unwrap().as_f64().unwrap();
         assert!(s >= 2.0, "store speedup at 8 threads {s:.2} below the 2x bar");
+    }
+
+    #[test]
+    fn e18_attribution_sums_and_tracks_the_measured_makespan() {
+        let _g = trace::testing::serial();
+        let rm = ResourceManager::new(&PlatformConfig::test().cluster, MetricsRegistry::new());
+        let ctx = DceContext::local().unwrap();
+        trace::tracer().enable();
+        trace::tracer().clear();
+        let t = Instant::now();
+        let job =
+            JobHandle::submit(&rm, JobSpec::new("e18-attr").containers(1, 2)).unwrap();
+        let out = job
+            .run_sharded(&ctx, (0..4u64).collect(), |sctx, items: Vec<u64>| {
+                sctx.run(|_| {
+                    std::thread::sleep(Duration::from_millis(200));
+                    items
+                })
+            })
+            .unwrap();
+        let stats = job.finish();
+        let elapsed = t.elapsed();
+        trace::tracer().disable();
+        assert_eq!(out.len(), 4);
+        let cp = stats.critical_path.expect("tracer on => stats carry a critical path");
+        assert_eq!(cp.sum_us(), cp.total_us, "attribution must partition the makespan");
+        assert!(cp.category_us(trace::Category::Compute) > 0, "sleeping shards are compute");
+        let measured = elapsed.as_micros() as f64;
+        let diff = (measured - cp.total_us as f64).abs() / measured;
+        assert!(
+            diff < 0.01,
+            "critical-path total {}us vs measured {measured:.0}us ({:.2}% off)",
+            cp.total_us,
+            diff * 100.0
+        );
+    }
+
+    #[test]
+    fn e18_writes_the_bench_json_and_stays_under_the_overhead_budget() {
+        let _g = trace::testing::serial();
+        let t = run_experiment("e18", true).unwrap();
+        // Four sweep rows plus the preemption-heavy configuration.
+        assert_eq!(t.rows.len(), 5, "{:?}", t.rows);
+        assert_eq!(t.rows[4][1], "pair+preempt");
+        let text = std::fs::read_to_string("BENCH_E18.json").unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.req("experiment").unwrap().as_str().unwrap(), "e18");
+        assert_eq!(j.req("rows").unwrap().as_arr().unwrap().len(), 5);
+        let o = j.req("tracing_overhead_pct").unwrap().as_f64().unwrap();
+        assert!(o < 5.0, "tracing overhead {o:.2}% over the 5% budget");
     }
 
     #[test]

@@ -45,6 +45,7 @@ use crate::metrics::JobMetrics;
 use crate::resource::{
     AppLease, ContainerCtx, ContainerRef, Grant, ResourceManager, ResourceVec,
 };
+use crate::trace::{self, critical_path::CriticalPath, SpanCtx};
 
 /// A shard may be preempted repeatedly while a sibling queue churns;
 /// past this many requeues the job layer treats the signal as livelock
@@ -131,11 +132,14 @@ pub struct JobStats {
     /// Containers held x wall time, in seconds.
     pub container_seconds: f64,
     pub elapsed: Duration,
+    /// Per-category makespan attribution from the job's span DAG.
+    /// `None` unless the global tracer was enabled while the job ran.
+    pub critical_path: Option<CriticalPath>,
 }
 
 impl JobStats {
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "job '{}' on queue '{}': {} container(s), grant wait {}, {} shard retr{}, \
              {} preemption(s), {:.2} container-seconds in {}",
             self.app,
@@ -147,7 +151,14 @@ impl JobStats {
             self.preemptions,
             self.container_seconds,
             crate::util::fmt_duration(self.elapsed),
-        )
+        );
+        if let Some(cp) = &self.critical_path {
+            if cp.total_us > 0 {
+                s.push_str("\n  ");
+                s.push_str(&cp.render());
+            }
+        }
+        s
     }
 }
 
@@ -160,11 +171,19 @@ pub struct ShardCtx {
     /// requeues do NOT increment it).
     pub attempt: usize,
     container: ContainerRef,
+    /// Trace context of this attempt's `job.shard` span.
+    trace: SpanCtx,
 }
 
 impl ShardCtx {
     pub fn container(&self) -> &ContainerRef {
         &self.container
+    }
+
+    /// Trace parent for spans the shard closure opens on *other*
+    /// threads (same-thread spans nest under the attempt implicitly).
+    pub fn trace(&self) -> SpanCtx {
+        self.trace
     }
 
     /// Run a closure inside this shard's container (memory limits,
@@ -209,6 +228,11 @@ pub struct JobHandle {
     retries: Arc<AtomicU64>,
     preemptions: Arc<AtomicU64>,
     started: Instant,
+    /// Root `job` span, open from submit to finish. Declared last so
+    /// it closes after the grant and lease have released; a handle
+    /// must finish on the thread that submitted it (it always does —
+    /// each tenant drives its job from its own thread).
+    span: trace::SpanGuard,
 }
 
 impl JobHandle {
@@ -217,17 +241,22 @@ impl JobHandle {
     /// to `grant_timeout`; nothing is held while waiting), then extras
     /// up to `max_containers` are taken greedily.
     pub fn submit(rm: &Arc<ResourceManager>, spec: JobSpec) -> Result<JobHandle> {
+        // Root of the job's trace: admission, every shard attempt, and
+        // requeue nests under it (explicitly via `SpanCtx`, or
+        // implicitly for spans opened on the submitting thread).
+        let span = trace::span("job", trace::Category::Other);
         // One registry resolution per job; shard attempts and requeues
         // then touch plain atomics.
         let metrics = JobMetrics::new(rm.metrics());
         let app = AppLease::submit(rm, &spec.app, &spec.queue)?;
-        let grant = Grant::acquire(
+        let grant = Grant::acquire_in(
             rm,
             &spec.app,
             spec.resources,
             spec.min_containers,
             spec.max_containers,
             spec.grant_timeout,
+            span.ctx(),
         )
         .with_context(|| format!("acquiring grant for job '{}'", spec.app))?;
         metrics.grant_wait.record(grant.wait());
@@ -241,7 +270,14 @@ impl JobHandle {
             retries: Arc::new(AtomicU64::new(0)),
             preemptions: Arc::new(AtomicU64::new(0)),
             started: Instant::now(),
+            span,
         })
+    }
+
+    /// Trace context of the job's root span ([`SpanCtx::NONE`] when
+    /// the tracer is disabled).
+    pub fn trace(&self) -> SpanCtx {
+        self.span.ctx()
     }
 
     /// Containers actually granted — also the shard count.
@@ -268,6 +304,7 @@ impl JobHandle {
             retries: self.retries.clone(),
             preemptions: self.preemptions.clone(),
             metrics: self.metrics.clone(),
+            trace: self.span.ctx(),
         }
     }
 
@@ -359,7 +396,8 @@ impl JobHandle {
         let containers = self.grant.len();
         let container_seconds = elapsed.as_secs_f64() * containers as f64;
         self.metrics.container_ms.add((container_seconds * 1000.0) as u64);
-        JobStats {
+        let job_ctx = self.span.ctx();
+        let mut stats = JobStats {
             app: self.spec.app.clone(),
             queue: self.spec.queue.clone(),
             containers,
@@ -368,7 +406,18 @@ impl JobHandle {
             preemptions: self.preemptions.load(Ordering::Relaxed),
             container_seconds,
             elapsed,
+            critical_path: None,
+        };
+        // Dropping the handle closes the root span (after releasing
+        // the grant and lease), so every span of the trace is recorded
+        // before the analyzer reads it back.
+        drop(self);
+        if !job_ctx.is_none() {
+            let spans = trace::tracer().spans_for(job_ctx.trace_id);
+            stats.critical_path =
+                trace::critical_path::analyze(&spans, job_ctx.span_id);
         }
+        stats
     }
 }
 
@@ -402,6 +451,8 @@ struct ShardEnv {
     retries: Arc<AtomicU64>,
     preemptions: Arc<AtomicU64>,
     metrics: JobMetrics,
+    /// The job's root span — the parent of every shard attempt.
+    trace: SpanCtx,
 }
 
 impl ShardEnv {
@@ -429,8 +480,21 @@ impl ShardEnv {
         let mut attempt = 0usize;
         let mut requeues = 0usize;
         while attempt <= self.budget {
-            let sctx = ShardCtx { shard, shards, attempt, container: container.clone() };
-            let err = match catch_unwind(AssertUnwindSafe(|| attempt_fn(&sctx))) {
+            let mut sp =
+                trace::span_in("job.shard", trace::Category::Compute, self.trace);
+            sp.arg("shard", shard as u64)
+                .arg("attempt", attempt as u64)
+                .arg("requeues", requeues as u64);
+            let sctx = ShardCtx {
+                shard,
+                shards,
+                attempt,
+                container: container.clone(),
+                trace: sp.ctx(),
+            };
+            let outcome = catch_unwind(AssertUnwindSafe(|| attempt_fn(&sctx)));
+            drop(sp); // the attempt span ends here, unwound or not
+            let err = match outcome {
                 Ok(Ok(v)) => return Ok(v),
                 Ok(Err(e)) => e,
                 Err(payload) => {
@@ -442,7 +506,16 @@ impl ShardEnv {
                 requeues += 1;
                 self.preemptions.fetch_add(1, Ordering::Relaxed);
                 self.metrics.preemptions.inc();
-                match self.requeue(&container) {
+                let requeued = {
+                    let mut rsp = trace::span_in(
+                        "job.preempt_requeue",
+                        trace::Category::PreemptRequeue,
+                        self.trace,
+                    );
+                    rsp.arg("shard", shard as u64);
+                    self.requeue(&container)
+                };
+                match requeued {
                     Ok(replacement) => {
                         container = replacement;
                         continue; // the retry budget is untouched

@@ -16,6 +16,7 @@ use std::time::Instant;
 
 use super::device::{DeviceId, ResourceVec};
 use crate::metrics::MetricsRegistry;
+use crate::trace::{self, SpanCtx};
 
 /// A granted, resource-limited execution context.
 pub struct Container {
@@ -62,7 +63,10 @@ impl Container {
         if self.released.load(Ordering::Acquire) {
             bail!("container {} already released", self.id);
         }
-        let ctx = ContainerCtx { container: self };
+        // Capture the caller's span so code inside the container (the
+        // compactor, campaign scoring) can parent its spans on the
+        // shard attempt that scheduled it.
+        let ctx = ContainerCtx { container: self, trace: trace::current() };
         let start = Instant::now();
         let out = f(&ctx);
         let elapsed = start.elapsed();
@@ -130,9 +134,16 @@ impl Container {
 /// Handle passed to code running inside a container.
 pub struct ContainerCtx<'a> {
     container: &'a Container,
+    /// Trace context of the span that entered the container.
+    trace: SpanCtx,
 }
 
 impl ContainerCtx<'_> {
+    /// Trace parent for spans opened by code inside this container.
+    pub fn trace(&self) -> SpanCtx {
+        self.trace
+    }
+
     pub fn alloc_mem(&self, bytes: u64) -> Result<()> {
         self.container.alloc_mem(bytes)
     }

@@ -23,6 +23,7 @@ use std::time::{Duration, Instant};
 use super::container::ContainerRef;
 use super::device::ResourceVec;
 use super::yarn::ResourceManager;
+use crate::trace::{self, SpanCtx};
 
 /// An application registration that unregisters itself on drop.
 pub struct AppLease {
@@ -73,8 +74,27 @@ impl Grant {
         max: usize,
         timeout: Duration,
     ) -> Result<Grant> {
+        Self::acquire_in(rm, app, req, min, max, timeout, SpanCtx::NONE)
+    }
+
+    /// [`Grant::acquire`] with an explicit trace parent: the blocking
+    /// gang wait is recorded as a `grant.acquire` span (category
+    /// grant-wait) under the caller's job span, so the critical-path
+    /// analyzer can attribute admission stalls.
+    pub fn acquire_in(
+        rm: &Arc<ResourceManager>,
+        app: &str,
+        req: ResourceVec,
+        min: usize,
+        max: usize,
+        timeout: Duration,
+        parent: SpanCtx,
+    ) -> Result<Grant> {
+        let mut sp = trace::span_in("grant.acquire", trace::Category::GrantWait, parent);
+        sp.arg("min", min as u64).arg("max", max as u64);
         let start = Instant::now();
         let containers = rm.acquire_gang(app, req, min, max, timeout)?;
+        sp.arg("granted", containers.len() as u64);
         Ok(Grant {
             rm: rm.clone(),
             containers: Arc::new(Mutex::new(containers)),

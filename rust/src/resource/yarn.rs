@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 use super::container::{Container, ContainerRef};
 use super::device::{DeviceId, DeviceKind, ResourceVec};
 use crate::config::ClusterConfig;
-use crate::metrics::MetricsRegistry;
+use crate::metrics::{Gauge, MetricsRegistry};
 
 /// Typed error for blocking acquisition that hit its deadline: names
 /// the queue and the deficit so a starved share is diagnosable from the
@@ -105,6 +105,8 @@ pub struct ResourceManager {
     freed: Condvar,
     preempt: AtomicBool,
     metrics: MetricsRegistry,
+    /// `resource.live_containers` — refreshed on every grant/release.
+    live_gauge: Arc<Gauge>,
 }
 
 impl ResourceManager {
@@ -164,6 +166,7 @@ impl ResourceManager {
             }),
             freed: Condvar::new(),
             preempt: AtomicBool::new(false),
+            live_gauge: metrics.gauge("resource.live_containers"),
             metrics,
         })
     }
@@ -534,6 +537,7 @@ impl ResourceManager {
             self.metrics.clone(),
         ));
         inner.live.insert(id, container.clone());
+        self.live_gauge.set(inner.live.len() as u64);
         Ok(container)
     }
 
@@ -585,6 +589,7 @@ impl ResourceManager {
         if let Some(a) = inner.apps.get_mut(&container.app) {
             a.containers -= 1;
         }
+        self.live_gauge.set(inner.live.len() as u64);
         Ok(())
     }
 
@@ -662,6 +667,21 @@ mod tests {
         rm.release(&c).unwrap();
         assert_eq!(rm.available().cores, 8);
         assert!(c.is_released());
+    }
+
+    #[test]
+    fn live_containers_gauge_tracks_grants_and_releases() {
+        let rm = rm();
+        rm.submit_app("a", "default").unwrap();
+        let g = rm.metrics().gauge("resource.live_containers");
+        assert_eq!(g.get(), 0);
+        let c1 = rm.request_container("a", ResourceVec::cores(1, 10)).unwrap();
+        let c2 = rm.request_container("a", ResourceVec::cores(1, 10)).unwrap();
+        assert_eq!(g.get(), 2);
+        rm.release(&c1).unwrap();
+        assert_eq!(g.get(), 1);
+        rm.release(&c2).unwrap();
+        assert_eq!(g.get(), 0);
     }
 
     #[test]

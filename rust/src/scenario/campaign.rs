@@ -25,6 +25,7 @@ use crate::services::simulation::{
     CAMERA_TOPIC, LIDAR_TOPIC,
 };
 use crate::services::simulation::sensors::{FRAME_H, FRAME_W};
+use crate::trace;
 use crate::util::Rng;
 
 /// Knobs for one campaign run.
@@ -253,7 +254,13 @@ pub fn run_campaign(
             // by a prior submission is reloaded, never re-scored. A
             // blob that fails to decode must not poison the job — fall
             // through and re-score instead.
-            if let Some(bytes) = shard_ckpt.as_ref().and_then(|c| c.lookup(&item)) {
+            let committed = {
+                let mut csp =
+                    trace::span("ckpt.lookup", trace::Category::CheckpointReplay);
+                csp.arg("shard", sctx.shard as u64);
+                shard_ckpt.as_ref().and_then(|c| c.lookup(&item))
+            };
+            if let Some(bytes) = committed {
                 if let Ok(v) = ScenarioVerdict::from_bytes(&bytes) {
                     out.push(v);
                     metrics.ckpt_hits.inc();
@@ -281,6 +288,9 @@ pub fn run_campaign(
             })??;
             metrics.scored.inc();
             if let Some(c) = &shard_ckpt {
+                let mut csp =
+                    trace::span("ckpt.commit", trace::Category::CheckpointReplay);
+                csp.arg("shard", sctx.shard as u64);
                 c.commit(&item, verdict.to_bytes())?;
             }
             out.push(verdict);

@@ -41,6 +41,7 @@ use super::persist::AsyncPersister;
 use super::understore::UnderStore;
 use crate::config::StorageConfig;
 use crate::metrics::{MetricsRegistry, StoreMetrics};
+use crate::trace;
 
 pub const TIER_NAMES: [&str; 3] = ["mem", "ssd", "hdd"];
 
@@ -178,6 +179,8 @@ impl TieredStore {
         if size > self.caps[0].max(self.caps[1]).max(self.caps[2]) {
             bail!("block '{key}' ({size} B) exceeds every tier capacity");
         }
+        let mut sp = trace::span("store.put", trace::Category::StoreIo);
+        sp.arg("bytes", size);
         let data = Arc::new(bytes);
         // Memory-speed write path: charge the MEM device only.
         self.tiers[0].charge(size);
@@ -214,7 +217,17 @@ impl TieredStore {
         if persist {
             self.persister.submit(key.to_string(), data)?;
         }
+        self.refresh_tier_gauges();
         Ok(())
+    }
+
+    /// Refresh the `storage.tier_used.*` gauges from the atomic
+    /// per-tier byte counters (three relaxed loads + stores).
+    fn refresh_tier_gauges(&self) {
+        let used = self.used();
+        for t in 0..3 {
+            self.m.tier_used[t].set(used[t]);
+        }
     }
 
     /// Cascade over-capacity tiers downward; blocks leaving HDD are
@@ -232,6 +245,8 @@ impl TieredStore {
             // or two retries (the racing put evicts its own overflow).
             let mut empty_scans = 0;
             while self.used[tier].load(Ordering::Relaxed) > self.caps[tier] {
+                let mut sp = trace::span("store.evict", trace::Category::StoreIo);
+                sp.arg("tier", tier as u64);
                 if self.evict_one(tier, spill)? {
                     empty_scans = 0;
                     continue;
@@ -357,6 +372,7 @@ impl TieredStore {
     /// Read a block; promotes to MEM on hit in a lower tier; falls back
     /// to the under-store, then to lineage recomputation.
     pub fn get(&self, key: &str) -> Result<Arc<Vec<u8>>> {
+        let mut sp = trace::span("store.get", trace::Category::StoreIo);
         let mut promote_spill = Vec::new();
         let found = {
             let mut sh = self.shard(key).lock().unwrap();
@@ -408,9 +424,12 @@ impl TieredStore {
         if let Some((tier, size, data)) = found {
             // Device cost of reading from the tier it actually lived in.
             self.tiers[tier].charge(size);
+            sp.arg("tier", tier as u64).arg("bytes", size);
+            self.refresh_tier_gauges();
             return Ok(data);
         }
         // Miss in the stack: durable under-store?
+        sp.arg("miss", 1);
         self.m.miss.inc();
         if self.under.contains(key) {
             let bytes = self.under.read(key)?;
@@ -460,6 +479,7 @@ impl TieredStore {
             self.make_room(&mut spill)?;
         }
         self.handle_spill(spill);
+        self.refresh_tier_gauges();
         Ok(())
     }
 
@@ -502,6 +522,7 @@ impl TieredStore {
             }
         }
         self.under.delete(key)?;
+        self.refresh_tier_gauges();
         Ok(())
     }
 
@@ -616,6 +637,20 @@ mod tests {
         s.put("k", vec![1, 2, 3]).unwrap();
         assert_eq!(*s.get("k").unwrap(), vec![1, 2, 3]);
         assert_eq!(s.tier_of("k"), Some(0));
+    }
+
+    #[test]
+    fn tier_used_gauges_track_resident_bytes() {
+        let s = TieredStore::test_store(&PlatformConfig::test().storage);
+        s.put("g1", vec![0u8; 100]).unwrap();
+        s.put("g2", vec![0u8; 50]).unwrap();
+        let g = |t: &str| s.metrics().gauge(&format!("storage.tier_used.{t}")).get();
+        assert_eq!(g("mem"), s.used()[0]);
+        assert_eq!(g("mem"), 150);
+        s.delete("g1").unwrap();
+        assert_eq!(g("mem"), 50);
+        assert_eq!(g("ssd"), s.used()[1]);
+        assert_eq!(g("hdd"), s.used()[2]);
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Critical-path attribution over a finished job's span DAG.
+//!
+//! Walks a root span's children as time intervals and charges every
+//! microsecond of `[root.start, root.end]` to exactly one category:
+//! at each instant the deepest overlapping descendant (ties broken
+//! toward the one reaching furthest) owns the time; gaps no child
+//! covers are charged to the enclosing span's own category. The
+//! attribution therefore *partitions* the makespan — category totals
+//! sum to the root duration by construction, which is what lets E18
+//! assert the sum lands within 1% of the measured job makespan.
+
+use std::collections::HashMap;
+
+use super::{Category, SpanEvent};
+use crate::util::json::Json;
+
+/// Per-category makespan attribution for one trace.
+#[derive(Debug, Clone, Default)]
+pub struct CriticalPath {
+    /// Root span duration (equals the sum of `by_category`).
+    pub total_us: u64,
+    pub by_category: [u64; Category::COUNT],
+}
+
+impl CriticalPath {
+    pub fn category_us(&self, cat: Category) -> u64 {
+        self.by_category[cat.idx()]
+    }
+
+    /// Fraction of the makespan charged to `cat`, in [0, 1].
+    pub fn category_frac(&self, cat: Category) -> f64 {
+        if self.total_us == 0 {
+            return 0.0;
+        }
+        self.category_us(cat) as f64 / self.total_us as f64
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.by_category.iter().sum()
+    }
+
+    /// One-line human rendering, dominant categories first; zero
+    /// categories are elided.
+    pub fn render(&self) -> String {
+        let mut parts: Vec<(Category, u64)> = Category::ALL
+            .iter()
+            .map(|&c| (c, self.category_us(c)))
+            .filter(|&(_, us)| us > 0)
+            .collect();
+        parts.sort_by_key(|&(_, us)| std::cmp::Reverse(us));
+        let body = parts
+            .iter()
+            .map(|&(c, us)| format!("{} {:.1}%", c.label(), 100.0 * self.category_frac(c)))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let total = std::time::Duration::from_micros(self.total_us);
+        format!("critical path ({}): {}", crate::util::fmt_duration(total), body)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut cats = Vec::new();
+        for c in Category::ALL {
+            cats.push((c.label(), Json::num(self.category_us(c) as f64)));
+        }
+        Json::obj(vec![
+            ("total_us", Json::num(self.total_us as f64)),
+            ("by_category_us", Json::obj(cats)),
+        ])
+    }
+
+    /// Merge another trace's attribution into this one (E18 reports
+    /// one aggregate row over several concurrent jobs).
+    pub fn merge(&mut self, other: &CriticalPath) {
+        self.total_us += other.total_us;
+        for i in 0..Category::COUNT {
+            self.by_category[i] += other.by_category[i];
+        }
+    }
+}
+
+/// Attribute the trace that `root_span_id` heads. Returns `None` when
+/// the root span is missing from `spans`.
+pub fn analyze(spans: &[SpanEvent], root_span_id: u64) -> Option<CriticalPath> {
+    let root_idx = spans.iter().position(|e| e.span_id == root_span_id)?;
+    let mut children: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (i, e) in spans.iter().enumerate() {
+        if e.span_id != root_span_id {
+            children.entry(e.parent_id).or_default().push(i);
+        }
+    }
+    let root = &spans[root_idx];
+    let mut cp = CriticalPath { total_us: root.duration_us(), ..Default::default() };
+    attribute(spans, &children, root_idx, root.start_us, root.end_us, &mut cp.by_category);
+    Some(cp)
+}
+
+/// Attribute every root (parent-less) span of `trace_id`, merged.
+pub fn analyze_trace(spans: &[SpanEvent], trace_id: u64) -> CriticalPath {
+    let mut cp = CriticalPath::default();
+    for e in spans {
+        if e.trace_id == trace_id && e.parent_id == 0 {
+            if let Some(one) = analyze(spans, e.span_id) {
+                cp.merge(&one);
+            }
+        }
+    }
+    cp
+}
+
+/// Interval sweep over `[lo, hi)` of span `idx`: recurse into the
+/// overlapping child that reaches furthest; charge uncovered gaps to
+/// the span's own category. Every microsecond of `[lo, hi)` is
+/// charged exactly once, so the recursion partitions the interval.
+fn attribute(
+    spans: &[SpanEvent],
+    children: &HashMap<u64, Vec<usize>>,
+    idx: usize,
+    lo: u64,
+    hi: u64,
+    acc: &mut [u64; Category::COUNT],
+) {
+    let kids: &[usize] = children
+        .get(&spans[idx].span_id)
+        .map(|v| v.as_slice())
+        .unwrap_or(&[]);
+    let mut t = lo;
+    while t < hi {
+        let mut best: Option<usize> = None;
+        let mut next_start = hi;
+        for &k in kids {
+            let s = &spans[k];
+            if s.start_us <= t && s.end_us > t {
+                if best.map_or(true, |b| spans[b].end_us < s.end_us) {
+                    best = Some(k);
+                }
+            } else if s.start_us > t && s.start_us < next_start {
+                next_start = s.start_us;
+            }
+        }
+        match best {
+            Some(k) => {
+                let end = spans[k].end_us.min(hi);
+                attribute(spans, children, k, t, end, acc);
+                t = end;
+            }
+            None => {
+                acc[spans[idx].cat.idx()] += next_start - t;
+                t = next_start;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(
+        id: u64,
+        parent: u64,
+        name: &'static str,
+        cat: Category,
+        start: u64,
+        end: u64,
+    ) -> SpanEvent {
+        SpanEvent {
+            trace_id: 1,
+            span_id: id,
+            parent_id: parent,
+            name,
+            cat,
+            start_us: start,
+            end_us: end,
+            tid: 0,
+            args: [("", 0); 3],
+            nargs: 0,
+        }
+    }
+
+    #[test]
+    fn gaps_go_to_the_parent_category() {
+        // job [0, 100): grant-wait child [10, 30), compute child
+        // [30, 80); the [0,10) and [80,100) gaps are the job's own.
+        let spans = vec![
+            ev(1, 0, "job", Category::Other, 0, 100),
+            ev(2, 1, "grant", Category::GrantWait, 10, 30),
+            ev(3, 1, "work", Category::Compute, 30, 80),
+        ];
+        let cp = analyze(&spans, 1).unwrap();
+        assert_eq!(cp.total_us, 100);
+        assert_eq!(cp.category_us(Category::GrantWait), 20);
+        assert_eq!(cp.category_us(Category::Compute), 50);
+        assert_eq!(cp.category_us(Category::Other), 30);
+        assert_eq!(cp.sum_us(), cp.total_us);
+    }
+
+    #[test]
+    fn overlapping_children_pick_the_furthest_reaching() {
+        // Two concurrent shards [0,60) and [20,100) under a job of
+        // [0,100): the sweep follows shard A to 60 then shard B to
+        // 100 — full coverage, no double counting.
+        let spans = vec![
+            ev(1, 0, "job", Category::Other, 0, 100),
+            ev(2, 1, "shard-a", Category::Compute, 0, 60),
+            ev(3, 1, "shard-b", Category::Compute, 20, 100),
+            // store I/O inside shard B while it owns [60, 100).
+            ev(4, 3, "put", Category::StoreIo, 70, 90),
+        ];
+        let cp = analyze(&spans, 1).unwrap();
+        assert_eq!(cp.total_us, 100);
+        assert_eq!(cp.sum_us(), 100);
+        assert_eq!(cp.category_us(Category::StoreIo), 20);
+        assert_eq!(cp.category_us(Category::Compute), 80);
+    }
+
+    #[test]
+    fn nested_attribution_partitions_the_makespan() {
+        let spans = vec![
+            ev(1, 0, "job", Category::Other, 0, 1000),
+            ev(2, 1, "grant", Category::GrantWait, 0, 200),
+            ev(3, 1, "shard", Category::Compute, 200, 950),
+            ev(4, 3, "requeue", Category::PreemptRequeue, 300, 400),
+            ev(5, 3, "ckpt", Category::CheckpointReplay, 400, 450),
+            ev(6, 3, "log", Category::LogIo, 450, 500),
+            ev(7, 3, "shuffle", Category::Shuffle, 600, 900),
+        ];
+        let cp = analyze(&spans, 1).unwrap();
+        assert_eq!(cp.sum_us(), cp.total_us);
+        assert_eq!(cp.category_us(Category::GrantWait), 200);
+        assert_eq!(cp.category_us(Category::PreemptRequeue), 100);
+        assert_eq!(cp.category_us(Category::CheckpointReplay), 50);
+        assert_eq!(cp.category_us(Category::LogIo), 50);
+        assert_eq!(cp.category_us(Category::Shuffle), 300);
+        // shard's own slices: [200,300) + [500,600) + [900,950).
+        assert_eq!(cp.category_us(Category::Compute), 250);
+        // job's own slice: [950, 1000).
+        assert_eq!(cp.category_us(Category::Other), 50);
+    }
+
+    #[test]
+    fn children_poking_outside_the_parent_are_clamped() {
+        let spans = vec![
+            ev(1, 0, "job", Category::Other, 100, 200),
+            ev(2, 1, "early", Category::Compute, 50, 150),
+            ev(3, 1, "late", Category::StoreIo, 150, 400),
+        ];
+        let cp = analyze(&spans, 1).unwrap();
+        assert_eq!(cp.total_us, 100);
+        assert_eq!(cp.sum_us(), 100);
+        assert_eq!(cp.category_us(Category::Compute), 50);
+        assert_eq!(cp.category_us(Category::StoreIo), 50);
+    }
+
+    #[test]
+    fn render_orders_dominant_categories_first() {
+        let spans = vec![
+            ev(1, 0, "job", Category::Other, 0, 100),
+            ev(2, 1, "w", Category::GrantWait, 0, 80),
+            ev(3, 1, "c", Category::Compute, 80, 90),
+        ];
+        let cp = analyze(&spans, 1).unwrap();
+        let r = cp.render();
+        let gw = r.find("grant-wait").unwrap();
+        let comp = r.find("compute").unwrap();
+        assert!(gw < comp, "dominant category first: {r}");
+        assert!(r.contains("grant-wait 80.0%"), "{r}");
+    }
+
+    #[test]
+    fn json_carries_all_categories() {
+        let spans = vec![ev(1, 0, "job", Category::Other, 0, 10)];
+        let cp = analyze(&spans, 1).unwrap();
+        let j = cp.to_json();
+        assert_eq!(j.req("total_us").unwrap().as_u64().unwrap(), 10);
+        let cats = j.req("by_category_us").unwrap().as_obj().unwrap();
+        assert_eq!(cats.len(), Category::COUNT);
+        assert_eq!(cats["other"].as_u64().unwrap(), 10);
+    }
+
+    #[test]
+    fn analyze_trace_merges_concurrent_roots() {
+        let mut spans = vec![
+            ev(1, 0, "job-a", Category::Other, 0, 100),
+            ev(2, 1, "w", Category::Compute, 0, 100),
+        ];
+        let mut b = ev(3, 0, "job-b", Category::Other, 0, 50);
+        b.trace_id = 1;
+        spans.push(b);
+        let cp = analyze_trace(&spans, 1);
+        assert_eq!(cp.total_us, 150);
+        assert_eq!(cp.category_us(Category::Compute), 100);
+        assert_eq!(cp.category_us(Category::Other), 50);
+    }
+}

@@ -1,0 +1,229 @@
+//! Chrome-trace-event export and re-import.
+//!
+//! [`write_chrome_trace`] emits the `traceEvents` JSON understood by
+//! Perfetto and `chrome://tracing` (complete `"ph": "X"` events, one
+//! per span). The span/trace/parent ids ride along in each event's
+//! `args`, so [`load_chrome_trace`] can parse a file back into
+//! [`LoadedSpan`]s and [`render_tree`] can pretty-print the causal
+//! span tree — that is what the `trace` CLI subcommand does.
+
+use anyhow::{Context, Result};
+
+use super::SpanEvent;
+use crate::util::json::Json;
+
+/// Serialize spans into a Chrome trace-event document.
+pub fn to_chrome_json(spans: &[SpanEvent]) -> Json {
+    let events = spans
+        .iter()
+        .map(|e| {
+            let mut args = vec![
+                ("trace_id", Json::num(e.trace_id as f64)),
+                ("span_id", Json::num(e.span_id as f64)),
+                ("parent_id", Json::num(e.parent_id as f64)),
+            ];
+            for (k, v) in e.args() {
+                args.push((k, Json::num(*v as f64)));
+            }
+            Json::obj(vec![
+                ("name", Json::str(e.name)),
+                ("cat", Json::str(e.cat.label())),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(e.start_us as f64)),
+                ("dur", Json::num(e.duration_us() as f64)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(e.tid as f64)),
+                ("args", Json::obj(args)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Write spans to `path` as Chrome trace-event JSON.
+pub fn write_chrome_trace(path: &str, spans: &[SpanEvent]) -> Result<()> {
+    std::fs::write(path, to_chrome_json(spans).to_string_pretty())
+        .with_context(|| format!("writing trace to {path}"))
+}
+
+/// One span parsed back from an exported trace file.
+#[derive(Debug, Clone)]
+pub struct LoadedSpan {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent_id: u64,
+    pub name: String,
+    pub cat: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+    /// Annotations other than the id triple.
+    pub kv: Vec<(String, u64)>,
+}
+
+/// Parse a Chrome trace-event file written by [`write_chrome_trace`].
+pub fn load_chrome_trace(path: &str) -> Result<Vec<LoadedSpan>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace file {path}"))?;
+    let doc = Json::parse(&text).with_context(|| format!("parsing trace file {path}"))?;
+    let mut out = Vec::new();
+    for ev in doc.req("traceEvents")?.as_arr()? {
+        if ev.get("ph").and_then(|p| p.as_str().ok()) != Some("X") {
+            continue;
+        }
+        let args = ev.req("args")?;
+        let mut kv = Vec::new();
+        for (k, v) in args.as_obj()? {
+            if matches!(k.as_str(), "trace_id" | "span_id" | "parent_id") {
+                continue;
+            }
+            if let Ok(n) = v.as_u64() {
+                kv.push((k.clone(), n));
+            }
+        }
+        out.push(LoadedSpan {
+            trace_id: args.req("trace_id")?.as_u64()?,
+            span_id: args.req("span_id")?.as_u64()?,
+            parent_id: args.req("parent_id")?.as_u64()?,
+            name: ev.req("name")?.as_str()?.to_string(),
+            cat: ev.req("cat")?.as_str()?.to_string(),
+            start_us: ev.req("ts")?.as_u64()?,
+            dur_us: ev.req("dur")?.as_u64()?,
+            tid: ev.req("tid")?.as_u64()?,
+            kv,
+        });
+    }
+    Ok(out)
+}
+
+/// Pretty-print loaded spans as indented per-trace span trees,
+/// children sorted by start time.
+pub fn render_tree(spans: &[LoadedSpan]) -> String {
+    let mut order: Vec<usize> = (0..spans.len()).collect();
+    order.sort_by_key(|&i| (spans[i].trace_id, spans[i].start_us, spans[i].span_id));
+    let ids: std::collections::HashSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    let mut children: std::collections::HashMap<u64, Vec<usize>> =
+        std::collections::HashMap::new();
+    let mut roots: Vec<usize> = Vec::new();
+    for &i in &order {
+        let s = &spans[i];
+        // A span whose parent is missing from the file (e.g. the file
+        // was exported mid-run) renders as a root rather than vanish.
+        if s.parent_id != 0 && ids.contains(&s.parent_id) {
+            children.entry(s.parent_id).or_default().push(i);
+        } else {
+            roots.push(i);
+        }
+    }
+    let mut out = String::new();
+    let mut last_trace = None;
+    for &r in &roots {
+        if last_trace != Some(spans[r].trace_id) {
+            last_trace = Some(spans[r].trace_id);
+            out.push_str(&format!("trace {}\n", spans[r].trace_id));
+        }
+        render_node(spans, &children, r, 1, &mut out);
+    }
+    out
+}
+
+fn render_node(
+    spans: &[LoadedSpan],
+    children: &std::collections::HashMap<u64, Vec<usize>>,
+    idx: usize,
+    depth: usize,
+    out: &mut String,
+) {
+    let s = &spans[idx];
+    let kv = s
+        .kv
+        .iter()
+        .map(|(k, v)| format!(" {k}={v}"))
+        .collect::<String>();
+    out.push_str(&format!(
+        "{}{} [{}] {} @{}us{}\n",
+        "  ".repeat(depth),
+        s.name,
+        s.cat,
+        crate::util::fmt_duration(std::time::Duration::from_micros(s.dur_us)),
+        s.start_us,
+        kv,
+    ));
+    if let Some(kids) = children.get(&s.span_id) {
+        for &k in kids {
+            render_node(spans, children, k, depth + 1, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Category, SpanEvent};
+
+    fn ev(trace: u64, id: u64, parent: u64, name: &'static str, start: u64) -> SpanEvent {
+        SpanEvent {
+            trace_id: trace,
+            span_id: id,
+            parent_id: parent,
+            name,
+            cat: Category::Compute,
+            start_us: start,
+            end_us: start + 100,
+            tid: 1,
+            args: [("shard", 2), ("", 0), ("", 0)],
+            nargs: 1,
+        }
+    }
+
+    #[test]
+    fn chrome_export_roundtrips_through_a_file() {
+        let dir = std::env::temp_dir().join("adcloud-trace-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.json");
+        let path = path.to_str().unwrap();
+        let spans =
+            vec![ev(5, 1, 0, "job", 0), ev(5, 2, 1, "shard", 10), ev(5, 3, 2, "task", 20)];
+        write_chrome_trace(path, &spans).unwrap();
+        let loaded = load_chrome_trace(path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        let shard = loaded.iter().find(|s| s.name == "shard").unwrap();
+        assert_eq!(shard.trace_id, 5);
+        assert_eq!(shard.parent_id, 1);
+        assert_eq!(shard.dur_us, 100);
+        assert_eq!(shard.kv, vec![("shard".to_string(), 2)]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn tree_renders_nested_and_orphaned_spans() {
+        let spans = vec![
+            ev(5, 1, 0, "job", 0),
+            ev(5, 2, 1, "shard", 10),
+            ev(5, 3, 99, "lost", 20),
+        ];
+        let loaded: Vec<LoadedSpan> = spans
+            .iter()
+            .map(|e| LoadedSpan {
+                trace_id: e.trace_id,
+                span_id: e.span_id,
+                parent_id: e.parent_id,
+                name: e.name.to_string(),
+                cat: e.cat.label().to_string(),
+                start_us: e.start_us,
+                dur_us: e.duration_us(),
+                tid: e.tid,
+                kv: vec![],
+            })
+            .collect();
+        let tree = render_tree(&loaded);
+        assert!(tree.contains("trace 5"));
+        assert!(tree.contains("  job [compute]"));
+        assert!(tree.contains("    shard [compute]"));
+        // span 3's parent is missing: still rendered, as a root.
+        assert!(tree.contains("  lost [compute]"));
+    }
+}

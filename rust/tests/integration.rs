@@ -324,3 +324,103 @@ fn fault_injected_platform_still_correct() {
     }
     p.ctx.set_fail_injector(None);
 }
+
+#[test]
+fn trace_spans_close_across_a_panicking_shard() {
+    // Holds the tracer's test lock: the tracer is process-global, so
+    // only one test in this binary may have it enabled at a time.
+    let _g = adcloud::trace::testing::serial();
+    let tracer = adcloud::trace::tracer();
+    tracer.enable();
+    tracer.clear();
+    let p = Platform::local().unwrap();
+    let job = JobHandle::submit(
+        &p.resources,
+        JobSpec::new("it-trace-panic").containers(1, 2).retries(0),
+    )
+    .unwrap();
+    let root = job.trace();
+    let r = job.run_sharded(
+        &p.ctx,
+        vec![1u32, 2],
+        |_sctx, _items: Vec<u32>| -> adcloud::Result<Vec<u32>> {
+            panic!("shard panicked on purpose")
+        },
+    );
+    assert!(r.is_err());
+    let _ = job.finish();
+    let spans = tracer.spans_for(root.trace_id);
+    tracer.disable();
+    // The panicking attempt's span is recorded during unwind — its
+    // presence in the archive IS closure; an orphan would be absent.
+    assert!(
+        spans.iter().any(|e| e.name == "job.shard"),
+        "panicking shard attempts must still record their spans"
+    );
+    assert!(
+        spans.iter().any(|e| e.span_id == root.span_id),
+        "the job root span must close when the job is finished"
+    );
+    // Every non-root span's parent resolves inside the same trace: no
+    // span was left dangling by the unwind.
+    let ids: std::collections::HashSet<u64> = spans.iter().map(|e| e.span_id).collect();
+    for e in &spans {
+        if e.span_id != root.span_id {
+            assert!(
+                ids.contains(&e.parent_id),
+                "span {} '{}' has unresolved parent {}",
+                e.span_id,
+                e.name,
+                e.parent_id
+            );
+        }
+        assert!(e.end_us >= e.start_us, "span '{}' closed before it opened", e.name);
+    }
+}
+
+#[test]
+fn trace_spans_close_across_preemption_requeue() {
+    let _g = adcloud::trace::testing::serial();
+    let tracer = adcloud::trace::tracer();
+    tracer.enable();
+    tracer.clear();
+    let p = Platform::local().unwrap();
+    let job = JobHandle::submit(
+        &p.resources,
+        JobSpec::new("it-trace-preempt").containers(1, 1).retries(0),
+    )
+    .unwrap();
+    let root = job.trace();
+    let victim_id = job.containers()[0].id;
+    let rm = p.resources.clone();
+    let r = job.run_sharded(&p.ctx, vec![1u32, 2, 3], move |sctx, items: Vec<u32>| {
+        if sctx.container().id == victim_id {
+            assert_eq!(rm.request_preemption("it-trace-preempt", 1), 1);
+            sctx.check_preempted()?;
+        }
+        Ok(items)
+    });
+    assert_eq!(r.unwrap(), vec![1, 2, 3]);
+    let stats = job.finish();
+    assert_eq!(stats.preemptions, 1);
+    let spans = tracer.spans_for(root.trace_id);
+    tracer.disable();
+    // Both the preempted attempt and its requeued successor closed,
+    // and the requeue wait is a span of its own under the job root.
+    let attempts = spans.iter().filter(|e| e.name == "job.shard").count();
+    assert!(attempts >= 2, "preempted + requeued attempts must both record, got {attempts}");
+    let requeue = spans
+        .iter()
+        .find(|e| e.name == "job.preempt_requeue")
+        .expect("the requeue wait must be recorded");
+    assert_eq!(requeue.parent_id, root.span_id);
+    // The finished stats carry the same attribution the raw spans give,
+    // and it partitions the job's makespan exactly.
+    let cp = adcloud::trace::critical_path::analyze(&spans, root.span_id)
+        .expect("the closed root span must be analyzable");
+    assert_eq!(cp.sum_us(), cp.total_us);
+    assert_eq!(
+        stats.critical_path.expect("tracer on => stats attribution").total_us,
+        cp.total_us
+    );
+}
