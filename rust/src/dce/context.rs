@@ -134,6 +134,12 @@ impl DceContext {
         self.inner.config.engine.default_parallelism
     }
 
+    /// Total work-steal count across the executor pool — the raw feed
+    /// for an `obs` sampler probe (`dce.executor.steals` rate).
+    pub fn executor_steals(&self) -> u64 {
+        self.inner.pool.steals()
+    }
+
     pub(crate) fn next_id(&self) -> usize {
         self.inner.next_id.fetch_add(1, Ordering::Relaxed)
     }

@@ -239,16 +239,24 @@ impl IngestGateway {
         }
         if crc32(&up.payload) != up.declared_crc {
             self.m.dead_lettered.inc();
-            self.dead.lock().unwrap().push(DeadLetter {
+            let mut dead = self.dead.lock().unwrap();
+            dead.push(DeadLetter {
                 vehicle: up.vehicle,
                 ts_ns: up.ts_ns,
                 reason: "payload CRC mismatch".into(),
                 bytes: up.payload.len(),
             });
+            self.m.dlq_depth.set(dead.len() as u64);
             return Ok(Admission::DeadLettered);
         }
         let partition = self.log.partition_for(up.vehicle);
-        if self.log.lag(partition) >= self.cfg.max_lag {
+        let lag = self.log.lag(partition);
+        // Worst-partition lag feeds the ingest-backlog watchdog; each
+        // admission decision refreshes it for the partition it probed.
+        if lag >= self.m.partition_lag.get() || partition == 0 {
+            self.m.partition_lag.set(lag);
+        }
+        if lag >= self.cfg.max_lag {
             self.m.backpressured.inc();
             return Ok(Admission::Backpressure);
         }
@@ -469,6 +477,7 @@ mod tests {
         assert_eq!(dead[0].vehicle, 5);
         assert!(dead[0].reason.contains("CRC"));
         assert_eq!(gw.log().next_offset(0), 0, "corrupt payload must not reach the log");
+        assert_eq!(gw.m.dlq_depth.get(), 1, "DLQ depth gauge must track the queue");
     }
 
     #[test]
@@ -479,9 +488,11 @@ mod tests {
             assert!(matches!(gw.upload(&up).unwrap(), Admission::Accepted { .. }));
         }
         assert_eq!(gw.upload(&up).unwrap(), Admission::Backpressure);
+        assert_eq!(gw.m.partition_lag.get(), 3, "lag gauge must reflect the probed partition");
         // A consumer draining the partition releases the pressure.
         gw.log().commit(0, 3).unwrap();
         assert!(matches!(gw.upload(&up).unwrap(), Admission::Accepted { .. }));
+        assert!(gw.m.partition_lag.get() <= 1, "lag gauge must fall once the log is drained");
     }
 
     #[test]

@@ -43,7 +43,7 @@
 //!   `ShardCheckpoint`, yield their container, and requeue without
 //!   burning their retry budget; `ShardCheckpoint::sweep` GCs orphaned
 //!   checkpoint blobs past a retention window), and the
-//!   paper-experiment harness (E1–E17).
+//!   paper-experiment harness (E1–E19).
 //! * [`hetero`] — kernel registry + dispatch across CPU / GPU-class /
 //!   FPGA-class devices.
 //! * [`runtime`] — the PJRT artifact runtime (device-server threads).
@@ -60,6 +60,16 @@
 //!   loadable), and critical-path attribution of a finished job's
 //!   makespan to grant-wait / preempt-requeue / checkpoint-replay /
 //!   compute / shuffle / store-I/O / log-I/O (experiment E18).
+//! * [`obs`] — the telemetry plane built on [`metrics`] and [`trace`]:
+//!   a time-series sampler (counters → windowed rates, gauges,
+//!   histogram p50/p99, into bounded ring buffers), a declarative SLO
+//!   watchdog engine (ok→warn→critical state machines with debounce
+//!   and hysteresis; built-in rules for ingest lag/DLQ, grant-wait
+//!   p99, eviction thrash, checkpoint-replay storms, steal
+//!   starvation), and a flight recorder that dumps post-mortem
+//!   bundles on job failure or critical breach. Served live via
+//!   `/metrics` + `/healthz` (`runtime::ObsServer`), `adcloud top`,
+//!   and `adcloud postmortem`; exercised by experiment E19.
 
 pub mod config;
 pub mod dce;
@@ -67,6 +77,7 @@ pub mod hetero;
 pub mod ingest;
 pub mod mapreduce;
 pub mod metrics;
+pub mod obs;
 pub mod platform;
 pub mod pointcloud;
 pub mod resource;

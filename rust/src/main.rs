@@ -17,10 +17,24 @@
 //!             [--ckpt-gc-secs S]  after the jobs finish, sweep ckpt/*
 //!             blobs older than S seconds (orphans from failed,
 //!             never-resubmitted jobs) and report the reclaimed count
+//!             [--sample-ms MS]  run the telemetry plane (sampler +
+//!             SLO watchdogs + flight recorder) over the job layer
+//!             [--serve ADDR]  with --sample-ms: serve /metrics
+//!             (Prometheus text) and /healthz (watchdog rollup) over
+//!             HTTP during the run, e.g. --serve 127.0.0.1:9100
+//!             [--force-postmortem PATH]  with --sample-ms: write a
+//!             flight-recorder bundle to PATH before exiting
 //!   train     [--examples N] [--rounds R] [--workers W]
 //!   mapgen    [--steps N]
 //!   sql       [--rows N]
-//!   repro-tables [e1..e18|all] [--quick]
+//!   repro-tables [e1..e19|all] [--quick]
+//!   top       [--once] [--duration-secs S] [--refresh-ms MS]
+//!             refreshing text dashboard (sampler series + SLO rules)
+//!             over a self-contained demo workload
+//!   postmortem <bundle.json>     pretty-print a flight-recorder bundle
+//!   bench-diff [files...] [--baseline-dir D] [--update]
+//!             compare fresh BENCH_*.json throughput against the
+//!             checked-in baselines; >10% regression fails the command
 //!   trace <trace.json>           pretty-print a recorded trace as a span tree
 //!   pipe-worker <logic>          BinPipe child process (detect)
 //!   metrics                      dump the metrics registry after a demo job
@@ -126,6 +140,16 @@ fn dispatch(cmd: &str, pos: &[String], flags: &HashMap<String, String>) -> Resul
         "mapgen" => run_mapgen(flags),
         "sql" => run_sql(flags),
         "repro-tables" => repro_tables(&pos[1..], flags),
+        "top" => run_top(flags),
+        "postmortem" => {
+            let path = pos.get(1).map(String::as_str).ok_or_else(|| {
+                anyhow::anyhow!("usage: adcloud postmortem <postmortem-bundle.json>")
+            })?;
+            let bundle = adcloud::obs::recorder::load(path)?;
+            print!("{}", adcloud::obs::recorder::render(&bundle)?);
+            Ok(())
+        }
+        "bench-diff" => bench_diff(&pos[1..], flags),
         "trace" => {
             let path = pos.get(1).map(String::as_str);
             let path =
@@ -145,7 +169,8 @@ fn dispatch(cmd: &str, pos: &[String], flags: &HashMap<String, String>) -> Resul
         other => {
             eprintln!("unknown command '{other}'");
             eprintln!(
-                "commands: info quickstart simulate campaign ingest jobs train mapgen sql repro-tables trace pipe-worker metrics"
+                "commands: info quickstart simulate campaign ingest jobs train mapgen sql \
+                 repro-tables top postmortem bench-diff trace pipe-worker metrics"
             );
             std::process::exit(2);
         }
@@ -322,6 +347,41 @@ fn run_jobs(flags: &HashMap<String, String>) -> Result<()> {
     };
     rm.set_preemption(preempt);
     let ctx = adcloud::dce::DceContext::new(cfg.clone())?;
+    // --sample-ms: run the telemetry plane (sampler + SLO watchdogs +
+    // flight recorder) over the job layer for the duration of the run.
+    let obs = flags.get("sample-ms").and_then(|v| v.parse::<u64>().ok()).map(|ms| {
+        let o = adcloud::obs::Observability::start(
+            metrics.clone(),
+            adcloud::obs::ObsConfig {
+                sampler: adcloud::obs::SamplerConfig {
+                    period: std::time::Duration::from_millis(ms.max(1)),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let steals_ctx = ctx.clone();
+        o.add_probe("dce.executor.steals", adcloud::obs::ProbeKind::Counter, move || {
+            steals_ctx.executor_steals() as f64
+        });
+        o.add_probe("trace.ring_dropped", adcloud::obs::ProbeKind::Counter, || {
+            adcloud::trace::tracer().dropped_events() as f64
+        });
+        adcloud::obs::install(&o);
+        o
+    });
+    let server = match (&obs, flags.get("serve")) {
+        (Some(o), Some(addr)) => {
+            let s = adcloud::runtime::ObsServer::serve(addr, o.clone())?;
+            println!("obs: serving /metrics and /healthz on http://{}", s.addr());
+            Some(s)
+        }
+        (None, Some(_)) => {
+            eprintln!("--serve requires --sample-ms; not starting the HTTP endpoint");
+            None
+        }
+        _ => None,
+    };
     println!(
         "unified job layer: {} nodes x {} cores; queues sim/fleet guaranteed 0.5 each, \
          ceilings {}, preemption {}",
@@ -391,8 +451,213 @@ fn run_jobs(flags: &HashMap<String, String>) -> Result<()> {
         )?;
         println!("checkpoint GC: reclaimed {reclaimed} orphaned blob(s) older than {secs}s");
     }
+    if let Some(server) = &server {
+        // Self-scrape once so a plain CLI run demonstrates both
+        // endpoints without needing curl in the loop.
+        for path in ["/metrics", "/healthz"] {
+            match scrape(&server.addr(), path) {
+                Ok(body) => {
+                    let head: Vec<&str> = body.lines().take(6).collect();
+                    println!("GET {path} ->\n{}", head.join("\n"));
+                }
+                Err(e) => eprintln!("self-scrape of {path} failed: {e:#}"),
+            }
+        }
+    }
+    drop(server);
+    if let Some(o) = &obs {
+        if let Some(path) = flags.get("force-postmortem") {
+            o.write_bundle("forced by --force-postmortem", path)?;
+            println!("flight-recorder bundle written to {path}");
+        }
+        let health = o.health_json();
+        println!(
+            "obs: health {}, {} post-mortem bundle(s) captured",
+            health.req("status")?.as_str()?,
+            o.bundles_captured(),
+        );
+        adcloud::obs::uninstall();
+        o.stop();
+    }
     println!("job-layer metrics:\n{}", metrics.report());
     Ok(())
+}
+
+/// One-shot HTTP GET against the in-process `ObsServer`.
+fn scrape(addr: &std::net::SocketAddr, path: &str) -> Result<String> {
+    use std::io::{Read, Write};
+    let mut conn = std::net::TcpStream::connect(addr)?;
+    write!(conn, "GET {path} HTTP/1.0\r\n\r\n")?;
+    conn.flush()?;
+    let mut buf = String::new();
+    conn.read_to_string(&mut buf)?;
+    Ok(buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string())
+}
+
+/// `adcloud top` — refreshing text dashboard over a demo workload.
+fn run_top(flags: &HashMap<String, String>) -> Result<()> {
+    use std::io::Write as _;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let once = flags.contains_key("once");
+    let duration = std::time::Duration::from_secs(flag(flags, "duration-secs", 15u64));
+    let refresh = std::time::Duration::from_millis(flag(flags, "refresh-ms", 500u64).max(50));
+    let ctx = adcloud::dce::DceContext::new(config_from(flags))?;
+    let obs = adcloud::obs::Observability::start(
+        ctx.metrics().clone(),
+        adcloud::obs::ObsConfig {
+            sampler: adcloud::obs::SamplerConfig {
+                period: std::time::Duration::from_millis(100),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let steals_ctx = ctx.clone();
+    obs.add_probe("dce.executor.steals", adcloud::obs::ProbeKind::Counter, move || {
+        steals_ctx.executor_steals() as f64
+    });
+    obs.add_probe("trace.ring_dropped", adcloud::obs::ProbeKind::Counter, || {
+        adcloud::trace::tracer().dropped_events() as f64
+    });
+    // A background demo workload so the dashboard has moving series:
+    // small DCE jobs plus store churn.
+    let stop = Arc::new(AtomicBool::new(false));
+    let worker = {
+        let ctx = ctx.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut i = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let _ = ctx.range(10_000, 16).map(|x| x.wrapping_mul(3)).count();
+                let _ = ctx.store().put(&format!("top/{}", i % 256), vec![7u8; 32 << 10]);
+                i += 1;
+            }
+        })
+    };
+    let t0 = std::time::Instant::now();
+    loop {
+        std::thread::sleep(refresh);
+        let frame = obs.dashboard();
+        if once {
+            println!("{frame}");
+            break;
+        }
+        // ANSI clear-screen + cursor-home, then the frame.
+        print!("\x1b[2J\x1b[H{frame}");
+        std::io::stdout().flush()?;
+        if t0.elapsed() >= duration {
+            println!();
+            break;
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    worker.join().expect("top demo workload thread panicked");
+    obs.stop();
+    Ok(())
+}
+
+/// `adcloud bench-diff` — compare fresh BENCH_*.json files against the
+/// checked-in baselines; any throughput series more than 10% below its
+/// baseline fails the command.
+fn bench_diff(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    use adcloud::util::json::Json;
+    let dir = flags
+        .get("baseline-dir")
+        .cloned()
+        .unwrap_or_else(|| "bench/baseline".to_string());
+    let update = flags.contains_key("update");
+    let files: Vec<String> = if pos.is_empty() {
+        vec!["BENCH_E17.json".into(), "BENCH_E18.json".into(), "BENCH_E19.json".into()]
+    } else {
+        pos.to_vec()
+    };
+    let mut regressions: Vec<String> = Vec::new();
+    let mut compared = 0usize;
+    for file in &files {
+        let name = std::path::Path::new(file)
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| file.clone());
+        let base_path = format!("{dir}/{name}");
+        if !std::path::Path::new(file).is_file() {
+            println!("bench-diff: {file} not found (run its experiment first); skipping");
+            continue;
+        }
+        if update {
+            std::fs::create_dir_all(&dir)?;
+            std::fs::copy(file, &base_path)?;
+            println!("bench-diff: baseline {base_path} updated from {file}");
+            continue;
+        }
+        if !std::path::Path::new(&base_path).is_file() {
+            println!("bench-diff: no baseline at {base_path}; skipping {file}");
+            continue;
+        }
+        let base = Json::parse(&std::fs::read_to_string(&base_path)?)?;
+        let fresh = Json::parse(&std::fs::read_to_string(file)?)?;
+        let mut pairs: Vec<(String, f64, f64)> = Vec::new();
+        walk_bench(&base, &fresh, &name, &mut pairs);
+        if pairs.is_empty() {
+            println!("bench-diff: no comparable *per_sec series in {file}");
+        }
+        for (series, b, f) in pairs {
+            compared += 1;
+            let delta_pct = (f / b.max(1e-9) - 1.0) * 100.0;
+            let flagged = f < b * 0.9;
+            println!(
+                "  {} {series}: baseline {b:.0}/s, fresh {f:.0}/s ({delta_pct:+.1}%)",
+                if flagged { "REGRESSION" } else { "ok " },
+            );
+            if flagged {
+                regressions.push(series);
+            }
+        }
+    }
+    if update {
+        return Ok(());
+    }
+    anyhow::ensure!(
+        regressions.is_empty(),
+        "bench-diff: {} series regressed >10%: {}",
+        regressions.len(),
+        regressions.join(", "),
+    );
+    println!("bench-diff: {compared} throughput series compared, none regressed >10%");
+    Ok(())
+}
+
+/// Walk two bench JSON trees in lockstep, collecting every numeric key
+/// whose name contains `per_sec` and exists in both.
+fn walk_bench(
+    base: &adcloud::util::json::Json,
+    fresh: &adcloud::util::json::Json,
+    at: &str,
+    out: &mut Vec<(String, f64, f64)>,
+) {
+    use adcloud::util::json::Json;
+    match (base, fresh) {
+        (Json::Obj(bm), Json::Obj(fm)) => {
+            for (k, bv) in bm {
+                let Some(fv) = fm.get(k) else { continue };
+                let here = format!("{at}.{k}");
+                if k.contains("per_sec") {
+                    if let (Ok(b), Ok(f)) = (bv.as_f64(), fv.as_f64()) {
+                        out.push((here, b, f));
+                        continue;
+                    }
+                }
+                walk_bench(bv, fv, &here, out);
+            }
+        }
+        (Json::Arr(ba), Json::Arr(fa)) => {
+            for (i, (bv, fv)) in ba.iter().zip(fa.iter()).enumerate() {
+                walk_bench(bv, fv, &format!("{at}[{i}]"), out);
+            }
+        }
+        _ => {}
+    }
 }
 
 fn train(flags: &HashMap<String, String>) -> Result<()> {

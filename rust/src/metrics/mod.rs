@@ -309,6 +309,49 @@ impl MetricsRegistry {
         self.inner.gauges.lock().unwrap().clear();
         self.inner.histograms.lock().unwrap().clear();
     }
+
+    /// Clone out `(name, handle)` pairs for every registered metric.
+    /// The sampler (`crate::obs`) calls this once per tick and then
+    /// reads the shared atomics directly — registry locks are only
+    /// taken here, on the sampler thread, never on a recording path.
+    pub fn handles(&self) -> MetricHandles {
+        MetricHandles {
+            counters: self
+                .inner
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+            gauges: self
+                .inner
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+            histograms: self
+                .inner
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        }
+    }
+}
+
+/// A point-in-time clone of the registry's name→handle maps (see
+/// [`MetricsRegistry::handles`]). The `Arc`s alias the live atomics, so
+/// holding one of these reads current values without re-locking.
+#[derive(Default)]
+pub struct MetricHandles {
+    pub counters: Vec<(String, Arc<Counter>)>,
+    pub gauges: Vec<(String, Arc<Gauge>)>,
+    pub histograms: Vec<(String, Arc<Histogram>)>,
 }
 
 /// RAII timer recording into a histogram on drop.
@@ -402,6 +445,11 @@ pub struct GatewayMetrics {
     pub throttled: Arc<Counter>,
     pub dead_lettered: Arc<Counter>,
     pub backpressured: Arc<Counter>,
+    /// Dead letters currently parked at the gateway (watchdog input).
+    pub dlq_depth: Arc<Gauge>,
+    /// Worst produced-minus-committed lag across partitions, updated
+    /// on every admission decision (watchdog input).
+    pub partition_lag: Arc<Gauge>,
 }
 
 impl GatewayMetrics {
@@ -411,6 +459,8 @@ impl GatewayMetrics {
             throttled: reg.counter("ingest.gateway.throttled"),
             dead_lettered: reg.counter("ingest.gateway.dead_lettered"),
             backpressured: reg.counter("ingest.gateway.backpressured"),
+            dlq_depth: reg.gauge("ingest.gateway.dlq_depth"),
+            partition_lag: reg.gauge("ingest.gateway.partition_lag"),
         }
     }
 }

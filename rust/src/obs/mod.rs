@@ -1,0 +1,435 @@
+//! The telemetry plane: sampler → watchdogs → flight recorder.
+//!
+//! [`Observability`] owns one background thread that, once per
+//! [`SamplerConfig::period`]:
+//!
+//! 1. ticks the [`sampler`] (registry counters → windowed rates,
+//!    gauges direct, histograms at p50/p99, plus external probes such
+//!    as executor steal counts and trace-ring drops),
+//! 2. evaluates the [`watchdog`] rules against the fresh samples —
+//!    each ok→warn→critical transition is emitted as a `trace` span
+//!    (`slo.warn` / `slo.critical` / `slo.clear`) so breaches land in
+//!    the same causal timeline as the work they disturbed, and
+//! 3. on a transition *into* critical, asks the [`recorder`] for a
+//!    post-mortem bundle (auto-written when a bundle dir is set).
+//!
+//! The job layer reports failures through the process-wide hook
+//! ([`install`] / [`job_failed`]); `runtime::ObsServer` serves the
+//! same state over HTTP as `/metrics` (Prometheus text) and
+//! `/healthz` (watchdog rollup JSON).
+//!
+//! Everything here stays off the hot paths: recording a metric or a
+//! span never touches an `obs` lock — the sampler reads the shared
+//! atomics from its own thread.
+
+pub mod recorder;
+pub mod sampler;
+pub mod watchdog;
+
+pub use sampler::{ProbeKind, Sampler, SamplerConfig};
+pub use watchdog::{builtin_rules, Level, Rule, Transition, Watchdog};
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::MetricsRegistry;
+use crate::trace;
+use crate::util::json::Json;
+
+#[derive(Clone)]
+pub struct ObsConfig {
+    pub sampler: SamplerConfig,
+    pub rules: Vec<Rule>,
+    /// How much series history a post-mortem bundle carries.
+    pub bundle_window: Duration,
+    /// Span-archive cap per bundle.
+    pub bundle_spans: usize,
+    /// When set, critical breaches and reported job failures write
+    /// `postmortem-*.json` bundles here automatically.
+    pub bundle_dir: Option<PathBuf>,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            sampler: SamplerConfig::default(),
+            rules: builtin_rules(Duration::from_millis(500)),
+            bundle_window: Duration::from_secs(30),
+            bundle_spans: 512,
+            bundle_dir: None,
+        }
+    }
+}
+
+struct ObsState {
+    sampler: Sampler,
+    watchdog: Watchdog,
+}
+
+/// The live telemetry plane for one registry. Create with
+/// [`Observability::start`]; the sampling thread stops on drop.
+pub struct Observability {
+    cfg: ObsConfig,
+    registry: MetricsRegistry,
+    start: Instant,
+    state: Mutex<ObsState>,
+    stop: AtomicBool,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    bundles: AtomicU64,
+    last_bundle: Mutex<Option<Json>>,
+}
+
+impl Observability {
+    /// Spawn the sampling/watchdog thread over `registry`.
+    pub fn start(registry: MetricsRegistry, cfg: ObsConfig) -> Arc<Self> {
+        let obs = Arc::new(Self {
+            state: Mutex::new(ObsState {
+                sampler: Sampler::new(registry.clone(), cfg.sampler.clone()),
+                watchdog: Watchdog::new(cfg.rules.clone()),
+            }),
+            cfg,
+            registry,
+            start: Instant::now(),
+            stop: AtomicBool::new(false),
+            thread: Mutex::new(None),
+            bundles: AtomicU64::new(0),
+            last_bundle: Mutex::new(None),
+        });
+        let weak = Arc::downgrade(&obs);
+        let period = obs.cfg.sampler.period;
+        let handle = std::thread::Builder::new()
+            .name("obs-sampler".into())
+            .spawn(move || loop {
+                std::thread::sleep(period);
+                match weak.upgrade() {
+                    Some(obs) if !obs.stop.load(Ordering::Relaxed) => obs.tick_once(),
+                    _ => break,
+                }
+            })
+            .expect("spawn obs-sampler thread");
+        *obs.thread.lock().unwrap() = Some(handle);
+        obs
+    }
+
+    /// Milliseconds since this plane started — the sampler clock.
+    pub fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    /// Register an external value source on the sampler.
+    pub fn add_probe(
+        &self,
+        name: impl Into<String>,
+        kind: ProbeKind,
+        read: impl Fn() -> f64 + Send + 'static,
+    ) {
+        self.state.lock().unwrap().sampler.add_probe(name, kind, read);
+    }
+
+    /// One sampler tick + watchdog evaluation. The background thread
+    /// calls this on its period; tests call it directly.
+    pub fn tick_once(&self) {
+        let now_ms = self.now_ms();
+        let mut criticals = Vec::new();
+        {
+            let mut st = self.state.lock().unwrap();
+            let ObsState { sampler, watchdog } = &mut *st;
+            sampler.tick(now_ms);
+            let fired = watchdog.eval(now_ms, |name| sampler.latest(name));
+            for t in &fired {
+                let mut sp = trace::span(t.to.span_name(), trace::Category::Other);
+                sp.arg("rule", t.rule_idx as u64);
+                sp.arg("value", t.value as u64);
+                if t.to == Level::Critical {
+                    criticals.push(*t);
+                }
+            }
+        }
+        for t in criticals {
+            let reason =
+                format!("slo breach: rule '{}' went critical (value {:.1})", t.rule, t.value);
+            self.record_bundle(&reason);
+        }
+    }
+
+    /// Latest sample of a series (see [`Sampler::latest`]).
+    pub fn latest(&self, series: &str) -> Option<f64> {
+        self.state.lock().unwrap().sampler.latest(series)
+    }
+
+    pub fn rule_level(&self, rule: &str) -> Option<Level> {
+        self.state.lock().unwrap().watchdog.level(rule)
+    }
+
+    pub fn rule_value(&self, rule: &str) -> Option<f64> {
+        self.state.lock().unwrap().watchdog.last_value(rule)
+    }
+
+    pub fn overall(&self) -> Level {
+        self.state.lock().unwrap().watchdog.overall()
+    }
+
+    /// Bundles captured so far (breaches + reported job failures).
+    pub fn bundles_captured(&self) -> u64 {
+        self.bundles.load(Ordering::Relaxed)
+    }
+
+    /// The most recent post-mortem bundle, if any was captured.
+    pub fn last_bundle(&self) -> Option<Json> {
+        self.last_bundle.lock().unwrap().clone()
+    }
+
+    /// Capture a post-mortem bundle right now.
+    pub fn capture_bundle(&self, reason: &str) -> Json {
+        let now_ms = self.now_ms();
+        let st = self.state.lock().unwrap();
+        recorder::capture(
+            reason,
+            now_ms,
+            &st.sampler,
+            &st.watchdog,
+            &self.registry,
+            self.cfg.bundle_window,
+            self.cfg.bundle_spans,
+        )
+    }
+
+    fn record_bundle(&self, reason: &str) {
+        let bundle = self.capture_bundle(reason);
+        let n = self.bundles.fetch_add(1, Ordering::Relaxed);
+        if let Some(dir) = &self.cfg.bundle_dir {
+            let _ = std::fs::create_dir_all(dir);
+            let path = dir.join(format!("postmortem-{}-{n}.json", std::process::id()));
+            if let Err(e) = recorder::write(&path, &bundle) {
+                eprintln!("obs: failed to write post-mortem bundle: {e:#}");
+            }
+        }
+        *self.last_bundle.lock().unwrap() = Some(bundle);
+    }
+
+    /// Capture + write a bundle to an explicit path (CI artifacts,
+    /// `jobs --force-postmortem`).
+    pub fn write_bundle(&self, reason: &str, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let bundle = self.capture_bundle(reason);
+        self.bundles.fetch_add(1, Ordering::Relaxed);
+        recorder::write(path, &bundle)?;
+        *self.last_bundle.lock().unwrap() = Some(bundle);
+        Ok(())
+    }
+
+    /// `/healthz` payload: worst level across rules + per-rule detail.
+    pub fn health_json(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        Json::obj(vec![
+            ("status", Json::str(st.watchdog.overall().label())),
+            ("rules", st.watchdog.states_json()),
+        ])
+    }
+
+    /// `/metrics` payload: the registry in Prometheus text format.
+    /// Scraped fresh from the shared atomics, not from the sampler.
+    pub fn prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        fn sanitize(name: &str) -> String {
+            name.chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect()
+        }
+        let h = self.registry.handles();
+        let mut out = String::new();
+        for (name, c) in h.counters {
+            let s = sanitize(&name);
+            writeln!(out, "# TYPE {s} counter").unwrap();
+            writeln!(out, "{s} {}", c.get()).unwrap();
+        }
+        for (name, g) in h.gauges {
+            let s = sanitize(&name);
+            writeln!(out, "# TYPE {s} gauge").unwrap();
+            writeln!(out, "{s} {}", g.get()).unwrap();
+        }
+        for (name, hist) in h.histograms {
+            let s = sanitize(&name);
+            writeln!(out, "# TYPE {s}_count counter").unwrap();
+            writeln!(out, "{s}_count {}", hist.count()).unwrap();
+            for (suffix, v) in [
+                ("p50_us", hist.quantile(0.5).as_micros() as u64),
+                ("p99_us", hist.quantile(0.99).as_micros() as u64),
+                ("max_us", hist.max().as_micros() as u64),
+            ] {
+                writeln!(out, "# TYPE {s}_{suffix} gauge").unwrap();
+                writeln!(out, "{s}_{suffix} {v}").unwrap();
+            }
+        }
+        out
+    }
+
+    /// One text-dashboard frame for `adcloud top`.
+    pub fn dashboard(&self) -> String {
+        use std::fmt::Write as _;
+        const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let st = self.state.lock().unwrap();
+        let mut out = String::new();
+        writeln!(
+            out,
+            "adcloud top — t+{:.1}s, {} series, health: {}",
+            self.start.elapsed().as_secs_f64(),
+            st.sampler.names().len(),
+            st.watchdog.overall().label()
+        )
+        .unwrap();
+        writeln!(out, "\n{:<20} {:<9} {:>14}  thresholds", "rule", "level", "value").unwrap();
+        for row in st.watchdog.rules().iter() {
+            let level = st.watchdog.level(row.name).unwrap_or(Level::Ok);
+            let value = st.watchdog.last_value(row.name).unwrap_or(0.0);
+            writeln!(
+                out,
+                "{:<20} {:<9} {:>14.1}  warn {:.0} / crit {:.0}",
+                row.name,
+                level.label(),
+                value,
+                row.warn,
+                row.critical
+            )
+            .unwrap();
+        }
+        writeln!(out, "\n{:<44} {:>14} {:>14}  last 32 ticks", "series", "last", "max").unwrap();
+        let names: Vec<String> = st.sampler.names().iter().map(|s| s.to_string()).collect();
+        for name in names {
+            let tail = st.sampler.window(&name, 0);
+            let tail = &tail[tail.len().saturating_sub(32)..];
+            let last = tail.last().map(|&(_, v)| v).unwrap_or(0.0);
+            let max = tail.iter().map(|&(_, v)| v).fold(f64::MIN, f64::max).max(1e-9);
+            let spark: String = tail
+                .iter()
+                .map(|&(_, v)| {
+                    let idx = ((v / max) * 7.0).round().clamp(0.0, 7.0) as usize;
+                    SPARK[idx]
+                })
+                .collect();
+            writeln!(out, "{name:<44} {last:>14.1} {max:>14.1}  {spark}").unwrap();
+        }
+        out
+    }
+
+    /// Stop and join the sampling thread (also runs on drop).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Observability {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// ---------------------------------------------------------------- hook
+
+static HOOK: OnceLock<Mutex<Option<Arc<Observability>>>> = OnceLock::new();
+
+fn hook() -> &'static Mutex<Option<Arc<Observability>>> {
+    HOOK.get_or_init(|| Mutex::new(None))
+}
+
+/// Make `obs` the process-wide telemetry plane: job failures reported
+/// via [`job_failed`] capture flight-recorder bundles on it. Tests
+/// that install must serialize (reuse `trace::testing::serial`).
+pub fn install(obs: &Arc<Observability>) {
+    *hook().lock().unwrap() = Some(obs.clone());
+}
+
+pub fn uninstall() {
+    *hook().lock().unwrap() = None;
+}
+
+pub fn installed() -> Option<Arc<Observability>> {
+    hook().lock().unwrap().clone()
+}
+
+/// Report a failed job to the installed telemetry plane (no-op when
+/// none is installed). Called by the job layer on every error return.
+pub fn job_failed(app: &str, err: &anyhow::Error) {
+    if let Some(obs) = installed() {
+        obs.record_bundle(&format!("job '{app}' failed: {err:#}"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> ObsConfig {
+        ObsConfig {
+            sampler: SamplerConfig { period: Duration::from_millis(2), ..Default::default() },
+            rules: builtin_rules(Duration::ZERO),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn background_thread_samples_and_trips_rules() {
+        let m = MetricsRegistry::new();
+        let obs = Observability::start(m.clone(), fast_cfg());
+        m.gauge("ingest.gateway.dlq_depth").set(500);
+        let t0 = Instant::now();
+        while obs.rule_level("ingest-dlq") != Some(Level::Critical) {
+            assert!(t0.elapsed() < Duration::from_secs(5), "watchdog never tripped");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(obs.overall(), Level::Critical);
+        assert!(obs.bundles_captured() >= 1, "critical breach must capture a bundle");
+        let bundle = obs.last_bundle().unwrap();
+        assert!(bundle.req("reason").unwrap().as_str().unwrap().contains("ingest-dlq"));
+        obs.stop();
+    }
+
+    #[test]
+    fn job_failed_hook_captures_a_bundle_when_installed() {
+        let _g = trace::testing::serial();
+        let m = MetricsRegistry::new();
+        let obs = Observability::start(m, fast_cfg());
+        install(&obs);
+        job_failed("unit-app", &anyhow::anyhow!("simulated shard explosion"));
+        uninstall();
+        let bundle = obs.last_bundle().expect("hook must capture a bundle");
+        let reason = bundle.req("reason").unwrap().as_str().unwrap().to_string();
+        assert!(reason.contains("unit-app") && reason.contains("shard explosion"), "{reason}");
+        assert!(job_failed_is_noop_without_hook());
+        obs.stop();
+    }
+
+    fn job_failed_is_noop_without_hook() -> bool {
+        job_failed("nobody-listening", &anyhow::anyhow!("x"));
+        true
+    }
+
+    #[test]
+    fn prometheus_text_and_health_render() {
+        let m = MetricsRegistry::new();
+        m.counter("a.b").add(3);
+        m.gauge("c.d").set(9);
+        m.histogram("e.f").record(Duration::from_micros(100));
+        let obs = Observability::start(m, fast_cfg());
+        let text = obs.prometheus_text();
+        assert!(text.contains("# TYPE a_b counter"));
+        assert!(text.contains("a_b 3"));
+        assert!(text.contains("c_d 9"));
+        assert!(text.contains("e_f_count 1"));
+        let health = obs.health_json();
+        assert_eq!(health.req("status").unwrap().as_str().unwrap(), "ok");
+        let dash = obs.dashboard();
+        assert!(dash.contains("adcloud top"));
+        obs.stop();
+    }
+}

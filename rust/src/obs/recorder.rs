@@ -1,0 +1,214 @@
+//! Flight recorder: when a job fails or a watchdog rule goes
+//! critical, capture everything an operator needs for a post-mortem
+//! into one JSON bundle — the last N seconds of every sampler series,
+//! the recent span archive, a full `report_json` registry snapshot,
+//! and the watchdog rule states + transition log.
+//!
+//! Bundles round-trip: [`capture`] → [`write`] → [`load`] →
+//! [`render`], and `adcloud postmortem <bundle>` is a thin CLI over
+//! `load` + `render`.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::MetricsRegistry;
+use crate::obs::sampler::Sampler;
+use crate::obs::watchdog::Watchdog;
+use crate::trace::{self, SpanEvent};
+use crate::util::json::Json;
+
+pub const BUNDLE_VERSION: u64 = 1;
+
+fn span_json(e: &SpanEvent) -> Json {
+    let args: Vec<(&str, Json)> = e
+        .args()
+        .iter()
+        .map(|&(k, v)| (k, Json::num(v as f64)))
+        .collect();
+    Json::obj(vec![
+        ("name", Json::str(e.name)),
+        ("cat", Json::str(e.cat.label())),
+        ("trace_id", Json::num(e.trace_id as f64)),
+        ("span_id", Json::num(e.span_id as f64)),
+        ("parent_id", Json::num(e.parent_id as f64)),
+        ("start_us", Json::num(e.start_us as f64)),
+        ("end_us", Json::num(e.end_us as f64)),
+        ("tid", Json::num(e.tid as f64)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// Snapshot one post-mortem bundle. `now_ms` is the sampler clock;
+/// `window` bounds how much series history the bundle carries and
+/// `max_spans` caps the span archive copy.
+pub fn capture(
+    reason: &str,
+    now_ms: u64,
+    sampler: &Sampler,
+    watchdog: &Watchdog,
+    registry: &MetricsRegistry,
+    window: Duration,
+    max_spans: usize,
+) -> Json {
+    let spans: Vec<Json> = trace::tracer()
+        .recent(max_spans)
+        .iter()
+        .map(span_json)
+        .collect();
+    Json::obj(vec![
+        ("version", Json::num(BUNDLE_VERSION as f64)),
+        ("reason", Json::str(reason)),
+        ("at_ms", Json::num(now_ms as f64)),
+        ("window_ms", Json::num(window.as_millis() as f64)),
+        ("series", sampler.tail_json(now_ms, window)),
+        ("spans", Json::arr(spans)),
+        ("metrics", registry.report_json()),
+        ("rules", watchdog.states_json()),
+        ("transitions", watchdog.transitions_json()),
+    ])
+}
+
+pub fn write(path: impl AsRef<Path>, bundle: &Json) -> Result<()> {
+    let path = path.as_ref();
+    std::fs::write(path, bundle.to_string_pretty())
+        .with_context(|| format!("writing flight-recorder bundle {}", path.display()))
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Json> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading flight-recorder bundle {}", path.display()))?;
+    Json::parse(&text).with_context(|| format!("parsing bundle {}", path.display()))
+}
+
+/// Pretty-print a bundle for `adcloud postmortem`: the reason, every
+/// non-ok rule, the transition history, the tail value of each series,
+/// and the slowest recent spans.
+pub fn render(bundle: &Json) -> Result<String> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let reason = bundle.req("reason")?.as_str()?;
+    let at_ms = bundle.req("at_ms")?.as_f64()?;
+    writeln!(out, "== flight recorder bundle ==").unwrap();
+    writeln!(out, "reason:  {reason}").unwrap();
+    writeln!(out, "at:      t+{:.1}s (sampler clock)", at_ms / 1000.0).unwrap();
+
+    writeln!(out, "\n-- watchdog rules --").unwrap();
+    for row in bundle.req("rules")?.as_arr()? {
+        let level = row.req("level")?.as_str()?;
+        let marker = match level {
+            "critical" => "!!",
+            "warn" => " !",
+            _ => "  ",
+        };
+        writeln!(
+            out,
+            "{marker} {:<18} {:<8} value {:>12.1}  (warn {:.0} / critical {:.0})  {}",
+            row.req("rule")?.as_str()?,
+            level,
+            row.req("value")?.as_f64()?,
+            row.req("warn")?.as_f64()?,
+            row.req("critical")?.as_f64()?,
+            row.req("series")?.as_str()?,
+        )
+        .unwrap();
+    }
+
+    let transitions = bundle.req("transitions")?.as_arr()?;
+    if !transitions.is_empty() {
+        writeln!(out, "\n-- transitions --").unwrap();
+        for t in transitions {
+            writeln!(
+                out,
+                "  t+{:>8.1}s  {:<18} {} -> {}  (value {:.1})",
+                t.req("at_ms")?.as_f64()? / 1000.0,
+                t.req("rule")?.as_str()?,
+                t.req("from")?.as_str()?,
+                t.req("to")?.as_str()?,
+                t.req("value")?.as_f64()?,
+            )
+            .unwrap();
+        }
+    }
+
+    writeln!(out, "\n-- series (tail of recorded window) --").unwrap();
+    for (name, points) in bundle.req("series")?.as_obj()? {
+        let points = points.as_arr()?;
+        let last = match points.last() {
+            Some(p) => p.as_arr()?[1].as_f64()?,
+            None => continue,
+        };
+        let max = points
+            .iter()
+            .filter_map(|p| p.as_arr().ok().and_then(|a| a[1].as_f64().ok()))
+            .fold(f64::MIN, f64::max);
+        writeln!(out, "  {name:<44} last {last:>14.2}  max {max:>14.2}  n={}", points.len())
+            .unwrap();
+    }
+
+    let spans = bundle.req("spans")?.as_arr()?;
+    writeln!(out, "\n-- spans ({} recorded) --", spans.len()).unwrap();
+    let mut slowest: Vec<(&Json, f64)> = spans
+        .iter()
+        .map(|s| {
+            let d = s.req("end_us").and_then(|e| e.as_f64()).unwrap_or(0.0)
+                - s.req("start_us").and_then(|e| e.as_f64()).unwrap_or(0.0);
+            (s, d)
+        })
+        .collect();
+    slowest.sort_by(|a, b| b.1.total_cmp(&a.1));
+    for (s, d) in slowest.iter().take(10) {
+        writeln!(
+            out,
+            "  {:<24} {:<18} {:>10.0}us  trace {}",
+            s.req("name")?.as_str()?,
+            s.req("cat")?.as_str()?,
+            d,
+            s.req("trace_id")?.as_f64()?,
+        )
+        .unwrap();
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::sampler::SamplerConfig;
+    use crate::obs::watchdog::{builtin_rules, Watchdog};
+
+    #[test]
+    fn bundle_round_trips_through_write_load_render() {
+        let _g = trace::testing::serial();
+        let m = MetricsRegistry::new();
+        m.counter("storage.tiered.evict.mem").add(5000);
+        m.gauge("ingest.gateway.dlq_depth").set(75);
+        m.histogram("platform.job.grant_wait").record(Duration::from_millis(200));
+        let mut s = Sampler::new(m.clone(), SamplerConfig::default());
+        s.tick(0);
+        s.tick(1000);
+        let mut w = Watchdog::new(builtin_rules(Duration::ZERO));
+        w.eval(1000, |name| s.latest(name));
+        assert!(
+            w.level("ingest-dlq") == Some(crate::obs::Level::Critical),
+            "dlq_depth 75 must trip the built-in rule"
+        );
+
+        let bundle = capture("test breach", 1000, &s, &w, &m, Duration::from_secs(30), 64);
+        let dir = std::env::temp_dir().join(format!("adcloud-obs-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bundle-roundtrip.json");
+        write(&path, &bundle).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded, bundle, "bundle must survive the disk round-trip");
+
+        let text = render(&loaded).unwrap();
+        assert!(text.contains("test breach"));
+        assert!(text.contains("ingest-dlq"));
+        assert!(text.contains("critical"));
+        assert!(text.contains("ingest.gateway.dlq_depth"));
+        std::fs::remove_file(&path).ok();
+    }
+}

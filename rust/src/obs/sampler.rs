@@ -1,0 +1,398 @@
+//! Time-series sampler: periodic snapshots of a [`MetricsRegistry`]
+//! into per-series fixed-capacity ring buffers.
+//!
+//! Counters become *windowed rates* (`<name>.rate`, per second, from
+//! deltas between ticks), gauges are sampled directly (`<name>`), and
+//! histograms are sampled at their current p50/p99 (`<name>.p50`,
+//! `<name>.p99`, microseconds). External sources that are not in the
+//! registry — executor steal counts, trace-ring drops — plug in as
+//! probes ([`Sampler::add_probe`]).
+//!
+//! **Zero new locks on hot paths.** The sampler clones the registry's
+//! `(name, Arc)` handle map once per tick ([`MetricsRegistry::handles`])
+//! and then reads the same atomics the cached metric handles write;
+//! recording paths never see the sampler's own mutex.
+//!
+//! **Bounded memory.** Each series keeps a fine ring (one slot per
+//! tick, default 512) plus a coarse ring downsampled every
+//! `coarse_every` ticks into `(mean, max)` points (default capacity
+//! 2250). At the default 100 ms period that is ~51 s of fine history
+//! and an hour of coarse history in a few tens of KiB per series.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Duration;
+
+use crate::metrics::MetricsRegistry;
+use crate::util::json::Json;
+
+#[derive(Clone)]
+pub struct SamplerConfig {
+    /// Tick period; the background thread in [`crate::obs::Observability`]
+    /// sleeps this long between ticks.
+    pub period: Duration,
+    /// Fine ring capacity (one slot per tick).
+    pub fine_capacity: usize,
+    /// Fold one coarse point out of every N ticks.
+    pub coarse_every: usize,
+    /// Coarse ring capacity.
+    pub coarse_capacity: usize,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        Self {
+            period: Duration::from_millis(100),
+            fine_capacity: 512,
+            coarse_every: 16,
+            coarse_capacity: 2250,
+        }
+    }
+}
+
+/// How a probe's raw value is interpreted.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ProbeKind {
+    /// Monotonic count: the series is the windowed rate (`<name>.rate`).
+    Counter,
+    /// Point-in-time level: sampled directly under the probe's name.
+    Gauge,
+}
+
+struct Probe {
+    name: String,
+    kind: ProbeKind,
+    read: Box<dyn Fn() -> f64 + Send>,
+    last: Option<f64>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CoarsePoint {
+    pub at_ms: u64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+struct CoarseAcc {
+    start_ms: u64,
+    sum: f64,
+    max: f64,
+    n: usize,
+}
+
+#[derive(Default)]
+struct Series {
+    fine: VecDeque<(u64, f64)>,
+    coarse: VecDeque<CoarsePoint>,
+    acc: Option<CoarseAcc>,
+}
+
+impl Series {
+    fn push(&mut self, at_ms: u64, v: f64, cfg: &SamplerConfig) {
+        self.fine.push_back((at_ms, v));
+        while self.fine.len() > cfg.fine_capacity {
+            self.fine.pop_front();
+        }
+        let acc = self.acc.get_or_insert(CoarseAcc {
+            start_ms: at_ms,
+            sum: 0.0,
+            max: f64::MIN,
+            n: 0,
+        });
+        acc.sum += v;
+        acc.max = acc.max.max(v);
+        acc.n += 1;
+        if acc.n >= cfg.coarse_every.max(1) {
+            let point = CoarsePoint {
+                at_ms: acc.start_ms,
+                mean: acc.sum / acc.n as f64,
+                max: acc.max,
+            };
+            self.acc = None;
+            self.coarse.push_back(point);
+            while self.coarse.len() > cfg.coarse_capacity {
+                self.coarse.pop_front();
+            }
+        }
+    }
+}
+
+/// The sampler state machine. Owns no thread: callers (the
+/// [`crate::obs::Observability`] loop, or tests) drive [`Sampler::tick`]
+/// with an explicit clock, which keeps every transition deterministic.
+pub struct Sampler {
+    registry: MetricsRegistry,
+    cfg: SamplerConfig,
+    series: BTreeMap<String, Series>,
+    last_counter: BTreeMap<String, u64>,
+    probes: Vec<Probe>,
+    last_tick_ms: Option<u64>,
+    ticks: u64,
+}
+
+impl Sampler {
+    pub fn new(registry: MetricsRegistry, cfg: SamplerConfig) -> Self {
+        Self {
+            registry,
+            cfg,
+            series: BTreeMap::new(),
+            last_counter: BTreeMap::new(),
+            probes: Vec::new(),
+            last_tick_ms: None,
+            ticks: 0,
+        }
+    }
+
+    pub fn config(&self) -> &SamplerConfig {
+        &self.cfg
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Register an external value source (executor steals, trace-ring
+    /// drops). `Counter` probes are surfaced as `<name>.rate`.
+    pub fn add_probe(
+        &mut self,
+        name: impl Into<String>,
+        kind: ProbeKind,
+        read: impl Fn() -> f64 + Send + 'static,
+    ) {
+        self.probes.push(Probe { name: name.into(), kind, read: Box::new(read), last: None });
+    }
+
+    /// Take one snapshot at `now_ms` (milliseconds on the caller's
+    /// monotonic clock). Counter rates are deltas against the previous
+    /// tick, clamped at zero so a registry `clear()` between ticks can
+    /// never produce a negative rate.
+    pub fn tick(&mut self, now_ms: u64) {
+        let dt_s = match self.last_tick_ms {
+            Some(prev) => (now_ms.saturating_sub(prev) as f64 / 1000.0).max(1e-6),
+            None => f64::INFINITY, // first tick: every rate is 0
+        };
+        self.last_tick_ms = Some(now_ms);
+        self.ticks += 1;
+
+        let handles = self.registry.handles();
+        for (name, c) in handles.counters {
+            let cur = c.get();
+            let prev = *self.last_counter.get(&name).unwrap_or(&cur);
+            self.last_counter.insert(name.clone(), cur);
+            let rate = cur.saturating_sub(prev) as f64 / dt_s;
+            self.push(format!("{name}.rate"), now_ms, rate);
+        }
+        for (name, g) in handles.gauges {
+            self.push(name, now_ms, g.get() as f64);
+        }
+        for (name, h) in handles.histograms {
+            if h.count() == 0 {
+                continue;
+            }
+            let p50 = h.quantile(0.5).as_micros() as f64;
+            let p99 = h.quantile(0.99).as_micros() as f64;
+            self.push(format!("{name}.p50"), now_ms, p50);
+            self.push(format!("{name}.p99"), now_ms, p99);
+        }
+        for i in 0..self.probes.len() {
+            let raw = (self.probes[i].read)();
+            match self.probes[i].kind {
+                ProbeKind::Gauge => {
+                    let name = self.probes[i].name.clone();
+                    self.push(name, now_ms, raw);
+                }
+                ProbeKind::Counter => {
+                    let prev = self.probes[i].last.unwrap_or(raw);
+                    self.probes[i].last = Some(raw);
+                    let rate = (raw - prev).max(0.0) / dt_s;
+                    let name = format!("{}.rate", self.probes[i].name);
+                    self.push(name, now_ms, rate);
+                }
+            }
+        }
+    }
+
+    fn push(&mut self, name: String, at_ms: u64, v: f64) {
+        self.series.entry(name).or_default().push(at_ms, v, &self.cfg);
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.series.keys().map(String::as_str).collect()
+    }
+
+    /// Most recent sample of a series.
+    pub fn latest(&self, name: &str) -> Option<f64> {
+        self.series.get(name).and_then(|s| s.fine.back()).map(|&(_, v)| v)
+    }
+
+    /// Fine samples with `at_ms >= since_ms`, oldest first.
+    pub fn window(&self, name: &str, since_ms: u64) -> Vec<(u64, f64)> {
+        match self.series.get(name) {
+            Some(s) => s.fine.iter().copied().filter(|&(t, _)| t >= since_ms).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// The downsampled long-horizon ring for one series.
+    pub fn coarse(&self, name: &str) -> Vec<CoarsePoint> {
+        match self.series.get(name) {
+            Some(s) => s.coarse.iter().copied().collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Every series' fine tail inside the window, as
+    /// `{name: [[at_ms, value], ...]}` — the flight recorder's payload.
+    pub fn tail_json(&self, now_ms: u64, window: Duration) -> Json {
+        let since = now_ms.saturating_sub(window.as_millis() as u64);
+        let pairs: Vec<(String, Json)> = self
+            .series
+            .iter()
+            .map(|(name, s)| {
+                let points: Vec<Json> = s
+                    .fine
+                    .iter()
+                    .filter(|&&(t, _)| t >= since)
+                    .map(|&(t, v)| Json::arr(vec![Json::num(t as f64), Json::num(v)]))
+                    .collect();
+                (name.clone(), Json::arr(points))
+            })
+            .collect();
+        Json::Obj(pairs.into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    fn cfg() -> SamplerConfig {
+        SamplerConfig { fine_capacity: 8, coarse_every: 4, coarse_capacity: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn counters_become_rates_gauges_sample_directly() {
+        let m = MetricsRegistry::new();
+        let mut s = Sampler::new(m.clone(), cfg());
+        m.counter("c").add(10);
+        m.gauge("g").set(7);
+        s.tick(0); // first tick: baseline, rate 0
+        assert_eq!(s.latest("c.rate"), Some(0.0));
+        assert_eq!(s.latest("g"), Some(7.0));
+        m.counter("c").add(50);
+        m.gauge("g").set(3);
+        s.tick(1000);
+        assert_eq!(s.latest("c.rate"), Some(50.0), "50 increments over 1s");
+        assert_eq!(s.latest("g"), Some(3.0));
+    }
+
+    #[test]
+    fn histograms_sample_p50_and_p99() {
+        let m = MetricsRegistry::new();
+        let mut s = Sampler::new(m.clone(), cfg());
+        for _ in 0..100 {
+            m.histogram("h").record(Duration::from_micros(10));
+        }
+        s.tick(0);
+        assert_eq!(s.latest("h.p50"), Some(10.0));
+        assert!(s.latest("h.p99").unwrap() >= 10.0);
+    }
+
+    #[test]
+    fn registry_clear_between_ticks_never_yields_negative_rates() {
+        let m = MetricsRegistry::new();
+        let mut s = Sampler::new(m.clone(), cfg());
+        m.counter("c").add(1000);
+        s.tick(0);
+        s.tick(100);
+        m.clear();
+        m.counter("c").add(1); // reborn counter, far below the old value
+        s.tick(200);
+        for (_, v) in s.window("c.rate", 0) {
+            assert!(v >= 0.0, "rate went negative: {v}");
+        }
+    }
+
+    #[test]
+    fn rates_stay_nonnegative_under_concurrent_mutation() {
+        // Writers hammer a counter and flip a gauge while the sampler
+        // ticks as fast as it can: every rate sample must be finite and
+        // >= 0 (no torn reads, no negative deltas).
+        let m = MetricsRegistry::new();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut writers = Vec::new();
+        for w in 0..4 {
+            let m = m.clone();
+            let stop = stop.clone();
+            writers.push(std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    m.counter("hot").add(1 + w);
+                    m.gauge("level").set(i % 1000);
+                    i += 1;
+                }
+            }));
+        }
+        let mut s = Sampler::new(m.clone(), cfg());
+        let clock = AtomicU64::new(0);
+        for _ in 0..200 {
+            s.tick(clock.fetch_add(5, Ordering::Relaxed));
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
+        let samples = s.window("hot.rate", 0);
+        assert!(!samples.is_empty());
+        for (_, v) in samples {
+            assert!(v.is_finite() && v >= 0.0, "bad rate sample: {v}");
+        }
+    }
+
+    #[test]
+    fn rings_stay_bounded_and_coarse_downsamples_mean_and_max() {
+        let m = MetricsRegistry::new();
+        let mut s = Sampler::new(m.clone(), cfg());
+        for i in 0..100u64 {
+            m.gauge("g").set(i);
+            s.tick(i * 10);
+        }
+        assert_eq!(s.window("g", 0).len(), 8, "fine ring capped at capacity");
+        let coarse = s.coarse("g");
+        assert_eq!(coarse.len(), 4, "coarse ring capped at capacity");
+        let last = coarse.last().unwrap();
+        // Each coarse point folds 4 consecutive gauge values i..i+4.
+        assert!(last.max >= last.mean, "{last:?}");
+        assert!(last.max <= 99.0);
+    }
+
+    #[test]
+    fn counter_probes_rate_like_registry_counters() {
+        let m = MetricsRegistry::new();
+        let mut s = Sampler::new(m, cfg());
+        let v = Arc::new(AtomicU64::new(0));
+        let v2 = v.clone();
+        s.add_probe("ext.steals", ProbeKind::Counter, move || v2.load(Ordering::Relaxed) as f64);
+        s.tick(0);
+        v.store(500, Ordering::Relaxed);
+        s.tick(1000);
+        assert_eq!(s.latest("ext.steals.rate"), Some(500.0));
+        v.store(400, Ordering::Relaxed); // probe source reset
+        s.tick(2000);
+        assert_eq!(s.latest("ext.steals.rate"), Some(0.0), "clamped, never negative");
+    }
+
+    #[test]
+    fn tail_json_windows_each_series() {
+        let m = MetricsRegistry::new();
+        let mut s = Sampler::new(m.clone(), cfg());
+        for i in 0..8u64 {
+            m.gauge("g").set(i);
+            s.tick(i * 100);
+        }
+        let j = s.tail_json(700, Duration::from_millis(300));
+        let arr = j.req("g").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 4, "samples at 400..=700 only: {j:?}");
+    }
+}

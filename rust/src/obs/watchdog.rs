@@ -1,0 +1,394 @@
+//! SLO watchdog engine: declarative rules evaluated against sampler
+//! series, each running an ok→warn→critical state machine with
+//! debounce (a threshold must hold for `sustain` before escalating)
+//! and hysteresis (the value must sit below the warn line for `clear`
+//! before the rule returns to ok, so a flapping metric cannot
+//! oscillate the level every tick).
+//!
+//! The engine is a pure state machine — callers feed it a clock and a
+//! series lookup — which keeps every transition unit-testable without
+//! threads. The [`crate::obs::Observability`] loop drives it once per
+//! sampler tick and turns returned [`Transition`]s into trace spans
+//! and flight-recorder triggers.
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Severity level of a rule. Ordered: `Ok < Warn < Critical`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Ok,
+    Warn,
+    Critical,
+}
+
+impl Level {
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Ok => "ok",
+            Level::Warn => "warn",
+            Level::Critical => "critical",
+        }
+    }
+
+    /// Static span name for a transition *into* this level.
+    pub fn span_name(self) -> &'static str {
+        match self {
+            Level::Ok => "slo.clear",
+            Level::Warn => "slo.warn",
+            Level::Critical => "slo.critical",
+        }
+    }
+}
+
+/// One declarative SLO rule: watch `series`, escalate when its latest
+/// value holds at or above a threshold for `sustain`.
+#[derive(Clone, Debug)]
+pub struct Rule {
+    pub name: &'static str,
+    /// Sampler series name (e.g. `platform.job.grant_wait.p99`).
+    pub series: String,
+    /// What the rule is guarding against, for post-mortems.
+    pub what: &'static str,
+    pub warn: f64,
+    pub critical: f64,
+    /// How long a threshold must hold before escalating (debounce).
+    pub sustain: Duration,
+    /// How long the value must stay below `warn` before clearing.
+    pub clear: Duration,
+}
+
+/// A level change on one rule, emitted by [`Watchdog::eval`].
+#[derive(Clone, Copy, Debug)]
+pub struct Transition {
+    pub rule_idx: usize,
+    pub rule: &'static str,
+    pub from: Level,
+    pub to: Level,
+    pub at_ms: u64,
+    pub value: f64,
+}
+
+struct RuleState {
+    level: Level,
+    warn_since: Option<u64>,
+    crit_since: Option<u64>,
+    below_since: Option<u64>,
+    last_value: f64,
+}
+
+const MAX_TRANSITIONS: usize = 1024;
+
+pub struct Watchdog {
+    rules: Vec<Rule>,
+    states: Vec<RuleState>,
+    transitions: Vec<Transition>,
+}
+
+impl Watchdog {
+    pub fn new(rules: Vec<Rule>) -> Self {
+        let states = rules
+            .iter()
+            .map(|_| RuleState {
+                level: Level::Ok,
+                warn_since: None,
+                crit_since: None,
+                below_since: None,
+                last_value: 0.0,
+            })
+            .collect();
+        Self { rules, states, transitions: Vec::new() }
+    }
+
+    pub fn rules(&self) -> &[Rule] {
+        &self.rules
+    }
+
+    /// Evaluate every rule against the latest series values at `now_ms`.
+    /// Missing series leave the rule untouched. Returns the transitions
+    /// that fired this round (also kept in a bounded internal log).
+    pub fn eval(
+        &mut self,
+        now_ms: u64,
+        lookup: impl Fn(&str) -> Option<f64>,
+    ) -> Vec<Transition> {
+        let mut fired = Vec::new();
+        for (i, rule) in self.rules.iter().enumerate() {
+            let v = match lookup(&rule.series) {
+                Some(v) => v,
+                None => continue,
+            };
+            let st = &mut self.states[i];
+            st.last_value = v;
+            let mut next = st.level;
+            if v >= rule.critical {
+                st.below_since = None;
+                st.warn_since.get_or_insert(now_ms);
+                let since = *st.crit_since.get_or_insert(now_ms);
+                if now_ms - since >= rule.sustain.as_millis() as u64 {
+                    next = Level::Critical;
+                }
+            } else if v >= rule.warn {
+                st.below_since = None;
+                st.crit_since = None;
+                let since = *st.warn_since.get_or_insert(now_ms);
+                if st.level < Level::Warn && now_ms - since >= rule.sustain.as_millis() as u64 {
+                    next = Level::Warn;
+                }
+                // A Critical rule whose value falls back into the warn
+                // band stays Critical: hysteresis requires dropping
+                // below `warn` for `clear` before any de-escalation.
+            } else {
+                st.warn_since = None;
+                st.crit_since = None;
+                let since = *st.below_since.get_or_insert(now_ms);
+                if st.level > Level::Ok && now_ms - since >= rule.clear.as_millis() as u64 {
+                    next = Level::Ok;
+                }
+            }
+            if next != st.level {
+                let t = Transition {
+                    rule_idx: i,
+                    rule: rule.name,
+                    from: st.level,
+                    to: next,
+                    at_ms: now_ms,
+                    value: v,
+                };
+                st.level = next;
+                fired.push(t);
+                if self.transitions.len() < MAX_TRANSITIONS {
+                    self.transitions.push(t);
+                }
+            }
+        }
+        fired
+    }
+
+    pub fn level(&self, rule: &str) -> Option<Level> {
+        self.rules
+            .iter()
+            .position(|r| r.name == rule)
+            .map(|i| self.states[i].level)
+    }
+
+    pub fn last_value(&self, rule: &str) -> Option<f64> {
+        self.rules
+            .iter()
+            .position(|r| r.name == rule)
+            .map(|i| self.states[i].last_value)
+    }
+
+    /// Worst level across all rules — the `/healthz` rollup.
+    pub fn overall(&self) -> Level {
+        self.states.iter().map(|s| s.level).max().unwrap_or(Level::Ok)
+    }
+
+    pub fn transitions(&self) -> &[Transition] {
+        &self.transitions
+    }
+
+    /// Per-rule state as JSON, for `/healthz` and post-mortem bundles.
+    pub fn states_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rules
+            .iter()
+            .zip(&self.states)
+            .map(|(r, s)| {
+                Json::obj(vec![
+                    ("rule", Json::str(r.name)),
+                    ("series", Json::str(&r.series)),
+                    ("what", Json::str(r.what)),
+                    ("level", Json::str(s.level.label())),
+                    ("value", Json::num(s.last_value)),
+                    ("warn", Json::num(r.warn)),
+                    ("critical", Json::num(r.critical)),
+                ])
+            })
+            .collect();
+        Json::arr(rows)
+    }
+
+    pub fn transitions_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .transitions
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("rule", Json::str(t.rule)),
+                    ("from", Json::str(t.from.label())),
+                    ("to", Json::str(t.to.label())),
+                    ("at_ms", Json::num(t.at_ms as f64)),
+                    ("value", Json::num(t.value)),
+                ])
+            })
+            .collect();
+        Json::arr(rows)
+    }
+}
+
+/// The built-in rule set, one per failure mode the paper's planes can
+/// hit while a campaign is live. Thresholds are in the series' native
+/// units (records for lag/depth, microseconds for histogram quantiles,
+/// events/second for rates).
+pub fn builtin_rules(sustain: Duration) -> Vec<Rule> {
+    let clear = sustain * 2;
+    let rule = |name, series: &str, what, warn, critical| Rule {
+        name,
+        series: series.to_string(),
+        what,
+        warn,
+        critical,
+        sustain,
+        clear,
+    };
+    vec![
+        rule(
+            "ingest-backlog",
+            "ingest.gateway.partition_lag",
+            "worst produced-minus-committed partition lag (records); a paused compactor or stalled consumer shows up here",
+            1_000.0,
+            10_000.0,
+        ),
+        rule(
+            "ingest-dlq",
+            "ingest.gateway.dlq_depth",
+            "dead letters parked at the gateway (corrupt uploads)",
+            10.0,
+            50.0,
+        ),
+        rule(
+            "grant-wait-p99",
+            "platform.job.grant_wait.p99",
+            "p99 time jobs wait for container grants (µs); an over-admitted queue starves admission",
+            50_000.0,
+            100_000.0,
+        ),
+        rule(
+            "evict-thrash",
+            "storage.tiered.evict.mem.rate",
+            "memory-tier evictions per second; a too-small cap makes the store churn instead of cache",
+            100.0,
+            1_000.0,
+        ),
+        rule(
+            "ckpt-replay-storm",
+            "platform.ckpt.hits.rate",
+            "checkpoint lookup hits per second; mass shard replay after a failure wave",
+            50.0,
+            500.0,
+        ),
+        rule(
+            "steal-starvation",
+            "dce.executor.steals.rate",
+            "executor work-steals per second; sustained stealing means the submit path is starving some workers",
+            100.0,
+            1_000.0,
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_rule(sustain_ms: u64, clear_ms: u64) -> Watchdog {
+        Watchdog::new(vec![Rule {
+            name: "r",
+            series: "s".into(),
+            what: "test",
+            warn: 10.0,
+            critical: 100.0,
+            sustain: Duration::from_millis(sustain_ms),
+            clear: Duration::from_millis(clear_ms),
+        }])
+    }
+
+    #[test]
+    fn escalates_only_after_sustain_window() {
+        let mut w = one_rule(50, 50);
+        assert!(w.eval(0, |_| Some(500.0)).is_empty(), "not sustained yet");
+        assert_eq!(w.level("r"), Some(Level::Ok));
+        assert!(w.eval(20, |_| Some(500.0)).is_empty());
+        let t = w.eval(60, |_| Some(500.0));
+        assert_eq!(t.len(), 1);
+        assert_eq!((t[0].from, t[0].to), (Level::Ok, Level::Critical));
+        assert_eq!(w.overall(), Level::Critical);
+    }
+
+    #[test]
+    fn a_blip_below_threshold_resets_the_sustain_clock() {
+        let mut w = one_rule(50, 50);
+        w.eval(0, |_| Some(500.0));
+        w.eval(30, |_| Some(1.0)); // blip: debounce restarts
+        w.eval(60, |_| Some(500.0));
+        assert_eq!(w.level("r"), Some(Level::Ok), "60ms elapsed but not sustained");
+        let t = w.eval(120, |_| Some(500.0));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].to, Level::Critical);
+    }
+
+    #[test]
+    fn warn_band_with_hysteresis_keeps_critical_until_fully_below_warn() {
+        let mut w = one_rule(0, 50);
+        w.eval(0, |_| Some(500.0));
+        assert_eq!(w.level("r"), Some(Level::Critical));
+        // Fall back into the warn band: still critical (hysteresis).
+        w.eval(10, |_| Some(50.0));
+        assert_eq!(w.level("r"), Some(Level::Critical));
+        // Below warn, but not for long enough to clear.
+        w.eval(20, |_| Some(1.0));
+        assert_eq!(w.level("r"), Some(Level::Critical));
+        let t = w.eval(80, |_| Some(1.0));
+        assert_eq!(t.len(), 1);
+        assert_eq!((t[0].from, t[0].to), (Level::Critical, Level::Ok));
+    }
+
+    #[test]
+    fn warn_level_fires_between_thresholds() {
+        let mut w = one_rule(0, 0);
+        let t = w.eval(0, |_| Some(20.0));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].to, Level::Warn);
+        assert_eq!(w.overall(), Level::Warn);
+    }
+
+    #[test]
+    fn missing_series_leaves_state_untouched() {
+        let mut w = one_rule(0, 0);
+        w.eval(0, |_| Some(500.0));
+        assert_eq!(w.level("r"), Some(Level::Critical));
+        assert!(w.eval(10, |_| None).is_empty());
+        assert_eq!(w.level("r"), Some(Level::Critical));
+    }
+
+    #[test]
+    fn builtin_rules_cover_every_plane() {
+        let rules = builtin_rules(Duration::from_millis(500));
+        let names: Vec<_> = rules.iter().map(|r| r.name).collect();
+        for expect in [
+            "ingest-backlog",
+            "ingest-dlq",
+            "grant-wait-p99",
+            "evict-thrash",
+            "ckpt-replay-storm",
+            "steal-starvation",
+        ] {
+            assert!(names.contains(&expect), "missing builtin rule {expect}");
+        }
+        for r in &rules {
+            assert!(r.warn < r.critical, "{}: warn must sit below critical", r.name);
+        }
+    }
+
+    #[test]
+    fn states_json_reports_levels_and_values() {
+        let mut w = one_rule(0, 0);
+        w.eval(0, |_| Some(500.0));
+        let j = w.states_json();
+        let row = &j.as_arr().unwrap()[0];
+        assert_eq!(row.req("level").unwrap().as_str().unwrap(), "critical");
+        assert_eq!(row.req("value").unwrap().as_f64().unwrap(), 500.0);
+    }
+}

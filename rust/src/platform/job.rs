@@ -258,7 +258,11 @@ impl JobHandle {
             spec.grant_timeout,
             span.ctx(),
         )
-        .with_context(|| format!("acquiring grant for job '{}'", spec.app))?;
+        .with_context(|| format!("acquiring grant for job '{}'", spec.app))
+        .map_err(|e| {
+            crate::obs::job_failed(&spec.app, &e);
+            e
+        })?;
         metrics.grant_wait.record(grant.wait());
         metrics.jobs.inc();
         Ok(JobHandle {
@@ -291,6 +295,13 @@ impl JobHandle {
 
     pub fn grant_wait(&self) -> Duration {
         self.grant.wait()
+    }
+
+    /// Report a job-level failure to the installed telemetry plane
+    /// (flight-recorder bundle) and hand the error back unchanged.
+    fn report_failure(&self, e: anyhow::Error) -> anyhow::Error {
+        crate::obs::job_failed(&self.spec.app, &e);
+        e
     }
 
     fn shard_env(&self) -> ShardEnv {
@@ -331,6 +342,7 @@ impl JobHandle {
                 env.run_attempts(part, shards, container, |sctx| f(sctx, items.clone()))
             })
             .collect()
+            .map_err(|e| self.report_failure(e))
     }
 
     /// One closure per granted container on dedicated threads — for
@@ -373,7 +385,7 @@ impl JobHandle {
             }
         }
         match first_err {
-            Some(e) => Err(e),
+            Some(e) => Err(self.report_failure(e)),
             None => Ok(out),
         }
     }
@@ -382,11 +394,14 @@ impl JobHandle {
     /// of a sequential single-container stage (not preemptible: the
     /// closure is `FnOnce`, so there is nothing to requeue).
     pub fn run_single<T>(&self, f: impl FnOnce(&ContainerCtx) -> Result<T>) -> Result<T> {
-        let conts = self.grant.containers();
-        let c = conts
-            .first()
-            .ok_or_else(|| anyhow!("job '{}' holds no containers", self.spec.app))?;
-        c.run(f)?
+        let run = || -> Result<T> {
+            let conts = self.grant.containers();
+            let c = conts
+                .first()
+                .ok_or_else(|| anyhow!("job '{}' holds no containers", self.spec.app))?;
+            c.run(f)?
+        };
+        run().map_err(|e| self.report_failure(e))
     }
 
     /// Finish the job: record container-seconds, return the stats, and

@@ -29,7 +29,7 @@
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -104,9 +104,23 @@ pub struct ResourceManager {
     inner: Mutex<RmInner>,
     freed: Condvar,
     preempt: AtomicBool,
+    /// Delay-scheduling gate, microseconds: how long a request must
+    /// have waited before it may *borrow* beyond its queue's
+    /// guaranteed share. 0 (the default) borrows immediately.
+    borrow_delay_us: AtomicU64,
     metrics: MetricsRegistry,
     /// `resource.live_containers` — refreshed on every grant/release.
     live_gauge: Arc<Gauge>,
+}
+
+/// RAII decrement for `resource.queue_pending.<queue>`: dropped on
+/// every exit path of a blocking acquisition, success or timeout.
+struct PendingGuard(Arc<Gauge>);
+
+impl Drop for PendingGuard {
+    fn drop(&mut self) {
+        self.0.sub(1);
+    }
 }
 
 impl ResourceManager {
@@ -166,9 +180,34 @@ impl ResourceManager {
             }),
             freed: Condvar::new(),
             preempt: AtomicBool::new(false),
+            borrow_delay_us: AtomicU64::new(0),
             live_gauge: metrics.gauge("resource.live_containers"),
             metrics,
         })
+    }
+
+    /// Configure delay scheduling: a request must have waited this
+    /// long before it may borrow idle capacity beyond its queue's
+    /// guaranteed share. Short jobs that fit their guarantee are
+    /// admitted instantly and stop paying the borrow→preempt→requeue
+    /// round-trip; only requests that genuinely need elastic capacity
+    /// eat the delay. Zero (the default) disables the gate.
+    pub fn set_borrow_delay(&self, delay: Duration) {
+        self.borrow_delay_us.store(delay.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn borrow_delay(&self) -> Duration {
+        Duration::from_micros(self.borrow_delay_us.load(Ordering::Relaxed))
+    }
+
+    /// Mark one blocked request pending against the app's queue
+    /// (`resource.queue_pending.<queue>` gauge — a watchdog input);
+    /// the returned guard un-marks when dropped.
+    fn pending_guard(&self, inner: &RmInner, app: &str) -> PendingGuard {
+        let q = inner.apps.get(app).map(|a| a.queue.as_str()).unwrap_or("unknown");
+        let g = self.metrics.gauge(&format!("resource.queue_pending.{q}"));
+        g.add(1);
+        PendingGuard(g)
     }
 
     /// Enable or disable fair-share preemption (off by default: without
@@ -199,14 +238,18 @@ impl ResourceManager {
     }
 
     /// Non-blocking container request. Errors if nothing fits right now
-    /// or the app's queue is at its elastic ceiling.
+    /// or the app's queue is at its elastic ceiling. With a borrow
+    /// delay configured, an instant request may not borrow beyond its
+    /// guarantee at all — waiting out the delay needs
+    /// [`Self::acquire_container`].
     pub fn request_container(
         self: &Arc<Self>,
         app: &str,
         req: ResourceVec,
     ) -> Result<ContainerRef> {
+        let allow_borrow = self.borrow_delay().is_zero();
         let mut inner = self.inner.lock().unwrap();
-        let c = self.try_grant(&mut inner, app, req)?;
+        let c = self.try_grant(&mut inner, app, req, allow_borrow)?;
         self.metrics.counter("resource.containers_granted").inc();
         Ok(c)
     }
@@ -224,15 +267,22 @@ impl ResourceManager {
         req: ResourceVec,
         timeout: Duration,
     ) -> Result<ContainerRef> {
-        let deadline = Instant::now() + timeout;
+        let start = Instant::now();
+        let deadline = start + timeout;
+        let delay = self.borrow_delay();
+        let mut pending: Option<PendingGuard> = None;
         let mut inner = self.inner.lock().unwrap();
         loop {
-            match self.try_grant(&mut inner, app, req) {
+            let allow_borrow = delay.is_zero() || start.elapsed() >= delay;
+            match self.try_grant(&mut inner, app, req, allow_borrow) {
                 Ok(c) => {
                     self.metrics.counter("resource.containers_granted").inc();
                     return Ok(c);
                 }
                 Err(_) => {
+                    if pending.is_none() {
+                        pending = Some(self.pending_guard(&inner, app));
+                    }
                     if self.preemption_enabled() {
                         self.preempt_for(&mut inner, app, req.cores, req.cores);
                     }
@@ -240,7 +290,14 @@ impl ResourceManager {
                     if now >= deadline {
                         return Err(self.grant_timeout_err(&inner, app, 1, 0));
                     }
-                    let (guard, _) = self.freed.wait_timeout(inner, deadline - now).unwrap();
+                    // Wake no later than the borrow-delay gate lifts —
+                    // an idle cluster produces no release to wake us.
+                    let mut wake_at = deadline;
+                    if !allow_borrow {
+                        wake_at = wake_at.min(start + delay);
+                    }
+                    let wait = wake_at.saturating_duration_since(now);
+                    let (guard, _) = self.freed.wait_timeout(inner, wait).unwrap();
                     inner = guard;
                 }
             }
@@ -264,15 +321,19 @@ impl ResourceManager {
     ) -> Result<Vec<ContainerRef>> {
         let min = min.max(1);
         let max = max.max(min);
-        let deadline = Instant::now() + timeout;
+        let start = Instant::now();
+        let deadline = start + timeout;
+        let delay = self.borrow_delay();
+        let mut pending: Option<PendingGuard> = None;
         let mut inner = self.inner.lock().unwrap();
         // Fail fast on floors no empty cluster or queue ceiling can
         // ever admit — blocking would only burn the whole timeout.
         self.check_gang_feasible(&inner, app, req, min)?;
         loop {
+            let allow_borrow = delay.is_zero() || start.elapsed() >= delay;
             let mut gang: Vec<ContainerRef> = Vec::with_capacity(max);
             while gang.len() < min {
-                match self.try_grant(&mut inner, app, req) {
+                match self.try_grant(&mut inner, app, req, allow_borrow) {
                     Ok(c) => gang.push(c),
                     Err(_) => break,
                 }
@@ -280,7 +341,7 @@ impl ResourceManager {
             if gang.len() >= min {
                 // Floor secured atomically; take elastic extras.
                 while gang.len() < max {
-                    match self.try_grant(&mut inner, app, req) {
+                    match self.try_grant(&mut inner, app, req, allow_borrow) {
                         Ok(c) => gang.push(c),
                         Err(_) => break,
                     }
@@ -296,6 +357,9 @@ impl ResourceManager {
             for c in gang.drain(..) {
                 let _ = self.release_locked(&mut inner, &c);
             }
+            if pending.is_none() {
+                pending = Some(self.pending_guard(&inner, app));
+            }
             if self.preemption_enabled() {
                 self.preempt_for(&mut inner, app, min * req.cores, (min - grantable) * req.cores);
             }
@@ -303,7 +367,12 @@ impl ResourceManager {
             if now >= deadline {
                 return Err(self.grant_timeout_err(&inner, app, min - grantable, grantable));
             }
-            let (guard, _) = self.freed.wait_timeout(inner, deadline - now).unwrap();
+            let mut wake_at = deadline;
+            if !allow_borrow {
+                wake_at = wake_at.min(start + delay);
+            }
+            let wait = wake_at.saturating_duration_since(now);
+            let (guard, _) = self.freed.wait_timeout(inner, wait).unwrap();
             inner = guard;
         }
     }
@@ -486,18 +555,34 @@ impl ResourceManager {
         inner: &mut RmInner,
         app: &str,
         req: ResourceVec,
+        allow_borrow: bool,
     ) -> Result<ContainerRef> {
         let queue_name = match inner.apps.get(app) {
             Some(a) => a.queue.clone(),
             None => bail!("app '{app}' not submitted"),
         };
         // Capacity check: elastic ceiling at max_share * total_cores.
+        // Delay scheduling caps a young request at its queue's
+        // guaranteed share until the configured delay elapses.
         {
             let total = inner.total_cores;
             let q = inner.queues.get(&queue_name).unwrap();
-            let cap = (q.max_share * total as f64).ceil() as usize;
+            let elastic = (q.max_share * total as f64).ceil() as usize;
+            let cap = if allow_borrow {
+                elastic
+            } else {
+                elastic.min((q.share * total as f64).ceil() as usize)
+            };
             if q.cores_used + req.cores > cap {
                 self.metrics.counter("resource.queue_rejections").inc();
+                if !allow_borrow && q.cores_used + req.cores <= elastic {
+                    bail!(
+                        "queue '{queue_name}' at guarantee ({}/{} cores); \
+                         borrowing deferred by delay scheduling",
+                        q.cores_used,
+                        cap
+                    );
+                }
                 bail!(
                     "queue '{queue_name}' at capacity ({}/{} cores)",
                     q.cores_used,
@@ -990,5 +1075,59 @@ mod tests {
         assert_eq!(r1.unwrap(), 6);
         assert_eq!(r2.unwrap(), 6);
         assert_eq!(rm.live_containers(), 0);
+    }
+
+    #[test]
+    fn borrow_delay_defers_cross_queue_borrowing() {
+        let rm = ResourceManager::with_elastic_queues(
+            &cluster(),
+            vec![("sim".into(), 0.5, 1.0), ("fleet".into(), 0.5, 0.5)],
+            MetricsRegistry::new(),
+        );
+        rm.submit_app("a", "sim").unwrap();
+        rm.set_borrow_delay(Duration::from_millis(100));
+        // Within the 4-core guarantee: grants are instant.
+        let t = Instant::now();
+        for i in 0..4 {
+            rm.request_container("a", ResourceVec::cores(1, 10))
+                .unwrap_or_else(|e| panic!("core {i} within guarantee denied: {e}"));
+        }
+        assert!(t.elapsed() < Duration::from_millis(90), "guarantee grants must not wait");
+        // A non-blocking 5th request needs borrowed capacity and is
+        // refused outright while the delay gate holds.
+        let e = rm.request_container("a", ResourceVec::cores(1, 10)).unwrap_err();
+        assert!(e.to_string().contains("deferred by delay scheduling"), "{e}");
+        // A blocking request waits out the delay, then borrows.
+        let t = Instant::now();
+        let c = rm.acquire_container("a", ResourceVec::cores(1, 10), Duration::from_secs(5));
+        let waited = t.elapsed();
+        assert!(c.is_ok(), "borrow must succeed once the delay elapses: {c:?}");
+        assert!(waited >= Duration::from_millis(90), "borrowed too early: {waited:?}");
+        assert!(waited < Duration::from_secs(2), "waited far past the gate: {waited:?}");
+        // Zero restores immediate borrowing.
+        rm.set_borrow_delay(Duration::ZERO);
+        rm.request_container("a", ResourceVec::cores(1, 10)).unwrap();
+    }
+
+    #[test]
+    fn queue_pending_gauge_tracks_blocked_requests() {
+        let rm = rm();
+        rm.submit_app("a", "default").unwrap();
+        let c1 = rm.request_container("a", ResourceVec::cores(4, 100)).unwrap();
+        let _c2 = rm.request_container("a", ResourceVec::cores(4, 100)).unwrap();
+        let gauge = rm.metrics().gauge("resource.queue_pending.default");
+        assert_eq!(gauge.get(), 0);
+        let rm2 = rm.clone();
+        let waiter = std::thread::spawn(move || {
+            rm2.acquire_container("a", ResourceVec::cores(2, 10), Duration::from_secs(5))
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while gauge.get() != 1 {
+            assert!(Instant::now() < deadline, "pending gauge never rose");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        rm.release(&c1).unwrap();
+        assert!(waiter.join().unwrap().is_ok());
+        assert_eq!(gauge.get(), 0, "pending gauge must drop once the waiter is served");
     }
 }

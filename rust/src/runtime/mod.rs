@@ -11,9 +11,10 @@
 mod artifact;
 mod server;
 mod tensor;
+pub(crate) mod xla_stub;
 
 pub use artifact::{ArtifactSpec, IoSpec, Manifest};
-pub use server::{shared_runtime, XlaRuntime};
+pub use server::{shared_runtime, ObsServer, XlaRuntime};
 pub use tensor::{Tensor, TensorData};
 
 #[cfg(test)]

@@ -10,14 +10,17 @@
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::artifact::Manifest;
 use super::tensor::Tensor;
+use super::xla_stub as xla;
 use crate::metrics::MetricsRegistry;
+use crate::obs::Observability;
 
 enum Request {
     Execute {
@@ -249,6 +252,85 @@ impl XlaRuntime {
     }
 }
 
+/// Minimal HTTP scrape endpoint over the telemetry plane: `/metrics`
+/// serves the registry in Prometheus text format, `/healthz` the
+/// watchdog rollup as JSON. One nonblocking-accept thread, plain
+/// `std::net` — no HTTP framework, requests are one-line GETs.
+pub struct ObsServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// serve `obs` until dropped.
+    pub fn serve(addr: &str, obs: Arc<Observability>) -> Result<Self> {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("binding obs server to {addr}"))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("obs-http".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut conn, _)) => {
+                            let _ = serve_one(&mut conn, &obs);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn obs-http thread");
+        Ok(Self { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_one(conn: &mut std::net::TcpStream, obs: &Observability) -> std::io::Result<()> {
+    conn.set_read_timeout(Some(Duration::from_millis(500)))?;
+    let mut buf = [0u8; 1024];
+    let n = conn.read(&mut buf)?;
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let path = req.split_whitespace().nth(1).unwrap_or("/");
+    let (status, ctype, body) = if path.starts_with("/metrics") {
+        ("200 OK", "text/plain; version=0.0.4", obs.prometheus_text())
+    } else if path.starts_with("/healthz") {
+        ("200 OK", "application/json", obs.health_json().to_string_pretty())
+    } else {
+        ("404 Not Found", "text/plain", "try /metrics or /healthz\n".to_string())
+    };
+    write!(
+        conn,
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    conn.flush()
+}
+
 /// Global shared runtime for tests/benches: PJRT clients are expensive, so
 /// everything in-process shares one pool.
 static SHARED: Mutex<Option<XlaRuntime>> = Mutex::new(None);
@@ -262,4 +344,33 @@ pub fn shared_runtime() -> Result<XlaRuntime> {
     let rt = XlaRuntime::new(crate::artifacts_dir(), 2, MetricsRegistry::new())?;
     *guard = Some(rt.clone());
     Ok(rt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ObsConfig;
+
+    #[test]
+    fn obs_server_serves_metrics_and_healthz() {
+        let m = MetricsRegistry::new();
+        m.counter("runtime.test.hits").add(2);
+        let obs = Observability::start(m, ObsConfig::default());
+        let mut srv = ObsServer::serve("127.0.0.1:0", obs.clone()).unwrap();
+        let fetch = |path: &str| {
+            let mut s = std::net::TcpStream::connect(srv.addr()).unwrap();
+            write!(s, "GET {path} HTTP/1.0\r\n\r\n").unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+        let metrics = fetch("/metrics");
+        assert!(metrics.contains("200 OK"), "{metrics}");
+        assert!(metrics.contains("runtime_test_hits 2"), "{metrics}");
+        let health = fetch("/healthz");
+        assert!(health.contains("\"status\""), "{health}");
+        assert!(fetch("/nope").contains("404"));
+        srv.stop();
+        obs.stop();
+    }
 }

@@ -6,6 +6,8 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use super::xla_stub as xla;
+
 /// Element storage for the two dtypes the artifacts use.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {

@@ -118,7 +118,7 @@ impl TieredStore {
         // The baseline scan path walks one flat map under one lock —
         // exactly the pre-sharding store — so it forces a single shard.
         let nshards = if cfg.scan_evict { 1 } else { cfg.shards.max(1) };
-        Arc::new(Self {
+        let store = Arc::new(Self {
             tiers: [
                 Arc::new(DeviceModel::new(cfg.mem.clone(), enforce)),
                 Arc::new(DeviceModel::new(cfg.ssd.clone(), enforce)),
@@ -135,7 +135,13 @@ impl TieredStore {
             lineage: LineageRegistry::new(),
             m: StoreMetrics::new(&metrics),
             metrics,
-        })
+        });
+        // Static tier capacities as gauges, so dashboards and the
+        // watchdog can express usage as a fraction of capacity.
+        for (t, name) in TIER_NAMES.iter().enumerate() {
+            store.metrics.gauge(&format!("storage.tier_cap.{name}")).set(store.caps[t]);
+        }
+        store
     }
 
     /// Build a throwaway store for tests.

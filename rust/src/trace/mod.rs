@@ -237,6 +237,16 @@ impl Tracer {
             .collect()
     }
 
+    /// Collect, then copy out the newest `n` archived spans *without*
+    /// draining — the flight recorder snapshots recent history while
+    /// leaving `--trace` export and `spans_for` consumers intact.
+    pub fn recent(&self, n: usize) -> Vec<SpanEvent> {
+        self.collect();
+        let archive = self.archive.lock().unwrap();
+        let start = archive.len().saturating_sub(n);
+        archive[start..].to_vec()
+    }
+
     /// Collect, then drain and return the whole archive.
     pub fn take_all(&self) -> Vec<SpanEvent> {
         self.collect();

@@ -424,3 +424,58 @@ fn trace_spans_close_across_preemption_requeue() {
         cp.total_us
     );
 }
+
+#[test]
+fn job_failure_dumps_a_parseable_flight_recorder_bundle() {
+    // The global obs hook emits trace spans on watchdog transitions, so
+    // hold the tracer's test lock like the other tracer-adjacent tests.
+    let _g = adcloud::trace::testing::serial();
+    let dir = std::env::temp_dir().join(format!("adcloud-it-obs-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = Platform::local().unwrap();
+    let obs = adcloud::obs::Observability::start(
+        p.resources.metrics().clone(),
+        adcloud::obs::ObsConfig { bundle_dir: Some(dir.clone()), ..Default::default() },
+    );
+    adcloud::obs::install(&obs);
+    let job = JobHandle::submit(
+        &p.resources,
+        JobSpec::new("it-flightrec").containers(1, 2).retries(0),
+    )
+    .unwrap();
+    let r = job.run_sharded(
+        &p.ctx,
+        vec![1u32, 2, 3, 4],
+        |_sctx, _items: Vec<u32>| -> adcloud::Result<Vec<u32>> {
+            anyhow::bail!("sensor fusion diverged")
+        },
+    );
+    assert!(r.is_err());
+    let _ = job.finish();
+    adcloud::obs::uninstall();
+    assert!(obs.bundles_captured() >= 1, "a failing job must capture a post-mortem bundle");
+    obs.stop();
+    // The bundle landed on disk; round-trip it through the reader the
+    // `adcloud postmortem` command uses.
+    let bundle_path = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|path| {
+            path.file_name()
+                .map(|n| n.to_string_lossy().starts_with("postmortem-"))
+                .unwrap_or(false)
+        })
+        .expect("a postmortem-*.json bundle must be written into bundle_dir");
+    let bundle = adcloud::obs::recorder::load(&bundle_path).unwrap();
+    let reason = bundle.req("reason").unwrap().as_str().unwrap();
+    assert!(reason.contains("it-flightrec"), "bundle reason must name the failed job: {reason}");
+    assert!(reason.contains("sensor fusion diverged"), "bundle reason must carry the error");
+    assert!(bundle.req("series").is_ok(), "bundle must embed the sampled series");
+    assert!(bundle.req("rules").is_ok(), "bundle must embed the rule states");
+    assert!(bundle.req("spans").is_ok(), "bundle must embed the recent span archive");
+    let rendered = adcloud::obs::recorder::render(&bundle).unwrap();
+    assert!(rendered.contains("it-flightrec"), "rendered post-mortem must name the job");
+    let _ = std::fs::remove_dir_all(&dir);
+}
