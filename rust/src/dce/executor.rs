@@ -18,6 +18,12 @@
 //! siblings. Idle workers park on the injector's condvar; every push
 //! notifies it, and the final not-empty re-check runs under the
 //! injector lock so a wakeup can never be lost.
+//!
+//! Whole-batch submission ([`ExecutorPool::spawn_batch`], which
+//! [`ExecutorPool::run_tasks`] uses for its initial wave) bypasses the
+//! per-job path: the batch is dealt across the worker deques with each
+//! deque locked once for its entire share, then one wake pass rouses
+//! the parked workers.
 
 use anyhow::{anyhow, Result};
 use std::cell::Cell;
@@ -263,6 +269,48 @@ impl ExecutorPool {
         Ok(())
     }
 
+    /// Submit a batch of fire-and-forget jobs in one dispatch pass.
+    ///
+    /// [`Self::spawn`] in a loop pays one lock acquisition and one
+    /// notify per job; here the batch is dealt round-robin across the
+    /// worker deques with each deque locked ONCE for its entire share,
+    /// followed by a single wake pass. On an idle pool the jobs land
+    /// directly where the workers look first — the shared injector is
+    /// bypassed entirely — and stealing still rebalances the deques if
+    /// one worker's share runs long.
+    pub fn spawn_batch(&self, jobs: Vec<Box<dyn FnOnce() + Send>>) -> Result<()> {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(anyhow!("pool shut down"));
+        }
+        if jobs.is_empty() {
+            return Ok(());
+        }
+        let n = jobs.len();
+        let start = self.shared.rr.fetch_add(n, Ordering::Relaxed);
+        let mut queues: Vec<Vec<PoolJob>> = (0..self.size).map(|_| Vec::new()).collect();
+        for (j, job) in jobs.into_iter().enumerate() {
+            let inflight = self.in_flight.clone();
+            inflight.fetch_add(1, Ordering::Relaxed);
+            let wrapped: PoolJob = Box::new(move || {
+                job();
+                inflight.fetch_sub(1, Ordering::Relaxed);
+            });
+            queues[(start.wrapping_add(j)) % self.size].push(wrapped);
+        }
+        for (w, share) in queues.into_iter().enumerate() {
+            if !share.is_empty() {
+                self.shared.locals[w].lock().unwrap().extend(share);
+            }
+        }
+        // One wake pass for the whole batch (see `PoolShared::notify`
+        // for why the empty injector lock is taken first).
+        if self.shared.parked.load(Ordering::SeqCst) > 0 {
+            drop(self.shared.injector.lock().unwrap());
+            self.shared.available.notify_all();
+        }
+        Ok(())
+    }
+
     /// Run a set of retryable tasks to completion, preserving order.
     ///
     /// Each task is `Arc<dyn Fn>` so a failed attempt can be re-submitted;
@@ -293,10 +341,10 @@ impl ExecutorPool {
         }
         let parent = trace::current();
         let (rtx, rrx) = mpsc::channel::<(usize, usize, Result<T>)>();
-        let submit = |i: usize, attempt: usize| -> Result<()> {
+        let make = |i: usize, attempt: usize| -> PoolJob {
             let task = tasks[i].clone();
             let rtx = rtx.clone();
-            self.spawn(move || {
+            Box::new(move || {
                 let mut sp = trace::span_in(span_name, cat, parent);
                 sp.arg("task", i as u64).arg("attempt", attempt as u64);
                 let r = task(attempt);
@@ -304,9 +352,9 @@ impl ExecutorPool {
                 let _ = rtx.send((i, attempt, r));
             })
         };
-        for i in 0..n {
-            submit(i, 0)?;
-        }
+        // First attempts go out as one batch (single dispatch pass);
+        // the rare retry takes the per-job path.
+        self.spawn_batch((0..n).map(|i| make(i, 0)).collect())?;
         let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
         let mut done = 0usize;
         let mut first_err: Option<anyhow::Error> = None;
@@ -320,7 +368,7 @@ impl ExecutorPool {
                     done += 1;
                 }
                 Err(_) if attempt < max_retries => {
-                    submit(i, attempt + 1)?;
+                    self.spawn(make(i, attempt + 1))?;
                 }
                 Err(e) => {
                     if first_err.is_none() {
@@ -489,6 +537,64 @@ mod tests {
             std::thread::yield_now();
         }
         assert_eq!(done.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn spawn_batch_drains_on_an_idle_pool() {
+        let pool = ExecutorPool::new(4);
+        let done = Arc::new(AtomicU32::new(0));
+        let jobs: Vec<Box<dyn FnOnce() + Send>> = (0..128)
+            .map(|_| {
+                let done = done.clone();
+                let j: Box<dyn FnOnce() + Send> = Box::new(move || {
+                    done.fetch_add(1, Ordering::SeqCst);
+                });
+                j
+            })
+            .collect();
+        pool.spawn_batch(jobs).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while done.load(Ordering::SeqCst) < 128 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 128, "pool lost batched jobs");
+        assert!(pool.spawn_batch(Vec::new()).is_ok(), "empty batch must be a no-op");
+    }
+
+    #[test]
+    fn batched_jobs_are_still_stolen_from_a_blocked_worker() {
+        // The injector bypass must not regress stealing: when one
+        // worker's share is stuck behind a long job, its siblings must
+        // still drain that deque from the back.
+        let pool = ExecutorPool::new(4);
+        let done = Arc::new(AtomicU32::new(0));
+        let jobs: Vec<Box<dyn FnOnce() + Send>> = (0..64u32)
+            .map(|i| {
+                let done = done.clone();
+                let j: Box<dyn FnOnce() + Send> = Box::new(move || {
+                    if i == 0 {
+                        // Hog this worker until every other job ran, so
+                        // the rest of its share can only finish stolen.
+                        let deadline =
+                            std::time::Instant::now() + std::time::Duration::from_secs(5);
+                        while done.load(Ordering::SeqCst) < 63
+                            && std::time::Instant::now() < deadline
+                        {
+                            std::thread::yield_now();
+                        }
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                });
+                j
+            })
+            .collect();
+        pool.spawn_batch(jobs).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while done.load(Ordering::SeqCst) < 64 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 64, "pool lost batched jobs");
+        assert!(pool.steals() >= 1, "blocked worker's share was never stolen");
     }
 
     #[test]

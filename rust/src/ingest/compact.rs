@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::log::{crc32, LogRecord, PartitionedLog};
+use super::log::{crc32, FrameRef, LogRecord, PartitionedLog};
 use crate::platform::job::{JobHandle, JobSpec};
 use crate::resource::{ResourceManager, ResourceVec};
 use crate::storage::TieredStore;
@@ -35,6 +35,27 @@ pub fn encode_block(records: &[LogRecord]) -> Vec<u8> {
         out.extend_from_slice(&r.source.to_le_bytes());
         out.extend_from_slice(&(r.payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&r.payload);
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// [`encode_block`] over zero-copy [`FrameRef`]s. Byte-identical output
+/// for the same records — the lineage rule re-encodes through
+/// [`encode_block`], so the two encoders must never diverge (see the
+/// `lineage_rebuilds_blocks_from_the_log` test).
+pub fn encode_block_refs(frames: &[FrameRef<'_>]) -> Vec<u8> {
+    let body: usize = frames.iter().map(|f| 24 + f.payload.len()).sum();
+    let mut out = Vec::with_capacity(12 + body);
+    out.extend_from_slice(BLOCK_MAGIC);
+    out.extend_from_slice(&(frames.len() as u32).to_le_bytes());
+    for f in frames {
+        out.extend_from_slice(&f.offset.to_le_bytes());
+        out.extend_from_slice(&f.ts_ns.to_le_bytes());
+        out.extend_from_slice(&f.source.to_le_bytes());
+        out.extend_from_slice(&(f.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(f.payload);
     }
     let crc = crc32(&out);
     out.extend_from_slice(&crc.to_le_bytes());
@@ -175,12 +196,19 @@ fn drain_partition(
         if cctx.preempt_requested() {
             bail!("compaction worker preempted at partition {partition} offset {from}");
         }
-        let batch = log.read_from(partition, from, cfg.batch_records)?;
-        if batch.is_empty() {
+        // Zero-copy drain: the block is encoded straight out of the
+        // segment buffers — no per-frame Vec allocation on this path.
+        let drained = log.read_range_with(partition, from, cfg.batch_records, |frames| {
+            if frames.is_empty() {
+                return Ok(None);
+            }
+            let base = frames[0].offset;
+            let next = frames.last().unwrap().offset + 1;
+            Ok(Some((base, frames.len() as u32, next, encode_block_refs(frames))))
+        })?;
+        let Some((base, count, next, block)) = drained else {
             break;
-        }
-        let base = batch[0].offset;
-        let count = batch.len() as u32;
+        };
         // Parented on the shard attempt that entered the container, so
         // a requeued worker's blocks land under its new attempt span.
         let mut sp =
@@ -188,7 +216,6 @@ fn drain_partition(
         sp.arg("partition", partition as u64)
             .arg("base", base)
             .arg("records", count as u64);
-        let block = encode_block(&batch);
         let block_len = block.len() as u64;
         let key = block_key(&cfg.block_prefix, partition, base);
         // Charge the block against the container's memory limit while
@@ -213,7 +240,6 @@ fn drain_partition(
             }
             Ok(encode_block(&recs))
         });
-        let next = batch.last().unwrap().offset + 1;
         log.commit(partition, next)?;
         blocks_landed.inc();
         records_landed.add(count as u64);
@@ -281,7 +307,12 @@ mod tests {
     fn filled_log(partitions: usize, per_part: usize) -> Arc<PartitionedLog> {
         let log = PartitionedLog::temp(
             "cp",
-            LogConfig { partitions, segment_bytes: 8 << 10, retention_bytes: 16 << 20 },
+            LogConfig {
+                partitions,
+                segment_bytes: 8 << 10,
+                retention_bytes: 16 << 20,
+                ..Default::default()
+            },
         )
         .unwrap();
         for p in 0..partitions {
@@ -316,6 +347,22 @@ mod tests {
         fake.extend_from_slice(&u32::MAX.to_le_bytes());
         fake.extend_from_slice(&crc32(&fake).to_le_bytes());
         assert!(decode_block(&fake).is_err());
+    }
+
+    #[test]
+    fn block_refs_encode_byte_identically_to_owned_records() {
+        // The zero-copy writer and the lineage recompute path (which
+        // goes through `encode_block`) must emit the same bytes.
+        let log = filled_log(1, 25);
+        let owned = log.read_from(0, 0, 100).unwrap();
+        let via_refs = log
+            .read_range_with(0, 0, 100, |frames| {
+                assert_eq!(frames.len(), 25);
+                Ok(encode_block_refs(frames))
+            })
+            .unwrap();
+        assert_eq!(via_refs, encode_block(&owned));
+        assert_eq!(decode_block(&via_refs).unwrap(), owned);
     }
 
     #[test]
@@ -415,7 +462,12 @@ mod tests {
         // Retention so tight the compacted range is truncated away.
         let log = PartitionedLog::temp(
             "cp-trunc",
-            LogConfig { partitions: 1, segment_bytes: 256, retention_bytes: 512 },
+            LogConfig {
+                partitions: 1,
+                segment_bytes: 256,
+                retention_bytes: 512,
+                ..Default::default()
+            },
         )
         .unwrap();
         for i in 0..20u64 {

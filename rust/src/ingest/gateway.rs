@@ -16,12 +16,22 @@
 //! vehicle's telemetry (with plantable hard-brake / disengagement /
 //! sensor-dropout episodes the miner later digs out), and
 //! [`simulate_fleet`] replays a whole fleet against the gateway.
+//!
+//! The fleet loop is event-driven and batched by default: a
+//! hierarchical [`TimerWheel`] yields only the vehicles due to emit
+//! each tick, and the tick's uploads are admitted in one
+//! [`IngestGateway::upload_batch`] pass that folds per-vehicle token
+//! accounting into a single lock acquisition and group-commits each
+//! partition's accepted records. The original per-vehicle/per-upload
+//! path survives behind `FleetConfig::baseline` as the A/B control,
+//! regression-tested to produce bit-identical admission outcomes.
 
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
-use super::log::{crc32, PartitionedLog};
+use super::log::{crc32, AppendRecord, PartitionedLog};
+use crate::scenario::fnv1a64;
 use crate::metrics::{GatewayMetrics, MetricsRegistry};
 use crate::services::simulation::{encode_bag, Message};
 use crate::trace;
@@ -107,36 +117,130 @@ pub fn decode_telemetry(payload: &[u8]) -> Result<Option<Vec<Telemetry>>> {
     Ok(Some(out))
 }
 
+/// Incremental form of [`gen_drive`]: the identical RNG stream, one
+/// sample per call — so a million-vehicle fleet generates telemetry
+/// lazily at emit time instead of materializing every drive up front.
+pub struct DriveGen {
+    vehicle: u32,
+    rng: Rng,
+    speed: f32,
+    brake_left: usize,
+    tick: usize,
+}
+
+impl DriveGen {
+    pub fn new(vehicle: u32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ (vehicle as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let speed = rng.range_f64(8.0, 20.0) as f32;
+        Self { vehicle, rng, speed, brake_left: 0, tick: 0 }
+    }
+
+    /// The next tick's sample (the tick index advances per call).
+    pub fn next_sample(&mut self) -> Telemetry {
+        let t = self.tick;
+        self.tick += 1;
+        let mut accel = self.rng.normal_f32(0.0, 0.6);
+        if self.brake_left > 0 {
+            self.brake_left -= 1;
+            accel = -7.5 + self.rng.normal_f32(0.0, 0.3);
+        } else if self.rng.next_f64() < 0.01 {
+            self.brake_left = 2;
+            accel = -7.5;
+        }
+        let disengaged = self.rng.next_f64() < 0.004;
+        let sensor_gap_ms =
+            if self.rng.next_f64() < 0.006 { 400 + self.rng.below(800) as u32 } else { 0 };
+        self.speed = (self.speed + accel * 0.1).clamp(0.0, 33.0);
+        Telemetry {
+            vehicle: self.vehicle,
+            ts_ns: t as u64 * 100_000_000,
+            speed_mps: self.speed,
+            accel_mps2: accel,
+            disengaged,
+            sensor_gap_ms,
+        }
+    }
+}
+
 /// Deterministic per-vehicle drive: a speed random walk with plantable
 /// hard-brake episodes, disengagements, and sensor dropouts — the raw
 /// material [`super::mine`] later turns into scenario families.
 pub fn gen_drive(vehicle: u32, seed: u64, ticks: usize) -> Vec<Telemetry> {
-    let mut rng = Rng::new(seed ^ (vehicle as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-    let mut speed = rng.range_f64(8.0, 20.0) as f32;
-    let mut brake_left = 0usize;
-    let mut out = Vec::with_capacity(ticks);
-    for t in 0..ticks {
-        let mut accel = rng.normal_f32(0.0, 0.6);
-        if brake_left > 0 {
-            brake_left -= 1;
-            accel = -7.5 + rng.normal_f32(0.0, 0.3);
-        } else if rng.next_f64() < 0.01 {
-            brake_left = 2;
-            accel = -7.5;
-        }
-        let disengaged = rng.next_f64() < 0.004;
-        let sensor_gap_ms = if rng.next_f64() < 0.006 { 400 + rng.below(800) as u32 } else { 0 };
-        speed = (speed + accel * 0.1).clamp(0.0, 33.0);
-        out.push(Telemetry {
-            vehicle,
-            ts_ns: t as u64 * 100_000_000,
-            speed_mps: speed,
-            accel_mps2: accel,
-            disengaged,
-            sensor_gap_ms,
-        });
+    let mut gen = DriveGen::new(vehicle, seed);
+    (0..ticks).map(|_| gen.next_sample()).collect()
+}
+
+/// Slots per level of the hierarchical timer wheel.
+const WHEEL_SLOTS: u64 = 64;
+
+/// Hierarchical timer wheel scheduling vehicle emissions: `advance`
+/// returns exactly the vehicles due this tick, so a fleet tick costs
+/// O(vehicles due) instead of O(fleet). Two 64-slot levels cover a
+/// 4096-tick horizon; entries beyond it park in an overflow list that
+/// cascades back down as the wheel turns.
+pub struct TimerWheel {
+    now: u64,
+    /// Level 0: one slot per tick within the next 64 ticks.
+    l0: Vec<Vec<u32>>,
+    /// Level 1: one slot per 64-tick span within the next 4096 ticks.
+    l1: Vec<Vec<(u32, u64)>>,
+    overflow: Vec<(u32, u64)>,
+}
+
+impl Default for TimerWheel {
+    fn default() -> Self {
+        Self::new()
     }
-    out
+}
+
+impl TimerWheel {
+    pub fn new() -> Self {
+        Self {
+            now: 0,
+            l0: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            l1: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            overflow: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Schedule `vehicle` to emit at absolute tick `due` (clamped to
+    /// the present — the wheel never schedules into the past).
+    pub fn schedule(&mut self, vehicle: u32, due: u64) {
+        let due = due.max(self.now);
+        if due - self.now < WHEEL_SLOTS {
+            self.l0[(due % WHEEL_SLOTS) as usize].push(vehicle);
+        } else if due - self.now < WHEEL_SLOTS * WHEEL_SLOTS {
+            self.l1[((due / WHEEL_SLOTS) % WHEEL_SLOTS) as usize].push((vehicle, due));
+        } else {
+            self.overflow.push((vehicle, due));
+        }
+    }
+
+    /// Drain the vehicles due at the current tick (ascending, matching
+    /// the order a per-vehicle loop would visit them) and advance.
+    pub fn advance(&mut self) -> Vec<u32> {
+        if self.now % WHEEL_SLOTS == 0 {
+            if self.now % (WHEEL_SLOTS * WHEEL_SLOTS) == 0 {
+                // Crossing a level-1 horizon: re-file the overflow.
+                for (v, due) in std::mem::take(&mut self.overflow) {
+                    self.schedule(v, due);
+                }
+            }
+            // Cascade the level-1 slot covering [now, now + 64) down.
+            let slot = ((self.now / WHEEL_SLOTS) % WHEEL_SLOTS) as usize;
+            for (v, due) in std::mem::take(&mut self.l1[slot]) {
+                self.l0[(due % WHEEL_SLOTS) as usize].push(v);
+            }
+        }
+        let mut due = std::mem::take(&mut self.l0[(self.now % WHEEL_SLOTS) as usize]);
+        due.sort_unstable();
+        self.now += 1;
+        due
+    }
 }
 
 /// One upload as it arrives at the gateway. `declared_crc` is what the
@@ -265,6 +369,84 @@ impl IngestGateway {
         Ok(Admission::Accepted { partition, offset })
     }
 
+    /// Admit a whole tick's uploads in one pass: one token-bucket lock
+    /// acquisition for the batch, one lag probe per partition touched
+    /// (each accepted record then counts against that probe, so every
+    /// upload's outcome is bit-identical to calling [`Self::upload`] on
+    /// the same sequence), and one group-commit
+    /// [`PartitionedLog::append_batch`] per partition instead of one
+    /// append per record. A CRC mismatch dead-letters only the affected
+    /// upload — one corrupt frame never rejects its batch.
+    pub fn upload_batch(&self, ups: &[VehicleUpload]) -> Result<Vec<Admission>> {
+        let mut sp = trace::span("gateway.upload_batch", trace::Category::LogIo);
+        sp.arg("uploads", ups.len() as u64);
+        let mut out = Vec::with_capacity(ups.len());
+        // partition -> (lag at batch start, indices accepted into it).
+        let mut parts: BTreeMap<usize, (u64, Vec<usize>)> = BTreeMap::new();
+        {
+            let mut tokens = self.tokens.lock().unwrap();
+            for (i, up) in ups.iter().enumerate() {
+                let t = tokens.entry(up.vehicle).or_insert(self.cfg.rate_per_tick);
+                if *t == 0 {
+                    self.m.throttled.inc();
+                    out.push(Admission::Throttled);
+                    continue;
+                }
+                *t -= 1;
+                if crc32(&up.payload) != up.declared_crc {
+                    self.m.dead_lettered.inc();
+                    let mut dead = self.dead.lock().unwrap();
+                    dead.push(DeadLetter {
+                        vehicle: up.vehicle,
+                        ts_ns: up.ts_ns,
+                        reason: "payload CRC mismatch".into(),
+                        bytes: up.payload.len(),
+                    });
+                    self.m.dlq_depth.set(dead.len() as u64);
+                    out.push(Admission::DeadLettered);
+                    continue;
+                }
+                let partition = self.log.partition_for(up.vehicle);
+                let entry = parts
+                    .entry(partition)
+                    .or_insert_with(|| (self.log.lag(partition), Vec::new()));
+                // Records this batch already accepted raise the lag the
+                // sequential path would have observed here.
+                if entry.0 + entry.1.len() as u64 >= self.cfg.max_lag {
+                    self.m.backpressured.inc();
+                    out.push(Admission::Backpressure);
+                    continue;
+                }
+                entry.1.push(i);
+                out.push(Admission::Accepted { partition, offset: 0 });
+            }
+        }
+        for (&partition, (_, idxs)) in &parts {
+            if idxs.is_empty() {
+                continue;
+            }
+            let recs: Vec<AppendRecord<'_>> = idxs
+                .iter()
+                .map(|&i| AppendRecord {
+                    ts_ns: ups[i].ts_ns,
+                    source: ups[i].vehicle,
+                    payload: &ups[i].payload,
+                })
+                .collect();
+            let first = self.log.append_batch(partition, &recs)?;
+            for (j, &i) in idxs.iter().enumerate() {
+                out[i] = Admission::Accepted { partition, offset: first + j as u64 };
+            }
+            self.m.accepted.add(idxs.len() as u64);
+            let lag = self.log.lag(partition);
+            if lag >= self.m.partition_lag.get() || partition == 0 {
+                self.m.partition_lag.set(lag);
+            }
+        }
+        self.m.batches.inc();
+        Ok(out)
+    }
+
     pub fn dead_letters(&self) -> Vec<DeadLetter> {
         self.dead.lock().unwrap().clone()
     }
@@ -280,16 +462,35 @@ pub struct FleetConfig {
     pub corrupt_rate: f64,
     /// Every this many ticks a vehicle also uploads a rosbag chunk.
     pub bag_every: usize,
+    /// Per-vehicle emit cadence is drawn deterministically from
+    /// `1..=cadence_max` ticks; 1 (the default) makes every vehicle
+    /// emit every tick, the pre-event-driven behavior. A vehicle
+    /// uploads all samples accumulated since its last emission as one
+    /// telemetry batch, so higher cadences mean fewer, fatter uploads.
+    pub cadence_max: u32,
+    /// Use the pre-batching control path: per-vehicle iteration each
+    /// tick, one admission decision and one log append per upload
+    /// (`--baseline`). The event-driven batched path is regression-
+    /// tested to produce identical admission outcomes against it.
+    pub baseline: bool,
 }
 
 impl FleetConfig {
     pub fn new(vehicles: u32, ticks: usize, seed: u64) -> Self {
-        Self { vehicles, ticks, seed, corrupt_rate: 0.0, bag_every: 16 }
+        Self {
+            vehicles,
+            ticks,
+            seed,
+            corrupt_rate: 0.0,
+            bag_every: 16,
+            cadence_max: 1,
+            baseline: false,
+        }
     }
 }
 
 /// Aggregate outcome of one simulated fleet run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FleetReport {
     pub uploads: u64,
     pub accepted: u64,
@@ -299,13 +500,17 @@ pub struct FleetReport {
     pub bytes_accepted: u64,
     /// Uploads still waiting on backpressure when the run ended.
     pub stranded: u64,
+    /// p99 of the worst per-partition lag sampled at every tick end.
+    pub tail_lag_p99: u64,
+    /// Records retention truncated before any consumer read them.
+    pub lost_records: u64,
 }
 
 impl FleetReport {
     pub fn render(&self) -> String {
         format!(
             "fleet: {} uploads — {} accepted ({}), {} throttled, {} backpressured, \
-             {} dead-lettered, {} stranded",
+             {} dead-lettered, {} stranded, lag p99 {}, {} lost",
             self.uploads,
             self.accepted,
             crate::util::fmt_bytes(self.bytes_accepted),
@@ -313,6 +518,8 @@ impl FleetReport {
             self.backpressured,
             self.dead_lettered,
             self.stranded,
+            self.tail_lag_p99,
+            self.lost_records,
         )
     }
 }
@@ -344,16 +551,102 @@ fn admit(
     Ok(())
 }
 
-/// Drive a whole simulated fleet through the gateway: one telemetry
-/// batch per vehicle per tick (plus periodic rosbag chunks), in-flight
-/// corruption at `corrupt_rate`, and backpressured uploads retried on
-/// later ticks.
+/// The deterministic emit cadence of one vehicle, in ticks.
+fn cadence_of(vehicle: u32, seed: u64, cadence_max: u32) -> u64 {
+    if cadence_max <= 1 {
+        return 1;
+    }
+    let mut key = [0u8; 12];
+    key[..4].copy_from_slice(&vehicle.to_le_bytes());
+    key[4..].copy_from_slice(&seed.to_le_bytes());
+    1 + fnv1a64(&key) % cadence_max as u64
+}
+
+/// Build the uploads one vehicle emits at `tick`: the telemetry batch
+/// covering the `cadence` samples since its last emission, plus the
+/// periodic rosbag chunk, with in-flight corruption applied in stream
+/// order (so the baseline and batched paths draw the identical RNG
+/// sequence).
+fn emit_uploads(
+    v: u32,
+    tick: usize,
+    cadence: u64,
+    gen: &mut DriveGen,
+    cfg: &FleetConfig,
+    corrupt_rng: &mut Rng,
+    out: &mut Vec<VehicleUpload>,
+) {
+    let samples: Vec<Telemetry> = (0..cadence).map(|_| gen.next_sample()).collect();
+    let mut payloads = vec![encode_telemetry(&samples)];
+    if cfg.bag_every > 0 && tick % cfg.bag_every == cfg.bag_every - 1 {
+        payloads.push(encode_bag(&[Message {
+            topic: "/camera/front".into(),
+            ts_ns: tick as u64 * 100_000_000,
+            payload: vec![(tick % 256) as u8; 128],
+        }]));
+    }
+    for payload in payloads {
+        let mut up = VehicleUpload::new(v, tick as u64 * 100_000_000, payload);
+        if corrupt_rng.next_f64() < cfg.corrupt_rate {
+            // Bit-flip after the CRC was declared: in-flight loss.
+            let at = corrupt_rng.below(up.payload.len() as u64) as usize;
+            up.payload[at] ^= 0x40;
+        }
+        out.push(up);
+    }
+}
+
+/// Worst per-partition lag right now (the tail-lag sample).
+fn worst_lag(gw: &IngestGateway) -> u64 {
+    (0..gw.log.partitions()).map(|p| gw.log.lag(p)).max().unwrap_or(0)
+}
+
+fn p99(mut samples: Vec<u64>) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    samples.sort_unstable();
+    samples[(samples.len() - 1) * 99 / 100]
+}
+
+/// Finalize a fleet report with the run's tail-lag and loss numbers.
+fn finish_report(gw: &IngestGateway, mut report: FleetReport, lag_samples: Vec<u64>) -> FleetReport {
+    report.tail_lag_p99 = p99(lag_samples);
+    report.lost_records = (0..gw.log.partitions()).map(|p| gw.log.lost_records(p)).sum();
+    report
+}
+
+/// Drive a whole simulated fleet through the gateway: each vehicle
+/// emits a telemetry batch on its cadence (plus periodic rosbag
+/// chunks), in-flight corruption at `corrupt_rate`, and throttled or
+/// backpressured uploads retried on later ticks.
+///
+/// The default path is event-driven and batched: a hierarchical
+/// [`TimerWheel`] hands each tick exactly the vehicles due to emit,
+/// and the whole tick's uploads go through one
+/// [`IngestGateway::upload_batch`] admission pass. `cfg.baseline`
+/// selects the original per-vehicle/per-upload control path; both
+/// produce bit-identical admission outcomes on the same seed.
 pub fn simulate_fleet(gw: &IngestGateway, cfg: &FleetConfig) -> Result<FleetReport> {
-    let drives: Vec<Vec<Telemetry>> =
-        (0..cfg.vehicles).map(|v| gen_drive(v, cfg.seed, cfg.ticks)).collect();
+    if cfg.baseline {
+        simulate_fleet_baseline(gw, cfg)
+    } else {
+        simulate_fleet_batched(gw, cfg)
+    }
+}
+
+/// The pre-batching control path (`--baseline`): iterate every vehicle
+/// every tick, admit uploads one at a time.
+fn simulate_fleet_baseline(gw: &IngestGateway, cfg: &FleetConfig) -> Result<FleetReport> {
+    let mut gens: Vec<DriveGen> =
+        (0..cfg.vehicles).map(|v| DriveGen::new(v, cfg.seed)).collect();
+    let cadences: Vec<u64> =
+        (0..cfg.vehicles).map(|v| cadence_of(v, cfg.seed, cfg.cadence_max)).collect();
     let mut rng = Rng::new(cfg.seed ^ 0xF1EE_7000);
     let mut report = FleetReport::default();
     let mut pending: Vec<VehicleUpload> = Vec::new();
+    let mut lag_samples = Vec::with_capacity(cfg.ticks);
+    let mut emitted: Vec<VehicleUpload> = Vec::new();
     for tick in 0..cfg.ticks {
         gw.begin_tick();
         // Retry what earlier ticks bounced first.
@@ -361,27 +654,71 @@ pub fn simulate_fleet(gw: &IngestGateway, cfg: &FleetConfig) -> Result<FleetRepo
             admit(gw, up, &mut report, &mut pending)?;
         }
         for v in 0..cfg.vehicles {
-            let mut payloads = vec![encode_telemetry(&drives[v as usize][tick..tick + 1])];
-            if cfg.bag_every > 0 && tick % cfg.bag_every == cfg.bag_every - 1 {
-                payloads.push(encode_bag(&[Message {
-                    topic: "/camera/front".into(),
-                    ts_ns: tick as u64 * 100_000_000,
-                    payload: vec![(tick % 256) as u8; 128],
-                }]));
+            let cadence = cadences[v as usize];
+            if (tick as u64 + 1) % cadence != 0 {
+                continue;
             }
-            for payload in payloads {
-                let mut up = VehicleUpload::new(v, tick as u64 * 100_000_000, payload);
-                if rng.next_f64() < cfg.corrupt_rate {
-                    // Bit-flip after the CRC was declared: in-flight loss.
-                    let at = rng.below(up.payload.len() as u64) as usize;
-                    up.payload[at] ^= 0x40;
-                }
+            emit_uploads(v, tick, cadence, &mut gens[v as usize], cfg, &mut rng, &mut emitted);
+            for up in emitted.drain(..) {
                 admit(gw, up, &mut report, &mut pending)?;
             }
         }
+        lag_samples.push(worst_lag(gw));
     }
     report.stranded = pending.len() as u64;
-    Ok(report)
+    Ok(finish_report(gw, report, lag_samples))
+}
+
+/// The event-driven batched path: the timer wheel yields only the
+/// vehicles due this tick, and the tick's uploads are admitted in one
+/// batch.
+fn simulate_fleet_batched(gw: &IngestGateway, cfg: &FleetConfig) -> Result<FleetReport> {
+    let mut gens: Vec<DriveGen> =
+        (0..cfg.vehicles).map(|v| DriveGen::new(v, cfg.seed)).collect();
+    let cadences: Vec<u64> =
+        (0..cfg.vehicles).map(|v| cadence_of(v, cfg.seed, cfg.cadence_max)).collect();
+    let mut wheel = TimerWheel::new();
+    for v in 0..cfg.vehicles {
+        // First emission once a full cadence window has elapsed.
+        wheel.schedule(v, cadences[v as usize] - 1);
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0xF1EE_7000);
+    let mut report = FleetReport::default();
+    let mut pending: Vec<VehicleUpload> = Vec::new();
+    let mut lag_samples = Vec::with_capacity(cfg.ticks);
+    for tick in 0..cfg.ticks {
+        gw.begin_tick();
+        // Retries keep their arrival order ahead of this tick's
+        // emissions, exactly like the baseline loop.
+        let mut ups = std::mem::take(&mut pending);
+        for v in wheel.advance() {
+            let cadence = cadences[v as usize];
+            emit_uploads(v, tick, cadence, &mut gens[v as usize], cfg, &mut rng, &mut ups);
+            wheel.schedule(v, tick as u64 + cadence);
+        }
+        let outcomes = gw.upload_batch(&ups)?;
+        for (up, adm) in ups.into_iter().zip(outcomes) {
+            report.uploads += 1;
+            match adm {
+                Admission::Accepted { .. } => {
+                    report.accepted += 1;
+                    report.bytes_accepted += up.payload.len() as u64;
+                }
+                Admission::Backpressure => {
+                    report.backpressured += 1;
+                    pending.push(up);
+                }
+                Admission::Throttled => {
+                    report.throttled += 1;
+                    pending.push(up);
+                }
+                Admission::DeadLettered => report.dead_lettered += 1,
+            }
+        }
+        lag_samples.push(worst_lag(gw));
+    }
+    report.stranded = pending.len() as u64;
+    Ok(finish_report(gw, report, lag_samples))
 }
 
 #[cfg(test)]
@@ -392,7 +729,12 @@ mod tests {
     fn gateway(partitions: usize, rate: u32, max_lag: u64) -> IngestGateway {
         let log = PartitionedLog::temp(
             "gw",
-            LogConfig { partitions, segment_bytes: 64 << 10, retention_bytes: 16 << 20 },
+            LogConfig {
+                partitions,
+                segment_bytes: 64 << 10,
+                retention_bytes: 16 << 20,
+                ..Default::default()
+            },
         )
         .unwrap();
         IngestGateway::new(
@@ -509,5 +851,137 @@ mod tests {
         let (accepted, dead, _) = run("fc");
         assert!(accepted > 0);
         assert!(dead > 0, "5% corruption over 240+ uploads must dead-letter some");
+    }
+
+    #[test]
+    fn drive_gen_streams_the_same_samples_as_gen_drive() {
+        let mut gen = DriveGen::new(11, 1234);
+        let all = gen_drive(11, 1234, 200);
+        let streamed: Vec<Telemetry> = (0..200).map(|_| gen.next_sample()).collect();
+        assert_eq!(streamed, all, "incremental and batch generation must be bit-identical");
+    }
+
+    #[test]
+    fn timer_wheel_fires_every_vehicle_exactly_on_cadence() {
+        // Cadences spanning level 0, level 1, and the overflow list.
+        let cadences: [(u32, u64); 6] = [(0, 1), (1, 3), (2, 63), (3, 64), (4, 700), (5, 5000)];
+        let mut wheel = TimerWheel::new();
+        for &(v, c) in &cadences {
+            wheel.schedule(v, c - 1);
+        }
+        let mut fired: HashMap<u32, Vec<u64>> = HashMap::new();
+        for tick in 0..12_000u64 {
+            for v in wheel.advance() {
+                fired.entry(v).or_default().push(tick);
+                let c = cadences[v as usize].1;
+                wheel.schedule(v, tick + c);
+            }
+        }
+        for &(v, c) in &cadences {
+            let want: Vec<u64> = (0..12_000 / c).map(|k| (k + 1) * c - 1).collect();
+            assert_eq!(fired[&v], want, "vehicle {v} with cadence {c} misfired");
+        }
+    }
+
+    #[test]
+    fn timer_wheel_drains_due_vehicles_in_ascending_order() {
+        let mut wheel = TimerWheel::new();
+        for v in [9u32, 2, 40, 0, 17] {
+            wheel.schedule(v, 0);
+        }
+        assert_eq!(wheel.advance(), vec![0, 2, 9, 17, 40]);
+        assert!(wheel.advance().is_empty());
+        assert_eq!(wheel.now(), 2);
+    }
+
+    #[test]
+    fn corrupt_upload_in_batch_dead_letters_only_that_frame() {
+        let gw = gateway(1, 8, 1000);
+        let mut ups: Vec<VehicleUpload> = (0..5u32)
+            .map(|v| VehicleUpload::new(v, 0, encode_telemetry(&gen_drive(v, 1, 3))))
+            .collect();
+        ups[2].payload[9] ^= 0xFF;
+        let out = gw.upload_batch(&ups).unwrap();
+        assert_eq!(out[2], Admission::DeadLettered);
+        let mut offsets = Vec::new();
+        for (i, adm) in out.iter().enumerate() {
+            if i == 2 {
+                continue;
+            }
+            match adm {
+                Admission::Accepted { offset, .. } => offsets.push(*offset),
+                other => panic!("upload {i} should have landed, got {other:?}"),
+            }
+        }
+        assert_eq!(offsets, vec![0, 1, 2, 3], "clean frames must land contiguously");
+        let dead = gw.dead_letters();
+        assert_eq!(dead.len(), 1, "only the corrupt frame goes to the DLQ");
+        assert_eq!(dead[0].vehicle, 2);
+        assert_eq!(gw.log().next_offset(0), 4);
+    }
+
+    #[test]
+    fn upload_batch_matches_sequential_uploads_decision_for_decision() {
+        // Throttling, backpressure, CRC failures, and multi-partition
+        // routing in one stream — batched admission must reproduce the
+        // sequential path's outcome for every single upload.
+        let mk_ups = || {
+            let mut rng = Rng::new(7);
+            let mut ups = Vec::new();
+            for i in 0..120u32 {
+                let v = i % 9;
+                let mut up =
+                    VehicleUpload::new(v, i as u64, encode_telemetry(&gen_drive(v, 2, 2)));
+                if rng.next_f64() < 0.1 {
+                    up.payload[5] ^= 0x08;
+                }
+                ups.push(up);
+            }
+            ups
+        };
+        let (a, b) = (gateway(4, 3, 18), gateway(4, 3, 18));
+        let seq: Vec<Admission> = mk_ups().iter().map(|up| a.upload(up).unwrap()).collect();
+        let bat = b.upload_batch(&mk_ups()).unwrap();
+        assert_eq!(bat, seq);
+        let (da, db) = (a.dead_letters(), b.dead_letters());
+        assert_eq!(da.len(), db.len());
+        for (x, y) in da.iter().zip(&db) {
+            assert_eq!((x.vehicle, x.ts_ns, x.bytes), (y.vehicle, y.ts_ns, y.bytes));
+        }
+        for p in 0..4 {
+            assert_eq!(a.log().next_offset(p), b.log().next_offset(p));
+        }
+    }
+
+    #[test]
+    fn batched_fleet_is_bit_identical_to_the_baseline_path() {
+        // The tentpole acceptance gate: same seeded fleet, same
+        // accept/reject/DLQ outcomes, same log contents — only faster.
+        let run = |tag: &str, baseline: bool| {
+            let log = PartitionedLog::temp(tag, LogConfig::default()).unwrap();
+            let gw = IngestGateway::new(
+                log,
+                GatewayConfig { rate_per_tick: 2, max_lag: 30 },
+                MetricsRegistry::new(),
+            );
+            let mut cfg = FleetConfig::new(7, 50, 424_242);
+            cfg.corrupt_rate = 0.05;
+            cfg.cadence_max = 3;
+            cfg.baseline = baseline;
+            let report = simulate_fleet(&gw, &cfg).unwrap();
+            let offsets: Vec<u64> =
+                (0..gw.log().partitions()).map(|p| gw.log().next_offset(p)).collect();
+            let dead: Vec<(u32, u64, usize)> =
+                gw.dead_letters().iter().map(|d| (d.vehicle, d.ts_ns, d.bytes)).collect();
+            (report, offsets, dead)
+        };
+        let base = run("eqb", true);
+        let batched = run("eqf", false);
+        assert_eq!(batched.0, base.0, "fleet reports diverge");
+        assert_eq!(batched.1, base.1, "per-partition heads diverge");
+        assert_eq!(batched.2, base.2, "dead-letter queues diverge");
+        assert!(base.0.throttled > 0, "fleet must exercise throttling");
+        assert!(base.0.dead_lettered > 0, "fleet must exercise the DLQ");
+        assert!(base.0.backpressured > 0, "fleet must exercise backpressure");
     }
 }

@@ -26,11 +26,15 @@ pub mod log;
 pub mod mine;
 
 pub use compact::{
-    compact, decode_block, encode_block, BlockRef, CompactionReport, CompactorConfig,
+    compact, decode_block, encode_block, encode_block_refs, BlockRef, CompactionReport,
+    CompactorConfig,
 };
 pub use gateway::{
     decode_telemetry, encode_telemetry, gen_drive, simulate_fleet, Admission, DeadLetter,
-    FleetConfig, FleetReport, GatewayConfig, IngestGateway, Telemetry, VehicleUpload,
+    DriveGen, FleetConfig, FleetReport, GatewayConfig, IngestGateway, Telemetry, TimerWheel,
+    VehicleUpload,
 };
-pub use log::{crc32, crc32_bytewise, LogConfig, LogRecord, PartitionedLog};
+pub use log::{
+    crc32, crc32_bytewise, AppendRecord, FrameRef, LogConfig, LogRecord, PartitionedLog,
+};
 pub use mine::{mine, EventKind, MineReport, MinedEvent, MinerConfig};

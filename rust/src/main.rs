@@ -27,7 +27,9 @@
 //!   train     [--examples N] [--rounds R] [--workers W]
 //!   mapgen    [--steps N]
 //!   sql       [--rows N]
-//!   repro-tables [e1..e19|all] [--quick]
+//!   repro-tables [e1..e20|all] [--quick]
+//!             [--vehicles N]  e20 only: sweep the fleet up to N
+//!             vehicles instead of the default (1M, or 50k --quick)
 //!   top       [--once] [--duration-secs S] [--refresh-ms MS]
 //!             refreshing text dashboard (sampler series + SLO rules)
 //!             over a self-contained demo workload
@@ -41,7 +43,10 @@
 //!
 //! Every subcommand also accepts `--baseline`: force the pre-fast-path
 //! storage plane (single-lock block map, O(n) eviction scans) for A/B
-//! runs against experiment E17's sharded default — and
+//! runs against experiment E17's sharded default; for `ingest` it also
+//! selects the pre-batching gateway (per-vehicle stepping, one
+//! admission decision and one log append per upload) against the
+//! event-driven batched default — and
 //! `--trace <out.json>`: enable the causal tracer for the run and write
 //! every recorded span as Chrome trace-event JSON (loadable in
 //! Perfetto / chrome://tracing, or pretty-printed by `adcloud trace`).
@@ -291,6 +296,7 @@ fn run_ingest(flags: &HashMap<String, String>) -> Result<()> {
     );
     let mut fleet_cfg = ingest::FleetConfig::new(vehicles, ticks, p.config.seed);
     fleet_cfg.corrupt_rate = 0.02;
+    fleet_cfg.baseline = flags.contains_key("baseline");
     let fleet = ingest::simulate_fleet(&gw, &fleet_cfg)?;
     println!("{}", fleet.render());
 
@@ -569,7 +575,12 @@ fn bench_diff(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
         .unwrap_or_else(|| "bench/baseline".to_string());
     let update = flags.contains_key("update");
     let files: Vec<String> = if pos.is_empty() {
-        vec!["BENCH_E17.json".into(), "BENCH_E18.json".into(), "BENCH_E19.json".into()]
+        vec![
+            "BENCH_E14.json".into(),
+            "BENCH_E17.json".into(),
+            "BENCH_E18.json".into(),
+            "BENCH_E19.json".into(),
+        ]
     } else {
         pos.to_vec()
     };
@@ -728,9 +739,14 @@ fn repro_tables(ids: &[String], flags: &HashMap<String, String>) -> Result<()> {
     } else {
         ids.to_vec()
     };
+    let vehicles = flags.get("vehicles").and_then(|v| v.parse::<u32>().ok());
     let mut failed = Vec::new();
     for id in ids {
-        match experiments::run_experiment(&id, quick) {
+        let run = match (id.as_str(), vehicles) {
+            ("e20", Some(v)) => experiments::e20_fleet_sized(v, quick),
+            _ => experiments::run_experiment(&id, quick),
+        };
+        match run {
             Ok(table) => println!("{}", table.render()),
             Err(e) => {
                 eprintln!("{id} failed: {e:#}");

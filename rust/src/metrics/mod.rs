@@ -424,6 +424,10 @@ pub struct LogMetrics {
     pub bytes: Arc<Counter>,
     pub truncated_segments: Arc<Counter>,
     pub lost_unconsumed: Arc<Counter>,
+    /// Group-commit batches landed via `append_batch`.
+    pub batch_appends: Arc<Counter>,
+    /// Bytes dropped by crash recovery truncating torn batch tails.
+    pub torn_tail_bytes: Arc<Counter>,
 }
 
 impl LogMetrics {
@@ -433,6 +437,8 @@ impl LogMetrics {
             bytes: reg.counter("ingest.log.bytes"),
             truncated_segments: reg.counter("ingest.log.truncated_segments"),
             lost_unconsumed: reg.counter("ingest.log.lost_unconsumed"),
+            batch_appends: reg.counter("ingest.log.batch_appends"),
+            torn_tail_bytes: reg.counter("ingest.log.torn_tail_bytes"),
         }
     }
 }
@@ -450,6 +456,8 @@ pub struct GatewayMetrics {
     /// Worst produced-minus-committed lag across partitions, updated
     /// on every admission decision (watchdog input).
     pub partition_lag: Arc<Gauge>,
+    /// Batched admission rounds handled via `upload_batch`.
+    pub batches: Arc<Counter>,
 }
 
 impl GatewayMetrics {
@@ -461,6 +469,7 @@ impl GatewayMetrics {
             backpressured: reg.counter("ingest.gateway.backpressured"),
             dlq_depth: reg.gauge("ingest.gateway.dlq_depth"),
             partition_lag: reg.gauge("ingest.gateway.partition_lag"),
+            batches: reg.counter("ingest.gateway.batches"),
         }
     }
 }

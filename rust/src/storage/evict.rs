@@ -30,48 +30,49 @@ pub enum EvictionPolicy {
 
 impl EvictionPolicy {
     /// Pick the victim among `candidates` (already filtered to the tier
-    /// and unpinned). `now_seq` is the current access counter.
+    /// and unpinned). Delegates to [`Self::rank`] with ties broken by
+    /// key — exactly the ordering of the tiered store's per-tier
+    /// `BTreeSet<(rank, key)>` index, so the O(n) scan and the index
+    /// can never disagree on a victim.
     pub fn choose<'a>(
         &self,
         candidates: impl Iterator<Item = (&'a String, &'a BlockMeta)>,
-        now_seq: u64,
+        _now_seq: u64,
     ) -> Option<String> {
-        match self {
-            EvictionPolicy::Lru => candidates
-                .min_by_key(|(_, m)| m.last_seq)
-                .map(|(k, _)| k.clone()),
-            EvictionPolicy::Lrfu { lambda } => candidates
-                .map(|(k, m)| {
-                    let age = now_seq.saturating_sub(m.last_seq) as f64;
-                    // Decayed combined recency/frequency value: smaller is
-                    // a better victim.
-                    let score = m.crf * (1.0 - lambda).powf(age);
-                    (k, score)
-                })
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
-                .map(|(k, _)| k.clone()),
-        }
+        candidates.min_by_key(|(k, m)| (self.rank(m), (*k).clone())).map(|(k, _)| k.clone())
     }
 
     /// Static eviction rank for the tiered store's ordered per-tier
     /// index: among any candidate set the block with the SMALLEST rank
-    /// is the victim [`Self::choose`] would pick, and the rank depends
-    /// only on the block's own metadata — never on `now` — so the index
-    /// only needs updating when a block is accessed.
+    /// is the victim, and the rank depends only on the block's own
+    /// metadata — never on `now` — so the index only needs updating
+    /// when a block is accessed.
     ///
-    /// LRU: rank = `last_seq` (oldest access = smallest).
-    /// LRFU: the score `crf * (1-λ)^(now-last_seq)` shares the positive
-    /// factor `(1-λ)^now` across all candidates, so the ordering is the
-    /// ordering of `ln(crf) - last_seq * ln(1-λ)` — a static key. Both
-    /// terms are non-negative (`crf >= 1`, `ln(1-λ) < 0`), so the IEEE
-    /// bit pattern of the f64 is itself monotonically ordered and fits
-    /// the same `u64` index.
+    /// Scoring is size-aware — victims are ranked per byte, so one big
+    /// cold block is reclaimed before many small ones that free less
+    /// space for the same recency. With uniform sizes the order reduces
+    /// exactly to the plain recency/frequency order.
+    ///
+    /// LRU: rank = `last_seq / size` (oldest-per-byte = smallest); a
+    /// division by a shared constant is order-preserving, so uniform
+    /// sizes reproduce the pure `last_seq` order.
+    /// LRFU: the score `crf * (1-λ)^(now-last_seq) / size` shares the
+    /// positive factor `(1-λ)^now` across all candidates, so the
+    /// ordering is the ordering of
+    /// `ln(crf) - last_seq * ln(1-λ) - ln(size)` — a static key. The
+    /// `64·ln 2` offset keeps the key non-negative (`size <= 2^64`, so
+    /// `ln(size) <= 64·ln 2`; the other terms are non-negative since
+    /// `crf >= 1` and `ln(1-λ) < 0`), which keeps the IEEE bit pattern
+    /// of the f64 monotonically ordered in the same `u64` index.
     pub fn rank(&self, meta: &BlockMeta) -> u64 {
+        let size = meta.size.max(1) as f64;
         match self {
-            EvictionPolicy::Lru => meta.last_seq,
+            EvictionPolicy::Lru => (meta.last_seq as f64 / size).to_bits(),
             EvictionPolicy::Lrfu { lambda } => {
                 let decay = (1.0 - lambda).clamp(1e-12, 1.0 - 1e-12);
-                let key = meta.crf.max(1.0).ln() + meta.last_seq as f64 * -decay.ln();
+                let key = meta.crf.max(1.0).ln() + meta.last_seq as f64 * -decay.ln()
+                    - size.ln()
+                    + 64.0 * std::f64::consts::LN_2;
                 key.max(0.0).to_bits()
             }
         }
@@ -153,6 +154,55 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn size_aware_rank_prefers_one_big_cold_block() {
+        // A 100 KiB block that is barely older should be evicted before
+        // a 1-byte block: per byte reclaimed it is by far the colder.
+        for policy in [EvictionPolicy::Lru, EvictionPolicy::Lrfu { lambda: 0.1 }] {
+            let mut m = HashMap::new();
+            let mut big = meta(50, 2);
+            big.size = 100 << 10;
+            big.crf = 2.0;
+            let mut small = meta(40, 2);
+            small.crf = 2.0;
+            m.insert("big".to_string(), big);
+            m.insert("small".to_string(), small);
+            let victim = policy.choose(m.iter(), 60).unwrap();
+            assert_eq!(victim, "big", "{policy:?} must rank victims per byte");
+        }
+    }
+
+    #[test]
+    fn uniform_sizes_match_the_pre_size_aware_order() {
+        // With every block the same size, the per-byte scoring must
+        // reduce to exactly the plain recency/frequency order the
+        // pre-size-aware policies produced.
+        let mut m = HashMap::new();
+        let mut rng = crate::util::Rng::new(0x517E);
+        for i in 0..48u64 {
+            // Ages capped at 5000 keep the legacy oracle's direct
+            // `(1-λ)^age` out of f64 underflow (0.9^age hits zero near
+            // age 7100, which would tie every old block at 0.0).
+            let mut b = meta(5_000 + rng.below(5_000), 1);
+            b.size = 4096;
+            b.crf = 1.0 + rng.next_f64() * 30.0;
+            m.insert(format!("k{i}"), b);
+        }
+        let now = 10_000u64;
+
+        let lru_legacy =
+            m.iter().min_by_key(|(k, b)| (b.last_seq, (*k).clone())).map(|(k, _)| k.clone());
+        assert_eq!(EvictionPolicy::Lru.choose(m.iter(), now), lru_legacy);
+
+        let lambda = 0.1f64;
+        let lrfu_legacy = m
+            .iter()
+            .map(|(k, b)| (k, b.crf * (1.0 - lambda).powf((now - b.last_seq) as f64)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(k, _)| k.clone());
+        assert_eq!(EvictionPolicy::Lrfu { lambda }.choose(m.iter(), now), lrfu_legacy);
     }
 
     #[test]

@@ -18,7 +18,12 @@ fn run_pipeline(
     let p = Platform::local().unwrap();
     let log = PartitionedLog::temp(
         tag,
-        LogConfig { partitions: 4, segment_bytes: 32 << 10, retention_bytes: 32 << 20 },
+        LogConfig {
+            partitions: 4,
+            segment_bytes: 32 << 10,
+            retention_bytes: 32 << 20,
+            ..Default::default()
+        },
     )
     .unwrap();
     let gw = IngestGateway::new(log.clone(), GatewayConfig::default(), MetricsRegistry::new());
