@@ -37,7 +37,9 @@ fn main() -> Result<()> {
 
     // The full fused pipeline (Figure 10).
     let cfg = mapgen::SlamConfig::default();
-    let report = mapgen::run_fused(&platform.dispatcher, &platform.resources, &log, &cfg, 0.1)?;
+    let opts = adcloud::platform::JobOpts::new("mapgen-fused");
+    let report =
+        mapgen::run_fused(&platform.dispatcher, &platform.resources, &log, &cfg, &opts, 0.1)?;
     println!(
         "fused pipeline in {}: slam err {:.2} m, {} occupied cells, {} lane samples, {} signs",
         adcloud::util::fmt_duration(report.elapsed),

@@ -50,9 +50,9 @@ fn main() -> Result<()> {
     // Sim tenant: a procedurally generated campaign.
     let specs = scenario::generate_campaign_sized(cfg.seed, scenarios, 16);
     let mut campaign_cfg = scenario::CampaignConfig::new("unified-campaign", nodes);
-    campaign_cfg.queue = "sim".into();
+    campaign_cfg.opts.queue = "sim".into();
     let mut compactor_cfg = ingest::CompactorConfig::new("unified-compact", nodes);
-    compactor_cfg.queue = "fleet".into();
+    compactor_cfg.opts.queue = "fleet".into();
 
     // run_tenant_pair launches both jobs concurrently and verifies
     // every grant is back in the pool when they finish.

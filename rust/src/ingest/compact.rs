@@ -14,7 +14,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::log::{crc32, FrameRef, LogRecord, PartitionedLog};
-use crate::platform::job::{JobHandle, JobSpec};
+use crate::platform::job::JobHandle;
+use crate::platform::opts::JobOpts;
 use crate::resource::{ResourceManager, ResourceVec};
 use crate::storage::TieredStore;
 use crate::trace;
@@ -112,15 +113,13 @@ pub struct BlockRef {
     pub bytes: u64,
 }
 
-/// Compactor knobs.
+/// Compactor knobs. The shared submission fields (app name, queue,
+/// worker ceiling) live in [`JobOpts`]; only the compaction-domain
+/// knobs are declared here.
 #[derive(Debug, Clone)]
 pub struct CompactorConfig {
-    /// Application name registered with the resource manager.
-    pub app: String,
-    /// Capacity-share queue the compaction job is charged against.
-    pub queue: String,
-    /// Requested worker count (one container each; degrades gracefully).
-    pub workers: usize,
+    /// Shared job-submission options.
+    pub opts: JobOpts,
     /// Max records packed into one block.
     pub batch_records: usize,
     /// Store-key prefix for landed blocks.
@@ -130,9 +129,7 @@ pub struct CompactorConfig {
 impl CompactorConfig {
     pub fn new(app: impl Into<String>, workers: usize) -> Self {
         Self {
-            app: app.into(),
-            queue: "default".into(),
-            workers: workers.max(1),
+            opts: JobOpts::new(app).workers(workers),
             batch_records: 256,
             block_prefix: "ingest".into(),
         }
@@ -273,12 +270,12 @@ pub fn compact(
     let mem = (4 * cfg.batch_records as u64 * 1024).max(8 << 20);
     let job = JobHandle::submit(
         rm,
-        JobSpec::new(cfg.app.as_str())
-            .queue(cfg.queue.as_str())
-            .containers(1, cfg.workers.min(log.partitions()).max(1))
+        cfg.opts
+            .spec()
+            .containers(1, cfg.opts.workers.min(log.partitions()).max(1))
             .resources(ResourceVec::cores(1, mem)),
     )
-    .with_context(|| format!("submitting compaction job '{}'", cfg.app))?;
+    .with_context(|| format!("submitting compaction job '{}'", cfg.opts.app))?;
     let workers = job.shards();
     let landed: Mutex<Vec<BlockRef>> = Mutex::new(Vec::new());
     let drained = job.run_per_container(|sctx| -> Result<()> {

@@ -22,7 +22,8 @@ use super::compact::{decode_block, BlockRef};
 use super::gateway::decode_telemetry;
 use crate::dce::DceContext;
 use crate::platform::checkpoint::ShardCheckpoint;
-use crate::platform::job::{JobHandle, JobSpec};
+use crate::platform::job::JobHandle;
+use crate::platform::opts::JobOpts;
 use crate::resource::{ResourceManager, ResourceVec};
 use crate::scenario::{
     base_route, fnv1a64, ActorKind, ActorSpec, FaultSpec, ScenarioSpec, Weather,
@@ -60,17 +61,15 @@ pub struct MinedEvent {
     pub speed_mps: f32,
 }
 
-/// Detection thresholds and spec-emission knobs.
+/// Detection thresholds and spec-emission knobs. The shared submission
+/// fields (app name, queue, worker ceiling, checkpointing — where
+/// `opts.checkpoint` commits each block's scan result into a
+/// [`ShardCheckpoint`] so a preempted or resubmitted mining job skips
+/// scanned blocks) live in [`JobOpts`].
 #[derive(Debug, Clone)]
 pub struct MinerConfig {
-    /// Application name the mining job registers with the resource
-    /// manager.
-    pub app: String,
-    /// Capacity-share queue the mining job is charged against.
-    pub queue: String,
-    /// Requested container count (degrades to the block count and the
-    /// cluster's free capacity).
-    pub workers: usize,
+    /// Shared job-submission options.
+    pub opts: JobOpts,
     /// Deceleration at or below this is a hard brake (m/s^2).
     pub hard_brake_mps2: f32,
     /// Camera gap at or above this is a sensor dropout (ms).
@@ -81,23 +80,17 @@ pub struct MinerConfig {
     pub frames: u32,
     /// Cap on specs emitted per family.
     pub max_specs_per_family: usize,
-    /// Commit each block's scan result into a [`ShardCheckpoint`] so a
-    /// preempted or resubmitted mining job skips scanned blocks.
-    pub checkpoint: bool,
 }
 
 impl Default for MinerConfig {
     fn default() -> Self {
         Self {
-            app: "scenario-miner".into(),
-            queue: "default".into(),
-            workers: 4,
+            opts: JobOpts::new("scenario-miner").workers(4),
             hard_brake_mps2: -6.0,
             dropout_ms: 500,
             merge_window_ns: 500_000_000,
             frames: 16,
             max_specs_per_family: 64,
-            checkpoint: true,
         }
     }
 }
@@ -338,12 +331,12 @@ pub fn mine(
     let max_block = blocks.iter().map(|b| b.bytes).max().unwrap_or(0);
     let job = JobHandle::submit(
         rm,
-        JobSpec::new(cfg.app.as_str())
-            .queue(cfg.queue.as_str())
-            .containers(1, cfg.workers.clamp(1, keys.len()))
+        cfg.opts
+            .spec()
+            .containers(1, cfg.opts.workers.clamp(1, keys.len()))
             .resources(ResourceVec::cores(1, (4 * max_block).max(8 << 20))),
     )?;
-    let ckpt = cfg.checkpoint.then(|| ShardCheckpoint::new(store, &cfg.app));
+    let ckpt = cfg.opts.checkpoint.then(|| ShardCheckpoint::new(store, &cfg.opts.app));
     let shard_ckpt = ckpt.clone();
     // Resolve the per-block counters once; the scan loop must not take
     // the registry lock per block.
@@ -485,7 +478,7 @@ mod tests {
         // Simulate an interrupted job: one block's scan is already
         // committed under the miner's app name, and one blob is
         // corrupt (must be rescanned, not fatal).
-        let ckpt = ShardCheckpoint::new(ctx.store(), &cfg.app);
+        let ckpt = ShardCheckpoint::new(ctx.store(), &cfg.opts.app);
         let pre = scan_block(ctx.store().get(&blocks[0].key).unwrap().as_ref(), &cfg).unwrap();
         ckpt.commit(&ckpt_key(&blocks[0].key, &cfg), encode_events(&pre)).unwrap();
         ckpt.commit(&ckpt_key(&blocks[1].key, &cfg), b"garbage".to_vec()).unwrap();

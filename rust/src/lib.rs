@@ -42,8 +42,10 @@
 //!   workload schedules through; preempted shards checkpoint via
 //!   `ShardCheckpoint`, yield their container, and requeue without
 //!   burning their retry budget; `ShardCheckpoint::sweep` GCs orphaned
-//!   checkpoint blobs past a retention window), and the
-//!   paper-experiment harness (E1–E19).
+//!   checkpoint blobs past a retention window), shared job-submission
+//!   options (`JobOpts`: app/queue/workers/checkpoint/grant-timeout,
+//!   one builder reused by every subcommand and service config), and
+//!   the paper-experiment harness (E1–E21).
 //! * [`hetero`] — kernel registry + dispatch across CPU / GPU-class /
 //!   FPGA-class devices.
 //! * [`runtime`] — the PJRT artifact runtime (device-server threads).
@@ -52,6 +54,15 @@
 //!   compaction into tiered storage, and scenario mining.
 //! * [`scenario`] — procedural scenario generation + distributed test
 //!   campaigns (spec → generate → campaign → qualification report).
+//! * [`serve`] — the latency-SLO serving plane: vehicles offload
+//!   inference with hard deadlines; reject-on-arrival admission
+//!   (queue-delay estimate vs deadline slack), EDF dispatch on an
+//!   `interactive` priority queue above the batch queues, and
+//!   speculative local-model fallback when remaining slack stops
+//!   covering the p99 service estimate (degraded completion, not an
+//!   SLO miss). Ships as a deterministic virtual-time simulator plus
+//!   a real plane whose workers are job-layer container shards;
+//!   exercised by experiment E21.
 //! * [`services`] — simulation, training, HD-map generation, SQL.
 //! * [`pointcloud`] — SE(3) math, KD-trees, the 3x3 polar solve.
 //! * [`trace`] — causal tracing across every plane: spans recorded
@@ -83,6 +94,7 @@ pub mod pointcloud;
 pub mod resource;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod services;
 pub mod storage;
 pub mod trace;

@@ -24,10 +24,20 @@
 //!             HTTP during the run, e.g. --serve 127.0.0.1:9100
 //!             [--force-postmortem PATH]  with --sample-ms: write a
 //!             flight-recorder bundle to PATH before exiting
+//!   serve     [--nodes N] [--workers W] [--requests R] [--load F]
+//!             [--service-us US] [--deadline-us US] [--local-us US]
+//!             the latency-SLO serving plane: deadline-aware offload
+//!             requests over the unified job layer on the interactive
+//!             priority queue (EDF dispatch + speculative local-model
+//!             fallback); --load is a fraction of worker capacity
+//!             [--quick]  run the CI self-test instead
+//!             [--sample-ms MS]  telemetry plane with the serve SLO
+//!             rules (interactive grant-wait p99, rising-latency
+//!             slope) stacked on the builtin watchdog set
 //!   train     [--examples N] [--rounds R] [--workers W]
 //!   mapgen    [--steps N]
 //!   sql       [--rows N]
-//!   repro-tables [e1..e20|all] [--quick]
+//!   repro-tables [e1..e21|all] [--quick]
 //!             [--vehicles N]  e20 only: sweep the fleet up to N
 //!             vehicles instead of the default (1M, or 50k --quick)
 //!   top       [--once] [--duration-secs S] [--refresh-ms MS]
@@ -41,12 +51,18 @@
 //!   pipe-worker <logic>          BinPipe child process (detect)
 //!   metrics                      dump the metrics registry after a demo job
 //!
+//! Subcommands that submit through the unified job layer (`campaign`,
+//! `ingest`, `mapgen`) share the same submission flags with identical
+//! meaning: `--app NAME` (application name), `--queue Q` (capacity
+//! queue), `--no-checkpoint` (skip shard checkpointing).
+//!
 //! Every subcommand also accepts `--baseline`: force the pre-fast-path
 //! storage plane (single-lock block map, O(n) eviction scans) for A/B
 //! runs against experiment E17's sharded default; for `ingest` it also
 //! selects the pre-batching gateway (per-vehicle stepping, one
 //! admission decision and one log append per upload) against the
-//! event-driven batched default — and
+//! event-driven batched default; for `serve` it selects FIFO dispatch
+//! with speculation off (experiment E21's baseline arm) — and
 //! `--trace <out.json>`: enable the causal tracer for the run and write
 //! every recorded span as Chrome trace-event JSON (loadable in
 //! Perfetto / chrome://tracing, or pretty-printed by `adcloud trace`).
@@ -88,6 +104,24 @@ fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, name: &str, defau
         .get(name)
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// The shared job-submission flags, meaning the same thing on every
+/// subcommand that submits through the unified job layer: `--app NAME`
+/// (application name), `--queue Q` (capacity queue), `--no-checkpoint`
+/// (skip shard checkpointing).
+fn job_opts_from(
+    flags: &HashMap<String, String>,
+    default_app: &str,
+    workers: usize,
+) -> adcloud::platform::JobOpts {
+    let app = flags.get("app").map(String::as_str).unwrap_or(default_app);
+    let mut opts = adcloud::platform::JobOpts::new(app).workers(workers);
+    if let Some(q) = flags.get("queue") {
+        opts.queue = q.clone();
+    }
+    opts.checkpoint = !flags.contains_key("no-checkpoint");
+    opts
 }
 
 fn main() {
@@ -141,6 +175,7 @@ fn dispatch(cmd: &str, pos: &[String], flags: &HashMap<String, String>) -> Resul
         "campaign" => campaign(flags),
         "ingest" => run_ingest(flags),
         "jobs" => run_jobs(flags),
+        "serve" => run_serve(flags),
         "train" => train(flags),
         "mapgen" => run_mapgen(flags),
         "sql" => run_sql(flags),
@@ -174,8 +209,8 @@ fn dispatch(cmd: &str, pos: &[String], flags: &HashMap<String, String>) -> Resul
         other => {
             eprintln!("unknown command '{other}'");
             eprintln!(
-                "commands: info quickstart simulate campaign ingest jobs train mapgen sql \
-                 repro-tables top postmortem bench-diff trace pipe-worker metrics"
+                "commands: info quickstart simulate campaign ingest jobs serve train mapgen \
+                 sql repro-tables top postmortem bench-diff trace pipe-worker metrics"
             );
             std::process::exit(2);
         }
@@ -269,7 +304,8 @@ fn campaign(flags: &HashMap<String, String>) -> Result<()> {
         distinct.len(),
         scenario::campaign_digest(&specs)
     );
-    let cfg = scenario::CampaignConfig::new(format!("campaign-{seed}"), nodes);
+    let mut cfg = scenario::CampaignConfig::new(format!("campaign-{seed}"), nodes);
+    cfg.opts = job_opts_from(flags, &format!("campaign-{seed}"), nodes);
     let report = scenario::run_campaign(&p.ctx, &p.resources, &specs, &cfg)?;
     println!("{}", report.render());
     Ok(())
@@ -300,7 +336,8 @@ fn run_ingest(flags: &HashMap<String, String>) -> Result<()> {
     let fleet = ingest::simulate_fleet(&gw, &fleet_cfg)?;
     println!("{}", fleet.render());
 
-    let ccfg = ingest::CompactorConfig::new("cli-ingest", workers);
+    let mut ccfg = ingest::CompactorConfig::new("cli-ingest", workers);
+    ccfg.opts = job_opts_from(flags, "cli-ingest", workers);
     let compaction = ingest::compact(&log, p.ctx.store(), &p.resources, &ccfg)?;
     println!("{}", compaction.render());
 
@@ -420,9 +457,9 @@ fn run_jobs(flags: &HashMap<String, String>) -> Result<()> {
         cfg.cluster.nodes
     };
     let mut ccfg = scenario::CampaignConfig::new("jobs-campaign", campaign_nodes);
-    ccfg.queue = "sim".into();
+    ccfg.opts.queue = "sim".into();
     let mut kcfg = ingest::CompactorConfig::new("jobs-compact", cfg.cluster.nodes);
-    kcfg.queue = "fleet".into();
+    kcfg.opts.queue = "fleet".into();
 
     let stagger = if preempt {
         std::time::Duration::from_millis(30)
@@ -486,6 +523,90 @@ fn run_jobs(flags: &HashMap<String, String>) -> Result<()> {
         o.stop();
     }
     println!("job-layer metrics:\n{}", metrics.report());
+    Ok(())
+}
+
+/// `adcloud serve` — the latency-SLO serving plane: deadline-carrying
+/// offload requests admitted (or rejected on arrival), dispatched EDF
+/// from the `interactive` priority queue via the unified job layer,
+/// with speculative local-model fallback when slack runs out.
+/// `--quick` runs the CI self-test; `--baseline` is E21's FIFO /
+/// no-speculation arm.
+fn run_serve(flags: &HashMap<String, String>) -> Result<()> {
+    use adcloud::serve::{self, ServeConfig, ServePlane};
+    if flags.contains_key("quick") {
+        println!("{}", serve::self_test()?);
+        return Ok(());
+    }
+    let mut cfg = ServeConfig {
+        nodes: flag(flags, "nodes", 2usize),
+        workers_per_node: flag(flags, "workers", 2usize),
+        requests: flag(flags, "requests", 2_000usize),
+        mean_service_us: flag(flags, "service-us", 400u64),
+        deadline_us: flag(flags, "deadline-us", 2_400u64),
+        local_service_us: flag(flags, "local-us", 80u64),
+        seed: flag(flags, "seed", 7u64),
+        ..ServeConfig::default()
+    }
+    .at_load(flag(flags, "load", 0.8f64));
+    if flags.contains_key("baseline") {
+        cfg = cfg.baseline();
+    }
+    let cluster = adcloud::config::ClusterConfig {
+        nodes: cfg.nodes,
+        cores_per_node: cfg.workers_per_node,
+        gpus_per_node: 0,
+        fpgas_per_node: 0,
+        mem_per_node: 256 << 20,
+    };
+    let metrics = adcloud::metrics::MetricsRegistry::new();
+    let rm = adcloud::resource::ResourceManager::with_priority_queues(
+        &cluster,
+        vec![("batch".into(), 0.5, 1.0, 0), ("interactive".into(), 0.5, 1.0, 1)],
+        metrics.clone(),
+    );
+    // --sample-ms: telemetry plane with the serve SLO rules (tight
+    // interactive grant-wait p99, rising-latency slope, absolute
+    // latency p99) stacked on the builtin watchdog set.
+    let obs = flags.get("sample-ms").and_then(|v| v.parse::<u64>().ok()).map(|ms| {
+        let sustain = std::time::Duration::from_millis(500);
+        let mut rules = adcloud::obs::builtin_rules(sustain);
+        rules.extend(adcloud::obs::serve_rules(sustain));
+        let o = adcloud::obs::Observability::start(
+            metrics.clone(),
+            adcloud::obs::ObsConfig {
+                sampler: adcloud::obs::SamplerConfig {
+                    period: std::time::Duration::from_millis(ms.max(1)),
+                    ..Default::default()
+                },
+                rules,
+                ..Default::default()
+            },
+        );
+        adcloud::obs::install(&o);
+        o
+    });
+    println!(
+        "serving plane: {} nodes x {} workers, {} requests at {:.0} rps (capacity {:.0} \
+         rps), deadline {} us, policy {:?}, speculation {}",
+        cfg.nodes,
+        cfg.workers_per_node,
+        cfg.requests,
+        cfg.offered_rps,
+        cfg.capacity_rps(),
+        cfg.deadline_us,
+        cfg.policy,
+        if cfg.speculation { "on" } else { "off" },
+    );
+    let report = ServePlane::run_on(&rm, &cfg)?;
+    anyhow::ensure!(rm.live_containers() == 0, "serving plane leaked containers");
+    println!("{}", report.render());
+    if let Some(o) = &obs {
+        let health = o.health_json();
+        println!("obs: health {}", health.req("status")?.as_str()?);
+        adcloud::obs::uninstall();
+        o.stop();
+    }
     Ok(())
 }
 
@@ -580,6 +701,7 @@ fn bench_diff(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             "BENCH_E17.json".into(),
             "BENCH_E18.json".into(),
             "BENCH_E19.json".into(),
+            "BENCH_E21.json".into(),
         ]
     } else {
         pos.to_vec()
@@ -704,7 +826,8 @@ fn run_mapgen(flags: &HashMap<String, String>) -> Result<()> {
     let world = mapgen::gen_world(p.config.seed);
     let log = mapgen::gen_drive(&world, steps, p.config.seed);
     let cfg = mapgen::SlamConfig::default();
-    let report = mapgen::run_fused(&p.dispatcher, &p.resources, &log, &cfg, 0.1)?;
+    let opts = job_opts_from(flags, "mapgen-fused", 1);
+    let report = mapgen::run_fused(&p.dispatcher, &p.resources, &log, &cfg, &opts, 0.1)?;
     println!(
         "map built from {steps} steps in {}: {} occupied cells, {} signs, slam err {:.2} m",
         adcloud::util::fmt_duration(report.elapsed),

@@ -524,6 +524,42 @@ impl CampaignMetrics {
     }
 }
 
+/// Pre-resolved handles for the online serving plane (`serve.*`,
+/// touched once per offload request on the admission/dispatch path).
+#[derive(Clone)]
+pub struct ServeMetrics {
+    pub requests: Arc<Counter>,
+    pub admitted: Arc<Counter>,
+    /// Rejected on arrival: queue-delay estimate already exceeded the
+    /// request's deadline slack, so running it would waste a slot.
+    pub rejected: Arc<Counter>,
+    pub completed: Arc<Counter>,
+    /// Admitted requests whose response landed after the deadline.
+    pub deadline_misses: Arc<Counter>,
+    /// Speculative local-model completions: degraded quality, not a miss.
+    pub fallbacks: Arc<Counter>,
+    /// Admitted requests currently waiting for a worker (EDF queue depth).
+    pub queue_depth: Arc<Gauge>,
+    /// End-to-end request latency; the sampler exports
+    /// `serve.latency.p50/.p99/.p999` from this histogram.
+    pub latency: Arc<Histogram>,
+}
+
+impl ServeMetrics {
+    pub fn new(reg: &MetricsRegistry) -> Self {
+        Self {
+            requests: reg.counter("serve.requests"),
+            admitted: reg.counter("serve.admitted"),
+            rejected: reg.counter("serve.rejected"),
+            completed: reg.counter("serve.completed"),
+            deadline_misses: reg.counter("serve.deadline_misses"),
+            fallbacks: reg.counter("serve.fallbacks"),
+            queue_depth: reg.gauge("serve.queue_depth"),
+            latency: reg.histogram("serve.latency"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

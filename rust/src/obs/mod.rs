@@ -27,7 +27,7 @@ pub mod sampler;
 pub mod watchdog;
 
 pub use sampler::{ProbeKind, Sampler, SamplerConfig};
-pub use watchdog::{builtin_rules, Level, Rule, Transition, Watchdog};
+pub use watchdog::{builtin_rules, serve_rules, Level, Rule, Transition, Watchdog};
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

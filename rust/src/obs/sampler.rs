@@ -3,10 +3,12 @@
 //!
 //! Counters become *windowed rates* (`<name>.rate`, per second, from
 //! deltas between ticks), gauges are sampled directly (`<name>`), and
-//! histograms are sampled at their current p50/p99 (`<name>.p50`,
-//! `<name>.p99`, microseconds). External sources that are not in the
-//! registry — executor steal counts, trace-ring drops — plug in as
-//! probes ([`Sampler::add_probe`]).
+//! histograms are sampled at their current p50/p99/p999 (`<name>.p50`,
+//! `<name>.p99`, `<name>.p999`, microseconds — the tail quantile is
+//! what the serving plane's latency SLOs are written against).
+//! External sources that are not in the registry — executor steal
+//! counts, trace-ring drops — plug in as probes
+//! ([`Sampler::add_probe`]).
 //!
 //! **Zero new locks on hot paths.** The sampler clones the registry's
 //! `(name, Arc)` handle map once per tick ([`MetricsRegistry::handles`])
@@ -190,8 +192,10 @@ impl Sampler {
             }
             let p50 = h.quantile(0.5).as_micros() as f64;
             let p99 = h.quantile(0.99).as_micros() as f64;
+            let p999 = h.quantile(0.999).as_micros() as f64;
             self.push(format!("{name}.p50"), now_ms, p50);
             self.push(format!("{name}.p99"), now_ms, p99);
+            self.push(format!("{name}.p999"), now_ms, p999);
         }
         for i in 0..self.probes.len() {
             let raw = (self.probes[i].read)();
@@ -297,6 +301,7 @@ mod tests {
         s.tick(0);
         assert_eq!(s.latest("h.p50"), Some(10.0));
         assert!(s.latest("h.p99").unwrap() >= 10.0);
+        assert!(s.latest("h.p999").unwrap() >= s.latest("h.p99").unwrap());
     }
 
     #[test]

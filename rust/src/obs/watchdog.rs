@@ -57,6 +57,11 @@ pub struct Rule {
     pub sustain: Duration,
     /// How long the value must stay below `warn` before clearing.
     pub clear: Duration,
+    /// When set, the rule watches the series' *rate of change*
+    /// (units/second between consecutive samples) instead of its
+    /// absolute value — a rising-edge alarm that fires while a latency
+    /// series is still climbing toward its absolute threshold.
+    pub slope_per_sec: bool,
 }
 
 /// A level change on one rule, emitted by [`Watchdog::eval`].
@@ -76,6 +81,8 @@ struct RuleState {
     crit_since: Option<u64>,
     below_since: Option<u64>,
     last_value: f64,
+    /// Previous `(at_ms, raw sample)` for slope rules.
+    prev: Option<(u64, f64)>,
 }
 
 const MAX_TRANSITIONS: usize = 1024;
@@ -96,6 +103,7 @@ impl Watchdog {
                 crit_since: None,
                 below_since: None,
                 last_value: 0.0,
+                prev: None,
             })
             .collect();
         Self { rules, states, transitions: Vec::new() }
@@ -115,11 +123,25 @@ impl Watchdog {
     ) -> Vec<Transition> {
         let mut fired = Vec::new();
         for (i, rule) in self.rules.iter().enumerate() {
-            let v = match lookup(&rule.series) {
+            let raw = match lookup(&rule.series) {
                 Some(v) => v,
                 None => continue,
             };
             let st = &mut self.states[i];
+            let v = if rule.slope_per_sec {
+                // Rate of change against the previous sample; the
+                // first sample establishes the baseline at slope 0.
+                let slope = match st.prev {
+                    Some((t0, v0)) if now_ms > t0 => {
+                        (raw - v0) / ((now_ms - t0) as f64 / 1000.0)
+                    }
+                    _ => 0.0,
+                };
+                st.prev = Some((now_ms, raw));
+                slope
+            } else {
+                raw
+            };
             st.last_value = v;
             let mut next = st.level;
             if v >= rule.critical {
@@ -242,6 +264,7 @@ pub fn builtin_rules(sustain: Duration) -> Vec<Rule> {
         critical,
         sustain,
         clear,
+        slope_per_sec: false,
     };
     vec![
         rule(
@@ -289,6 +312,52 @@ pub fn builtin_rules(sustain: Duration) -> Vec<Rule> {
     ]
 }
 
+/// Serving-plane SLO rules, composed with [`builtin_rules`] by the
+/// `serve` subcommand and experiment E21. Kept separate so batch-only
+/// deployments keep the historical six-rule set: the interactive queue
+/// answers vehicle offloads with ~100 ms deadlines, so its grant-wait
+/// budget is 5x tighter than the batch `grant-wait-p99` rule, and the
+/// slope rule fires while serve latency is still *climbing* toward the
+/// absolute threshold — the earliest observable edge of a saturation
+/// cliff.
+pub fn serve_rules(sustain: Duration) -> Vec<Rule> {
+    let clear = sustain * 2;
+    vec![
+        Rule {
+            name: "interactive-grant-wait",
+            series: "resource.grant_wait.interactive.p99".to_string(),
+            what: "p99 container grant wait on the interactive queue (µs); offload \
+                   deadlines are ~100ms so admission must stay far under the batch budget",
+            warn: 10_000.0,
+            critical: 25_000.0,
+            sustain,
+            clear,
+            slope_per_sec: false,
+        },
+        Rule {
+            name: "serve-latency-rising",
+            series: "serve.latency.p99".to_string(),
+            what: "rate of change of serve p99 latency (µs per second); a sustained \
+                   climb is the leading edge of the saturation cliff",
+            warn: 50_000.0,
+            critical: 250_000.0,
+            sustain,
+            clear,
+            slope_per_sec: true,
+        },
+        Rule {
+            name: "serve-latency-p99",
+            series: "serve.latency.p99".to_string(),
+            what: "absolute p99 offload latency (µs) against the ~100ms deadline class",
+            warn: 80_000.0,
+            critical: 150_000.0,
+            sustain,
+            clear,
+            slope_per_sec: false,
+        },
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,6 +371,7 @@ mod tests {
             critical: 100.0,
             sustain: Duration::from_millis(sustain_ms),
             clear: Duration::from_millis(clear_ms),
+            slope_per_sec: false,
         }])
     }
 
@@ -378,6 +448,54 @@ mod tests {
             assert!(names.contains(&expect), "missing builtin rule {expect}");
         }
         for r in &rules {
+            assert!(r.warn < r.critical, "{}: warn must sit below critical", r.name);
+        }
+    }
+
+    #[test]
+    fn slope_rule_fires_while_series_is_rising_not_merely_high() {
+        let mut w = Watchdog::new(vec![Rule {
+            name: "rising",
+            series: "s".into(),
+            what: "test",
+            warn: 100.0,
+            critical: 1000.0,
+            sustain: Duration::ZERO,
+            clear: Duration::ZERO,
+            slope_per_sec: true,
+        }]);
+        // High but FLAT: slope 0, never fires.
+        assert!(w.eval(0, |_| Some(5_000.0)).is_empty());
+        assert!(w.eval(1000, |_| Some(5_000.0)).is_empty());
+        assert_eq!(w.level("rising"), Some(Level::Ok));
+        // Climbing at 500 units/s: warn fires while the absolute value
+        // is unremarkable relative to where it is heading.
+        let t = w.eval(2000, |_| Some(5_500.0));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].to, Level::Warn);
+        // Climbing at 2000 units/s: critical.
+        let t = w.eval(3000, |_| Some(7_500.0));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].to, Level::Critical);
+        // Plateau: slope collapses to 0 and the rule clears.
+        let t = w.eval(4000, |_| Some(7_500.0));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].to, Level::Ok);
+    }
+
+    #[test]
+    fn serve_rules_are_tighter_than_batch_and_include_a_slope_rule() {
+        let sustain = Duration::from_millis(500);
+        let batch = builtin_rules(sustain);
+        let serve = serve_rules(sustain);
+        let batch_wait = batch.iter().find(|r| r.name == "grant-wait-p99").unwrap();
+        let serve_wait = serve.iter().find(|r| r.name == "interactive-grant-wait").unwrap();
+        assert!(serve_wait.warn < batch_wait.warn);
+        assert!(serve_wait.critical < batch_wait.critical);
+        assert!(serve_wait.series.contains("interactive"));
+        let rising = serve.iter().find(|r| r.name == "serve-latency-rising").unwrap();
+        assert!(rising.slope_per_sec, "rising rule must watch the slope");
+        for r in &serve {
             assert!(r.warn < r.critical, "{}: warn must sit below critical", r.name);
         }
     }

@@ -72,9 +72,9 @@ impl Table {
     }
 }
 
-pub const ALL_IDS: [&str; 20] = [
+pub const ALL_IDS: [&str; 21] = [
     "e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13", "e14",
-    "e15", "e16", "e17", "e18", "e19", "e20",
+    "e15", "e16", "e17", "e18", "e19", "e20", "e21",
 ];
 
 /// Run one experiment by id. `quick` shrinks workloads for CI/tests.
@@ -100,6 +100,7 @@ pub fn run_experiment(id: &str, quick: bool) -> Result<Table> {
         "e18" => e18_trace(quick),
         "e19" => e19_observability(quick),
         "e20" => e20_fleet(quick),
+        "e21" => e21_serve(quick),
         other => Err(anyhow!("unknown experiment '{other}' (have {ALL_IDS:?})")),
     }
 }
@@ -587,10 +588,12 @@ fn e7_pipeline(quick: bool) -> Result<Table> {
     let store = TieredStore::test_store(&cfg.storage);
     let rm = ResourceManager::new(&cfg.cluster, MetricsRegistry::new());
     let ps_u = training::ParamServer::tiered(store.clone(), "e7u");
-    let u = training::run_unified(&ctx, &rm, &d, DeviceKind::Gpu, &ps_u, examples, rounds, 4, 7)?;
+    let uo = crate::platform::JobOpts::new("training-unified").workers(4);
+    let u = training::run_unified(&ctx, &rm, &d, DeviceKind::Gpu, &ps_u, examples, rounds, &uo, 7)?;
     let ps_s = training::ParamServer::tiered(store, "e7s");
+    let so = crate::platform::JobOpts::new("training-staged").workers(4);
     let s =
-        training::run_staged(ctx.dfs(), &rm, &d, DeviceKind::Gpu, &ps_s, examples, rounds, 4, 7)?;
+        training::run_staged(ctx.dfs(), &rm, &d, DeviceKind::Gpu, &ps_s, examples, rounds, &so, 7)?;
     Ok(Table {
         id: "e7",
         title: format!("ETL->feature->train pipeline, {examples} examples, {rounds} rounds"),
@@ -852,8 +855,23 @@ fn e10_mapgen(quick: bool) -> Result<Table> {
     let tier = PlatformConfig::bench().storage.dfs;
     let dfs = DfsStore::new(tier, true, MetricsRegistry::new())?;
     let rm = ResourceManager::new(&PlatformConfig::bench().cluster, MetricsRegistry::new());
-    let fused = mapgen::run_fused(&d, &rm, &log, &cfg, 0.1)?;
-    let staged = mapgen::run_staged(&d, &rm, &dfs, &log, &cfg, 0.1)?;
+    let fused = mapgen::run_fused(
+        &d,
+        &rm,
+        &log,
+        &cfg,
+        &crate::platform::JobOpts::new("mapgen-fused"),
+        0.1,
+    )?;
+    let staged = mapgen::run_staged(
+        &d,
+        &rm,
+        &dfs,
+        &log,
+        &cfg,
+        &crate::platform::JobOpts::new("mapgen-staged"),
+        0.1,
+    )?;
     Ok(Table {
         id: "e10",
         title: format!("HD-map pipeline, {steps}-step drive (SLAM err {:.2} m)", fused.slam_err_m),
@@ -1368,9 +1386,9 @@ fn e15_multitenant(quick: bool) -> Result<Table> {
         // Sim side: a procedurally generated campaign.
         let specs = scenario::generate_campaign_sized(15, scen_n, frames);
         let mut ccfg = scenario::CampaignConfig::new(format!("e15-camp-{nodes}"), nodes);
-        ccfg.queue = "sim".into();
+        ccfg.opts.queue = "sim".into();
         let mut kcfg = ingest::CompactorConfig::new(format!("e15-comp-{nodes}"), nodes);
-        kcfg.queue = "fleet".into();
+        kcfg.opts.queue = "fleet".into();
 
         let run = run_tenant_pair(&ctx, &rm, &specs, &ccfg, &log, &store, &kcfg, Duration::ZERO)?;
         let wait = metrics.histogram("platform.job.grant_wait");
@@ -1457,10 +1475,10 @@ fn e16_run(
     let store = TieredStore::test_store(&cfg.storage);
     let specs = scenario::generate_campaign_sized(16, scen_per_core * cores, frames);
     let mut ccfg = scenario::CampaignConfig::new(format!("e16-camp-{nodes}-{preempt}"), cores);
-    ccfg.queue = "sim".into();
-    ccfg.checkpoint = true;
+    ccfg.opts.queue = "sim".into();
+    ccfg.opts.checkpoint = true;
     let mut kcfg = ingest::CompactorConfig::new(format!("e16-comp-{nodes}-{preempt}"), parts);
-    kcfg.queue = "fleet".into();
+    kcfg.opts.queue = "fleet".into();
 
     let t0 = Instant::now();
     let (camp, comp) = std::thread::scope(|s| {
@@ -1666,9 +1684,9 @@ fn e17_e2e_run(
     let specs = scenario::generate_campaign_sized(17, scen_n, frames);
     let mut ccfg =
         scenario::CampaignConfig::new(format!("e17-camp-{nodes}-{baseline}"), nodes);
-    ccfg.queue = "sim".into();
+    ccfg.opts.queue = "sim".into();
     let mut kcfg = ingest::CompactorConfig::new(format!("e17-comp-{nodes}-{baseline}"), nodes);
-    kcfg.queue = "fleet".into();
+    kcfg.opts.queue = "fleet".into();
     let run = run_tenant_pair(
         &ctx,
         &rm,
@@ -1857,9 +1875,9 @@ fn e18_traced_pair(
     let store = TieredStore::test_store(&cfg.storage);
     let specs = scenario::generate_campaign_sized(18, scen_n, frames);
     let mut ccfg = scenario::CampaignConfig::new(format!("e18-camp-{nodes}"), nodes);
-    ccfg.queue = "sim".into();
+    ccfg.opts.queue = "sim".into();
     let mut kcfg = ingest::CompactorConfig::new(format!("e18-comp-{nodes}"), nodes);
-    kcfg.queue = "fleet".into();
+    kcfg.opts.queue = "fleet".into();
     let (run, spans) = with_tracing(|| {
         run_tenant_pair(&ctx, &rm, &specs, &ccfg, &log, &store, &kcfg, Duration::ZERO)
     })?;
@@ -2439,6 +2457,167 @@ fn e20_fleet(quick: bool) -> Result<Table> {
     e20_fleet_sized(if quick { 50_000 } else { 1_000_000 }, quick)
 }
 
+// ===========================================================================
+// E21 (§3): latency-SLO serving — offered-load sweep to saturation
+// ===========================================================================
+
+/// Sweep offered load across the latency cliff at 1/2/4/8 nodes,
+/// EDF+speculation vs the FIFO/no-speculation `--baseline` arm under
+/// identical arrivals (deterministic virtual-time runs), then two real
+/// serving-plane runs for wall-clock goodput and the container-leak
+/// check. Writes BENCH_E21.json for the bench-diff gate.
+pub fn e21_serve_sized(requests: usize, quick: bool) -> Result<Table> {
+    use crate::serve::{self, ServeConfig, ServePlane};
+    use crate::util::json::Json;
+
+    let loads = [0.5, 0.9, 1.5, 2.5];
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for nodes in SWEEP_NODES {
+        for load in loads {
+            let cfg = ServeConfig { nodes, requests, ..ServeConfig::default() }.at_load(load);
+            let edf = serve::simulate(&cfg);
+            let fifo = serve::simulate(&cfg.clone().baseline());
+            if load <= 0.5 {
+                // Below the knee the SLO must hold outright: p99 within
+                // the deadline and (near-)nothing degraded or missed.
+                anyhow::ensure!(
+                    edf.p99_us <= cfg.deadline_us
+                        && edf.miss_pct() < 0.5
+                        && edf.fallback_pct() < 0.5,
+                    "below-knee SLO violated at {nodes} nodes load {load}: {}",
+                    edf.render()
+                );
+            } else {
+                // At and past the knee speculation must hold the miss
+                // rate under 1% — overflow shows up as rejections and
+                // degraded completions instead.
+                anyhow::ensure!(
+                    edf.miss_pct() < 1.0,
+                    "miss rate escaped speculation at {nodes} nodes load {load}: {}",
+                    edf.render()
+                );
+            }
+            if load >= 1.0 {
+                anyhow::ensure!(
+                    edf.rejected > 0 && edf.missed <= fifo.missed,
+                    "past the knee admission must shed load and EDF must not out-miss \
+                     the baseline at {nodes} nodes load {load}: {} vs {}",
+                    edf.render(),
+                    fifo.render()
+                );
+            }
+            for (arm, r) in [("edf", &edf), ("fifo-base", &fifo)] {
+                rows.push(vec![
+                    format!("{nodes}"),
+                    format!("{load:.1}x"),
+                    arm.into(),
+                    format!("{:.0}/s", cfg.offered_rps),
+                    format!("{:.0}/s", r.goodput_per_sec()),
+                    format!("{}", r.p50_us),
+                    format!("{}", r.p99_us),
+                    format!("{}", r.p999_us),
+                    format!("{:.2}%", r.miss_pct()),
+                    format!("{:.2}%", r.fallback_pct()),
+                ]);
+                json_rows.push(Json::obj(vec![
+                    ("nodes", Json::num(nodes as f64)),
+                    ("load", Json::num(load)),
+                    ("arm", Json::str(arm)),
+                    ("offered_rps", Json::num(cfg.offered_rps)),
+                    ("sim_goodput_rps", Json::num(r.goodput_per_sec())),
+                    ("p50_us", Json::num(r.p50_us as f64)),
+                    ("p99_us", Json::num(r.p99_us as f64)),
+                    ("p999_us", Json::num(r.p999_us as f64)),
+                    ("miss_pct", Json::num(r.miss_pct())),
+                    ("fallback_pct", Json::num(r.fallback_pct())),
+                ]));
+            }
+        }
+    }
+
+    // The real plane (job-layer containers on the `interactive` queue,
+    // wall-clock pacing), kept to 1–2 nodes so the spin-wait workers
+    // don't oversubscribe CI hosts. `ServePlane::run` fails on any
+    // leaked container.
+    let mut real_goodput = Vec::new();
+    for nodes in [1usize, 2] {
+        let cfg = ServeConfig {
+            nodes,
+            workers_per_node: 2,
+            requests: if quick { 150 } else { 600 },
+            mean_service_us: 400,
+            deadline_us: 2400,
+            local_service_us: 80,
+            ..ServeConfig::default()
+        }
+        .at_load(0.8);
+        let r = ServePlane::run(&cfg)?;
+        anyhow::ensure!(
+            r.admitted + r.rejected == r.offered
+                && r.completed + r.missed + r.fallbacks == r.admitted,
+            "real-plane accounting must balance at {nodes} nodes: {}",
+            r.render()
+        );
+        real_goodput.push(r.goodput_per_sec());
+        rows.push(vec![
+            format!("{nodes}"),
+            "0.8x".into(),
+            "real-edf".into(),
+            format!("{:.0}/s", cfg.offered_rps),
+            format!("{:.0}/s", r.goodput_per_sec()),
+            format!("{}", r.p50_us),
+            format!("{}", r.p99_us),
+            format!("{}", r.p999_us),
+            format!("{:.2}%", r.miss_pct()),
+            format!("{:.2}%", r.fallback_pct()),
+        ]);
+    }
+
+    let json = Json::obj(vec![
+        ("experiment", Json::str("e21")),
+        ("quick", Json::Bool(quick)),
+        ("serve_goodput_1node_per_sec", Json::num(real_goodput[0])),
+        ("serve_goodput_2node_per_sec", Json::num(real_goodput[1])),
+        ("rows", Json::arr(json_rows)),
+    ]);
+    std::fs::write("BENCH_E21.json", json.to_string_pretty())?;
+
+    Ok(Table {
+        id: "e21",
+        title: format!(
+            "latency-SLO serving: offered-load sweep across the cliff ({requests} requests \
+             per arm, deadline 12ms, EDF+speculation vs FIFO baseline, real plane at 1-2 \
+             nodes)"
+        ),
+        mode: "virtual-time",
+        header: vec![
+            "nodes",
+            "load",
+            "arm",
+            "offered",
+            "goodput",
+            "p50 us",
+            "p99 us",
+            "p999 us",
+            "miss",
+            "fallback",
+        ],
+        rows,
+        notes: "below the knee (load < 1.0) the edf arm holds p99 inside the deadline with \
+                nothing degraded; past the knee admission sheds overflow on arrival and \
+                speculation converts would-be misses into degraded local completions, so \
+                goodput flattens instead of collapsing while the fifo baseline's miss rate \
+                climbs. The real-edf rows are wall-clock runs through the unified job layer \
+                on the interactive priority queue (leak-checked)."
+            .into(),
+    })
+}
+
+fn e21_serve(quick: bool) -> Result<Table> {
+    e21_serve_sized(if quick { 4000 } else { 20_000 }, quick)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2699,6 +2878,39 @@ mod tests {
             let lost: u64 = row[4].parse().unwrap();
             assert_eq!(lost, 0, "committed tail must never be truncated: {row:?}");
         }
+    }
+
+    #[test]
+    fn e21_latency_cliff_holds_and_bench_json_round_trips() {
+        // Small but past-the-cliff sweep; the in-function gates already
+        // assert the below-knee SLO, the past-knee <1% miss rate, and
+        // the leak-free real runs — failure surfaces as Err here.
+        let t = e21_serve_sized(2_000, true).unwrap();
+        // 4 node counts x 4 loads x 2 arms, plus 2 real-plane rows.
+        assert_eq!(t.rows.len(), SWEEP_NODES.len() * 4 * 2 + 2, "{:?}", t.rows);
+        // The cliff: at 8 nodes the edf arm's p99 stays inside the
+        // 12 ms deadline at load 0.5 and blows past it by load 2.5,
+        // while goodput holds instead of collapsing.
+        let row = |load: &str, arm: &str| {
+            t.rows
+                .iter()
+                .find(|r| r[0] == "8" && r[1] == load && r[2] == arm)
+                .unwrap_or_else(|| panic!("missing row {load}/{arm}"))
+                .clone()
+        };
+        let below: f64 = row("0.5x", "edf")[6].parse().unwrap();
+        let past: f64 = row("2.5x", "edf")[6].parse().unwrap();
+        assert!(below <= 12_000.0, "below-knee p99 {below} escaped the deadline");
+        assert!(past > below, "the sweep must cross a latency cliff");
+        let good_low: f64 = row("0.5x", "edf")[4].trim_end_matches("/s").parse().unwrap();
+        let good_hi: f64 = row("2.5x", "edf")[4].trim_end_matches("/s").parse().unwrap();
+        assert!(good_hi > good_low * 0.8, "goodput must hold past the knee, not collapse");
+        let text = std::fs::read_to_string("BENCH_E21.json").unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.req("experiment").unwrap().as_str().unwrap(), "e21");
+        assert_eq!(j.req("rows").unwrap().as_arr().unwrap().len(), SWEEP_NODES.len() * 4 * 2);
+        assert!(j.req("serve_goodput_1node_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.req("serve_goodput_2node_per_sec").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -7,9 +7,11 @@
 pub mod checkpoint;
 pub mod experiments;
 pub mod job;
+pub mod opts;
 
 pub use checkpoint::ShardCheckpoint;
 pub use job::{run_stage, JobHandle, JobSpec, JobStats, ShardCtx};
+pub use opts::JobOpts;
 
 use anyhow::Result;
 use std::sync::Arc;

@@ -1,0 +1,202 @@
+//! Shared job-submission options.
+//!
+//! Before this module, every workload carried its own copy of the same
+//! submission fields — `CampaignConfig.nodes`, `CompactorConfig.workers`,
+//! `MinerConfig.workers`, a bare `workers: usize` on the training
+//! entry points — with drifting names and defaults. [`JobOpts`] is the
+//! one shared builder: app name, capacity queue, worker ceiling,
+//! checkpointing, and grant timeout, with a uniform `Default` and a
+//! JSON codec that still accepts the pre-redesign field spellings
+//! (`nodes` for `workers`, missing keys fall back to the defaults), so
+//! configs saved by older builds keep loading.
+//!
+//! Workload configs embed it (`CampaignConfig.opts`, …); entry points
+//! without a config struct take it directly. [`JobOpts::spec`] turns it
+//! into the base [`JobSpec`] every submission starts from.
+
+use anyhow::Result;
+use std::time::Duration;
+
+use super::job::JobSpec;
+use crate::util::json::Json;
+
+/// The submission fields every workload shares. Domain knobs (batch
+/// sizes, detection thresholds, …) stay in the workload's own config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobOpts {
+    /// Application name registered with the resource manager.
+    pub app: String,
+    /// Capacity-share queue the job is charged against.
+    pub queue: String,
+    /// Requested worker-container ceiling (one shard per container;
+    /// degrades gracefully on a smaller cluster).
+    pub workers: usize,
+    /// Whether the workload commits progress to a `ShardCheckpoint`
+    /// (ignored by workloads that have nothing to checkpoint).
+    pub checkpoint: bool,
+    /// How long submission may block waiting for the grant floor.
+    pub grant_timeout: Duration,
+}
+
+impl Default for JobOpts {
+    fn default() -> Self {
+        Self {
+            app: "job".into(),
+            queue: "default".into(),
+            workers: 1,
+            checkpoint: true,
+            grant_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+impl JobOpts {
+    pub fn new(app: impl Into<String>) -> Self {
+        Self { app: app.into(), ..Default::default() }
+    }
+
+    pub fn queue(mut self, queue: impl Into<String>) -> Self {
+        self.queue = queue.into();
+        self
+    }
+
+    /// Worker ceiling, floored at 1.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn checkpoint(mut self, checkpoint: bool) -> Self {
+        self.checkpoint = checkpoint;
+        self
+    }
+
+    pub fn grant_timeout(mut self, timeout: Duration) -> Self {
+        self.grant_timeout = timeout;
+        self
+    }
+
+    /// The base [`JobSpec`] for these options: elastic `1..=workers`
+    /// containers on `queue`. Callers chain `.resources(..)` (and
+    /// tighten `.containers(..)` when the work list is shorter than the
+    /// worker ceiling).
+    pub fn spec(&self) -> JobSpec {
+        JobSpec::new(self.app.as_str())
+            .queue(self.queue.as_str())
+            .containers(1, self.workers)
+            .grant_timeout(self.grant_timeout)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::str(&self.app)),
+            ("queue", Json::str(&self.queue)),
+            ("workers", Json::num(self.workers as f64)),
+            ("checkpoint", Json::Bool(self.checkpoint)),
+            ("grant_timeout_ms", Json::num(self.grant_timeout.as_millis() as f64)),
+        ])
+    }
+
+    /// Parse from JSON, tolerating the pre-redesign spellings: `nodes`
+    /// aliases `workers` (the old `CampaignConfig` name), `name`
+    /// aliases `app`, every key is optional (defaults apply), and
+    /// unrecognised workload-domain keys are ignored — so the JSON
+    /// shape of any legacy workload config parses directly.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = Self::default();
+        let str_of = |keys: &[&str], dflt: &str| -> Result<String> {
+            for k in keys {
+                if let Some(v) = j.get(k) {
+                    return Ok(v.as_str()?.to_string());
+                }
+            }
+            Ok(dflt.to_string())
+        };
+        let workers = match j.get("workers").or_else(|| j.get("nodes")) {
+            Some(v) => v.as_usize()?,
+            None => d.workers,
+        };
+        let checkpoint = match j.get("checkpoint") {
+            Some(v) => v.as_bool()?,
+            None => d.checkpoint,
+        };
+        let grant_timeout = match j.get("grant_timeout_ms") {
+            Some(v) => Duration::from_millis(v.as_u64()?),
+            None => d.grant_timeout,
+        };
+        Ok(Self {
+            app: str_of(&["app", "name"], &d.app)?,
+            queue: str_of(&["queue"], &d.queue)?,
+            workers: workers.max(1),
+            checkpoint,
+            grant_timeout,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_and_defaults() {
+        let o = JobOpts::new("camp").queue("sim").workers(4).checkpoint(false);
+        assert_eq!(o.app, "camp");
+        assert_eq!(o.queue, "sim");
+        assert_eq!(o.workers, 4);
+        assert!(!o.checkpoint);
+        assert_eq!(o.grant_timeout, Duration::from_secs(10));
+        // Floors.
+        assert_eq!(JobOpts::default().workers(0).workers, 1);
+    }
+
+    #[test]
+    fn spec_carries_every_shared_field() {
+        let o = JobOpts::new("x")
+            .queue("interactive")
+            .workers(8)
+            .grant_timeout(Duration::from_secs(2));
+        let s = o.spec();
+        assert_eq!(s.app, "x");
+        assert_eq!(s.queue, "interactive");
+        assert_eq!((s.min_containers, s.max_containers), (1, 8));
+        assert_eq!(s.grant_timeout, Duration::from_secs(2));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let o = JobOpts::new("rt").queue("q").workers(3).grant_timeout(Duration::from_millis(750));
+        let back = JobOpts::from_json(&Json::parse(&o.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, o);
+    }
+
+    #[test]
+    fn legacy_config_shapes_parse() {
+        // The JSON shape of each pre-redesign workload config must
+        // parse: shared fields extracted, domain fields ignored.
+        let campaign = r#"{"app":"camp","queue":"sim","nodes":4,
+            "pass_accuracy":0.6,"work_dir":"/tmp/x","checkpoint":true}"#;
+        let o = JobOpts::from_json(&Json::parse(campaign).unwrap()).unwrap();
+        assert_eq!((o.app.as_str(), o.queue.as_str(), o.workers), ("camp", "sim", 4));
+        assert!(o.checkpoint);
+
+        let compactor = r#"{"app":"cp","queue":"fleet","workers":2,
+            "batch_records":256,"block_prefix":"ingest"}"#;
+        let o = JobOpts::from_json(&Json::parse(compactor).unwrap()).unwrap();
+        assert_eq!((o.app.as_str(), o.queue.as_str(), o.workers), ("cp", "fleet", 2));
+
+        let miner = r#"{"app":"scenario-miner","queue":"default","workers":4,
+            "hard_brake_mps2":-6.0,"dropout_ms":500,"checkpoint":false}"#;
+        let o = JobOpts::from_json(&Json::parse(miner).unwrap()).unwrap();
+        assert_eq!(o.app, "scenario-miner");
+        assert!(!o.checkpoint);
+
+        let training = r#"{"name":"training-unified","workers":2}"#;
+        let o = JobOpts::from_json(&Json::parse(training).unwrap()).unwrap();
+        assert_eq!((o.app.as_str(), o.workers), ("training-unified", 2));
+
+        // Empty object: pure defaults.
+        let o = JobOpts::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(o, JobOpts::default());
+    }
+}

@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 use super::container::{Container, ContainerRef};
 use super::device::{DeviceId, DeviceKind, ResourceVec};
 use crate::config::ClusterConfig;
-use crate::metrics::{Gauge, MetricsRegistry};
+use crate::metrics::{Gauge, Histogram, MetricsRegistry};
 
 /// Typed error for blocking acquisition that hit its deadline: names
 /// the queue and the deficit so a starved share is diagnosable from the
@@ -86,6 +86,18 @@ struct QueueState {
     /// capacity beyond its guarantee (== `share` for hard caps).
     max_share: f64,
     cores_used: usize,
+    /// Scheduling priority (higher = more urgent). While a queue with
+    /// strictly higher priority has pending waiters, lower-priority
+    /// queues may not borrow beyond their guarantee — freed capacity
+    /// flows to the urgent queue first. 0 for plain batch queues.
+    priority: u32,
+    /// Cached `resource.queue_pending.<queue>` handle (pending-waiter
+    /// depth, in containers still missing — a watchdog input and the
+    /// priority gate's signal).
+    pending: Arc<Gauge>,
+    /// Cached `resource.grant_wait.<queue>` handle: how long blocking
+    /// acquisitions on this queue waited for their grant.
+    grant_wait: Arc<Histogram>,
 }
 
 struct RmInner {
@@ -113,13 +125,37 @@ pub struct ResourceManager {
     live_gauge: Arc<Gauge>,
 }
 
-/// RAII decrement for `resource.queue_pending.<queue>`: dropped on
-/// every exit path of a blocking acquisition, success or timeout.
-struct PendingGuard(Arc<Gauge>);
+/// RAII pending-count for `resource.queue_pending.<queue>`: carries the
+/// number of containers a blocked acquisition is still short (1 for a
+/// single-container wait, the floor deficit for a gang wait) and
+/// returns it on every exit path, success or timeout.
+struct PendingGuard {
+    gauge: Arc<Gauge>,
+    count: u64,
+}
+
+impl PendingGuard {
+    fn new(gauge: Arc<Gauge>, count: u64) -> Self {
+        gauge.add(count);
+        Self { gauge, count }
+    }
+
+    /// Adjust the pending count in place: a waiting gang's deficit
+    /// shrinks as partial floors come closer to completion (and can
+    /// grow back when capacity is lost to other tenants).
+    fn set(&mut self, count: u64) {
+        if count > self.count {
+            self.gauge.add(count - self.count);
+        } else {
+            self.gauge.sub(self.count - count);
+        }
+        self.count = count;
+    }
+}
 
 impl Drop for PendingGuard {
     fn drop(&mut self) {
-        self.0.sub(1);
+        self.gauge.sub(self.count);
     }
 }
 
@@ -144,10 +180,27 @@ impl ResourceManager {
     /// Build with `(name, guaranteed share, elastic ceiling)` queues: a
     /// queue may borrow idle capacity up to its ceiling; with
     /// preemption enabled, a queue blocked below its guarantee claws
-    /// borrowed capacity back from over-guarantee tenants.
+    /// borrowed capacity back from over-guarantee tenants. All queues
+    /// get equal (batch) priority.
     pub fn with_elastic_queues(
         cluster: &ClusterConfig,
         queues: Vec<(String, f64, f64)>,
+        metrics: MetricsRegistry,
+    ) -> Arc<Self> {
+        let queues = queues.into_iter().map(|(n, s, m)| (n, s, m, 0)).collect();
+        Self::with_priority_queues(cluster, queues, metrics)
+    }
+
+    /// Build with `(name, guaranteed share, elastic ceiling, priority)`
+    /// queues. Priority refines elastic borrowing, not guarantees:
+    /// every queue can always reach its guaranteed share, but while a
+    /// strictly-higher-priority queue has pending waiters, lower
+    /// queues may not borrow *beyond* guarantee — so capacity freed on
+    /// a contended cluster flows to the urgent (e.g. `interactive`)
+    /// queue first instead of being re-absorbed by batch tenants.
+    pub fn with_priority_queues(
+        cluster: &ClusterConfig,
+        queues: Vec<(String, f64, f64, u32)>,
         metrics: MetricsRegistry,
     ) -> Arc<Self> {
         let shape = ResourceVec {
@@ -164,16 +217,27 @@ impl ResourceManager {
                 free_fpgas: (0..cluster.fpgas_per_node).collect(),
             })
             .collect();
+        let queues = queues
+            .into_iter()
+            .map(|(n, share, max_share, priority)| {
+                let pending = metrics.gauge(&format!("resource.queue_pending.{n}"));
+                let grant_wait = metrics.histogram(&format!("resource.grant_wait.{n}"));
+                let q = QueueState {
+                    share,
+                    max_share: max_share.max(share),
+                    cores_used: 0,
+                    priority,
+                    pending,
+                    grant_wait,
+                };
+                (n, q)
+            })
+            .collect();
         Arc::new(Self {
             inner: Mutex::new(RmInner {
                 nodes,
                 apps: HashMap::new(),
-                queues: queues
-                    .into_iter()
-                    .map(|(n, share, max_share)| {
-                        (n, QueueState { share, max_share: max_share.max(share), cores_used: 0 })
-                    })
-                    .collect(),
+                queues,
                 live: HashMap::new(),
                 next_id: 0,
                 total_cores: cluster.total_cores(),
@@ -200,14 +264,29 @@ impl ResourceManager {
         Duration::from_micros(self.borrow_delay_us.load(Ordering::Relaxed))
     }
 
-    /// Mark one blocked request pending against the app's queue
-    /// (`resource.queue_pending.<queue>` gauge — a watchdog input);
-    /// the returned guard un-marks when dropped.
-    fn pending_guard(&self, inner: &RmInner, app: &str) -> PendingGuard {
-        let q = inner.apps.get(app).map(|a| a.queue.as_str()).unwrap_or("unknown");
-        let g = self.metrics.gauge(&format!("resource.queue_pending.{q}"));
-        g.add(1);
-        PendingGuard(g)
+    /// Mark a blocked request pending against the app's queue
+    /// (`resource.queue_pending.<queue>` gauge — a watchdog input and
+    /// the priority gate's starvation signal). `count` is the number of
+    /// containers the request is short: 1 for a single-container wait,
+    /// the floor deficit for a gang wait. The returned guard un-marks
+    /// when dropped.
+    fn pending_guard(&self, inner: &RmInner, app: &str, count: usize) -> PendingGuard {
+        let g = inner
+            .apps
+            .get(app)
+            .and_then(|a| inner.queues.get(&a.queue))
+            .map(|q| q.pending.clone())
+            .unwrap_or_else(|| self.metrics.gauge("resource.queue_pending.unknown"));
+        PendingGuard::new(g, count as u64)
+    }
+
+    /// Record how long a blocking acquisition waited for its grant in
+    /// the per-queue `resource.grant_wait.<queue>` histogram (the
+    /// interactive queue's SLO watchdog input).
+    fn record_grant_wait(&self, inner: &RmInner, app: &str, waited: Duration) {
+        if let Some(q) = inner.apps.get(app).and_then(|a| inner.queues.get(&a.queue)) {
+            q.grant_wait.record(waited);
+        }
     }
 
     /// Enable or disable fair-share preemption (off by default: without
@@ -277,11 +356,12 @@ impl ResourceManager {
             match self.try_grant(&mut inner, app, req, allow_borrow) {
                 Ok(c) => {
                     self.metrics.counter("resource.containers_granted").inc();
+                    self.record_grant_wait(&inner, app, start.elapsed());
                     return Ok(c);
                 }
                 Err(_) => {
                     if pending.is_none() {
-                        pending = Some(self.pending_guard(&inner, app));
+                        pending = Some(self.pending_guard(&inner, app, 1));
                     }
                     if self.preemption_enabled() {
                         self.preempt_for(&mut inner, app, req.cores, req.cores);
@@ -349,6 +429,7 @@ impl ResourceManager {
                 self.metrics
                     .counter("resource.containers_granted")
                     .add(gang.len() as u64);
+                self.record_grant_wait(&inner, app, start.elapsed());
                 return Ok(gang);
             }
             // Below the floor: roll the partial gang back before
@@ -357,8 +438,13 @@ impl ResourceManager {
             for c in gang.drain(..) {
                 let _ = self.release_locked(&mut inner, &c);
             }
-            if pending.is_none() {
-                pending = Some(self.pending_guard(&inner, app));
+            // Pending depth is the *container deficit*, not a flat 1 —
+            // so interactive pending depth stays accurate under
+            // gang-floor waits and the gauge reads as "containers
+            // still missing" whichever acquisition path blocked.
+            match &mut pending {
+                Some(p) => p.set((min - grantable) as u64),
+                None => pending = Some(self.pending_guard(&inner, app, min - grantable)),
             }
             if self.preemption_enabled() {
                 self.preempt_for(&mut inner, app, min * req.cores, (min - grantable) * req.cores);
@@ -588,6 +674,25 @@ impl ResourceManager {
                     q.cores_used,
                     cap
                 );
+            }
+            // Priority gate: borrowing beyond guarantee yields to any
+            // strictly-higher-priority queue with pending waiters, so
+            // freed capacity reaches the urgent queue instead of being
+            // re-absorbed by batch tenants. Guarantee-level grants are
+            // never gated.
+            let guaranteed = (q.share * total as f64).ceil() as usize;
+            if q.cores_used + req.cores > guaranteed {
+                let starved = inner
+                    .queues
+                    .iter()
+                    .find(|(_, o)| o.priority > q.priority && o.pending.get() > 0);
+                if let Some((starved_name, _)) = starved {
+                    self.metrics.counter("resource.queue_rejections").inc();
+                    bail!(
+                        "queue '{queue_name}' may not borrow past its guarantee while \
+                         higher-priority queue '{starved_name}' has pending requests"
+                    );
+                }
             }
         }
         // First-fit across nodes.
@@ -1107,6 +1212,99 @@ mod tests {
         // Zero restores immediate borrowing.
         rm.set_borrow_delay(Duration::ZERO);
         rm.request_container("a", ResourceVec::cores(1, 10)).unwrap();
+    }
+
+    #[test]
+    fn gang_wait_pending_gauge_counts_container_deficit() {
+        let rm = rm();
+        rm.submit_app("hog", "default").unwrap();
+        rm.submit_app("g", "default").unwrap();
+        let _hold = rm.request_container("hog", ResourceVec::cores(4, 100)).unwrap();
+        let _hold2 = rm.request_container("hog", ResourceVec::cores(3, 100)).unwrap();
+        // One core free, floor of 3: the pending gauge must read the
+        // CONTAINER DEFICIT (2), not a flat 1 per blocked caller.
+        let gauge = rm.metrics().gauge("resource.queue_pending.default");
+        let rm2 = rm.clone();
+        let waiter = std::thread::spawn(move || {
+            rm2.acquire_gang("g", ResourceVec::cores(1, 10), 3, 3, Duration::from_millis(200))
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while gauge.get() != 2 {
+            assert!(
+                Instant::now() < deadline,
+                "gang deficit never registered (gauge {})",
+                gauge.get()
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(waiter.join().unwrap().is_err(), "floor can never complete here");
+        assert_eq!(gauge.get(), 0, "pending deficit must clear when the gang gives up");
+    }
+
+    #[test]
+    fn borrowing_deferred_while_higher_priority_queue_waits() {
+        let rm = ResourceManager::with_priority_queues(
+            &cluster(),
+            vec![("batch".into(), 0.5, 1.0, 0), ("interactive".into(), 0.5, 1.0, 1)],
+            MetricsRegistry::new(),
+        );
+        rm.submit_app("b", "batch").unwrap();
+        // Guarantee-level grants (4 of 8 cores) are never gated.
+        let held: Vec<_> = (0..4)
+            .map(|_| rm.request_container("b", ResourceVec::cores(1, 10)).unwrap())
+            .collect();
+        // With an interactive request pending, batch may not borrow
+        // beyond its guarantee...
+        let pending = rm.metrics().gauge("resource.queue_pending.interactive");
+        pending.add(1);
+        let e = rm.request_container("b", ResourceVec::cores(1, 10)).unwrap_err();
+        assert!(e.to_string().contains("higher-priority"), "{e}");
+        // ...while grants within the guarantee still flow.
+        rm.release(&held[3]).unwrap();
+        let again = rm.request_container("b", ResourceVec::cores(1, 10)).unwrap();
+        // Once the urgent queue is drained, borrowing reopens.
+        pending.sub(1);
+        rm.request_container("b", ResourceVec::cores(1, 10)).unwrap();
+        let _ = again;
+    }
+
+    #[test]
+    fn freed_capacity_flows_to_higher_priority_queue_first() {
+        let rm = ResourceManager::with_priority_queues(
+            &cluster(),
+            vec![("batch".into(), 0.5, 1.0, 0), ("interactive".into(), 0.5, 1.0, 1)],
+            MetricsRegistry::new(),
+        );
+        rm.submit_app("b", "batch").unwrap();
+        rm.submit_app("i", "interactive").unwrap();
+        // Batch borrows the whole idle cluster, then an interactive
+        // request arrives and blocks.
+        let held: Vec<_> = (0..8)
+            .map(|_| rm.request_container("b", ResourceVec::cores(1, 10)).unwrap())
+            .collect();
+        let pending = rm.metrics().gauge("resource.queue_pending.interactive");
+        let rm2 = rm.clone();
+        let waiter = std::thread::spawn(move || {
+            rm2.acquire_container("i", ResourceVec::cores(1, 10), Duration::from_secs(5))
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while pending.get() != 1 {
+            assert!(Instant::now() < deadline, "interactive wait never registered");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // A freed batch core must reach the interactive waiter even if
+        // batch immediately asks again: its re-borrow is gated.
+        rm.release(&held[7]).unwrap();
+        let got = waiter.join().unwrap().unwrap();
+        assert_eq!(
+            rm.metrics().histogram("resource.grant_wait.interactive").count(),
+            1,
+            "interactive grant wait must be recorded per queue"
+        );
+        rm.release(&got).unwrap();
+        for c in &held[..7] {
+            rm.release(c).unwrap();
+        }
     }
 
     #[test]

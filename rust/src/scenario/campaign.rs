@@ -18,7 +18,8 @@ use super::report::{self, CampaignReport, ScenarioVerdict};
 use super::spec::ScenarioSpec;
 use crate::dce::DceContext;
 use crate::platform::checkpoint::ShardCheckpoint;
-use crate::platform::job::{JobHandle, JobSpec};
+use crate::platform::job::JobHandle;
+use crate::platform::opts::JobOpts;
 use crate::resource::{ResourceManager, ResourceVec};
 use crate::services::simulation::{
     count_obstacles_from_features, gen_lidar_scan, read_bag, BagWriter, CameraFrame, Message,
@@ -28,25 +29,19 @@ use crate::services::simulation::sensors::{FRAME_H, FRAME_W};
 use crate::trace;
 use crate::util::Rng;
 
-/// Knobs for one campaign run.
+/// Knobs for one campaign run. The shared submission fields (app name,
+/// queue, worker ceiling, checkpointing — where `opts.checkpoint`
+/// commits each verdict into a [`ShardCheckpoint`] keyed by the
+/// scenario's content hash and clears it on success) live in
+/// [`JobOpts`]; only the campaign-domain knobs are declared here.
 #[derive(Debug, Clone)]
 pub struct CampaignConfig {
-    /// Application name registered with the resource manager.
-    pub app: String,
-    /// Capacity-share queue the campaign's job is charged against.
-    pub queue: String,
-    /// Requested shard count (one container per shard; gracefully
-    /// degrades if the cluster is smaller).
-    pub nodes: usize,
+    /// Shared job-submission options.
+    pub opts: JobOpts,
     /// A scenario qualifies when frame accuracy reaches this bar.
     pub pass_accuracy: f64,
     /// Scratch directory for materialized bag chunks.
     pub work_dir: PathBuf,
-    /// Commit each verdict into a [`ShardCheckpoint`] keyed by the
-    /// scenario's content hash, so a preempted or resubmitted campaign
-    /// resumes from completed scenarios instead of re-scoring them.
-    /// The checkpoint is cleared when the campaign succeeds.
-    pub checkpoint: bool,
 }
 
 impl CampaignConfig {
@@ -55,11 +50,8 @@ impl CampaignConfig {
         Self {
             work_dir: std::env::temp_dir()
                 .join(format!("adcloud-campaign-{}-{}", app, std::process::id())),
-            app,
-            queue: "default".into(),
-            nodes: nodes.max(1),
+            opts: JobOpts::new(app).workers(nodes),
             pass_accuracy: 0.6,
-            checkpoint: true,
         }
     }
 }
@@ -227,14 +219,8 @@ pub fn run_campaign(
     // headroom for the encoded bag), floored at 32 MiB.
     let max_frames = specs.iter().map(|s| s.frames as u64).max().unwrap_or(0);
     let mem = (2 * max_frames * (FRAME_W * FRAME_H * 4) as u64).max(32 << 20);
-    let job = JobHandle::submit(
-        rm,
-        JobSpec::new(cfg.app.as_str())
-            .queue(cfg.queue.as_str())
-            .containers(1, cfg.nodes)
-            .resources(ResourceVec::cores(1, mem)),
-    )
-    .with_context(|| format!("submitting campaign job '{}'", cfg.app))?;
+    let job = JobHandle::submit(rm, cfg.opts.spec().resources(ResourceVec::cores(1, mem)))
+        .with_context(|| format!("submitting campaign job '{}'", cfg.opts.app))?;
     let shards = job.shards();
     // One resolution for the whole campaign; the scoring loop touches
     // these per scenario on every shard.
@@ -243,7 +229,7 @@ pub fn run_campaign(
 
     let work_dir = cfg.work_dir.clone();
     let pass_accuracy = cfg.pass_accuracy;
-    let ckpt = cfg.checkpoint.then(|| ShardCheckpoint::new(ctx.store(), &cfg.app));
+    let ckpt = cfg.opts.checkpoint.then(|| ShardCheckpoint::new(ctx.store(), &cfg.opts.app));
     let shard_ckpt = ckpt.clone();
     let metrics = m.clone();
     let result = job.run_sharded(ctx, specs.to_vec(), move |sctx, specs: Vec<ScenarioSpec>| {

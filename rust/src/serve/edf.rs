@@ -1,0 +1,291 @@
+//! The pure serving-plane state machine: deadline-aware admission,
+//! EDF ordering, and the speculative-fallback decision.
+//!
+//! Everything here is virtual-time (microseconds since plane start) and
+//! allocation-only — no clocks, no threads, no I/O — so the same code
+//! drives the real [`super::ServePlane`] under a mutex *and* the
+//! deterministic single-threaded [`super::simulate`] used by the
+//! regression tests and experiment E21.
+//!
+//! The admission rule is reject-on-arrival (paper §3: a late perception
+//! result is worthless to the vehicle, which falls back to its on-board
+//! model — better to say no immediately than to burn a cloud slot on a
+//! response that cannot arrive in time):
+//!
+//! ```text
+//! estimated_wait = busy_us + backlog_us / workers
+//! admit  iff  estimated_wait + service_estimate <= deadline - now
+//! ```
+//!
+//! Admitted requests are dispatched earliest-deadline-first. At
+//! dispatch, if the remaining slack no longer covers the p99 service
+//! estimate (plus 25% headroom), the request is *speculatively* served
+//! by the cheap local model instead — a degraded-quality completion,
+//! not an SLO miss.
+
+use std::collections::VecDeque;
+
+/// How the ready queue orders dispatches. `Fifo` is the `--baseline`
+/// arm of experiment E21.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    Edf,
+    Fifo,
+}
+
+/// One vehicle offload request, times in µs since plane start.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_us: u64,
+    /// Absolute deadline: the response is useless after this instant.
+    pub deadline_us: u64,
+    /// True remote service cost. The plane never reads this before
+    /// execution — admission works off the estimator only.
+    pub work_us: u64,
+}
+
+/// Outcome of the reject-on-arrival admission check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Admit,
+    Reject { est_wait_us: u64 },
+}
+
+/// Windowed service-time estimator: a 512-sample ring over observed
+/// remote service times, with a configured prior before any samples
+/// land so cold-start admission is not vacuously permissive.
+#[derive(Clone, Debug)]
+pub struct ServiceEstimator {
+    samples: Vec<u64>,
+    next: usize,
+    prior_us: u64,
+}
+
+const ESTIMATOR_WINDOW: usize = 512;
+
+impl ServiceEstimator {
+    pub fn new(prior_us: u64) -> Self {
+        Self { samples: Vec::new(), next: 0, prior_us: prior_us.max(1) }
+    }
+
+    pub fn record(&mut self, service_us: u64) {
+        if self.samples.len() < ESTIMATOR_WINDOW {
+            self.samples.push(service_us);
+        } else {
+            self.samples[self.next] = service_us;
+        }
+        self.next = (self.next + 1) % ESTIMATOR_WINDOW;
+    }
+
+    /// Expected service time — the admission check's cost term.
+    pub fn mean_us(&self) -> u64 {
+        if self.samples.is_empty() {
+            return self.prior_us;
+        }
+        let sum: u64 = self.samples.iter().sum();
+        (sum / self.samples.len() as u64).max(1)
+    }
+
+    /// Tail service time — the speculation check's cost term. With few
+    /// samples this is close to the observed max, which errs toward
+    /// falling back (degraded answer) rather than missing the deadline.
+    pub fn p99_us(&self) -> u64 {
+        if self.samples.is_empty() {
+            // Prior tail: assume the tail is ~2.5x the prior mean.
+            return self.prior_us.saturating_mul(5) / 2;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        // Rank rounds *up* so small windows report their max — erring
+        // toward a degraded answer rather than a deadline miss.
+        sorted[((sorted.len() - 1) * 99 + 99) / 100]
+    }
+}
+
+struct Queued {
+    req: Request,
+    /// The mean estimate charged to `backlog_us` at admission; the pop
+    /// refunds exactly this amount so the backlog never drifts.
+    est_us: u64,
+}
+
+/// The admission + ready queue. Owns the backlog accounting and the
+/// service estimator; callers provide "now" and pop results back in.
+pub struct AdmissionQueue {
+    policy: Policy,
+    workers: usize,
+    queue: VecDeque<Queued>,
+    /// Sum of the mean-estimate cost of every queued request.
+    backlog_us: u64,
+    est: ServiceEstimator,
+}
+
+impl AdmissionQueue {
+    pub fn new(policy: Policy, workers: usize, prior_service_us: u64) -> Self {
+        Self {
+            policy,
+            workers: workers.max(1),
+            queue: VecDeque::new(),
+            backlog_us: 0,
+            est: ServiceEstimator::new(prior_service_us),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Feed an observed remote service time back into the estimator.
+    pub fn record_service(&mut self, service_us: u64) {
+        self.est.record(service_us);
+    }
+
+    pub fn estimator(&self) -> &ServiceEstimator {
+        &self.est
+    }
+
+    /// Queue-delay estimate for a request arriving now: `busy_us` is
+    /// the wait until the first worker frees (0 when any is idle), and
+    /// the backlog ahead of it drains across all workers.
+    pub fn estimated_wait_us(&self, busy_us: u64) -> u64 {
+        busy_us + self.backlog_us / self.workers as u64
+    }
+
+    /// Reject-on-arrival admission: admit iff the queue-delay estimate
+    /// plus the expected service time fits inside the deadline slack.
+    pub fn offer(&mut self, req: Request, now_us: u64, busy_us: u64) -> Decision {
+        let wait = self.estimated_wait_us(busy_us);
+        let svc = self.est.mean_us();
+        let slack = req.deadline_us.saturating_sub(now_us);
+        if wait + svc > slack {
+            return Decision::Reject { est_wait_us: wait };
+        }
+        self.backlog_us += svc;
+        self.queue.push_back(Queued { req, est_us: svc });
+        Decision::Admit
+    }
+
+    /// Dispatch the next request: earliest absolute deadline under
+    /// `Edf`, arrival order under `Fifo`.
+    pub fn pop(&mut self) -> Option<Request> {
+        let idx = match self.policy {
+            Policy::Fifo => 0,
+            Policy::Edf => {
+                let mut best = 0;
+                for (i, q) in self.queue.iter().enumerate() {
+                    if q.req.deadline_us < self.queue[best].req.deadline_us {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        let q = self.queue.remove(idx)?;
+        self.backlog_us = self.backlog_us.saturating_sub(q.est_us);
+        Some(q.req)
+    }
+
+    /// Speculation check at dispatch time: if the remaining slack no
+    /// longer covers the p99 service estimate (plus 25% headroom for
+    /// estimator lag), serve the cheap local model instead of risking
+    /// an SLO miss on the remote path.
+    pub fn should_fallback(&self, req: &Request, now_us: u64) -> bool {
+        let remaining = req.deadline_us.saturating_sub(now_us);
+        let p99 = self.est.p99_us();
+        remaining < p99 + p99 / 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival_us: u64, deadline_us: u64, work_us: u64) -> Request {
+        Request { id, arrival_us, deadline_us, work_us }
+    }
+
+    #[test]
+    fn admission_rejects_exactly_when_queue_estimate_exceeds_slack() {
+        // 1 worker, mean-service prior 1000us, every deadline 3500us of
+        // slack: wait(k admitted) = k*1000, admit needs k*1000 + 1000
+        // <= 3500, so requests 0..=2 admit and request 3 bounces.
+        let mut q = AdmissionQueue::new(Policy::Edf, 1, 1000);
+        for k in 0..3 {
+            assert_eq!(q.offer(req(k, 0, 3500, 1000), 0, 0), Decision::Admit, "req {k}");
+        }
+        assert_eq!(q.offer(req(3, 0, 3500, 1000), 0, 0), Decision::Reject { est_wait_us: 3000 });
+        // A later-deadline request still fits behind the same backlog.
+        assert_eq!(q.offer(req(4, 0, 9000, 1000), 0, 0), Decision::Admit);
+        // Worker-busy time counts against the slack too.
+        let mut fresh = AdmissionQueue::new(Policy::Edf, 1, 1000);
+        assert_eq!(
+            fresh.offer(req(5, 0, 3500, 1000), 0, 3000),
+            Decision::Reject { est_wait_us: 3000 }
+        );
+    }
+
+    #[test]
+    fn edf_pops_earliest_deadline_fifo_pops_arrival_order() {
+        let mk = |policy| {
+            let mut q = AdmissionQueue::new(policy, 4, 100);
+            q.offer(req(0, 0, 90_000, 100), 0, 0);
+            q.offer(req(1, 1, 10_000, 100), 1, 0);
+            q.offer(req(2, 2, 50_000, 100), 2, 0);
+            q
+        };
+        let mut edf = mk(Policy::Edf);
+        let order: Vec<u64> = std::iter::from_fn(|| edf.pop().map(|r| r.id)).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+        let mut fifo = mk(Policy::Fifo);
+        let order: Vec<u64> = std::iter::from_fn(|| fifo.pop().map(|r| r.id)).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+        assert!(edf.is_empty() && fifo.is_empty());
+    }
+
+    #[test]
+    fn backlog_refund_matches_charge_across_estimator_drift() {
+        // The estimator mean moves between admit and pop; the refund
+        // must use the charged amount, not the current mean, or the
+        // backlog drifts and admission silently tightens/loosens.
+        let mut q = AdmissionQueue::new(Policy::Edf, 1, 1000);
+        q.offer(req(0, 0, 100_000, 1000), 0, 0);
+        for _ in 0..32 {
+            q.record_service(4000); // mean jumps to 4000
+        }
+        q.offer(req(1, 0, 100_000, 1000), 0, 0);
+        assert_eq!(q.estimated_wait_us(0), 5000);
+        q.pop();
+        q.pop();
+        assert_eq!(q.estimated_wait_us(0), 0, "backlog must return to zero");
+    }
+
+    #[test]
+    fn fallback_fires_iff_slack_is_below_the_p99_estimate() {
+        let mut q = AdmissionQueue::new(Policy::Edf, 1, 1000);
+        for _ in 0..99 {
+            q.record_service(1000);
+        }
+        q.record_service(5000); // p99 = 5000
+        assert_eq!(q.estimator().p99_us(), 5000);
+        let r = req(0, 0, 10_000, 1000);
+        // 10_000 of slack covers 5000 * 1.25: remote path is safe.
+        assert!(!q.should_fallback(&r, 0));
+        // 3000 of slack left: the tail no longer fits, go local.
+        assert!(q.should_fallback(&r, 7000));
+    }
+
+    #[test]
+    fn estimator_prior_applies_until_samples_land() {
+        let mut e = ServiceEstimator::new(2000);
+        assert_eq!(e.mean_us(), 2000);
+        assert_eq!(e.p99_us(), 5000);
+        e.record(400);
+        assert_eq!(e.mean_us(), 400);
+        assert_eq!(e.p99_us(), 400);
+    }
+}

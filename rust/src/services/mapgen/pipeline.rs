@@ -18,6 +18,7 @@ use super::slam::{slam_trajectory, SlamConfig};
 use super::trace::{DriveLog, LANE_HALF_WIDTH};
 use crate::hetero::Dispatcher;
 use crate::platform::job::{run_stage, JobHandle, JobSpec};
+use crate::platform::opts::JobOpts;
 use crate::resource::{ResourceManager, ResourceVec};
 use crate::storage::DfsStore;
 
@@ -51,13 +52,15 @@ pub fn run_fused(
     rm: &Arc<ResourceManager>,
     log: &DriveLog,
     config: &SlamConfig,
+    opts: &JobOpts,
     grid_res_m: f32,
 ) -> Result<MapgenReport> {
     let start = Instant::now();
     let scan_bytes: u64 = log.scans.iter().map(|s| (s.len() * 4) as u64).sum();
     let job = JobHandle::submit(
         rm,
-        JobSpec::new("mapgen-fused")
+        opts.spec()
+            .containers(1, 1)
             .resources(ResourceVec::cores(1, (4 * scan_bytes).max(32 << 20))),
     )?;
     let reports = job.run_per_container(|sctx| {
@@ -106,14 +109,20 @@ pub fn run_staged(
     dfs: &Arc<DfsStore>,
     log: &DriveLog,
     config: &SlamConfig,
+    opts: &JobOpts,
     grid_res_m: f32,
 ) -> Result<MapgenReport> {
     let start = Instant::now();
     let scan_bytes: u64 = log.scans.iter().map(|s| (s.len() * 4) as u64).sum();
     let mem = (4 * scan_bytes).max(32 << 20);
-    let spec = |name: &str| JobSpec::new(name).resources(ResourceVec::cores(1, mem));
+    let spec = |stage: &str| {
+        JobSpec::new(format!("{}-{stage}", opts.app))
+            .queue(opts.queue.as_str())
+            .grant_timeout(opts.grant_timeout)
+            .resources(ResourceVec::cores(1, mem))
+    };
     // Stage 1+2: SLAM job — raw logs from DFS in, poses written out.
-    let slam = run_stage(rm, spec("mapgen-staged-slam"), |_cctx| {
+    let slam = run_stage(rm, spec("slam"), |_cctx| {
         dfs.write("mapgen/raw-log", &vec![0u8; (scan_bytes / 64).max(1) as usize])?;
         dfs.device().charge(scan_bytes);
         let slam = slam_trajectory(dispatcher, log, config)?;
@@ -124,7 +133,7 @@ pub fn run_staged(
     })?;
     let pose_bytes = (slam.poses.len() * 48) as u64;
     // Stage 3: assembly job rereads logs + poses, writes the cloud.
-    let cloud = run_stage(rm, spec("mapgen-staged-assemble"), |_cctx| {
+    let cloud = run_stage(rm, spec("assemble"), |_cctx| {
         dfs.device().charge(scan_bytes + pose_bytes);
         let cloud = assemble_cloud(&slam.poses, log);
         dfs.device().charge((cloud.len() * 4) as u64);
@@ -133,7 +142,7 @@ pub fn run_staged(
     })?;
     let cloud_bytes = (cloud.len() * 4) as u64;
     // Stage 4: grid job rereads the cloud, writes the grid.
-    let grid = run_stage(rm, spec("mapgen-staged-grid"), |_cctx| {
+    let grid = run_stage(rm, spec("grid"), |_cctx| {
         dfs.device().charge(cloud_bytes);
         let mut grid = GridMap::covering(&cloud, grid_res_m);
         grid.add_points(&cloud);
@@ -142,7 +151,7 @@ pub fn run_staged(
         Ok(grid)
     })?;
     // Stage 5: labelling job rereads grid + cloud + poses.
-    run_stage(rm, spec("mapgen-staged-label"), |_cctx| {
+    run_stage(rm, spec("label"), |_cctx| {
         dfs.device().charge(cloud_bytes + grid.size_bytes() as u64 + pose_bytes);
         let lanes = derive_lanes(&slam.poses, LANE_HALF_WIDTH);
         let signs = extract_signs(&cloud);
@@ -193,7 +202,7 @@ mod tests {
         let log = gen_drive(&world, 100, 20);
         let cfg = SlamConfig { device: DeviceKind::Gpu, ..Default::default() };
         let rm = test_rm();
-        let report = run_fused(&d, &rm, &log, &cfg, 0.1).unwrap();
+        let report = run_fused(&d, &rm, &log, &cfg, &JobOpts::new("mapgen-fused"), 0.1).unwrap();
         assert_eq!(rm.live_containers(), 0, "mapgen grant must be returned");
         // GPS sigma is 0.4 m with outage sectors; ~1-1.5 m mean error is
         // the expected envelope (dead reckoning alone drifts to 10+ m).
@@ -222,9 +231,10 @@ mod tests {
         let tier = TierConfig { capacity_bytes: u64::MAX, bandwidth_bps: 1e9, latency_us: 0 };
         let dfs = DfsStore::new(tier, false, MetricsRegistry::new()).unwrap();
         let rm = test_rm();
-        let fused = run_fused(&d, &rm, &log, &cfg, 0.1).unwrap();
+        let fused = run_fused(&d, &rm, &log, &cfg, &JobOpts::new("mapgen-fused"), 0.1).unwrap();
         let before = dfs.device().bytes_total();
-        let staged = run_staged(&d, &rm, &dfs, &log, &cfg, 0.1).unwrap();
+        let staged =
+            run_staged(&d, &rm, &dfs, &log, &cfg, &JobOpts::new("mapgen-staged"), 0.1).unwrap();
         assert!(
             dfs.device().bytes_total() > before + 1_000_000,
             "staged must move MBs through DFS"

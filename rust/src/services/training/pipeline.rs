@@ -22,6 +22,7 @@ use crate::dce::DceContext;
 use crate::hetero::cpu_impls::init_params;
 use crate::hetero::Dispatcher;
 use crate::platform::job::{run_stage, JobHandle, JobSpec};
+use crate::platform::opts::JobOpts;
 use crate::resource::{DeviceKind, ResourceManager, ResourceVec};
 use crate::storage::DfsStore;
 use crate::util::Rng;
@@ -83,23 +84,21 @@ pub fn run_unified(
     ps: &ParamServer,
     n_examples: usize,
     rounds: usize,
-    workers: usize,
+    opts: &JobOpts,
     seed: u64,
 ) -> Result<PipelineReport> {
     let start = Instant::now();
-    let workers = workers.max(1);
+    let workers = opts.workers.max(1);
     let raw = gen_dataset(n_examples, seed);
     // The grant is elastic: fewer containers than `workers` means a
     // shard can own up to the whole dataset, so size each container's
     // limit for that worst case.
     let job = JobHandle::submit(
         rm,
-        JobSpec::new("training-unified")
-            .containers(1, workers)
-            .resources(ResourceVec::cores(
-                1,
-                (2 * EXAMPLE_BYTES * n_examples as u64).max(32 << 20),
-            )),
+        opts.spec().resources(ResourceVec::cores(
+            1,
+            (2 * EXAMPLE_BYTES * n_examples as u64).max(32 << 20),
+        )),
     )?;
     // Stages 1+2 shard across the grant, each shard charged against its
     // container's memory limit; intermediates never leave memory.
@@ -156,17 +155,22 @@ pub fn run_staged(
     ps: &ParamServer,
     n_examples: usize,
     rounds: usize,
-    workers: usize,
+    opts: &JobOpts,
     seed: u64,
 ) -> Result<PipelineReport> {
     let start = Instant::now();
-    let workers = workers.max(1);
+    let workers = opts.workers.max(1);
     let mem = (2 * EXAMPLE_BYTES * n_examples as u64).max(32 << 20);
-    let stage_spec = |name: &str| JobSpec::new(name).resources(ResourceVec::cores(1, mem));
+    let stage_spec = |stage: &str| {
+        JobSpec::new(format!("{}-{stage}", opts.app))
+            .queue(opts.queue.as_str())
+            .grant_timeout(opts.grant_timeout)
+            .resources(ResourceVec::cores(1, mem))
+    };
     let raw = gen_dataset(n_examples, seed);
     // Stage 1: ETL — raw data lands on DFS (as it would from ingest),
     // is read back, transformed, and written out again.
-    let etled = run_stage(rm, stage_spec("training-staged-etl"), |_cctx| {
+    let etled = run_stage(rm, stage_spec("etl"), |_cctx| {
         for (i, _chunk) in raw.chunks(64.max(raw.len() / workers)).enumerate() {
             dfs.write(&format!("staged/raw-{i:05}"), &vec![0u8; (EXAMPLE_BYTES as usize) * 64])?;
         }
@@ -177,7 +181,7 @@ pub fn run_staged(
         Ok(etled)
     })?;
     // Stage 2: feature prep — read intermediates, transform, write back.
-    let prepared = run_stage(rm, stage_spec("training-staged-feature"), |_cctx| {
+    let prepared = run_stage(rm, stage_spec("feature"), |_cctx| {
         dfs.device().charge(EXAMPLE_BYTES * n_examples as u64);
         let prepared: Vec<Example> =
             etled.into_iter().enumerate().map(|(i, e)| augment(i, e)).collect();
@@ -186,7 +190,7 @@ pub fn run_staged(
         Ok(prepared)
     })?;
     // Stage 3: training — read prepared data from DFS into shards.
-    let report = run_stage(rm, stage_spec("training-staged-train"), |_cctx| {
+    let report = run_stage(rm, stage_spec("train"), |_cctx| {
         dfs.device().charge(EXAMPLE_BYTES * n_examples as u64);
         let shards = shard(prepared, workers);
         let trainer = DistTrainer::new(dispatcher.clone(), device, shards);
@@ -260,10 +264,12 @@ mod tests {
         let store = TieredStore::test_store(&PlatformConfig::test().storage);
         let ps_u = ParamServer::tiered(store.clone(), "u");
         let before = ctx.dfs().device().ops_total();
-        let u = run_unified(&ctx, &rm, &d, DeviceKind::Gpu, &ps_u, 64, 4, 2, 7).unwrap();
+        let uo = JobOpts::new("training-unified").workers(2);
+        let u = run_unified(&ctx, &rm, &d, DeviceKind::Gpu, &ps_u, 64, 4, &uo, 7).unwrap();
         assert_eq!(ctx.dfs().device().ops_total(), before, "unified must not touch DFS");
         let ps_s = ParamServer::tiered(store, "s");
-        let s = run_staged(ctx.dfs(), &rm, &d, DeviceKind::Gpu, &ps_s, 64, 4, 2, 7).unwrap();
+        let so = JobOpts::new("training-staged").workers(2);
+        let s = run_staged(ctx.dfs(), &rm, &d, DeviceKind::Gpu, &ps_s, 64, 4, &so, 7).unwrap();
         assert!(ctx.dfs().device().ops_total() > before, "staged must hit DFS");
         assert_eq!(rm.live_containers(), 0, "both pipelines must return their grants");
         // Identical data + init => identical final loss.

@@ -63,6 +63,7 @@ fn mapgen_service_end_to_end() {
         &p.resources,
         &log,
         &mapgen::SlamConfig { icp_every: 20, ..Default::default() },
+        &adcloud::platform::JobOpts::new("mapgen-fused"),
         0.1,
     )
     .unwrap();
