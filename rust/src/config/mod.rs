@@ -114,6 +114,9 @@ pub struct StorageConfig {
 /// Default lock-stripe count for the tiered store's block map.
 pub const DEFAULT_STORE_SHARDS: usize = 16;
 
+/// Default lock-stripe count for the shuffle manager's bucket map.
+pub const DEFAULT_SHUFFLE_SHARDS: usize = 16;
+
 impl Default for StorageConfig {
     fn default() -> Self {
         Self {
@@ -179,11 +182,30 @@ pub struct EngineConfig {
     /// Whether shuffle blocks flow through the tiered store (unified
     /// infrastructure) or the DFS baseline.
     pub shuffle_through_tiered: bool,
+    /// Lock stripes for the shuffle manager's bucket map, routed by
+    /// `(shuffle, reduce_part)` so a reduce partition's whole bucket
+    /// row shares one shard.
+    pub shuffle_shards: usize,
+    /// A/B baseline knob (`adcloud --baseline`, experiment E22): force
+    /// the pre-PR-10 shuffle path — one global bucket lock, per-bucket
+    /// lock reacquisition in take, per-charge transport locking, and no
+    /// combine/affinity/spill.
+    pub shuffle_single_lock: bool,
+    /// Resident-byte budget for shuffle buckets; buckets past it spill
+    /// to the tiered store. 0 = unbounded (never spill).
+    pub shuffle_spill_budget: u64,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { default_parallelism: 8, max_task_retries: 2, shuffle_through_tiered: true }
+        Self {
+            default_parallelism: 8,
+            max_task_retries: 2,
+            shuffle_through_tiered: true,
+            shuffle_shards: DEFAULT_SHUFFLE_SHARDS,
+            shuffle_single_lock: false,
+            shuffle_spill_budget: 0,
+        }
     }
 }
 
@@ -193,6 +215,9 @@ impl EngineConfig {
             ("default_parallelism", Json::num(self.default_parallelism as f64)),
             ("max_task_retries", Json::num(self.max_task_retries as f64)),
             ("shuffle_through_tiered", Json::Bool(self.shuffle_through_tiered)),
+            ("shuffle_shards", Json::num(self.shuffle_shards as f64)),
+            ("shuffle_single_lock", Json::Bool(self.shuffle_single_lock)),
+            ("shuffle_spill_budget", Json::num(self.shuffle_spill_budget as f64)),
         ])
     }
 
@@ -201,6 +226,22 @@ impl EngineConfig {
             default_parallelism: j.req("default_parallelism")?.as_usize()?,
             max_task_retries: j.req("max_task_retries")?.as_usize()?,
             shuffle_through_tiered: j.req("shuffle_through_tiered")?.as_bool()?,
+            // Optional for configs saved before the sharded shuffle.
+            shuffle_shards: j
+                .get("shuffle_shards")
+                .map(|s| s.as_usize())
+                .transpose()?
+                .unwrap_or(DEFAULT_SHUFFLE_SHARDS),
+            shuffle_single_lock: j
+                .get("shuffle_single_lock")
+                .map(|s| s.as_bool())
+                .transpose()?
+                .unwrap_or(false),
+            shuffle_spill_budget: j
+                .get("shuffle_spill_budget")
+                .map(|s| s.as_u64())
+                .transpose()?
+                .unwrap_or(0),
         })
     }
 }
@@ -240,6 +281,9 @@ impl PlatformConfig {
                 default_parallelism: 4,
                 max_task_retries: 2,
                 shuffle_through_tiered: true,
+                shuffle_shards: DEFAULT_SHUFFLE_SHARDS,
+                shuffle_single_lock: false,
+                shuffle_spill_budget: 0,
             },
             seed: 42,
         }
@@ -323,12 +367,19 @@ mod tests {
 
     #[test]
     fn pre_sharding_configs_still_load() {
-        // A config saved before the sharded store has no shards /
-        // scan_evict keys; it must parse with the defaults.
+        // A config saved before the sharded store / sharded shuffle has
+        // none of the later knobs; it must parse with the defaults.
         let mut j = PlatformConfig::default().to_json().to_string();
         j = j.replace("\"shards\":16,", "").replace("\"scan_evict\":false,", "");
+        j = j
+            .replace("\"shuffle_shards\":16,", "")
+            .replace("\"shuffle_single_lock\":false,", "")
+            .replace("\"shuffle_spill_budget\":0,", "");
         let c = PlatformConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(c.storage.shards, DEFAULT_STORE_SHARDS);
         assert!(!c.storage.scan_evict);
+        assert_eq!(c.engine.shuffle_shards, DEFAULT_SHUFFLE_SHARDS);
+        assert!(!c.engine.shuffle_single_lock);
+        assert_eq!(c.engine.shuffle_spill_budget, 0);
     }
 }

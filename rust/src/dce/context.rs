@@ -79,7 +79,13 @@ impl DceContext {
             config.storage.model_devices,
             metrics.clone(),
         )?;
-        let shuffle = super::shuffle::ShuffleManager::new(metrics.clone());
+        let shuffle = super::shuffle::ShuffleManager::with_config(
+            metrics.clone(),
+            config.engine.shuffle_shards,
+            config.engine.shuffle_single_lock,
+            config.engine.shuffle_spill_budget,
+        );
+        shuffle.set_spill_store(store.clone());
         // Unified infrastructure: shuffle traffic rides the tiered store's
         // MEM device; the staged baseline charges the DFS device instead.
         if config.engine.shuffle_through_tiered {
@@ -162,14 +168,11 @@ impl DceContext {
         self.parallelize((0..n).collect(), parts)
     }
 
-    /// Drop all cached partitions and shuffle state.
+    /// Drop all cached partitions and shuffle state (including any
+    /// bucket blobs spilled to the tiered store).
     pub fn gc(&self) {
         self.inner.cache.map.lock().unwrap().clear();
-        // shuffle buckets are cleared per shuffle id; dropping everything:
-        let resident = self.inner.shuffle.resident_buckets();
-        if resident > 0 {
-            // clear by rebuilding is overkill; iterate known ids via retain
-        }
+        self.inner.shuffle.clear_all();
     }
 
     // ------------------------------------------------------------------
@@ -231,23 +234,37 @@ impl DceContext {
             let mut ssp = trace::span("dce.shuffle", trace::Category::Shuffle);
             ssp.arg("shuffle", dep.shuffle_id() as u64)
                 .arg("maps", dep.num_maps() as u64);
+            // Hints read bucket ownership from the parent shuffles,
+            // which the topo order has already materialised.
+            let hints: Vec<Option<usize>> =
+                (0..dep.num_maps()).map(|m| dep.placement_hint(m)).collect();
             let tasks: Vec<Arc<dyn Fn(usize) -> Result<()> + Send + Sync>> = (0..dep.num_maps())
                 .map(|m| {
                     let dep = dep.clone();
                     let ctx = self.clone();
                     let stage = stage_name.clone();
+                    let hint = hints[m];
                     let f: Arc<dyn Fn(usize) -> Result<()> + Send + Sync> =
                         Arc::new(move |attempt| {
                             let tc = ctx.task_ctx(&stage, m, attempt);
                             tc.check_failure()?;
+                            if let Some(h) = hint {
+                                ctx.inner
+                                    .shuffle
+                                    .record_affinity(ctx.inner.pool.current_worker() == Some(h));
+                            }
                             dep.run_map_task(m, &tc)
                         });
                     f
                 })
                 .collect();
-            self.inner
-                .pool
-                .run_tasks_traced(tasks, retries, "dce.task", trace::Category::Shuffle)?;
+            self.inner.pool.run_tasks_hinted(
+                tasks,
+                &hints,
+                retries,
+                "dce.task",
+                trace::Category::Shuffle,
+            )?;
             self.inner.shuffle.mark_complete(dep.shuffle_id());
             drop(ssp);
             self.inner
@@ -255,24 +272,39 @@ impl DceContext {
                 .histogram("dce.stage.map")
                 .record(stage_start.elapsed());
         }
-        // Final (result) stage.
+        // Final (result) stage: shuffle readers hint at the worker
+        // holding the plurality of their input bytes (every dep is
+        // materialised by now, so ownership is fully known).
         let stage_start = Instant::now();
         let parts = node.num_partitions();
+        let hints: Vec<Option<usize>> = (0..parts).map(|p| node.placement_hint(p)).collect();
         let tasks: Vec<Arc<dyn Fn(usize) -> Result<U> + Send + Sync>> = (0..parts)
             .map(|p| {
                 let node = node.clone();
                 let ctx = self.clone();
                 let action = action.clone();
+                let hint = hints[p];
                 let f: Arc<dyn Fn(usize) -> Result<U> + Send + Sync> = Arc::new(move |attempt| {
                     let tc = ctx.task_ctx("result", p, attempt);
                     tc.check_failure()?;
+                    if let Some(h) = hint {
+                        ctx.inner
+                            .shuffle
+                            .record_affinity(ctx.inner.pool.current_worker() == Some(h));
+                    }
                     let items = node.compute(p, &tc)?;
                     action(p, items)
                 });
                 f
             })
             .collect();
-        let out = self.inner.pool.run_tasks(tasks, retries)?;
+        let out = self.inner.pool.run_tasks_hinted(
+            tasks,
+            &hints,
+            retries,
+            "dce.task",
+            trace::Category::Compute,
+        )?;
         self.inner
             .metrics
             .histogram("dce.stage.result")

@@ -67,6 +67,13 @@ thread_local! {
     static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
 }
 
+/// `(pool identity, worker index)` of the calling thread, if it is an
+/// executor worker. The shuffle manager stamps this on every bucket a
+/// map task writes — the signal behind reduce-task placement hints.
+pub(crate) fn current_worker_tag() -> Option<(usize, usize)> {
+    WORKER.with(|c| c.get())
+}
+
 struct PoolShared {
     /// Overflow/entry queue; its mutex doubles as the condvar's guard,
     /// so a worker's final empty re-check and a producer's notify are
@@ -229,6 +236,12 @@ impl ExecutorPool {
         self.shared.steals.load(Ordering::Relaxed)
     }
 
+    /// Worker index of the calling thread, if it belongs to THIS pool
+    /// (the affinity-hit check: did a hinted task run where hinted?).
+    pub fn current_worker(&self) -> Option<usize> {
+        current_worker_tag().and_then(|(pool, w)| (pool == self.shared.id()).then_some(w))
+    }
+
     /// Submit a fire-and-forget job.
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
@@ -279,23 +292,48 @@ impl ExecutorPool {
     /// bypassed entirely — and stealing still rebalances the deques if
     /// one worker's share runs long.
     pub fn spawn_batch(&self, jobs: Vec<Box<dyn FnOnce() + Send>>) -> Result<()> {
+        self.spawn_batch_hinted(jobs.into_iter().map(|j| (None, j)).collect())
+    }
+
+    /// [`Self::spawn_batch`] with optional per-job placement hints.
+    ///
+    /// A hinted job is dealt to the hinted worker's deque (mod pool
+    /// size) instead of the round-robin cursor — the shuffle plane
+    /// hints reduce tasks at the worker holding the plurality of their
+    /// map output, so on an idle pool the bytes never move. Hints are
+    /// placement only, never correctness: a busy hinted worker's share
+    /// is stolen from the back exactly like any other deque, and
+    /// unhinted jobs advance the round-robin cursor as before.
+    pub fn spawn_batch_hinted(
+        &self,
+        jobs: Vec<(Option<usize>, Box<dyn FnOnce() + Send>)>,
+    ) -> Result<()> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(anyhow!("pool shut down"));
         }
         if jobs.is_empty() {
             return Ok(());
         }
-        let n = jobs.len();
-        let start = self.shared.rr.fetch_add(n, Ordering::Relaxed);
+        let unhinted = jobs.iter().filter(|(h, _)| h.is_none()).count();
+        let start = self.shared.rr.fetch_add(unhinted, Ordering::Relaxed);
         let mut queues: Vec<Vec<PoolJob>> = (0..self.size).map(|_| Vec::new()).collect();
-        for (j, job) in jobs.into_iter().enumerate() {
+        let mut rr = 0usize;
+        for (hint, job) in jobs {
             let inflight = self.in_flight.clone();
             inflight.fetch_add(1, Ordering::Relaxed);
             let wrapped: PoolJob = Box::new(move || {
                 job();
                 inflight.fetch_sub(1, Ordering::Relaxed);
             });
-            queues[(start.wrapping_add(j)) % self.size].push(wrapped);
+            let w = match hint {
+                Some(h) => h % self.size,
+                None => {
+                    let w = (start.wrapping_add(rr)) % self.size;
+                    rr += 1;
+                    w
+                }
+            };
+            queues[w].push(wrapped);
         }
         for (w, share) in queues.into_iter().enumerate() {
             if !share.is_empty() {
@@ -335,6 +373,21 @@ impl ExecutorPool {
         span_name: &'static str,
         cat: trace::Category,
     ) -> Result<Vec<T>> {
+        self.run_tasks_hinted(tasks, &[], max_retries, span_name, cat)
+    }
+
+    /// [`Self::run_tasks_traced`] with per-task placement hints
+    /// (`hints[i]`, missing/None = round-robin): the first-attempt
+    /// batch is dealt hint-aware; retries take the unhinted per-job
+    /// path (after a failure, locality is the least of the problems).
+    pub fn run_tasks_hinted<T: Send + 'static>(
+        &self,
+        tasks: Vec<Arc<dyn Fn(usize) -> Result<T> + Send + Sync>>,
+        hints: &[Option<usize>],
+        max_retries: usize,
+        span_name: &'static str,
+        cat: trace::Category,
+    ) -> Result<Vec<T>> {
         let n = tasks.len();
         if n == 0 {
             return Ok(Vec::new());
@@ -354,7 +407,9 @@ impl ExecutorPool {
         };
         // First attempts go out as one batch (single dispatch pass);
         // the rare retry takes the per-job path.
-        self.spawn_batch((0..n).map(|i| make(i, 0)).collect())?;
+        self.spawn_batch_hinted(
+            (0..n).map(|i| (hints.get(i).copied().flatten(), make(i, 0))).collect(),
+        )?;
         let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
         let mut done = 0usize;
         let mut first_err: Option<anyhow::Error> = None;
@@ -595,6 +650,97 @@ mod tests {
         }
         assert_eq!(done.load(Ordering::SeqCst), 64, "pool lost batched jobs");
         assert!(pool.steals() >= 1, "blocked worker's share was never stolen");
+    }
+
+    #[test]
+    fn hinted_job_lands_on_the_hinted_idle_worker() {
+        // Deterministic affinity check: block 3 of 4 workers, discover
+        // the free one, hint a job at it. The free worker pops its own
+        // deque first and the blocked ones can't steal (they're inside
+        // jobs), so the hinted job MUST run there.
+        let pool = ExecutorPool::new(4);
+        let release = Arc::new(AtomicBool::new(false));
+        let busy: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let started = Arc::new(AtomicU32::new(0));
+        for _ in 0..3 {
+            let (rel, busy, started) = (release.clone(), busy.clone(), started.clone());
+            pool.spawn(move || {
+                busy.lock().unwrap().push(current_worker_tag().unwrap().1);
+                started.fetch_add(1, Ordering::SeqCst);
+                while !rel.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+            })
+            .unwrap();
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while started.load(Ordering::SeqCst) < 3 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(started.load(Ordering::SeqCst), 3, "blockers never started");
+        let blocked = busy.lock().unwrap().clone();
+        let free = (0..4).find(|w| !blocked.contains(w)).unwrap();
+        let ran_on = Arc::new(Mutex::new(None));
+        let r2 = ran_on.clone();
+        let done = Arc::new(AtomicBool::new(false));
+        let d2 = done.clone();
+        pool.spawn_batch_hinted(vec![(
+            Some(free),
+            Box::new(move || {
+                *r2.lock().unwrap() = current_worker_tag().map(|(_, w)| w);
+                d2.store(true, Ordering::SeqCst);
+            }),
+        )])
+        .unwrap();
+        while !done.load(Ordering::SeqCst) && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        release.store(true, Ordering::SeqCst);
+        assert!(done.load(Ordering::SeqCst), "hinted job never ran");
+        assert_eq!(*ran_on.lock().unwrap(), Some(free), "hinted job missed its worker");
+    }
+
+    #[test]
+    fn hint_to_a_busy_worker_degrades_to_stealing() {
+        // A hint is placement, not correctness: with the hinted worker
+        // wedged, the idle sibling must steal the job and finish it.
+        let pool = ExecutorPool::new(2);
+        let release = Arc::new(AtomicBool::new(false));
+        let blocker_on = Arc::new(Mutex::new(None));
+        let started = Arc::new(AtomicBool::new(false));
+        let (rel, b2, s2) = (release.clone(), blocker_on.clone(), started.clone());
+        pool.spawn(move || {
+            *b2.lock().unwrap() = current_worker_tag().map(|(_, w)| w);
+            s2.store(true, Ordering::SeqCst);
+            while !rel.load(Ordering::SeqCst) {
+                std::thread::yield_now();
+            }
+        })
+        .unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while !started.load(Ordering::SeqCst) && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        let wedged = blocker_on.lock().unwrap().unwrap();
+        let ran_on = Arc::new(Mutex::new(None));
+        let r2 = ran_on.clone();
+        let done = Arc::new(AtomicBool::new(false));
+        let d2 = done.clone();
+        pool.spawn_batch_hinted(vec![(
+            Some(wedged),
+            Box::new(move || {
+                *r2.lock().unwrap() = current_worker_tag().map(|(_, w)| w);
+                d2.store(true, Ordering::SeqCst);
+            }),
+        )])
+        .unwrap();
+        while !done.load(Ordering::SeqCst) && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        release.store(true, Ordering::SeqCst);
+        assert!(done.load(Ordering::SeqCst), "job stuck behind a busy hinted worker");
+        assert_ne!(*ran_on.lock().unwrap(), Some(wedged), "wedged worker can't have run it");
+        assert!(pool.steals() >= 1, "completion must have come from a steal");
     }
 
     #[test]

@@ -34,6 +34,9 @@ struct ShuffleDepImpl<K: Data + Hash + Eq, V: Data, C: Data> {
     mgr: Arc<ShuffleManager>,
     create: Arc<dyn Fn(V) -> C + Send + Sync>,
     merge_v: Arc<dyn Fn(C, V) -> C + Send + Sync>,
+    /// Combiner-merge — the associative op the manager's map-side
+    /// combine applies per bucket (and the reduce side across buckets).
+    merge_c: Arc<dyn Fn(C, C) -> C + Send + Sync>,
 }
 
 impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDep for ShuffleDepImpl<K, V, C> {
@@ -47,6 +50,32 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDep for ShuffleDepImpl<K, V, 
 
     fn run_map_task(&self, map_part: usize, tc: &TaskContext) -> Result<()> {
         let items = self.parent.compute(map_part, tc)?;
+        if self.mgr.combine_in_manager() {
+            // Sharded plane: hand the manager raw created combiners per
+            // bucket and let it merge with `merge_c` before insertion
+            // (tracked by `dce.shuffle.combine_*`). Equivalent to the
+            // fold below because `merge_c(create(v1), create(v2)) ==
+            // merge_v(create(v1), v2)` — the combineByKey contract.
+            let mut buckets: Vec<Vec<(K, C)>> =
+                (0..self.num_reduce).map(|_| Vec::new()).collect();
+            for (k, v) in items {
+                let b = partition_of(&k, self.num_reduce);
+                let c = (self.create)(v);
+                buckets[b].push((k, c));
+            }
+            for (r, raw) in buckets.into_iter().enumerate() {
+                self.mgr.put_bucket_combined(
+                    self.shuffle_id,
+                    map_part,
+                    r,
+                    raw,
+                    &*self.merge_c,
+                    est_bytes::<(K, C)>,
+                );
+            }
+            return Ok(());
+        }
+        // Baseline arm: the pre-PR-10 map-task-local fold.
         let mut buckets: Vec<HashMap<K, C>> =
             (0..self.num_reduce).map(|_| HashMap::new()).collect();
         for (k, v) in items {
@@ -72,12 +101,16 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDep for ShuffleDepImpl<K, V, 
     fn parents(&self) -> Vec<Arc<dyn ShuffleDep>> {
         self.parent.shuffle_deps()
     }
+
+    fn placement_hint(&self, map_part: usize) -> Option<usize> {
+        // Map tasks inherit locality from their (possibly shuffled) input.
+        self.parent.placement_hint(map_part)
+    }
 }
 
 /// Reduce side: merges per-map combined buckets.
 struct ShuffledNode<K: Data + Hash + Eq, V: Data, C: Data> {
     dep: Arc<ShuffleDepImpl<K, V, C>>,
-    merge_c: Arc<dyn Fn(C, C) -> C + Send + Sync>,
 }
 
 impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffledNode<K, V, C> {
@@ -108,7 +141,7 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> RddNode<(K, C)> for ShuffledNode<K, 
             for (k, c) in bucket {
                 match merged.remove(&k) {
                     Some(prev) => {
-                        merged.insert(k, (self.merge_c)(prev, c));
+                        merged.insert(k, (self.dep.merge_c)(prev, c));
                     }
                     None => {
                         merged.insert(k, c);
@@ -121,6 +154,10 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> RddNode<(K, C)> for ShuffledNode<K, 
 
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
         vec![self.dep.clone()]
+    }
+
+    fn placement_hint(&self, part: usize) -> Option<usize> {
+        self.dep.mgr.preferred_worker(self.dep.shuffle_id, self.dep.num_maps(), part)
     }
 }
 
@@ -169,6 +206,19 @@ impl<K: Data + Hash + Eq, V: Data, W: Data> RddNode<(K, (Vec<V>, Vec<W>))>
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
         vec![self.left.clone(), self.right.clone()]
     }
+
+    fn placement_hint(&self, part: usize) -> Option<usize> {
+        self.left
+            .mgr
+            .preferred_worker(self.left.shuffle_id, self.left.num_maps(), part)
+            .or_else(|| {
+                self.right.mgr.preferred_worker(
+                    self.right.shuffle_id,
+                    self.right.num_maps(),
+                    part,
+                )
+            })
+    }
 }
 
 fn make_dep<K: Data + Hash + Eq, V: Data, C: Data>(
@@ -177,6 +227,7 @@ fn make_dep<K: Data + Hash + Eq, V: Data, C: Data>(
     num_reduce: usize,
     create: Arc<dyn Fn(V) -> C + Send + Sync>,
     merge_v: Arc<dyn Fn(C, V) -> C + Send + Sync>,
+    merge_c: Arc<dyn Fn(C, C) -> C + Send + Sync>,
 ) -> Arc<ShuffleDepImpl<K, V, C>> {
     Arc::new(ShuffleDepImpl {
         shuffle_id: ctx.next_id(),
@@ -185,6 +236,7 @@ fn make_dep<K: Data + Hash + Eq, V: Data, C: Data>(
         mgr: ctx.inner.shuffle.clone(),
         create,
         merge_v,
+        merge_c,
     })
 }
 
@@ -204,11 +256,9 @@ impl<K: Data + Hash + Eq, V: Data> Rdd<(K, V)> {
             num_parts.max(1),
             Arc::new(create),
             Arc::new(merge_v),
+            Arc::new(merge_c),
         );
-        Rdd::from_node(
-            self.ctx.clone(),
-            Arc::new(ShuffledNode { dep, merge_c: Arc::new(merge_c) }),
-        )
+        Rdd::from_node(self.ctx.clone(), Arc::new(ShuffledNode { dep }))
     }
 
     pub fn reduce_by_key(
@@ -260,6 +310,10 @@ impl<K: Data + Hash + Eq, V: Data> Rdd<(K, V)> {
                 c.push(v);
                 c
             }),
+            Arc::new(|mut a: Vec<V>, mut b: Vec<V>| {
+                a.append(&mut b);
+                a
+            }),
         );
         let right = make_dep(
             &self.ctx,
@@ -269,6 +323,10 @@ impl<K: Data + Hash + Eq, V: Data> Rdd<(K, V)> {
             Arc::new(|mut c: Vec<W>, w| {
                 c.push(w);
                 c
+            }),
+            Arc::new(|mut a: Vec<W>, mut b: Vec<W>| {
+                a.append(&mut b);
+                a
             }),
         );
         let cogrouped: Rdd<(K, (Vec<V>, Vec<W>))> =
@@ -398,6 +456,84 @@ mod tests {
         c.set_fail_injector(None);
         assert_eq!(out.iter().map(|(_, n)| n).sum::<u64>(), 50);
         assert_eq!(hits.load(Ordering::SeqCst), 1, "injector fired exactly once");
+    }
+
+    #[test]
+    fn sharded_combine_matches_baseline_arm_end_to_end() {
+        // The E22 correctness contract: the same wide stages through
+        // the sharded+combine plane and through the `--baseline`
+        // single-lock arm are bit-identical after key-sorting.
+        use crate::config::PlatformConfig;
+        let fast = ctx();
+        let mut cfg = PlatformConfig::test();
+        cfg.engine.shuffle_single_lock = true;
+        let slow = DceContext::new(cfg).unwrap();
+        let pairs: Vec<(u32, u64)> = (0..400).map(|i| (i % 13, (i * 7) as u64)).collect();
+        let run = |c: &DceContext| {
+            let rdd = c.parallelize(pairs.clone(), 6);
+            let reduced = rdd.reduce_by_key(|a, b| a + b, 4).collect_sorted_by_key().unwrap();
+            let grouped: Vec<(u32, Vec<u64>)> = rdd
+                .group_by_key(3)
+                .map(|(k, mut v)| {
+                    v.sort();
+                    (k, v)
+                })
+                .collect_sorted_by_key()
+                .unwrap();
+            let other = c.parallelize(vec![(1u32, "x"), (5, "y"), (12, "z")], 2);
+            let mut joined = rdd.join(&other, 3).collect().unwrap();
+            joined.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (reduced, grouped, joined)
+        };
+        assert_eq!(run(&fast), run(&slow));
+        // Only the sharded arm combines in the manager...
+        assert!(fast.metrics().counter("dce.shuffle.combine_in").get() > 0);
+        assert_eq!(slow.metrics().counter("dce.shuffle.combine_in").get(), 0);
+        // ...and it must actually have merged (13 keys from 400 rows).
+        assert!(
+            fast.metrics().gauge("dce.shuffle.combine_ratio").get() > 100,
+            "combine never reduced anything"
+        );
+    }
+
+    #[test]
+    fn shuffle_jobs_report_affinity_placement() {
+        // Reduce tasks are hinted at bucket owners; whatever worker
+        // they actually land on, every hinted task must be counted.
+        let c = ctx();
+        let pairs: Vec<(u32, u64)> = (0..200).map(|i| (i % 8, 1)).collect();
+        let out =
+            c.parallelize(pairs, 4).reduce_by_key(|a, b| a + b, 4).collect_sorted_by_key().unwrap();
+        assert_eq!(out.iter().map(|(_, n)| n).sum::<u64>(), 200);
+        let hits = c.metrics().counter("dce.shuffle.affinity_hits").get();
+        let misses = c.metrics().counter("dce.shuffle.affinity_misses").get();
+        assert!(hits + misses >= 1, "no hinted task was ever dispatched");
+    }
+
+    #[test]
+    fn spilling_context_still_computes_correctly() {
+        // A tiny resident budget forces most buckets through the
+        // store; results must not change and the blobs must be GC'd.
+        use crate::config::PlatformConfig;
+        let mut cfg = PlatformConfig::test();
+        cfg.engine.shuffle_spill_budget = 64; // bytes — nearly everything spills
+        let c = DceContext::new(cfg).unwrap();
+        let pairs: Vec<(u32, u64)> = (0..300).map(|i| (i % 11, i as u64)).collect();
+        let got =
+            c.parallelize(pairs, 5).reduce_by_key(|a, b| a + b, 4).collect_sorted_by_key().unwrap();
+        let mut want: HashMap<u32, u64> = HashMap::new();
+        for i in 0..300u64 {
+            *want.entry((i % 11) as u32).or_default() += i;
+        }
+        let mut want: Vec<(u32, u64)> = want.into_iter().collect();
+        want.sort();
+        assert_eq!(got, want);
+        assert!(
+            c.metrics().counter("dce.shuffle.spilled_buckets").get() > 0,
+            "budget of 64B must have spilled"
+        );
+        c.gc();
+        assert!(c.store().keys_with_prefix("shuf/").is_empty(), "gc left spilled blobs");
     }
 
     #[test]

@@ -21,6 +21,13 @@ pub trait RddNode<T: Data>: Send + Sync {
     fn compute(&self, part: usize, tc: &TaskContext) -> Result<Vec<T>>;
     /// Direct shuffle dependencies (narrow nodes forward their parent's).
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>>;
+    /// Preferred executor worker for computing `part` (shuffle readers
+    /// answer the worker holding the plurality of the partition's map
+    /// bytes; narrow nodes forward their parent's answer). Placement
+    /// only — stealing still balances.
+    fn placement_hint(&self, _part: usize) -> Option<usize> {
+        None
+    }
 }
 
 /// Type-erased wide dependency (a shuffle's map side).
@@ -30,6 +37,11 @@ pub trait ShuffleDep: Send + Sync {
     fn run_map_task(&self, map_part: usize, tc: &TaskContext) -> Result<()>;
     /// Shuffles this shuffle's map side itself depends on.
     fn parents(&self) -> Vec<Arc<dyn ShuffleDep>>;
+    /// Preferred worker for running map task `map_part` (the map side's
+    /// own input may in turn come from an earlier shuffle).
+    fn placement_hint(&self, _map_part: usize) -> Option<usize> {
+        None
+    }
 }
 
 /// A typed distributed dataset.
@@ -82,6 +94,9 @@ impl<T: Data, U: Data> RddNode<U> for MapPartitionsNode<T, U> {
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
         self.parent.shuffle_deps()
     }
+    fn placement_hint(&self, part: usize) -> Option<usize> {
+        self.parent.placement_hint(part)
+    }
 }
 
 struct UnionNode<T: Data> {
@@ -100,6 +115,10 @@ impl<T: Data> RddNode<T> for UnionNode<T> {
     }
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
         self.parents.iter().flat_map(|p| p.shuffle_deps()).collect()
+    }
+    fn placement_hint(&self, part: usize) -> Option<usize> {
+        let (pi, pp) = self.index[part];
+        self.parents[pi].placement_hint(pp)
     }
 }
 
@@ -147,6 +166,9 @@ impl<T: Data> RddNode<T> for CachedNode<T> {
     }
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleDep>> {
         self.parent.shuffle_deps()
+    }
+    fn placement_hint(&self, part: usize) -> Option<usize> {
+        self.parent.placement_hint(part)
     }
 }
 

@@ -19,6 +19,15 @@
 //!   scheduler, shuffle, BinPipeRDD, virtual-time cluster simulation).
 //!   Task dispatch is work-stealing: per-worker deques with a
 //!   condvar-guarded overflow injector, not one mutex-wrapped channel.
+//!   The shuffle is its own plane: a lock-striped `ShuffleManager`
+//!   keyed by `(shuffle, reduce)` with pre-resolved metric/transport
+//!   handles, single-acquisition batched takes, manager-side combine,
+//!   placement hints that route reduce tasks to the worker holding
+//!   the plurality of their map-output bytes (stealing still
+//!   balances), and spill-to-[`storage`] above a resident-byte budget.
+//!   The pre-sharding single-lock manager survives behind
+//!   `EngineConfig::shuffle_single_lock` (`adcloud --baseline`) as
+//!   experiment E22's A/B baseline.
 //! * [`mapreduce`] — the disk-staged MapReduce baseline engine.
 //! * [`storage`] — the Alluxio-analog tiered block store and the
 //!   HDFS-analog baseline. The block map is lock-striped into
@@ -45,7 +54,7 @@
 //!   checkpoint blobs past a retention window), shared job-submission
 //!   options (`JobOpts`: app/queue/workers/checkpoint/grant-timeout,
 //!   one builder reused by every subcommand and service config), and
-//!   the paper-experiment harness (E1–E21).
+//!   the paper-experiment harness (E1–E22).
 //! * [`hetero`] — kernel registry + dispatch across CPU / GPU-class /
 //!   FPGA-class devices.
 //! * [`runtime`] — the PJRT artifact runtime (device-server threads).

@@ -58,7 +58,9 @@
 //!
 //! Every subcommand also accepts `--baseline`: force the pre-fast-path
 //! storage plane (single-lock block map, O(n) eviction scans) for A/B
-//! runs against experiment E17's sharded default; for `ingest` it also
+//! runs against experiment E17's sharded default, plus the pre-E22
+//! single-lock shuffle manager (per-op metric lookups, no manager-side
+//! combine, no placement hints); for `ingest` it also
 //! selects the pre-batching gateway (per-vehicle stepping, one
 //! admission decision and one log append per upload) against the
 //! event-driven batched default; for `serve` it selects FIFO dispatch
@@ -202,6 +204,14 @@ fn dispatch(cmd: &str, pos: &[String], flags: &HashMap<String, String>) -> Resul
         "metrics" => {
             let p = Platform::boot(config_from(flags))?;
             let _ = p.ctx.range(10_000, 8).map(|x| x * 2).count()?;
+            // A wide stage, so the shuffle plane (the single-lock arm
+            // under --baseline) shows up in the report too.
+            let _ = p
+                .ctx
+                .range(10_000, 8)
+                .map(|x| (x % 64, 1u64))
+                .reduce_by_key(|a, b| a + b, 8)
+                .collect()?;
             println!("{}", p.metrics.report());
             println!("{}", p.ctx.metrics().report());
             Ok(())
@@ -238,6 +248,9 @@ fn config_from(flags: &HashMap<String, String>) -> adcloud::config::PlatformConf
         // The E17 A/B knob: old single-lock storage path.
         cfg.storage.scan_evict = true;
         cfg.storage.shards = 1;
+        // The E22 A/B knob: old single-lock shuffle manager (per-op
+        // metric lookups, no manager-side combine, no placement hints).
+        cfg.engine.shuffle_single_lock = true;
     }
     cfg
 }
@@ -702,6 +715,7 @@ fn bench_diff(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             "BENCH_E18.json".into(),
             "BENCH_E19.json".into(),
             "BENCH_E21.json".into(),
+            "BENCH_E22.json".into(),
         ]
     } else {
         pos.to_vec()

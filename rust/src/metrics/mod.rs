@@ -392,6 +392,9 @@ pub struct StoreMetrics {
     pub ckpt_commits: Arc<Counter>,
     pub ckpt_hits: Arc<Counter>,
     pub ckpt_swept: Arc<Counter>,
+    /// Blobs deleted because their put-time TTL expired
+    /// (`expire_ttl`, the scan-free ckpt GC path).
+    pub ttl_expired: Arc<Counter>,
 }
 
 impl StoreMetrics {
@@ -412,6 +415,7 @@ impl StoreMetrics {
             ckpt_commits: reg.counter("platform.ckpt.commits"),
             ckpt_hits: reg.counter("platform.ckpt.hits"),
             ckpt_swept: reg.counter("platform.ckpt.swept"),
+            ttl_expired: reg.counter("storage.tiered.ttl_expired"),
         }
     }
 }
@@ -556,6 +560,54 @@ impl ServeMetrics {
             fallbacks: reg.counter("serve.fallbacks"),
             queue_depth: reg.gauge("serve.queue_depth"),
             latency: reg.histogram("serve.latency"),
+        }
+    }
+}
+
+/// Pre-resolved handles for the sharded shuffle plane
+/// (`dce.shuffle.*`, touched once per bucket put/take).
+#[derive(Clone)]
+pub struct ShuffleMetrics {
+    pub bytes_written: Arc<Counter>,
+    pub buckets_written: Arc<Counter>,
+    pub bytes_read: Arc<Counter>,
+    /// Records entering map-side combine.
+    pub combine_in: Arc<Counter>,
+    /// Records shipped after combining.
+    pub combine_out: Arc<Counter>,
+    /// Cumulative input records per 100 shipped (100 = no combining,
+    /// 300 = 3:1 reduction).
+    pub combine_ratio: Arc<Gauge>,
+    pub spilled_buckets: Arc<Counter>,
+    pub spilled_bytes: Arc<Counter>,
+    /// Spilled buckets successfully read back at take time.
+    pub spill_restored: Arc<Counter>,
+    /// Spilled blobs gone at take time (surfaces as a fetch failure).
+    pub spill_lost: Arc<Counter>,
+    /// Bucket bytes currently resident in memory (spilled excluded).
+    pub resident_bytes: Arc<Gauge>,
+    /// Hinted reduce tasks that ran on their preferred worker.
+    pub affinity_hits: Arc<Counter>,
+    pub affinity_misses: Arc<Counter>,
+}
+
+impl ShuffleMetrics {
+    pub fn new(reg: &MetricsRegistry) -> Self {
+        let c = |t: &str| reg.counter(&format!("dce.shuffle.{t}"));
+        Self {
+            bytes_written: c("bytes_written"),
+            buckets_written: c("buckets_written"),
+            bytes_read: c("bytes_read"),
+            combine_in: c("combine_in"),
+            combine_out: c("combine_out"),
+            combine_ratio: reg.gauge("dce.shuffle.combine_ratio"),
+            spilled_buckets: c("spilled_buckets"),
+            spilled_bytes: c("spilled_bytes"),
+            spill_restored: c("spill_restored"),
+            spill_lost: c("spill_lost"),
+            resident_bytes: reg.gauge("dce.shuffle.resident_bytes"),
+            affinity_hits: c("affinity_hits"),
+            affinity_misses: c("affinity_misses"),
         }
     }
 }

@@ -51,6 +51,10 @@ pub struct ObsConfig {
     /// When set, critical breaches and reported job failures write
     /// `postmortem-*.json` bundles here automatically.
     pub bundle_dir: Option<PathBuf>,
+    /// Byte budget for the bundle dir: after each auto-written bundle,
+    /// the oldest `postmortem-*.json` files are evicted until the dir
+    /// fits (the newest bundle always survives). `0` = unbounded.
+    pub bundle_budget_bytes: u64,
 }
 
 impl Default for ObsConfig {
@@ -61,6 +65,7 @@ impl Default for ObsConfig {
             bundle_window: Duration::from_secs(30),
             bundle_spans: 512,
             bundle_dir: None,
+            bundle_budget_bytes: 64 << 20,
         }
     }
 }
@@ -211,8 +216,28 @@ impl Observability {
             if let Err(e) = recorder::write(&path, &bundle) {
                 eprintln!("obs: failed to write post-mortem bundle: {e:#}");
             }
+            self.enforce_bundle_retention();
         }
         *self.last_bundle.lock().unwrap() = Some(bundle);
+    }
+
+    /// Apply [`ObsConfig::bundle_budget_bytes`] to the bundle dir
+    /// (oldest-first eviction; no-op without a dir or budget). Runs
+    /// after every auto-written bundle; returns how many were evicted.
+    pub fn enforce_bundle_retention(&self) -> u64 {
+        let Some(dir) = &self.cfg.bundle_dir else { return 0 };
+        match recorder::enforce_retention(dir, self.cfg.bundle_budget_bytes) {
+            Ok(n) => {
+                if n > 0 {
+                    self.registry.counter("obs.recorder.bundles_evicted").add(n);
+                }
+                n
+            }
+            Err(e) => {
+                eprintln!("obs: bundle retention enforcement failed: {e:#}");
+                0
+            }
+        }
     }
 
     /// Capture + write a bundle to an explicit path (CI artifacts,
@@ -412,6 +437,31 @@ mod tests {
     fn job_failed_is_noop_without_hook() -> bool {
         job_failed("nobody-listening", &anyhow::anyhow!("x"));
         true
+    }
+
+    #[test]
+    fn bundle_budget_evicts_oldest_and_counts() {
+        let m = MetricsRegistry::new();
+        let dir = std::env::temp_dir().join(format!("adcloud-obs-budget-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        for i in 0..4 {
+            std::fs::write(dir.join(format!("postmortem-{i}.json")), vec![b'x'; 100]).unwrap();
+        }
+        let obs = Observability::start(
+            m.clone(),
+            ObsConfig {
+                bundle_dir: Some(dir.clone()),
+                bundle_budget_bytes: 200,
+                ..fast_cfg()
+            },
+        );
+        assert_eq!(obs.enforce_bundle_retention(), 2, "400 resident, 200 allowed");
+        assert_eq!(m.counter("obs.recorder.bundles_evicted").get(), 2);
+        assert_eq!(obs.enforce_bundle_retention(), 0, "under budget: no-op");
+        assert_eq!(m.counter("obs.recorder.bundles_evicted").get(), 2);
+        obs.stop();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -76,6 +76,49 @@ pub fn write(path: impl AsRef<Path>, bundle: &Json) -> Result<()> {
         .with_context(|| format!("writing flight-recorder bundle {}", path.display()))
 }
 
+/// Cap the bundle dir at `budget_bytes`: evict the oldest
+/// `postmortem-*.json` files (by mtime, filename as tiebreak) until
+/// the total fits. The newest bundle is never evicted — an over-sized
+/// post-mortem still beats no post-mortem. Other files in the dir are
+/// neither counted nor touched. `budget_bytes == 0` means unbounded.
+/// Returns the number of bundles evicted.
+pub fn enforce_retention(dir: impl AsRef<Path>, budget_bytes: u64) -> Result<u64> {
+    let dir = dir.as_ref();
+    if budget_bytes == 0 {
+        return Ok(0);
+    }
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(0), // dir not created yet: nothing to evict
+    };
+    let mut bundles: Vec<(std::time::SystemTime, String, u64)> = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !(name.starts_with("postmortem-") && name.ends_with(".json")) {
+            continue;
+        }
+        let Ok(meta) = entry.metadata() else { continue };
+        let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        bundles.push((mtime, name, meta.len()));
+    }
+    let mut total: u64 = bundles.iter().map(|b| b.2).sum();
+    if total <= budget_bytes {
+        return Ok(0);
+    }
+    bundles.sort();
+    let mut evicted = 0u64;
+    for (_, name, size) in bundles.iter().take(bundles.len() - 1) {
+        if total <= budget_bytes {
+            break;
+        }
+        std::fs::remove_file(dir.join(name))
+            .with_context(|| format!("evicting flight-recorder bundle {name}"))?;
+        total -= size;
+        evicted += 1;
+    }
+    Ok(evicted)
+}
+
 pub fn load(path: impl AsRef<Path>) -> Result<Json> {
     let path = path.as_ref();
     let text = std::fs::read_to_string(path)
@@ -210,5 +253,40 @@ mod tests {
         assert!(text.contains("critical"));
         assert!(text.contains("ingest.gateway.dlq_depth"));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn retention_evicts_oldest_bundles_until_the_dir_fits() {
+        let dir = std::env::temp_dir()
+            .join(format!("adcloud-obs-retention-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        // Five 100-byte bundles, oldest first (zero-padded names break
+        // same-millisecond mtime ties deterministically).
+        for i in 0..5 {
+            std::fs::write(dir.join(format!("postmortem-{i}.json")), vec![b'x'; 100]).unwrap();
+        }
+        // A non-bundle file: neither counted against the budget nor evicted.
+        std::fs::write(dir.join("notes.txt"), vec![b'y'; 1000]).unwrap();
+
+        // 500 bytes resident, 250 allowed: bundles 0, 1, 2 must go.
+        assert_eq!(enforce_retention(&dir, 250).unwrap(), 3);
+        for i in 0..3 {
+            assert!(!dir.join(format!("postmortem-{i}.json")).exists(), "bundle {i} kept");
+        }
+        for i in 3..5 {
+            assert!(dir.join(format!("postmortem-{i}.json")).exists(), "bundle {i} evicted");
+        }
+        assert!(dir.join("notes.txt").exists(), "non-bundle file must be untouched");
+
+        // Under budget now: a second pass is a no-op.
+        assert_eq!(enforce_retention(&dir, 250).unwrap(), 0);
+        // A budget smaller than one bundle still keeps the newest.
+        assert_eq!(enforce_retention(&dir, 10).unwrap(), 1);
+        assert!(dir.join("postmortem-4.json").exists(), "newest bundle must survive");
+        // Zero budget means unbounded, not scorched earth.
+        assert_eq!(enforce_retention(&dir, 0).unwrap(), 0);
+        assert!(dir.join("postmortem-4.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -30,11 +30,23 @@ pub const CKPT_PREFIX: &str = "ckpt/";
 pub struct ShardCheckpoint {
     store: Arc<TieredStore>,
     job: String,
+    ttl: Option<Duration>,
 }
 
 impl ShardCheckpoint {
     pub fn new(store: &Arc<TieredStore>, job: &str) -> Self {
-        Self { store: store.clone(), job: job.to_string() }
+        Self { store: store.clone(), job: job.to_string(), ttl: None }
+    }
+
+    /// Like [`Self::new`], but every commit carries a retention TTL: the
+    /// store's deadline index reaps expired blobs in O(expired) via
+    /// [`TieredStore::expire_ttl`], so steady-state GC never scans the
+    /// `ckpt/*` keyspace. [`Self::sweep`] stays as the fallback for
+    /// blobs written by pre-TTL jobs (it also reaps TTL'd blobs, since
+    /// they are ordinary store keys — the two paths are equivalent; see
+    /// the `ttl_gc_matches_sweep_on_the_same_workload` test).
+    pub fn with_ttl(store: &Arc<TieredStore>, job: &str, retention: Duration) -> Self {
+        Self { store: store.clone(), job: job.to_string(), ttl: Some(retention) }
     }
 
     pub fn job(&self) -> &str {
@@ -48,7 +60,10 @@ impl ShardCheckpoint {
     /// Durably record a completed item's result. Call after the item's
     /// work is done and before yielding to a preemption signal.
     pub fn commit(&self, item: &str, bytes: Vec<u8>) -> Result<()> {
-        self.store.put(&self.key(item), bytes)?;
+        match self.ttl {
+            Some(retention) => self.store.put_ttl(&self.key(item), bytes, retention)?,
+            None => self.store.put(&self.key(item), bytes)?,
+        }
         self.store.counters().ckpt_commits.inc();
         Ok(())
     }
@@ -171,6 +186,54 @@ mod tests {
         // A later job under the same name starts clean.
         let again = ShardCheckpoint::new(&s, "never-resubmitted");
         assert!(again.lookup("item-0").is_none());
+    }
+
+    #[test]
+    fn ttl_gc_matches_sweep_on_the_same_workload() {
+        // Same synthetic workload on two stores; one GC'd by the scan
+        // sweep, one by the TTL deadline index. The surviving key sets
+        // must be identical — the TTL path is a pure perf substitution.
+        let workload = |s: &Arc<TieredStore>, ttl: Option<Duration>| {
+            let dead = match ttl {
+                Some(t) => ShardCheckpoint::with_ttl(s, "orphaned", t),
+                None => ShardCheckpoint::new(s, "orphaned"),
+            };
+            for i in 0..6 {
+                dead.commit(&format!("item-{i}"), vec![i as u8; 32]).unwrap();
+            }
+            // A job that finished cleanly clears its own keys before GC.
+            let done = match ttl {
+                Some(t) => ShardCheckpoint::with_ttl(s, "finished", t),
+                None => ShardCheckpoint::new(s, "finished"),
+            };
+            done.commit("only", vec![9u8; 32]).unwrap();
+            done.clear(["only"]);
+            // Non-checkpoint data: neither GC path may touch it.
+            s.put("ingest/p01/b0000000001", vec![7u8; 32]).unwrap();
+            s.flush();
+        };
+        let keys = |s: &Arc<TieredStore>| {
+            let mut all: Vec<String> = s.keys_with_prefix("");
+            all.sort();
+            all
+        };
+
+        let swept = store();
+        workload(&swept, None);
+        assert_eq!(ShardCheckpoint::sweep(&swept, Duration::ZERO).unwrap(), 6);
+
+        let ttld = store();
+        workload(&ttld, Some(Duration::ZERO));
+        assert_eq!(ttld.expire_ttl().unwrap(), 6, "clear() must have cancelled 'only'");
+        assert_eq!(ttld.metrics().counter("storage.tiered.ttl_expired").get(), 6);
+
+        assert_eq!(keys(&swept), keys(&ttld), "sweep and TTL GC must agree");
+        assert!(ttld.contains("ingest/p01/b0000000001"));
+        assert!(ttld.keys_with_prefix(CKPT_PREFIX).is_empty());
+        // Steady state: nothing pending, a second expire is a no-op that
+        // never scans.
+        assert_eq!(ttld.ttl_pending(), 0);
+        assert_eq!(ttld.expire_ttl().unwrap(), 0);
     }
 
     #[test]

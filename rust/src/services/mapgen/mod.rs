@@ -9,7 +9,7 @@ pub mod semantic;
 pub mod slam;
 pub mod trace;
 
-pub use gridmap::{Cell, GridMap};
+pub use gridmap::{tile_histogram, Cell, GridMap};
 pub use icp::{icp_align, resample, IcpResult};
 pub use pipeline::{run_fused, run_staged, MapgenReport};
 pub use semantic::{derive_lanes, extract_signs, HdMap, LaneSample, SignLabel};

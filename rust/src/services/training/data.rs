@@ -5,7 +5,9 @@
 //! learnable by the small perception CNN within a few hundred steps, so
 //! the end-to-end example shows a genuinely falling loss curve.
 
+use crate::dce::DceContext;
 use crate::util::Rng;
+use anyhow::Result;
 
 pub const IMG: usize = 32;
 pub const CHANNELS: usize = 3;
@@ -61,6 +63,21 @@ pub fn shard(data: Vec<Example>, shards: usize) -> Vec<Vec<Example>> {
         out[i % shards].push(ex);
     }
     out
+}
+
+/// Class histogram of a dataset as a DCE shuffle job: `(label, 1)`
+/// pairs through `reduce_by_key` — the shuffle-heavy slice of the
+/// training pipeline's input-stats pass, and E22's training-side
+/// end-to-end arm. Returns `(label, count)` sorted by label.
+pub fn label_histogram(
+    ctx: &DceContext,
+    data: &[Example],
+    parts: usize,
+) -> Result<Vec<(i32, u64)>> {
+    let pairs: Vec<(i32, u64)> = data.iter().map(|ex| (ex.label, 1u64)).collect();
+    ctx.parallelize(pairs, parts)
+        .reduce_by_key(|a, b| a + b, parts)
+        .collect_sorted_by_key()
 }
 
 /// Pack `batch` examples (wrapping) starting at `offset` into NHWC f32 +
@@ -123,6 +140,15 @@ mod tests {
         let max = shards.iter().map(|s| s.len()).max().unwrap();
         let min = shards.iter().map(|s| s.len()).min().unwrap();
         assert!(max - min <= 1, "unbalanced shards");
+    }
+
+    #[test]
+    fn label_histogram_counts_every_class() {
+        let ctx = DceContext::local().unwrap();
+        let d = gen_dataset(100, 5);
+        let h = label_histogram(&ctx, &d, 4).unwrap();
+        assert_eq!(h.len(), NUM_CLASSES);
+        assert!(h.iter().enumerate().all(|(i, &(l, c))| l == i as i32 && c == 10), "{h:?}");
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub mod param_server;
 pub mod pipeline;
 pub mod trainer;
 
-pub use data::{gen_dataset, pack_batch, shard, Example};
+pub use data::{gen_dataset, label_histogram, pack_batch, shard, Example};
 pub use param_server::{average_grads, MomentumSgd, ParamServer, ParamStore};
 pub use pipeline::{run_staged, run_unified, PipelineReport};
 pub use trainer::{DistTrainer, TrainReport, BATCH};

@@ -31,8 +31,9 @@
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeSet, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use super::device::DeviceModel;
 use super::evict::{BlockMeta, EvictionPolicy};
@@ -77,6 +78,17 @@ impl Shard {
     }
 }
 
+/// Deadline bookkeeping for blobs written with [`TieredStore::put_ttl`]:
+/// ordered by absolute deadline so [`TieredStore::expire_ttl`] pops only
+/// the due prefix — no scan over live keys.
+#[derive(Default)]
+struct TtlIndex {
+    /// `(deadline_ms, key)` ascending.
+    by_deadline: BTreeSet<(u64, String)>,
+    /// Current deadline per key (for cancel-on-rewrite / delete).
+    deadline: HashMap<String, u64>,
+}
+
 /// The tiered store. Cheap to clone (Arc inside); thread-safe.
 pub struct TieredStore {
     tiers: [Arc<DeviceModel>; 3],
@@ -91,6 +103,12 @@ pub struct TieredStore {
     under: Arc<UnderStore>,
     persister: AsyncPersister,
     lineage: LineageRegistry,
+    /// TTL deadlines (checkpoint GC's scan-free steady state).
+    ttl: Mutex<TtlIndex>,
+    /// Entry count mirror of `ttl` so the stores that never use TTLs
+    /// pay one relaxed load, not a lock, on every put/delete.
+    ttl_len: AtomicUsize,
+    epoch: Instant,
     metrics: MetricsRegistry,
     m: StoreMetrics,
 }
@@ -133,6 +151,9 @@ impl TieredStore {
             persister: AsyncPersister::new(under.clone()),
             under,
             lineage: LineageRegistry::new(),
+            ttl: Mutex::new(TtlIndex::default()),
+            ttl_len: AtomicUsize::new(0),
+            epoch: Instant::now(),
             m: StoreMetrics::new(&metrics),
             metrics,
         });
@@ -223,8 +244,79 @@ impl TieredStore {
         if persist {
             self.persister.submit(key.to_string(), data)?;
         }
+        // A plain rewrite of a TTL'd key cancels its deadline (the new
+        // blob has no expiry unless `put_ttl` re-arms one).
+        self.ttl_cancel(key);
         self.refresh_tier_gauges();
         Ok(())
+    }
+
+    /// [`Self::put`] with an expiry: after `ttl` the blob is removed
+    /// from every tier AND the under-store by [`Self::expire_ttl`] —
+    /// checkpoint GC's steady state, with no scan over live keys.
+    pub fn put_ttl(&self, key: &str, bytes: Vec<u8>, ttl: Duration) -> Result<()> {
+        self.put(key, bytes)?;
+        let deadline = self.now_ms().saturating_add(ttl.as_millis() as u64);
+        let mut idx = self.ttl.lock().unwrap();
+        if let Some(old) = idx.deadline.insert(key.to_string(), deadline) {
+            idx.by_deadline.remove(&(old, key.to_string()));
+        }
+        idx.by_deadline.insert((deadline, key.to_string()));
+        self.ttl_len.store(idx.deadline.len(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Delete every blob whose TTL deadline has passed (pops the due
+    /// prefix of the deadline index — O(expired log n), zero scanning).
+    /// Returns how many were removed.
+    pub fn expire_ttl(&self) -> Result<u64> {
+        if self.ttl_len.load(Ordering::Relaxed) == 0 {
+            return Ok(0);
+        }
+        let now = self.now_ms();
+        let due: Vec<String> = {
+            let mut idx = self.ttl.lock().unwrap();
+            let mut due = Vec::new();
+            while let Some((d, k)) = idx.by_deadline.iter().next().cloned() {
+                if d > now {
+                    break;
+                }
+                idx.by_deadline.remove(&(d, k.clone()));
+                idx.deadline.remove(&k);
+                due.push(k);
+            }
+            self.ttl_len.store(idx.deadline.len(), Ordering::Relaxed);
+            due
+        };
+        let mut n = 0u64;
+        for key in due {
+            self.delete(&key)?;
+            self.m.ttl_expired.inc();
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Keys currently carrying a TTL deadline.
+    pub fn ttl_pending(&self) -> usize {
+        self.ttl_len.load(Ordering::Relaxed)
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Drop `key`'s TTL deadline, if any (rewrites and deletes must not
+    /// leave a stale deadline that would later remove a live blob).
+    fn ttl_cancel(&self, key: &str) {
+        if self.ttl_len.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        let mut idx = self.ttl.lock().unwrap();
+        if let Some(old) = idx.deadline.remove(key) {
+            idx.by_deadline.remove(&(old, key.to_string()));
+            self.ttl_len.store(idx.deadline.len(), Ordering::Relaxed);
+        }
     }
 
     /// Refresh the `storage.tier_used.*` gauges from the atomic
@@ -528,6 +620,7 @@ impl TieredStore {
             }
         }
         self.under.delete(key)?;
+        self.ttl_cancel(key);
         self.refresh_tier_gauges();
         Ok(())
     }
@@ -728,6 +821,62 @@ mod tests {
         s.delete("k").unwrap();
         assert!(!s.contains("k"));
         assert!(s.get("k").is_err());
+    }
+
+    #[test]
+    fn expired_ttl_blob_is_removed_everywhere() {
+        let s = TieredStore::test_store(&PlatformConfig::test().storage);
+        s.put_ttl("ckpt/old", vec![1, 2, 3], Duration::ZERO).unwrap();
+        s.flush();
+        assert_eq!(s.ttl_pending(), 1);
+        let n = s.expire_ttl().unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(s.ttl_pending(), 0);
+        assert!(!s.contains("ckpt/old"));
+        assert!(s.get("ckpt/old").is_err(), "under-store copy must be gone too");
+        assert_eq!(s.metrics().counter("storage.tiered.ttl_expired").get(), 1);
+    }
+
+    #[test]
+    fn unexpired_ttl_blob_survives_expire() {
+        let s = TieredStore::test_store(&PlatformConfig::test().storage);
+        s.put_ttl("ckpt/live", vec![9; 8], Duration::from_secs(3600)).unwrap();
+        s.put("plain", vec![7; 8]).unwrap();
+        assert_eq!(s.expire_ttl().unwrap(), 0);
+        assert_eq!(*s.get("ckpt/live").unwrap(), vec![9; 8]);
+        assert_eq!(*s.get("plain").unwrap(), vec![7; 8]);
+        assert_eq!(s.ttl_pending(), 1, "plain puts must not enter the TTL index");
+    }
+
+    #[test]
+    fn plain_rewrite_cancels_a_ttl() {
+        let s = TieredStore::test_store(&PlatformConfig::test().storage);
+        s.put_ttl("ckpt/a", vec![1], Duration::ZERO).unwrap();
+        // A newer epoch rewrites the same key without a TTL: the stale
+        // deadline must not reap the fresh blob.
+        s.put("ckpt/a", vec![2]).unwrap();
+        assert_eq!(s.ttl_pending(), 0);
+        assert_eq!(s.expire_ttl().unwrap(), 0);
+        assert_eq!(*s.get("ckpt/a").unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn delete_cancels_a_ttl() {
+        let s = TieredStore::test_store(&PlatformConfig::test().storage);
+        s.put_ttl("ckpt/b", vec![1], Duration::from_secs(3600)).unwrap();
+        s.delete("ckpt/b").unwrap();
+        assert_eq!(s.ttl_pending(), 0);
+        assert_eq!(s.expire_ttl().unwrap(), 0);
+    }
+
+    #[test]
+    fn re_arming_a_ttl_replaces_the_deadline() {
+        let s = TieredStore::test_store(&PlatformConfig::test().storage);
+        s.put_ttl("ckpt/c", vec![1], Duration::ZERO).unwrap();
+        s.put_ttl("ckpt/c", vec![2], Duration::from_secs(3600)).unwrap();
+        assert_eq!(s.ttl_pending(), 1, "one key, one deadline");
+        assert_eq!(s.expire_ttl().unwrap(), 0, "the newer deadline wins");
+        assert_eq!(*s.get("ckpt/c").unwrap(), vec![2]);
     }
 
     #[test]
